@@ -1,0 +1,18 @@
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/untupled.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[5f32, 6., 7., 8.]).reshape(&[2, 2])?;
+    let out = exe.execute::<xla::Literal>(&[x, y])?;
+    println!("devices={} outputs={}", out.len(), out[0].len());
+    for (i, b) in out[0].iter().enumerate() {
+        let l = b.to_literal_sync()?;
+        println!("out{} = {:?}", i, l.to_vec::<f32>()?);
+    }
+    // feed an output buffer back as an input (device-resident round trip)
+    let out2 = exe.execute_b(&[&out[0][0], &out[0][1]])?;
+    let l = out2[0][0].to_literal_sync()?;
+    println!("roundtrip out0 = {:?}", l.to_vec::<f32>()?);
+    Ok(())
+}

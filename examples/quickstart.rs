@@ -1,0 +1,78 @@
+//! Quickstart: the whole system in one page.
+//!
+//! 1. pretrain the dense mini ResNet on the synthetic corpus,
+//! 2. decompose it in closed form (SVD + Tucker2, Eq. 1-6),
+//! 3. run Algorithm 1 (rank optimization) on its biggest layer,
+//! 4. fine-tune the decomposed model with sequential freezing (Algorithm 2),
+//! 5. compare train/infer throughput and accuracy.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` first; takes a few minutes on one CPU core)
+
+use anyhow::Result;
+use lrta::coordinator::{
+    decompose_checkpoint, ensure_pretrained, LrSchedule, TrainConfig, Trainer,
+};
+use lrta::devmodel::DeviceProfile;
+use lrta::freeze::FreezeMode;
+use lrta::lrd::LayerShape;
+use lrta::rankopt::{optimize_rank, ModelTimer, RankOptConfig};
+use lrta::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}\n", rt.platform());
+
+    // --- 1. pretrain the dense model (cached across runs) ---------------
+    println!("[1/5] pretraining dense resnet_mini ...");
+    let dense = ensure_pretrained(&rt, &manifest, "resnet_mini", 2, 1024, 0)?;
+
+    // --- 2. closed-form decomposition ------------------------------------
+    println!("\n[2/5] decomposing (vanilla LRD, 2x) ...");
+    let cfg = manifest.config("resnet_mini", "lrd")?;
+    let outcome = decompose_checkpoint(&dense, cfg)?;
+    println!(
+        "    {} layers decomposed in {:.2}s, reconstruction error {:.3}",
+        outcome.layers_decomposed, outcome.secs, outcome.total_reconstruction_err
+    );
+
+    // --- 3. Algorithm 1 on a representative layer -------------------------
+    println!("\n[3/5] rank optimization for [128,128,3,3] on simulated V100 ...");
+    let ropt = optimize_rank(
+        &mut ModelTimer(DeviceProfile::v100()),
+        LayerShape::conv(128, 128, 3),
+        &RankOptConfig { m: 8 * 16 * 16, ..Default::default() },
+    )?;
+    println!(
+        "    Eq.5 rank {} -> optimal {} ({:.2}x faster than vanilla; keep original: {})",
+        ropt.r_nominal,
+        ropt.r_opt,
+        ropt.speedup_vs_nominal(),
+        ropt.use_original
+    );
+
+    // --- 4. fine-tune with sequential freezing ---------------------------
+    println!("\n[4/5] fine-tuning with sequential freezing (Algorithm 2) ...");
+    let train_cfg = TrainConfig {
+        model: "resnet_mini".into(),
+        variant: "lrd".into(),
+        freeze: FreezeMode::Sequential,
+        epochs: 4,
+        lr: LrSchedule::Fixed(1e-3),
+        train_size: 1024,
+        test_size: 256,
+        seed: 0,
+        verbose: true,
+    };
+    let mut trainer = Trainer::new(&rt, &manifest, train_cfg, outcome.params)?;
+    let record = trainer.run()?;
+
+    // --- 5. summary -------------------------------------------------------
+    println!("\n[5/5] summary");
+    println!("    final test accuracy : {:.3}", record.final_test_acc());
+    println!("    median step time    : {:.1} ms", record.median_step_secs() * 1e3);
+    println!("    inference throughput: {:.0} fps", trainer.infer_fps(5)?);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Batched-inference serving driver (the Table-1 "Infer Speed" columns).
+//!
+//! Loads a trained (or init) checkpoint for each variant of a model, runs a
+//! stream of batched requests through the PJRT executable, and reports
+//! throughput (fps) plus batch-latency percentiles — original vs vanilla
+//! LRD vs rank-optimized. Freezing does not appear here on purpose: the
+//! paper's point is that freezing accelerates *training only*.
+//!
+//! Run: `cargo run --release --example serve_infer`
+//! Env: LRTA_MODEL (resnet_mini|vit_mini), LRTA_BATCHES (default 12)
+
+use anyhow::Result;
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, evaluate_with};
+use lrta::data::Dataset;
+use lrta::metrics::ThroughputMeter;
+use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
+use lrta::util::bench::{fmt_delta_pct, table, write_report};
+
+fn main() -> Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let batches: usize =
+        std::env::var("LRTA_BATCHES").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
+
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let rt = Runtime::cpu()?;
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+
+    let mut rows = vec![vec![
+        "Variant".to_string(),
+        "fps".to_string(),
+        "Δ fps".to_string(),
+        "p50 ms".to_string(),
+        "p99 ms".to_string(),
+        "accuracy".to_string(),
+    ]];
+    let mut base_fps = None;
+
+    for variant in ["orig", "lrd", "rankopt"] {
+        let params = if variant == "orig" {
+            dense.clone()
+        } else {
+            decompose_checkpoint(&dense, manifest.config(&model, variant)?)?.params
+        };
+        let meta = manifest.artifact(&format!("{model}_{variant}_infer"))?;
+        let exe = rt.load_hlo(manifest.hlo_path(meta))?;
+
+        // request stream: pre-generated batches (the data pipeline is not
+        // what we're measuring)
+        let eval = Dataset::synthetic(meta.batch * 2, 99);
+        let mut param_lits = Vec::new();
+        for slot in &meta.trainable {
+            param_lits.push(tensor_to_literal(&params[&slot.name])?);
+        }
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let (xs, _) = eval.batch(0, meta.batch);
+
+        let make_inputs = |param_lits: &[xla::Literal]| -> Result<Vec<xla::Literal>> {
+            let mut v = Vec::with_capacity(param_lits.len() + 1);
+            for l in param_lits {
+                // re-upload params per request (serving keeps them resident;
+                // see bench_perf_micro for the buffer-resident variant)
+                let t = lrta::runtime::literal_to_tensor(l)?;
+                v.push(tensor_to_literal(&t)?);
+            }
+            v.push(xla::Literal::vec1(&xs).reshape(&x_dims)?);
+            Ok(v)
+        };
+
+        // warmup
+        exe.run(&make_inputs(&param_lits)?)?;
+        let mut meter = ThroughputMeter::new(meta.batch);
+        for _ in 0..batches {
+            let inputs = make_inputs(&param_lits)?;
+            let t0 = std::time::Instant::now();
+            exe.run(&inputs)?;
+            meter.record(t0.elapsed().as_secs_f64());
+        }
+        let acc = evaluate_with(&exe, meta, &params, &eval)?;
+
+        let fps = meter.fps();
+        let delta = match base_fps {
+            None => {
+                base_fps = Some(fps);
+                "0".to_string()
+            }
+            Some(base) => fmt_delta_pct(base, fps),
+        };
+        let s = meter.summary();
+        rows.push(vec![
+            variant.to_string(),
+            format!("{fps:.0}"),
+            delta,
+            format!("{:.1}", s.median * 1e3),
+            format!("{:.1}", s.p99 * 1e3),
+            format!("{acc:.3}"),
+        ]);
+        println!("{variant}: {fps:.0} fps");
+    }
+
+    let t = table(&rows);
+    println!("\n{model} inference serving ({} requests of batch per variant):\n{t}", batches);
+    write_report(&format!("results/serve_infer_{model}.txt"), &t);
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! End-to-end training driver — the repository's Fig.-3 experiment and the
+//! system-prompt's "full workload" validation run.
+//!
+//! Pretrains the dense mini ResNet, decomposes it, then fine-tunes THREE
+//! ways on the synthetic CIFAR-scale corpus:
+//!   - no freezing (vanilla LRD),
+//!   - regular freezing   (fixed pattern, paper §2.2),
+//!   - sequential freezing (Algorithm 2, alternating per epoch),
+//! logging the full loss/accuracy curves to `results/fig3_curves/*.csv`
+//! and printing the convergence comparison the paper makes
+//! ("sequential reaches the target accuracy epochs earlier").
+//!
+//! Run: `cargo run --release --example train_cifar_seqfreeze`
+//! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024)
+
+use anyhow::Result;
+use lrta::coordinator::{
+    decompose_checkpoint, ensure_pretrained, LrSchedule, TrainConfig, Trainer,
+};
+use lrta::freeze::FreezeMode;
+use lrta::metrics::RunRecord;
+use lrta::runtime::{Manifest, Runtime};
+use lrta::util::bench::write_report;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let epochs = env_usize("LRTA_EPOCHS", 10);
+    let train_size = env_usize("LRTA_TRAIN", 1024);
+
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let rt = Runtime::cpu()?;
+
+    println!("== pretraining dense resnet_mini ==");
+    let dense = ensure_pretrained(&rt, &manifest, "resnet_mini", 2, train_size, 0)?;
+
+    let cfg = manifest.config("resnet_mini", "lrd")?;
+    let decomposed = decompose_checkpoint(&dense, cfg)?;
+    println!(
+        "decomposed {} layers (err {:.3})\n",
+        decomposed.layers_decomposed, decomposed.total_reconstruction_err
+    );
+
+    let mut records: Vec<(&str, RunRecord)> = Vec::new();
+    for (label, mode) in [
+        ("nofreeze", FreezeMode::None),
+        ("regular", FreezeMode::Regular),
+        ("sequential", FreezeMode::Sequential),
+    ] {
+        println!("== fine-tune with {label} freezing ({epochs} epochs) ==");
+        let cfg = TrainConfig {
+            model: "resnet_mini".into(),
+            variant: "lrd".into(),
+            freeze: mode,
+            epochs,
+            lr: LrSchedule::Fixed(1e-3),
+            train_size,
+            test_size: 256,
+            seed: 0,
+            verbose: true,
+        };
+        let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
+        let record = trainer.run()?;
+        write_report(&format!("results/fig3_curves/{label}.csv"), &record.curve_csv());
+        records.push((label, record));
+        println!();
+    }
+
+    // --- the paper's Fig.-3 comparison -----------------------------------
+    println!("== convergence comparison (paper Fig. 3) ==");
+    let best_final = records
+        .iter()
+        .map(|(_, r)| r.final_test_acc())
+        .fold(f64::NAN, f64::max);
+    let target = (best_final * 0.95).min(0.95);
+    for (label, r) in &records {
+        let reach = r
+            .epochs_to_reach(target)
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "never".into());
+        println!(
+            "  {label:<11} final={:.4} best={:.4} reaches {:.3} at epoch {}  (median step {:.0} ms)",
+            r.final_test_acc(),
+            r.best_test_acc(),
+            target,
+            reach,
+            r.median_step_secs() * 1e3,
+        );
+    }
+    let seq = records.iter().find(|(l, _)| *l == "sequential").unwrap();
+    let reg = records.iter().find(|(l, _)| *l == "regular").unwrap();
+    match (seq.1.epochs_to_reach(target), reg.1.epochs_to_reach(target)) {
+        (Some(s), Some(r)) if s < r => {
+            println!("\nsequential converges {} epochs earlier than regular — matches Fig. 3", r - s)
+        }
+        (Some(_), None) => println!("\nregular never reaches the target — sequential wins"),
+        _ => println!("\n(convergence order varies at this tiny scale — see results/fig3_curves)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT lowering driver — the only entry point of the python layer.
+
+`make artifacts` runs this once; it emits, per model/variant:
+  - HLO **text** for every executable the rust coordinator needs
+    (infer + train steps per freeze pattern),
+  - the dense-model init checkpoint (binary, `ckpt.py` format),
+  - `artifacts/manifest.json` describing every artifact's signature
+    (ordered parameter names/shapes) plus each variant's decomposition
+    config (layer kinds + ranks) so rust decomposes with identical ranks.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import ckpt
+from .configs import MODELS, build_config, param_shapes
+from .resnet import resnet_apply
+from .train import init_params, make_infer, make_train_step, split_params
+from .vit import vit_apply
+
+APPLY = {"resnet_mini": resnet_apply, "vit_mini": vit_apply}
+
+# (variant, freeze-patterns-to-lower). "orig" has no factors to freeze.
+VARIANTS = {
+    "orig": ("none",),
+    "lrd": ("none", "a", "b"),
+    "rankopt": ("none", "a", "b"),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def shapes_entry(names, shapes):
+    return [{"name": n, "shape": list(shapes[n])} for n in names]
+
+
+def lower_train(model, variant, pattern, out_dir, alpha, tile):
+    spec_m = MODELS[model]
+    cfg = build_config(model, variant, alpha=alpha, tile=tile)
+    shapes = param_shapes(model, cfg)
+    trainable, frozen = split_params(model, cfg, pattern)
+    step = make_train_step(APPLY[model], cfg, trainable, frozen)
+
+    b = spec_m["train_batch"]
+    h, w, c = spec_m["image"]
+    args = (
+        [spec(shapes[n]) for n in trainable]
+        + [spec(shapes[n]) for n in frozen]
+        + [spec(shapes[n]) for n in trainable]  # momenta
+        + [
+            jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ]
+    )
+    name = f"{model}_{variant}_train_{pattern}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(step).lower(*args)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "path": os.path.basename(path),
+        "model": model,
+        "variant": variant,
+        "kind": "train",
+        "freeze": pattern,
+        "batch": b,
+        "trainable": shapes_entry(trainable, shapes),
+        "frozen": shapes_entry(frozen, shapes),
+        "data": {
+            "x": [b, h, w, c],
+            "y": [b],
+        },
+        "outputs": ["new_trainable...", "new_momenta...", "loss", "correct"],
+    }
+
+
+def lower_infer(model, variant, out_dir, alpha, tile):
+    spec_m = MODELS[model]
+    cfg = build_config(model, variant, alpha=alpha, tile=tile)
+    shapes = param_shapes(model, cfg)
+    names = list(shapes)
+    infer = make_infer(APPLY[model], cfg, names)
+
+    b = spec_m["infer_batch"]
+    h, w, c = spec_m["image"]
+    args = [spec(shapes[n]) for n in names] + [
+        jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+    ]
+    name = f"{model}_{variant}_infer"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(infer).lower(*args)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "path": os.path.basename(path),
+        "model": model,
+        "variant": variant,
+        "kind": "infer",
+        "freeze": "none",
+        "batch": b,
+        "trainable": shapes_entry(names, shapes),
+        "frozen": [],
+        "data": {"x": [b, h, w, c]},
+        "outputs": ["logits"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land beside it")
+    ap.add_argument("--models", default="resnet_mini,vit_mini")
+    ap.add_argument("--alpha", type=float, default=2.0)
+    ap.add_argument("--tile", type=int, default=16,
+                    help="rank-quantization tile for the rankopt variant")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "alpha": args.alpha,
+        "tile": args.tile,
+        "artifacts": [],
+        "configs": {},
+        "init_checkpoints": {},
+    }
+
+    for model in args.models.split(","):
+        model = model.strip()
+        # init checkpoint for the dense model (pretraining starts here)
+        cfg_orig = build_config(model, "orig")
+        params = init_params(model, cfg_orig, seed=args.seed)
+        ck_path = os.path.join(out_dir, f"{model}_init.bin")
+        ckpt.save(ck_path, params)
+        manifest["init_checkpoints"][model] = os.path.basename(ck_path)
+        print(f"[aot] wrote {ck_path} ({len(params)} tensors)")
+
+        for variant, patterns in VARIANTS.items():
+            cfg = build_config(model, variant, alpha=args.alpha, tile=args.tile)
+            manifest["configs"][f"{model}_{variant}"] = cfg
+            entry = lower_infer(model, variant, out_dir, args.alpha, args.tile)
+            manifest["artifacts"].append(entry)
+            print(f"[aot] lowered {entry['name']}")
+            for pattern in patterns:
+                entry = lower_train(model, variant, pattern, out_dir,
+                                    args.alpha, args.tile)
+                manifest["artifacts"].append(entry)
+                print(f"[aot] lowered {entry['name']}")
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {args.out} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

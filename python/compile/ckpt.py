@@ -1,0 +1,50 @@
+"""Binary checkpoint format shared between python (writer at build time)
+and rust (`rust/src/checkpoint`, reader/writer on the training path).
+
+Layout (little-endian):
+    magic   b"LRTA"  | version u32 (=1) | count u32
+    per tensor:
+        name_len u32 | name utf-8 | ndim u32 | dims u32[ndim] | f32 data
+Tensors are written in sorted-name order for determinism.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LRTA"
+VERSION = 1
+
+
+def save(path: str, params: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def load(path: str) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION, f"bad version {version}"
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4")
+            out[name] = data.reshape(dims).copy()
+    return out

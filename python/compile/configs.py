@@ -1,0 +1,256 @@
+"""Model zoo specs + decomposition configs (mirrors rust `lrd::plan`).
+
+The rank formulas here are the paper's Eq. (5)/(6) and the SVD closed form;
+rust re-implements them in `rust/src/lrd` and the two are pinned against
+each other by tests (e.g. [512,512,3,3] @ 2x -> rank 309).
+
+A "model config" maps every decomposable layer to
+    {"kind": "dense"} | {"kind": "svd", "rank": r}
+  | {"kind": "tucker", "r1": r1, "r2": r2}
+plus bookkeeping (r_min for the rank-opt sweep band). Variants:
+  - orig:    everything dense
+  - lrd:     vanilla Eq.-(5) ranks
+  - rankopt: Eq.-(5) ranks snapped to the device tile (rank quantization)
+"""
+
+from __future__ import annotations
+
+import math
+
+# ---------------------------------------------------------------------------
+# rank formulas (paper Eq. 5/6 + SVD closed form)
+# ---------------------------------------------------------------------------
+
+def svd_rank(c: int, s: int, alpha: float) -> int:
+    """Rank giving compression alpha on an FC/1x1 layer: r = CS/(a(C+S))."""
+    return max(1, math.floor(c * s / (alpha * (c + s))))
+
+
+def tucker_rank_eq5(c: int, s: int, k: int, alpha: float, beta: float = 1.0) -> int:
+    b_term = (c + beta * s) / (beta * k * k)
+    disc = b_term * b_term + 4.0 * c * s / (beta * alpha)
+    return max(1, math.floor((-b_term + math.sqrt(disc)) / 2.0))
+
+
+def tucker_rmin_eq6(c: int, s: int, k: int, alpha: float, beta: float = 1.0) -> int:
+    return tucker_rank_eq5(c, s, k, alpha + 1.0, beta)
+
+
+def svd_rmin(c: int, s: int, alpha: float) -> int:
+    return svd_rank(c, s, alpha + 1.0)
+
+
+def snap_rank(r: int, r_min: int, tile: int) -> int:
+    """Rank quantization: snap down to a tile multiple, never below r_min;
+    round up instead when that's closer and still near the nominal rank."""
+    down = (r // tile) * tile
+    if down >= max(r_min, 1):
+        return down
+    up = ((r + tile - 1) // tile) * tile
+    if up <= r + tile // 2:
+        return up
+    return r
+
+
+def decomposed_params(c, s, k, r1, r2):
+    if k == 1:
+        return c * r1 + r1 * s
+    return c * r1 + r1 * r2 * k * k + r2 * s
+
+
+# ---------------------------------------------------------------------------
+# model zoo
+# ---------------------------------------------------------------------------
+# Layer inventory entries: (name, type, meta)
+#   type "conv":   meta = dict(c, s, k, stride)
+#   type "conv1x1":meta = dict(c, s, stride)      (shortcut projections)
+#   type "linear": meta = dict(c, s)
+# Non-decomposable params (norms, biases) are implied by the model builders.
+
+RESNET_MINI = {
+    "name": "resnet_mini",
+    "image": (32, 32, 3),
+    "classes": 10,
+    "stem_channels": 32,
+    "stages": [  # (channels, blocks, stride of first block)
+        (32, 2, 1),
+        (64, 2, 2),
+        (128, 2, 2),
+    ],
+    "train_batch": 64,
+    "infer_batch": 128,
+}
+
+VIT_MINI = {
+    "name": "vit_mini",
+    "image": (32, 32, 3),
+    "classes": 10,
+    "patch": 4,
+    "dim": 128,
+    "depth": 4,
+    "heads": 4,
+    "mlp_dim": 512,
+    "train_batch": 64,
+    "infer_batch": 128,
+}
+
+MODELS = {"resnet_mini": RESNET_MINI, "vit_mini": VIT_MINI}
+
+
+def resnet_layers(spec):
+    """Decomposable layer inventory for the ResNet spec."""
+    layers = [("stem", "conv", dict(c=spec["image"][2], s=spec["stem_channels"], k=3, stride=1))]
+    c_in = spec["stem_channels"]
+    for si, (ch, blocks, stride) in enumerate(spec["stages"]):
+        for bi in range(blocks):
+            st = stride if bi == 0 else 1
+            pre = f"stage{si}.block{bi}"
+            layers.append((f"{pre}.conv1", "conv", dict(c=c_in, s=ch, k=3, stride=st)))
+            layers.append((f"{pre}.conv2", "conv", dict(c=ch, s=ch, k=3, stride=1)))
+            if st != 1 or c_in != ch:
+                layers.append((f"{pre}.down", "conv1x1", dict(c=c_in, s=ch, stride=st)))
+            c_in = ch
+    layers.append(("head", "linear", dict(c=c_in, s=spec["classes"])))
+    return layers
+
+
+def vit_layers(spec):
+    """Decomposable layer inventory for the ViT spec (paper: the two MLP
+    FCs per block + the patch-embedding FC are decomposed)."""
+    d, mlp = spec["dim"], spec["mlp_dim"]
+    patch_in = spec["patch"] * spec["patch"] * spec["image"][2]
+    layers = [("embed", "linear", dict(c=patch_in, s=d))]
+    for i in range(spec["depth"]):
+        pre = f"block{i}"
+        layers.append((f"{pre}.attn.qkv", "linear", dict(c=d, s=3 * d)))
+        layers.append((f"{pre}.attn.out", "linear", dict(c=d, s=d)))
+        layers.append((f"{pre}.mlp.fc1", "linear", dict(c=d, s=mlp)))
+        layers.append((f"{pre}.mlp.fc2", "linear", dict(c=mlp, s=d)))
+    layers.append(("head", "linear", dict(c=d, s=spec["classes"])))
+    return layers
+
+
+def model_layers(model: str):
+    if model == "resnet_mini":
+        return resnet_layers(RESNET_MINI)
+    if model == "vit_mini":
+        return vit_layers(VIT_MINI)
+    raise KeyError(model)
+
+
+# Layers the paper does NOT decompose for ViT (attention projections stay
+# dense; only FFN FCs + embedding are decomposed).
+VIT_DENSE_ALWAYS = ("attn.qkv", "attn.out")
+
+
+def build_config(model: str, variant: str, alpha: float = 2.0, beta: float = 1.0,
+                 tile: int = 16):
+    """Build the per-layer decomposition config for a model variant."""
+    assert variant in ("orig", "lrd", "rankopt"), variant
+    cfg = {}
+    for name, ltype, meta in model_layers(model):
+        if variant == "orig":
+            cfg[name] = {"kind": "dense"}
+            continue
+        c, s = meta["c"], meta["s"]
+        if model == "vit_mini" and any(name.endswith(d) for d in VIT_DENSE_ALWAYS):
+            cfg[name] = {"kind": "dense"}
+            continue
+        if ltype == "conv" and meta["k"] > 1:
+            k = meta["k"]
+            # Eq. 5 can exceed the mode rank for skewed layers (e.g. a
+            # 3-channel stem): clamp to the multilinear rank bound.
+            r = min(tucker_rank_eq5(c, s, k, alpha, beta), c)
+            rmin = min(tucker_rmin_eq6(c, s, k, alpha, beta), r)
+            if variant == "rankopt":
+                r = snap_rank(r, rmin, tile)
+            r = min(r, c)
+            r2 = max(1, min(s, round(beta * r)))
+            if decomposed_params(c, s, k, r, r2) >= c * s * k * k:
+                cfg[name] = {"kind": "dense"}  # decomposition doesn't pay
+            else:
+                cfg[name] = {"kind": "tucker", "r1": r, "r2": r2, "r_min": rmin}
+        else:  # linear or conv1x1 -> SVD
+            full = min(c, s)
+            r = min(svd_rank(c, s, alpha), full)
+            rmin = min(svd_rmin(c, s, alpha), r)
+            if variant == "rankopt":
+                r = snap_rank(r, rmin, tile)
+            r = min(r, full)
+            if decomposed_params(c, s, 1, r, r) >= c * s:
+                cfg[name] = {"kind": "dense"}
+            else:
+                cfg[name] = {"kind": "svd", "rank": r, "r_min": rmin}
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# parameter shape inventories
+# ---------------------------------------------------------------------------
+
+def param_shapes(model: str, cfg):
+    """Ordered {name: shape} for all trainable params of a model variant.
+
+    Order is deterministic (layer inventory order, then auxiliary params) —
+    the AOT manifest and the rust runtime both rely on it.
+    """
+    shapes = {}
+
+    def add_decomposable(name, ltype, meta):
+        kind = cfg[name]["kind"]
+        c, s = meta["c"], meta["s"]
+        if ltype == "conv" and meta["k"] > 1:
+            k = meta["k"]
+            if kind == "dense":
+                shapes[f"{name}.w"] = (k, k, c, s)
+            else:
+                r1, r2 = cfg[name]["r1"], cfg[name]["r2"]
+                shapes[f"{name}.first"] = (c, r1)
+                shapes[f"{name}.core"] = (k, k, r1, r2)
+                shapes[f"{name}.last"] = (r2, s)
+            shapes[f"{name}.bias"] = (s,)
+        elif ltype == "conv1x1":
+            if kind == "dense":
+                shapes[f"{name}.w"] = (c, s)
+            else:
+                r = cfg[name]["rank"]
+                shapes[f"{name}.a"] = (c, r)
+                shapes[f"{name}.b"] = (r, s)
+            shapes[f"{name}.bias"] = (s,)
+        else:  # linear
+            if kind == "dense":
+                shapes[f"{name}.w"] = (c, s)
+            else:
+                r = cfg[name]["rank"]
+                shapes[f"{name}.a"] = (c, r)
+                shapes[f"{name}.b"] = (r, s)
+            shapes[f"{name}.bias"] = (s,)
+
+    if model == "resnet_mini":
+        spec = RESNET_MINI
+        for name, ltype, meta in resnet_layers(spec):
+            add_decomposable(name, ltype, meta)
+            # norms: one GroupNorm after each conv (not after head/down)
+            if ltype == "conv":
+                shapes[f"{name}.gn.gamma"] = (meta["s"],)
+                shapes[f"{name}.gn.beta"] = (meta["s"],)
+    elif model == "vit_mini":
+        spec = VIT_MINI
+        d = spec["dim"]
+        for name, ltype, meta in vit_layers(spec):
+            add_decomposable(name, ltype, meta)
+        for i in range(spec["depth"]):
+            shapes[f"block{i}.ln1.gamma"] = (d,)
+            shapes[f"block{i}.ln1.beta"] = (d,)
+            shapes[f"block{i}.ln2.gamma"] = (d,)
+            shapes[f"block{i}.ln2.beta"] = (d,)
+        shapes["pos_embed"] = ((spec["image"][0] // spec["patch"]) ** 2, d)
+        shapes["ln_f.gamma"] = (d,)
+        shapes["ln_f.beta"] = (d,)
+    else:
+        raise KeyError(model)
+    return shapes
+
+
+def total_params(shapes) -> int:
+    return sum(int(math.prod(s)) for s in shapes.values())

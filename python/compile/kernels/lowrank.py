@@ -1,0 +1,156 @@
+"""L1 — fused low-rank product Pallas kernel.
+
+The hot spot of every LRD-decomposed layer is the two-matmul chain
+
+    y = (x @ a) @ b        x: [M, C], a: [C, r], b: [r, S]
+
+where ``a = U'.sqrt(S')`` and ``b = sqrt(S').V'^T`` are the SVD factors
+(paper Eq. 2). Executed as two separate layers (what the paper's PyTorch
+implementation does) the rank-r intermediate ``t = x @ a`` round-trips
+through HBM; this kernel keeps it in VMEM scratch and feeds both products
+to the MXU back-to-back.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  - grid over M in blocks of ``bm`` (default 128 = MXU tile height),
+  - ``a`` and ``b`` are small (rank-r factors) and live fully in VMEM,
+  - the intermediate ``t[bm, r]`` is a VMEM scratch buffer, never spilled,
+  - both matmuls run at f32 on the MXU with
+    ``preferred_element_type=float32``.
+
+On this image Pallas must run ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), which lowers the kernel to plain HLO
+ops — numerically identical, so correctness transfers; TPU performance is
+estimated analytically in ``rust/src/devmodel``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array is 128x128; (8, 128) is the f32 VREG tile.
+MXU_TILE = 128
+SUBLANE = 8
+
+
+def _pick_block_m(m: int, bm: int) -> int:
+    """Largest block <= bm that divides m, preferring MXU-aligned sizes."""
+    if m <= bm:
+        return m
+    for cand in (bm, MXU_TILE, 64, 32, 16, SUBLANE):
+        if cand <= bm and m % cand == 0:
+            return cand
+    # fall back to the largest divisor of m not exceeding bm
+    for cand in range(min(bm, m), 0, -1):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+def _lowrank_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref):
+    """One grid step: o[bm, S] = (x[bm, C] @ a[C, r]) @ b[r, S]."""
+    # First product -> VMEM scratch (never leaves the core's memory).
+    acc_ref[...] = jnp.dot(
+        x_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+    # Second product straight from scratch.
+    o_ref[...] = jnp.dot(
+        acc_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _lowrank_pallas(x, a, b, block_m: int, interpret: bool):
+    """Raw fused kernel invocation (no AD)."""
+    m, c = x.shape
+    c2, r = a.shape
+    r2, s = b.shape
+    assert c == c2 and r == r2, f"shape mismatch {x.shape} {a.shape} {b.shape}"
+    bm = _pick_block_m(m, block_m)
+    grid = (m // bm,)
+
+    return pl.pallas_call(
+        _lowrank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
+        scratch_shapes=[pltpu_scratch((bm, r))],
+        interpret=interpret,
+    )(x, a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _lowrank_core(x, a, b, block_m, interpret):
+    return _lowrank_pallas(x, a, b, block_m, interpret)
+
+
+def _lowrank_fwd(x, a, b, block_m, interpret):
+    return _lowrank_pallas(x, a, b, block_m, interpret), (x, a, b)
+
+
+def _lowrank_bwd(block_m, interpret, res, g):
+    """Backward pass, itself built on the fused kernel where it applies.
+
+    y = x a b  =>  dx = g bT aT   (another low-rank product -> same kernel)
+                   da = xT (g bT)
+                   db = (x a)T g
+    The rank-r intermediates (g bT and x a) are shared between the factor
+    grads and recomputed once each — no O(M*C*S) buffer is ever formed.
+    """
+    x, a, b = res
+    # dx via the fused kernel: (g @ bT) @ aT
+    dx = _lowrank_pallas(g, b.T, a.T, block_m, interpret)
+    g_bt = g @ b.T          # [M, r]
+    x_a = x @ a             # [M, r]
+    da = x.T @ g_bt         # [C, r]
+    db = x_a.T @ g          # [r, S]
+    return dx, da, db
+
+
+_lowrank_core.defvjp(_lowrank_fwd, _lowrank_bwd)
+
+
+def lowrank_matmul(x, a, b, *, block_m: int = MXU_TILE, interpret: bool = True):
+    """Fused ``(x @ a) @ b`` via Pallas, differentiable.
+
+    Args:
+      x: ``[M, C]`` activations (M = batch*tokens or batch*H*W).
+      a: ``[C, r]`` input-side factor.
+      b: ``[r, S]`` output-side factor.
+      block_m: target M-block (rounded down to a divisor of M).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``[M, S]`` float32.
+    """
+    return _lowrank_core(x, a, b, block_m, interpret)
+
+
+def pltpu_scratch(shape):
+    """VMEM scratch spec; uses the TPU memory space when available and a
+    generic pallas scratch in interpret mode."""
+    try:  # pragma: no cover - environment dependent
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover
+        return pl.Scratch(shape, jnp.float32)
+
+
+def lowrank_vmem_bytes(m_block: int, c: int, r: int, s: int) -> int:
+    """VMEM footprint (bytes, f32) of one grid step — used by the TPU
+    performance estimate in rust's devmodel and reported in EXPERIMENTS.md."""
+    floats = m_block * c + c * r + r * s + m_block * r + m_block * s
+    return 4 * floats
+
+
+def lowrank_mxu_flops(m: int, c: int, r: int, s: int) -> int:
+    """MXU FLOPs of the fused product (2mnk per matmul)."""
+    return 2 * m * c * r + 2 * m * r * s

@@ -1,0 +1,186 @@
+"""L2 building blocks — functional layers over explicit parameter dicts.
+
+Params are flat ``{name: jnp.ndarray}`` dicts with dotted names
+(``stage1.block0.conv1.core``). Every decomposable layer exists in a dense
+and a decomposed form; the decomposed forms route their 1x1 / FC products
+through the L1 Pallas kernel (``kernels.lowrank``).
+
+Weight layouts (match the AOT manifest consumed by the rust runtime):
+  - linear:        ``w [C, S]``, ``bias [S]``
+  - conv (dense):  ``w [k, k, C, S]`` (HWIO), ``bias [S]``
+  - linear/1x1 SVD factors:   ``a [C, r]``, ``b [r, S]``
+  - conv Tucker2 factors:     ``first [C, r1]``, ``core [k, k, r1, r2]``,
+                              ``last [r2, S]``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.lowrank import lowrank_matmul
+
+# Pallas must run interpret=True on the CPU PJRT plugin (see kernels doc).
+INTERPRET = True
+
+# Block size for the low-rank kernel's M dimension. On TPU this would be
+# 128 (MXU tile, see kernels/lowrank.py); on the CPU PJRT target a grid of
+# blocks lowers to an HLO while-loop with dynamic-update-slices, which the
+# 2023-vintage XLA CPU backend executes far slower than one fused matmul
+# chain — so CPU artifacts use a single whole-M block.
+BLOCK_M = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def dense_linear(p, name, x):
+    """x [M, C] @ w [C, S] + bias."""
+    return x @ p[f"{name}.w"] + p[f"{name}.bias"]
+
+
+def svd_linear(p, name, x):
+    """Decomposed FC: fused low-rank product through the Pallas kernel."""
+    y = lowrank_matmul(x, p[f"{name}.a"], p[f"{name}.b"], block_m=BLOCK_M, interpret=INTERPRET)
+    return y + p[f"{name}.bias"]
+
+
+def conv2d(p, name, x, stride=1):
+    """Dense kxk conv, NHWC/HWIO."""
+    y = lax.conv_general_dilated(
+        x,
+        p[f"{name}.w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p[f"{name}.bias"]
+
+
+def pointwise(p_first, p_last, x):
+    """Fused pair of 1x1 convs (C->r1->S) via the low-rank kernel over
+    flattened pixels. Used when the Tucker core is the identity-free path."""
+    n, h, w, c = x.shape
+    y = lowrank_matmul(
+        x.reshape(n * h * w, c), p_first, p_last, block_m=BLOCK_M, interpret=INTERPRET
+    )
+    return y.reshape(n, h, w, -1)
+
+
+def pointwise_single(x, w):
+    """Single 1x1 conv as a flat matmul. x NHWC, w [C, S]."""
+    n, h, wd, c = x.shape
+    return (x.reshape(n * h * wd, c) @ w).reshape(n, h, wd, -1)
+
+
+def tucker_conv(p, name, x, stride=1):
+    """Tucker2-decomposed conv: 1x1 -> kxk core (carries the stride) -> 1x1.
+
+    The two 1x1 stages are rank-r matmuls; the input-side one feeds the
+    core conv so it cannot be fused with the output-side one when k > 1 —
+    but each is still a Pallas-friendly flat matmul.
+    """
+    first = p[f"{name}.first"]  # [C, r1]
+    core = p[f"{name}.core"]  # [k, k, r1, r2]
+    last = p[f"{name}.last"]  # [r2, S]
+    t = pointwise_single(x, first)
+    t = lax.conv_general_dilated(
+        t,
+        core,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = pointwise_single(t, last)
+    return y + p[f"{name}.bias"]
+
+
+def svd_conv1x1(p, name, x, stride=1):
+    """SVD-decomposed 1x1 conv (used for shortcut projections)."""
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    n, h, w, c = x.shape
+    y = lowrank_matmul(
+        x.reshape(n * h * w, c), p[f"{name}.a"], p[f"{name}.b"],
+        block_m=BLOCK_M, interpret=INTERPRET,
+    )
+    return y.reshape(n, h, w, -1) + p[f"{name}.bias"]
+
+
+def dense_conv1x1(p, name, x, stride=1):
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    return pointwise_single(x, p[f"{name}.w"]) + p[f"{name}.bias"]
+
+
+def group_norm(p, name, x, groups=8, eps=1e-5):
+    """Stateless GroupNorm (no running stats -> clean AOT train steps)."""
+    shape = x.shape
+    c = shape[-1]
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(*shape[:-1], g, c // g)
+    axes = tuple(range(1, xg.ndim - 2)) + (xg.ndim - 1,)
+    mean = xg.mean(axis=axes, keepdims=True)
+    var = xg.var(axis=axes, keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(shape)
+    return xn * p[f"{name}.gamma"] + p[f"{name}.beta"]
+
+
+def layer_norm(p, name, x, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * p[f"{name}.gamma"] + p[f"{name}.beta"]
+
+
+def softmax_cross_entropy(logits, labels):
+    shifted = logits - logits.max(-1, keepdims=True)
+    logz = jnp.log(jnp.exp(shifted).sum(-1))
+    logp = shifted - logz[..., None]
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def num_correct(logits, labels):
+    return (logits.argmax(-1) == labels).sum().astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# layer-spec driven dispatch
+# ---------------------------------------------------------------------------
+# A model config describes each decomposable layer as
+#   {"kind": "dense"}                      keep original
+#   {"kind": "svd", "rank": r}             FC / 1x1 SVD factors
+#   {"kind": "tucker", "r1": r1, "r2": r2} kxk conv Tucker2
+# The config is produced by configs.py (vanilla Eq.5 ranks or
+# hardware-snapped "rankopt" ranks) and recorded in the AOT manifest.
+
+
+def apply_conv(p, cfg, name, x, stride=1):
+    kind = cfg[name]["kind"]
+    if kind == "dense":
+        return conv2d(p, name, x, stride=stride)
+    if kind == "tucker":
+        return tucker_conv(p, name, x, stride=stride)
+    raise ValueError(f"bad conv kind {kind} for {name}")
+
+
+def apply_conv1x1(p, cfg, name, x, stride=1):
+    kind = cfg[name]["kind"]
+    if kind == "dense":
+        return dense_conv1x1(p, name, x, stride=stride)
+    if kind == "svd":
+        return svd_conv1x1(p, name, x, stride=stride)
+    raise ValueError(f"bad 1x1 kind {kind} for {name}")
+
+
+def apply_linear(p, cfg, name, x):
+    kind = cfg[name]["kind"]
+    if kind == "dense":
+        return dense_linear(p, name, x)
+    if kind == "svd":
+        return svd_linear(p, name, x)
+    raise ValueError(f"bad linear kind {kind} for {name}")

@@ -1,0 +1,43 @@
+"""L2 — CIFAR-scale ResNet (pre-activation basic blocks, GroupNorm).
+
+Functional: ``resnet_apply(params, cfg, x) -> logits`` where ``cfg`` is a
+decomposition config from ``configs.build_config``. The same function
+serves the original and every decomposed variant — the config decides which
+layers route through the Pallas low-rank kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers as L
+from .configs import RESNET_MINI
+
+
+def _block(p, cfg, pre, x, c_in, ch, stride):
+    """Basic residual block: conv-gn-relu, conv-gn, (+shortcut), relu."""
+    y = L.apply_conv(p, cfg, f"{pre}.conv1", x, stride=stride)
+    y = L.group_norm(p, f"{pre}.conv1.gn", y)
+    y = jnp.maximum(y, 0.0)
+    y = L.apply_conv(p, cfg, f"{pre}.conv2", y, stride=1)
+    y = L.group_norm(p, f"{pre}.conv2.gn", y)
+    if stride != 1 or c_in != ch:
+        sc = L.apply_conv1x1(p, cfg, f"{pre}.down", x, stride=stride)
+    else:
+        sc = x
+    return jnp.maximum(y + sc, 0.0)
+
+
+def resnet_apply(p, cfg, x, spec=RESNET_MINI):
+    """x: [N, H, W, 3] float32 -> logits [N, classes]."""
+    y = L.apply_conv(p, cfg, "stem", x, stride=1)
+    y = L.group_norm(p, "stem.gn", y)
+    y = jnp.maximum(y, 0.0)
+    c_in = spec["stem_channels"]
+    for si, (ch, blocks, stride) in enumerate(spec["stages"]):
+        for bi in range(blocks):
+            st = stride if bi == 0 else 1
+            y = _block(p, cfg, f"stage{si}.block{bi}", y, c_in, ch, st)
+            c_in = ch
+    y = y.mean(axis=(1, 2))  # global average pool -> [N, C]
+    return L.apply_linear(p, cfg, "head", y)

@@ -1,0 +1,131 @@
+"""L2 — SGD(momentum, weight-decay) train steps with structural freezing.
+
+The paper's freezing (Algorithm 2) is implemented *structurally*: each
+freeze pattern yields a separate train step in which the frozen factors are
+plain (non-differentiated) inputs. `jax.grad` then never builds their
+backward graph, so the lowered HLO genuinely contains less backprop work —
+the same saving `requires_grad=False` gives PyTorch, but visible to the AOT
+compiler.
+
+Freeze patterns over a decomposition config:
+  - "none": everything trainable (vanilla LRD / original model)
+  - "a" (even epochs): SVD -> freeze factor `a` (L_r(0)), train `b`;
+         Tucker -> freeze `first`+`last` (the 1x1s), train `core`
+  - "b" (odd epochs): the complement.
+Auxiliary params (biases, norms, pos-embed, dense layers) always train.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .configs import param_shapes
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+
+def frozen_names_for_pattern(cfg, pattern: str):
+    """Set of parameter names frozen under a pattern (paper Algorithm 2)."""
+    assert pattern in ("none", "a", "b"), pattern
+    frozen = set()
+    if pattern == "none":
+        return frozen
+    for lname, lcfg in cfg.items():
+        kind = lcfg["kind"]
+        if kind == "svd":
+            frozen.add(f"{lname}.a" if pattern == "a" else f"{lname}.b")
+        elif kind == "tucker":
+            if pattern == "a":
+                frozen.update({f"{lname}.first", f"{lname}.last"})
+            else:
+                frozen.add(f"{lname}.core")
+    return frozen
+
+
+def split_params(model: str, cfg, pattern: str):
+    """Ordered (trainable_names, frozen_names) for a freeze pattern."""
+    shapes = param_shapes(model, cfg)
+    frozen = frozen_names_for_pattern(cfg, pattern)
+    trainable = [n for n in shapes if n not in frozen]
+    frozen_list = [n for n in shapes if n in frozen]
+    return trainable, frozen_list
+
+
+def make_train_step(apply_fn, cfg, trainable_names, frozen_names,
+                    momentum=MOMENTUM, wd=WEIGHT_DECAY):
+    """Build `step(*trainable, *frozen, *mom, x, y, lr) -> (*new_trainable,
+    *new_mom, loss, correct)` with flat positional arrays (AOT-friendly)."""
+    n_tr = len(trainable_names)
+    n_fz = len(frozen_names)
+
+    def step(*args):
+        tr_list = args[:n_tr]
+        fz_list = args[n_tr:n_tr + n_fz]
+        mom_list = args[n_tr + n_fz:n_tr + n_fz + n_tr]
+        x, y, lr = args[n_tr + n_fz + n_tr:]
+        fz = dict(zip(frozen_names, fz_list))
+
+        def loss_fn(tr_tuple):
+            p = dict(zip(trainable_names, tr_tuple))
+            p.update(fz)
+            logits = apply_fn(p, cfg, x)
+            return L.softmax_cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            tuple(tr_list)
+        )
+        new_tr, new_mom = [], []
+        for w, g, m in zip(tr_list, grads, mom_list):
+            g = g + wd * w
+            nm = momentum * m + g
+            new_tr.append(w - lr * nm)
+            new_mom.append(nm)
+        correct = L.num_correct(logits, y)
+        return tuple(new_tr) + tuple(new_mom) + (loss, correct)
+
+    return step
+
+
+def make_infer(apply_fn, cfg, param_names):
+    """Build `infer(*params, x) -> logits` with flat positional arrays."""
+    def infer(*args):
+        p = dict(zip(param_names, args[:-1]))
+        return apply_fn(p, cfg, args[-1])
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# initialization (dense models only — decomposed weights come from the rust
+# LRD engine operating on the trained dense checkpoint)
+# ---------------------------------------------------------------------------
+
+def init_params(model: str, cfg, seed: int = 0):
+    """He-normal init for weights, zeros for biases, ones/zeros for norms."""
+    shapes = param_shapes(model, cfg)
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(".bias") or name.endswith(".beta"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "pos_embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = int(jnp.prod(jnp.array(shape[:-1]))) if len(shape) > 1 else shape[0]
+            std = (2.0 / max(1, fan_in)) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def lr_cosine(base_lr: float, step: int, total_steps: int) -> float:
+    """Cosine schedule (paper: ImageNet fine-tunes use cosine LR)."""
+    import math
+
+    t = min(step, total_steps) / max(1, total_steps)
+    return 0.5 * base_lr * (1.0 + math.cos(math.pi * t))

@@ -1,0 +1,64 @@
+"""L2 — small Vision Transformer (pre-LN, mean-pool head).
+
+Per the paper's ViT experiment, the decomposable layers are the two FCs in
+each block's feed-forward module plus the patch-embedding FC; attention
+projections stay dense. ``cfg`` decides dense vs SVD per layer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers as L
+from .configs import VIT_MINI
+
+
+def _attention(p, pre, x, heads):
+    """Standard multi-head self-attention (dense projections)."""
+    n, t, d = x.shape
+    hd = d // heads
+    qkv = L.dense_linear(p, f"{pre}.qkv", x.reshape(n * t, d)).reshape(n, t, 3, heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [n, t, h, hd]
+    q = q.transpose(0, 2, 1, 3)  # [n, h, t, hd]
+    k = k.transpose(0, 2, 3, 1)  # [n, h, hd, t]
+    v = v.transpose(0, 2, 1, 3)
+    att = jnp.einsum("nhtd,nhds->nhts", q, k) / jnp.sqrt(jnp.float32(hd))
+    att = jnp.exp(att - att.max(-1, keepdims=True))
+    att = att / att.sum(-1, keepdims=True)
+    y = jnp.einsum("nhts,nhsd->nhtd", att, v).transpose(0, 2, 1, 3).reshape(n * t, d)
+    return L.dense_linear(p, f"{pre}.out", y).reshape(n, t, d)
+
+
+def _mlp(p, cfg, pre, x):
+    n, t, d = x.shape
+    y = L.apply_linear(p, cfg, f"{pre}.fc1", x.reshape(n * t, d))
+    y = jnp.maximum(y, 0.0)  # relu (gelu adds lowering noise for no gain here)
+    y = L.apply_linear(p, cfg, f"{pre}.fc2", y)
+    return y.reshape(n, t, d)
+
+
+def vit_apply(p, cfg, x, spec=VIT_MINI):
+    """x: [N, H, W, 3] -> logits [N, classes]."""
+    n, h, w, c = x.shape
+    ps = spec["patch"]
+    d = spec["dim"]
+    gh, gw = h // ps, w // ps
+    # patchify: [N, gh, ps, gw, ps, C] -> [N, gh*gw, ps*ps*C]
+    patches = (
+        x.reshape(n, gh, ps, gw, ps, c)
+        .transpose(0, 1, 3, 2, 4, 5)
+        .reshape(n * gh * gw, ps * ps * c)
+    )
+    tok = L.apply_linear(p, cfg, "embed", patches).reshape(n, gh * gw, d)
+    tok = tok + p["pos_embed"]
+    for i in range(spec["depth"]):
+        pre = f"block{i}"
+        t = tok.reshape(n * gh * gw, d)
+        a = L.layer_norm(p, f"{pre}.ln1", t).reshape(n, gh * gw, d)
+        tok = tok + _attention(p, f"{pre}.attn", a, spec["heads"])
+        t = tok.reshape(n * gh * gw, d)
+        m = L.layer_norm(p, f"{pre}.ln2", t).reshape(n, gh * gw, d)
+        tok = tok + _mlp(p, cfg, f"{pre}.mlp", m)
+    t = L.layer_norm(p, "ln_f", tok.reshape(n * gh * gw, d)).reshape(n, gh * gw, d)
+    pooled = t.mean(axis=1)
+    return L.apply_linear(p, cfg, "head", pooled)

@@ -1,0 +1,135 @@
+"""Config / rank-formula tests. These pin the python mirror of the rank
+math to the same values the rust `lrd` module asserts (e.g. the paper's
+[512,512,3,3] @ 2x -> 309 example), keeping the two implementations honest.
+"""
+
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import (
+    MODELS,
+    build_config,
+    decomposed_params,
+    model_layers,
+    param_shapes,
+    snap_rank,
+    svd_rank,
+    svd_rmin,
+    total_params,
+    tucker_rank_eq5,
+    tucker_rmin_eq6,
+)
+
+
+class TestRankFormulas:
+    def test_paper_example_512(self):
+        assert tucker_rank_eq5(512, 512, 3, 2.0) in (308, 309, 310)
+
+    def test_svd_rank_512(self):
+        assert svd_rank(512, 512, 2.0) == 128
+
+    def test_rmin_below_nominal(self):
+        assert tucker_rmin_eq6(512, 512, 3, 2.0) < tucker_rank_eq5(512, 512, 3, 2.0)
+        assert svd_rmin(256, 256, 2.0) < svd_rank(256, 256, 2.0)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        c=st.integers(8, 512),
+        s=st.integers(8, 512),
+        k=st.sampled_from([1, 3, 5]),
+        alpha=st.sampled_from([1.5, 2.0, 3.0, 4.0]),
+    )
+    def test_eq5_hits_compression(self, c, s, k, alpha):
+        if k == 1:
+            r = svd_rank(c, s, alpha)
+            dec = decomposed_params(c, s, 1, r, r)
+        else:
+            r = tucker_rank_eq5(c, s, k, alpha)
+            dec = decomposed_params(c, s, k, r, r)
+        dense = c * s * k * k
+        # floor() => at least alpha (tiny layers can overshoot hugely)
+        assert dense / dec >= alpha * 0.95 or r == 1
+
+    @settings(max_examples=40, deadline=None)
+    @given(r=st.integers(1, 512), rmin=st.integers(1, 512), tile=st.sampled_from([8, 16, 32, 64, 128]))
+    def test_snap_rank_invariants(self, r, rmin, tile):
+        rmin = min(rmin, r)
+        snapped = snap_rank(r, rmin, tile)
+        assert snapped >= 1
+        # snapped is either a tile multiple or the original rank
+        assert snapped % tile == 0 or snapped == r
+        # never far above nominal
+        assert snapped <= r + tile // 2
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("model", list(MODELS))
+    def test_orig_is_all_dense(self, model):
+        cfg = build_config(model, "orig")
+        assert all(v["kind"] == "dense" for v in cfg.values())
+
+    @pytest.mark.parametrize("model", list(MODELS))
+    def test_lrd_compresses_about_2x_on_decomposed_layers(self, model):
+        cfg_o = build_config(model, "orig")
+        cfg_l = build_config(model, "lrd", alpha=2.0)
+        dense = total_params(param_shapes(model, cfg_o))
+        lrd = total_params(param_shapes(model, cfg_l))
+        assert lrd < dense
+        # decomposed layers hit ~2x; aux params + dense-kept layers dilute
+        assert dense / lrd > 1.3
+
+    def test_rankopt_ranks_are_tile_multiples(self):
+        cfg = build_config("resnet_mini", "rankopt", tile=16)
+        for name, lcfg in cfg.items():
+            if lcfg["kind"] == "tucker":
+                assert lcfg["r1"] % 16 == 0 or lcfg["r1"] >= lcfg["r_min"], name
+            if lcfg["kind"] == "svd":
+                assert lcfg["rank"] % 16 == 0 or lcfg["rank"] >= lcfg["r_min"], name
+
+    def test_vit_attention_stays_dense(self):
+        cfg = build_config("vit_mini", "lrd")
+        for name, lcfg in cfg.items():
+            if "attn" in name:
+                assert lcfg["kind"] == "dense", name
+
+    def test_resnet_stem_rank_clamped_to_channels(self):
+        # Eq. 5 on the 3-channel stem exceeds the mode-rank bound; the
+        # config must clamp r1 <= C so factor shapes are well-posed.
+        cfg = build_config("resnet_mini", "lrd")
+        assert cfg["stem"]["kind"] == "tucker"
+        assert cfg["stem"]["r1"] <= 3
+
+    def test_all_ranks_within_mode_bounds(self):
+        for model in MODELS:
+            for variant in ("lrd", "rankopt"):
+                cfg = build_config(model, variant)
+                for name, ltype, meta in model_layers(model):
+                    lcfg = cfg[name]
+                    if lcfg["kind"] == "svd":
+                        assert lcfg["rank"] <= min(meta["c"], meta["s"]), name
+                    elif lcfg["kind"] == "tucker":
+                        assert lcfg["r1"] <= meta["c"], name
+                        assert lcfg["r2"] <= meta["s"], name
+
+    @pytest.mark.parametrize("model", list(MODELS))
+    def test_param_shapes_deterministic(self, model):
+        cfg = build_config(model, "lrd")
+        s1 = list(param_shapes(model, cfg).items())
+        s2 = list(param_shapes(model, cfg).items())
+        assert s1 == s2
+
+    @pytest.mark.parametrize("model", list(MODELS))
+    def test_layer_inventory_shapes_positive(self, model):
+        for name, ltype, meta in model_layers(model):
+            assert meta["c"] > 0 and meta["s"] > 0
+            assert ltype in ("conv", "conv1x1", "linear")
+
+    def test_total_params_matches_manual(self):
+        shapes = {"a": (2, 3), "b": (4,)}
+        assert total_params(shapes) == 10

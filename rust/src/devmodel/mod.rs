@@ -1,0 +1,322 @@
+//! Analytical device performance model — the substitute for the paper's
+//! V100 GPUs and Ascend-910 NPUs (DESIGN.md §Substitutions).
+//!
+//! The paper's rank-quantization effect (Fig. 2's step-time staircase) is
+//! caused by tile quantization: a matmul engine processes operands in
+//! fixed tiles (tensor-core 16×16×16 on V100, cube 16³ on Ascend, MXU
+//! 128×128 on TPU), so every dimension is padded up to the tile and step
+//! time is flat between multiples. This module models exactly that:
+//!
+//! `t = overhead + max(padded_flops / peak, bytes / bandwidth)`
+//!
+//! and composes layer/ model/ training-step estimates from it. The rank
+//! optimizer consumes it through the same `LayerTimer` trait as the real
+//! PJRT backend, so Algorithm 1 is identical against simulated V100,
+//! simulated Ascend, simulated TPU, or measured CPU.
+
+use crate::runtime::builder::LayerBench;
+
+/// A matmul-engine device profile.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Tile quantization per matmul dimension (M, K, N).
+    pub tile_m: usize,
+    pub tile_k: usize,
+    pub tile_n: usize,
+    /// Peak sustained f32 matmul throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Fixed per-kernel-launch overhead (s).
+    pub launch_overhead: f64,
+    /// Sustained-throughput multiplier when the contraction/output dims are
+    /// NOT tile multiples (matmul engines fall back to slower generic
+    /// kernels on misaligned leading dims — the other half of the Fig. 2
+    /// staircase beyond pure padding; cuBLAS shows 1.2-2x swings).
+    pub misalign_eff: f64,
+    /// VMEM / shared-memory budget per core (bytes); 0 = unmodelled.
+    pub sram_bytes: usize,
+}
+
+fn ceil_to(x: usize, tile: usize) -> usize {
+    x.div_ceil(tile) * tile
+}
+
+impl DeviceProfile {
+    /// NVIDIA V100-like: tensor-core tiles 16³ but cuBLAS wave quantization
+    /// makes 8-multiples matter most; ~14 TFLOP/s sustained, 900 GB/s.
+    pub fn v100() -> Self {
+        DeviceProfile {
+            name: "v100-sim",
+            tile_m: 64,
+            tile_k: 8,
+            tile_n: 8,
+            peak_flops: 14.0e12,
+            mem_bw: 900.0e9,
+            launch_overhead: 4.5e-6,
+            misalign_eff: 0.68,
+            sram_bytes: 0,
+        }
+    }
+
+    /// Huawei Ascend-910-like: cube unit 16×16×16, ~16 TFLOP/s f32-ish
+    /// sustained through the cube, 1.2 TB/s.
+    pub fn ascend910() -> Self {
+        DeviceProfile {
+            name: "ascend910-sim",
+            tile_m: 16,
+            tile_k: 16,
+            tile_n: 16,
+            peak_flops: 16.0e12,
+            mem_bw: 1200.0e9,
+            launch_overhead: 6.0e-6,
+            misalign_eff: 0.72,
+            sram_bytes: 0,
+        }
+    }
+
+    /// TPU-v4-like: 128×128 MXU, (8,128) vreg tiling, 16 MiB VMEM.
+    /// Used for the L1 kernel's estimated-performance numbers.
+    pub fn tpu_v4() -> Self {
+        DeviceProfile {
+            name: "tpuv4-sim",
+            tile_m: 8,
+            tile_k: 128,
+            tile_n: 128,
+            peak_flops: 137.0e12 / 2.0, // f32 via bf16 passes
+            mem_bw: 1200.0e9,
+            launch_overhead: 2.0e-6,
+            misalign_eff: 0.45,
+            sram_bytes: 16 << 20,
+        }
+    }
+
+    /// This host's CPU, roughly: SIMD width 16 f32 lanes, measured-scale
+    /// GEMM throughput. Used in tests to sanity-check model shapes.
+    pub fn cpu_sim() -> Self {
+        DeviceProfile {
+            name: "cpu-sim",
+            tile_m: 4,
+            tile_k: 16,
+            tile_n: 16,
+            peak_flops: 1.0e11,
+            mem_bw: 30.0e9,
+            launch_overhead: 1.0e-6,
+            misalign_eff: 0.85,
+            sram_bytes: 0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "v100" | "v100-sim" => Some(Self::v100()),
+            "ascend910" | "ascend" | "ascend910-sim" => Some(Self::ascend910()),
+            "tpu" | "tpuv4" | "tpuv4-sim" => Some(Self::tpu_v4()),
+            "cpu-sim" => Some(Self::cpu_sim()),
+            _ => None,
+        }
+    }
+
+    /// Time of one `[m,k]×[k,n]` matmul. Both the compute term and the
+    /// memory term use tile-padded dimensions — matmul engines allocate and
+    /// stream padded buffers, which is what makes step time *flat* between
+    /// tile multiples (the Fig. 2 staircase).
+    pub fn matmul_time(&self, m: usize, k: usize, n: usize) -> f64 {
+        let mp = ceil_to(m, self.tile_m) as f64;
+        let kp = ceil_to(k, self.tile_k) as f64;
+        let np = ceil_to(n, self.tile_n) as f64;
+        let aligned = k % self.tile_k == 0 && n % self.tile_n == 0;
+        let eff = if aligned { 1.0 } else { self.misalign_eff };
+        let compute = 2.0 * mp * kp * np / (self.peak_flops * eff);
+        let bytes = 4.0 * (mp * kp + kp * np + mp * np);
+        self.launch_overhead + compute.max(bytes / self.mem_bw)
+    }
+
+    /// Forward time of a dense layer (im2col matmul form).
+    pub fn dense_fwd(&self, l: &LayerBench) -> f64 {
+        self.matmul_time(l.m, l.c * l.k * l.k, l.s)
+    }
+
+    /// Forward time of the decomposed layer at ranks (r1, r2). The core
+    /// conv's im2col contraction dim is `pad(r1)·k²`: the rank-r1 channel
+    /// dim is padded to the tile *before* the k² patch expansion (channels
+    /// are the innermost layout dim on all three devices).
+    pub fn decomposed_fwd(&self, l: &LayerBench, r1: usize, r2: usize) -> f64 {
+        if l.k == 1 {
+            self.matmul_time(l.m, l.c, r1) + self.matmul_time(l.m, r1, l.s)
+        } else {
+            self.matmul_time(l.m, l.c, r1)
+                + self.matmul_time(l.m, ceil_to(r1, self.tile_k) * l.k * l.k, r2)
+                + self.matmul_time(l.m, r2, l.s)
+        }
+    }
+
+    /// Backward time of one matmul layer: dX (always, to keep propagating)
+    /// + dW (only when the weight is trainable).
+    fn matmul_bwd(&self, m: usize, k: usize, n: usize, trainable: bool) -> f64 {
+        let dx = self.matmul_time(m, n, k);
+        if trainable {
+            dx + self.matmul_time(k, m, n)
+        } else {
+            dx
+        }
+    }
+
+    /// Training-step time of a dense layer (fwd + full bwd).
+    pub fn dense_step(&self, l: &LayerBench) -> f64 {
+        self.dense_fwd(l) + self.matmul_bwd(l.m, l.c * l.k * l.k, l.s, true)
+    }
+
+    /// Training-step time of a decomposed layer under a freeze mask.
+    /// `train_*` flags say which factors get a dW product this step —
+    /// the paper's freezing saves exactly those products.
+    pub fn decomposed_step(
+        &self,
+        l: &LayerBench,
+        r1: usize,
+        r2: usize,
+        train_first: bool,
+        train_core: bool,
+        train_last: bool,
+    ) -> f64 {
+        if l.k == 1 {
+            self.decomposed_fwd(l, r1, r2)
+                + self.matmul_bwd(l.m, r1, l.s, train_last)
+                + self.matmul_bwd(l.m, l.c, r1, train_first)
+        } else {
+            self.decomposed_fwd(l, r1, r2)
+                + self.matmul_bwd(l.m, r2, l.s, train_last)
+                + self.matmul_bwd(l.m, ceil_to(r1, self.tile_k) * l.k * l.k, r2, train_core)
+                + self.matmul_bwd(l.m, l.c, r1, train_first)
+        }
+    }
+
+    /// Does the fused low-rank kernel's working set fit SRAM/VMEM?
+    /// (block_m × (C + r + S) + factor tiles; see kernels/lowrank.py.)
+    pub fn lowrank_fits_sram(&self, block_m: usize, c: usize, r: usize, s: usize) -> bool {
+        if self.sram_bytes == 0 {
+            return true;
+        }
+        let floats = block_m * c + c * r + r * s + block_m * r + block_m * s;
+        4 * floats <= self.sram_bytes
+    }
+
+    /// MXU/tile utilization of an `[m,k]×[k,n]` matmul: useful FLOPs over
+    /// padded FLOPs. This is the "efficiency ratio" reported for L1.
+    pub fn tile_utilization(&self, m: usize, k: usize, n: usize) -> f64 {
+        let useful = (m * k) as f64 * n as f64;
+        let padded = (ceil_to(m, self.tile_m) * ceil_to(k, self.tile_k)) as f64
+            * ceil_to(n, self.tile_n) as f64;
+        useful / padded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staircase_between_tile_multiples() {
+        // Fig. 2 mechanism: time is flat within a tile band, jumps at the
+        // boundary. (tile_m divides m so the m-padding is inert here.)
+        let d = DeviceProfile::ascend910();
+        let l = LayerBench::conv(4096, 512, 512, 3);
+        let t256 = d.decomposed_fwd(&l, 256, 256);
+        let t255 = d.decomposed_fwd(&l, 255, 255);
+        let t249 = d.decomposed_fwd(&l, 249, 249);
+        let t257 = d.decomposed_fwd(&l, 257, 257);
+        assert!((t255 - t249).abs() < 1e-12, "flat inside the misaligned band");
+        assert!(t256 < t255, "aligned 256 beats misaligned 255 (same pad)");
+        assert!(t257 > t256 * 1.01, "jump past the boundary (paper's 257 vs 256)");
+        // the paper reports ~15% for 257 -> 256 on this very layer
+        let gain = t257 / t256 - 1.0;
+        assert!(gain > 0.10, "gain {gain}");
+    }
+
+    #[test]
+    fn rank_256_beats_257_like_paper() {
+        // Paper §2.1: 257 -> 256 improves layer throughput ~15% while the
+        // compression ratio changes <1%. Our model must show a material win.
+        let d = DeviceProfile::v100();
+        let l = LayerBench::conv(14 * 14 * 32, 512, 512, 3);
+        let t257 = d.decomposed_fwd(&l, 257, 257);
+        let t256 = d.decomposed_fwd(&l, 256, 256);
+        let gain = t257 / t256 - 1.0;
+        assert!(gain > 0.005, "gain {gain}");
+    }
+
+    #[test]
+    fn dense_step_costs_about_3x_fwd() {
+        let d = DeviceProfile::v100();
+        let l = LayerBench::conv(4096, 256, 256, 3);
+        let f = d.dense_fwd(&l);
+        let s = d.dense_step(&l);
+        assert!(s > 2.5 * f && s < 3.5 * f, "s/f = {}", s / f);
+    }
+
+    #[test]
+    fn freezing_reduces_step_time() {
+        let d = DeviceProfile::v100();
+        let l = LayerBench::conv(4096, 256, 256, 3);
+        let full = d.decomposed_step(&l, 128, 128, true, true, true);
+        let frozen = d.decomposed_step(&l, 128, 128, false, true, false);
+        assert!(frozen < full);
+        // inference (fwd) unchanged by freezing — the paper's Table 1 point
+        assert_eq!(d.decomposed_fwd(&l, 128, 128), d.decomposed_fwd(&l, 128, 128));
+    }
+
+    #[test]
+    fn decomposition_helps_only_when_rank_small_enough() {
+        // The paper's core observation: at mild ranks LRD may be *slower*
+        // despite fewer params (more launches), so rank-opt may keep the
+        // original layer. Large m ⇒ compute-bound regime.
+        let d = DeviceProfile::v100();
+        let l = LayerBench::conv(16384, 64, 64, 3);
+        let dense = d.dense_fwd(&l);
+        let big_rank = d.decomposed_fwd(&l, 60, 60);
+        let small_rank = d.decomposed_fwd(&l, 8, 8);
+        assert!(big_rank > dense, "near-full-rank decomposition is slower");
+        assert!(small_rank < dense, "small-rank decomposition is faster");
+
+        // and at tiny m everything is launch-bound: decomposition loses
+        // even at small rank (3 launches vs 1)
+        let tiny = LayerBench::conv(64, 64, 64, 3);
+        assert!(d.decomposed_fwd(&tiny, 8, 8) > d.dense_fwd(&tiny));
+    }
+
+    #[test]
+    fn tile_utilization_bounds() {
+        let d = DeviceProfile::tpu_v4();
+        let full = d.tile_utilization(128, 128, 128);
+        assert!((full - 1.0).abs() < 1e-12);
+        let poor = d.tile_utilization(128, 129, 129);
+        assert!(poor < 0.6);
+    }
+
+    #[test]
+    fn vmem_check() {
+        let d = DeviceProfile::tpu_v4();
+        assert!(d.lowrank_fits_sram(128, 512, 309, 512));
+        assert!(!d.lowrank_fits_sram(4096, 4096, 4096, 4096));
+        // devices without an SRAM model always pass
+        assert!(DeviceProfile::v100().lowrank_fits_sram(1 << 20, 4096, 4096, 4096));
+    }
+
+    #[test]
+    fn profiles_resolvable_by_name() {
+        for n in ["v100", "ascend910", "tpuv4", "cpu-sim"] {
+            assert!(DeviceProfile::by_name(n).is_some(), "{n}");
+        }
+        assert!(DeviceProfile::by_name("a100").is_none());
+    }
+
+    #[test]
+    fn memory_bound_small_matmuls() {
+        // tiny matmuls should be overhead/memory bound, not compute bound
+        let d = DeviceProfile::v100();
+        let t = d.matmul_time(8, 8, 8);
+        assert!(t >= d.launch_overhead);
+        assert!(t < 2.0 * d.launch_overhead + 1e-6);
+    }
+}

@@ -1,0 +1,204 @@
+//! Layer freezing — the paper's Algorithm 2 and §2.2.
+//!
+//! After LRD, the factor weights are already the closed-form minimizers of
+//! the reconstruction error, so the paper freezes all but one factor per
+//! decomposed layer during fine-tuning:
+//!
+//! - **Regular freezing**: pattern fixed for the whole fine-tune
+//!   (SVD: freeze `L_r(0)` = factor `a`; Tucker: freeze the two 1×1s,
+//!   train the core).
+//! - **Sequential freezing** (Algorithm 2): alternate the pattern every
+//!   epoch, so every factor gets fine-tuned while the *per-epoch* number of
+//!   trainable layers matches the original model.
+//!
+//! In this system a freeze pattern is not a `requires_grad` bit — it
+//! selects which AOT train-step executable runs (the frozen factors were
+//! never differentiated in that artifact). The scheduler's only job is to
+//! map `(mode, epoch) → pattern`, plus bookkeeping used by reports/tests.
+
+/// Freezing mode for a fine-tuning run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreezeMode {
+    /// All factors trainable (vanilla LRD / original model).
+    None,
+    /// Paper §2.2 first form: pattern "a" every epoch.
+    Regular,
+    /// Paper Algorithm 2: alternate "a" (even epochs) / "b" (odd epochs).
+    Sequential,
+}
+
+impl FreezeMode {
+    pub fn parse(s: &str) -> Option<FreezeMode> {
+        match s {
+            "none" => Some(FreezeMode::None),
+            "regular" => Some(FreezeMode::Regular),
+            "sequential" | "seq" => Some(FreezeMode::Sequential),
+            _ => None,
+        }
+    }
+}
+
+/// Which factor group is frozen this epoch. Matches the AOT artifact
+/// naming: pattern "a" freezes SVD `a` / Tucker `first`+`last`; pattern
+/// "b" freezes the complement; "none" freezes nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    NoFreeze,
+    A,
+    B,
+}
+
+impl Pattern {
+    /// Artifact-name suffix for this pattern.
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Pattern::NoFreeze => "none",
+            Pattern::A => "a",
+            Pattern::B => "b",
+        }
+    }
+}
+
+/// The epoch scheduler (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct FreezeScheduler {
+    pub mode: FreezeMode,
+}
+
+impl FreezeScheduler {
+    pub fn new(mode: FreezeMode) -> Self {
+        FreezeScheduler { mode }
+    }
+
+    /// Pattern for epoch `e` (0-based). Algorithm 2: `e % 2 == 0` → freeze
+    /// group "a" (SVD `L_r(0)` / Tucker `L_r(0)`+`L_r(2)`), else group "b".
+    pub fn pattern(&self, epoch: usize) -> Pattern {
+        match self.mode {
+            FreezeMode::None => Pattern::NoFreeze,
+            FreezeMode::Regular => Pattern::A,
+            FreezeMode::Sequential => {
+                if epoch % 2 == 0 {
+                    Pattern::A
+                } else {
+                    Pattern::B
+                }
+            }
+        }
+    }
+
+    /// Does the scheduler ever train every factor? (Sequential: yes;
+    /// Regular: no — pattern-a factors never thaw.)
+    pub fn covers_all_factors(&self, epochs: usize) -> bool {
+        match self.mode {
+            FreezeMode::None => true,
+            FreezeMode::Regular => false,
+            FreezeMode::Sequential => epochs >= 2,
+        }
+    }
+}
+
+/// Bookkeeping: which factor parameter names are frozen under a pattern.
+/// `layer_kinds` maps layer name → ("svd" | "tucker"). Mirrors
+/// `python/compile/train.py::frozen_names_for_pattern` (pinned by tests).
+pub fn frozen_param_names(
+    layer_kinds: &[(String, String)],
+    pattern: Pattern,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    for (layer, kind) in layer_kinds {
+        match (kind.as_str(), pattern) {
+            ("svd", Pattern::A) => out.push(format!("{layer}.a")),
+            ("svd", Pattern::B) => out.push(format!("{layer}.b")),
+            ("tucker", Pattern::A) => {
+                out.push(format!("{layer}.first"));
+                out.push(format!("{layer}.last"));
+            }
+            ("tucker", Pattern::B) => out.push(format!("{layer}.core")),
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_freezes() {
+        let s = FreezeScheduler::new(FreezeMode::None);
+        for e in 0..10 {
+            assert_eq!(s.pattern(e), Pattern::NoFreeze);
+        }
+    }
+
+    #[test]
+    fn regular_is_constant_a() {
+        let s = FreezeScheduler::new(FreezeMode::Regular);
+        for e in 0..10 {
+            assert_eq!(s.pattern(e), Pattern::A);
+        }
+        assert!(!s.covers_all_factors(100));
+    }
+
+    #[test]
+    fn sequential_alternates_per_algorithm2() {
+        let s = FreezeScheduler::new(FreezeMode::Sequential);
+        assert_eq!(s.pattern(0), Pattern::A); // e%2==0: freeze L_r(0)[,L_r(2)]
+        assert_eq!(s.pattern(1), Pattern::B);
+        assert_eq!(s.pattern(2), Pattern::A);
+        assert_eq!(s.pattern(3), Pattern::B);
+        assert!(s.covers_all_factors(2));
+        assert!(!s.covers_all_factors(1));
+    }
+
+    #[test]
+    fn pattern_suffixes_match_artifacts() {
+        assert_eq!(Pattern::NoFreeze.suffix(), "none");
+        assert_eq!(Pattern::A.suffix(), "a");
+        assert_eq!(Pattern::B.suffix(), "b");
+    }
+
+    #[test]
+    fn frozen_names_svd_and_tucker() {
+        let kinds = vec![
+            ("fc".to_string(), "svd".to_string()),
+            ("conv".to_string(), "tucker".to_string()),
+        ];
+        let a = frozen_param_names(&kinds, Pattern::A);
+        assert_eq!(a, vec!["fc.a", "conv.first", "conv.last"]);
+        let b = frozen_param_names(&kinds, Pattern::B);
+        assert_eq!(b, vec!["fc.b", "conv.core"]);
+        assert!(frozen_param_names(&kinds, Pattern::NoFreeze).is_empty());
+    }
+
+    #[test]
+    fn sequential_partitions_factors() {
+        // every factor frozen in A is trainable in B and vice versa
+        let kinds = vec![
+            ("l1".to_string(), "svd".to_string()),
+            ("l2".to_string(), "tucker".to_string()),
+        ];
+        let a: std::collections::BTreeSet<_> =
+            frozen_param_names(&kinds, Pattern::A).into_iter().collect();
+        let b: std::collections::BTreeSet<_> =
+            frozen_param_names(&kinds, Pattern::B).into_iter().collect();
+        assert!(a.is_disjoint(&b));
+        // union = all factor params
+        let all: std::collections::BTreeSet<_> = ["l1.a", "l1.b", "l2.first", "l2.core", "l2.last"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let union: std::collections::BTreeSet<_> = a.union(&b).cloned().collect();
+        assert_eq!(union, all);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(FreezeMode::parse("none"), Some(FreezeMode::None));
+        assert_eq!(FreezeMode::parse("regular"), Some(FreezeMode::Regular));
+        assert_eq!(FreezeMode::parse("sequential"), Some(FreezeMode::Sequential));
+        assert_eq!(FreezeMode::parse("seq"), Some(FreezeMode::Sequential));
+        assert_eq!(FreezeMode::parse("x"), None);
+    }
+}

@@ -1,0 +1,33 @@
+//! # LRTA — Low-Rank Training Acceleration
+//!
+//! Rust + JAX + Pallas reproduction of *"Training Acceleration of Low-Rank
+//! Decomposed Networks using Sequential Freezing and Rank Quantization"*
+//! (Hajimolahoseini, Ahmed, Liu; 2023).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//! - **L1** (build-time python): Pallas kernel for the fused low-rank
+//!   product, `python/compile/kernels/`.
+//! - **L2** (build-time python): JAX ResNet/ViT models + SGD train steps,
+//!   AOT-lowered to HLO text artifacts by `python/compile/aot.py`.
+//! - **L3** (this crate): the paper's contribution — closed-form LRD of
+//!   checkpoints ([`lrd`]), rank optimization / quantization ([`rankopt`],
+//!   Algorithm 1), the sequential-freezing training scheduler ([`freeze`],
+//!   Algorithm 2), and the training/inference orchestration that runs the
+//!   AOT artifacts via PJRT ([`runtime`], [`coordinator`]).
+//!
+//! Python never runs on the training/inference path: `make artifacts`
+//! lowers everything once, and the `lrta` binary is self-contained.
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod devmodel;
+pub mod freeze;
+pub mod linalg;
+pub mod lrd;
+pub mod metrics;
+pub mod models;
+pub mod rankopt;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,357 @@
+//! Low-Rank Decomposition engine — the paper's Eq. (1)-(6).
+//!
+//! - SVD decomposition of fully connected / 1×1 convolutional layers
+//!   (Eq. 1-2): `W[C,S] ≈ A[C,r] · B[r,S]` with the singular values split
+//!   symmetrically (√Σ into each factor) so both halves are comparably
+//!   scaled for fine-tuning.
+//! - Tucker2 decomposition of k×k convolutions (Eq. 4) via HOSVD:
+//!   `W[C,S,k,k] ≈ X ×₀ U ×₁ V` giving a 1×1 (C→r1), a k×k core (r1→r2)
+//!   and a 1×1 (r2→S) layer.
+//! - The closed-form rank formulas for a target compression ratio α
+//!   (Eq. 5) and the lower-bound rank for ratio α+1 (Eq. 6).
+//! - Reconstruction error (Eq. 3) and parameter accounting.
+
+use crate::linalg::{svd_truncated, Svd};
+use crate::tensor::Tensor;
+
+pub mod plan;
+
+/// Shape of a decomposable layer. `k == 1` means FC / 1×1 conv (SVD path);
+/// `k > 1` means spatial conv (Tucker2 path). `c` = input channels,
+/// `s` = output channels, matching the paper's `W ∈ R^{C×S×h×w}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    pub c: usize,
+    pub s: usize,
+    pub k: usize,
+}
+
+impl LayerShape {
+    pub fn linear(c: usize, s: usize) -> LayerShape {
+        LayerShape { c, s, k: 1 }
+    }
+    pub fn conv(c: usize, s: usize, k: usize) -> LayerShape {
+        LayerShape { c, s, k }
+    }
+    /// Trainable parameters of the original (dense) layer.
+    pub fn dense_params(&self) -> usize {
+        self.c * self.s * self.k * self.k
+    }
+    /// Full rank R = min(C, S).
+    pub fn full_rank(&self) -> usize {
+        self.c.min(self.s)
+    }
+    pub fn is_linear(&self) -> bool {
+        self.k == 1
+    }
+}
+
+/// SVD factors of a linear layer: `w ≈ a · b`.
+#[derive(Clone, Debug)]
+pub struct LinearFactors {
+    /// `[C, r]` — U'·√Σ'
+    pub a: Tensor,
+    /// `[r, S]` — √Σ'·V'ᵀ
+    pub b: Tensor,
+}
+
+impl LinearFactors {
+    pub fn rank(&self) -> usize {
+        self.a.shape()[1]
+    }
+    pub fn reconstruct(&self) -> Tensor {
+        self.a.matmul(&self.b)
+    }
+    pub fn params(&self) -> usize {
+        self.a.len() + self.b.len()
+    }
+}
+
+/// Tucker2 factors of a k×k conv: first 1×1, core k×k, last 1×1.
+#[derive(Clone, Debug)]
+pub struct TuckerFactors {
+    /// `[C, r1]` — input-side factor (the first 1×1 conv's weights).
+    pub first: Tensor,
+    /// `[r1, r2, k, k]` — core tensor (the k×k conv's weights).
+    pub core: Tensor,
+    /// `[r2, S]` — output-side factor (the last 1×1 conv's weights).
+    pub last: Tensor,
+}
+
+impl TuckerFactors {
+    pub fn ranks(&self) -> (usize, usize) {
+        (self.first.shape()[1], self.last.shape()[0])
+    }
+    pub fn params(&self) -> usize {
+        self.first.len() + self.core.len() + self.last.len()
+    }
+    /// Reconstruct `W'[C,S,k,k] = X ×₀ U ×₁ V`.
+    pub fn reconstruct(&self) -> Tensor {
+        let (_r1, r2) = self.ranks();
+        let k = self.core.shape()[2];
+        let c = self.first.shape()[0];
+        let s = self.last.shape()[1];
+        // mode-0 product with U: [C, r1] x [r1, r2*k*k]
+        let x0 = self.core.unfold(0); // [r1, r2*k*k]
+        let w0 = self.first.matmul(&x0); // [C, r2*k*k]
+        let w0 = Tensor::fold(&w0, 0, &[c, r2, k, k]);
+        // mode-1 product with Vᵀ's transpose: rows are r2 -> s
+        let x1 = w0.unfold(1); // [r2, C*k*k]
+        let w1 = self.last.t().matmul(&x1); // [S, C*k*k]
+        Tensor::fold(&w1, 1, &[c, s, k, k])
+    }
+}
+
+/// Decompose a linear / 1×1 layer `w: [C, S]` at rank `r` (Eq. 2), splitting
+/// Σ' symmetrically between the factors.
+pub fn svd_linear(w: &Tensor, r: usize) -> LinearFactors {
+    assert_eq!(w.ndim(), 2);
+    let r = r.max(1).min(w.shape()[0].min(w.shape()[1]));
+    let d: Svd = svd_truncated(w, r);
+    let (c, s) = (w.shape()[0], w.shape()[1]);
+    let mut a = Tensor::zeros(&[c, r]);
+    let mut b = Tensor::zeros(&[r, s]);
+    for j in 0..r {
+        let sq = d.s[j].max(0.0).sqrt();
+        for i in 0..c {
+            a.set2(i, j, d.u.at2(i, j) * sq);
+        }
+        for i in 0..s {
+            b.set2(j, i, d.v.at2(i, j) * sq);
+        }
+    }
+    LinearFactors { a, b }
+}
+
+/// Tucker2 decomposition of `w: [C, S, k, k]` with ranks (r1, r2) via HOSVD:
+/// factor matrices from the mode-0/mode-1 unfoldings' left singular vectors,
+/// core `X = W ×₀ Uᵀ ×₁ Vᵀ`.
+pub fn tucker2_conv(w: &Tensor, r1: usize, r2: usize) -> TuckerFactors {
+    assert_eq!(w.ndim(), 4);
+    let (c, s, k, k2) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(k, k2, "square kernels only");
+    let r1 = r1.max(1).min(c);
+    let r2 = r2.max(1).min(s);
+
+    // Mode-0: U [C, r1] from SVD of the [C, S*k*k] unfolding.
+    let u = svd_truncated(&w.unfold(0), r1).u; // [C, r1]
+    // Mode-1: V [S, r2] from SVD of the [S, C*k*k] unfolding.
+    let v = svd_truncated(&w.unfold(1), r2).u; // [S, r2]
+
+    // Core X = W ×₀ Uᵀ ×₁ Vᵀ : contract both channel modes.
+    let w0 = u.t().matmul(&w.unfold(0)); // [r1, S*k*k]
+    let w0 = Tensor::fold(&w0, 0, &[r1, s, k, k]);
+    let w1 = v.t().matmul(&w0.unfold(1)); // [r2, r1*k*k]
+    let core = Tensor::fold(&w1, 1, &[r1, r2, k, k]);
+
+    TuckerFactors { first: u, core, last: v.t() }
+}
+
+/// Eq. (3): reconstruction error ‖W − W'‖².
+pub fn reconstruction_error(w: &Tensor, w_approx: &Tensor) -> f32 {
+    w.dist2(w_approx)
+}
+
+/// SVD rank giving compression ratio α for a linear layer:
+/// dense CS vs decomposed r(C+S) ⇒ r = CS / (α (C+S)).
+pub fn svd_rank_for_compression(c: usize, s: usize, alpha: f64) -> usize {
+    assert!(alpha > 0.0);
+    let r = (c as f64 * s as f64) / (alpha * (c + s) as f64);
+    (r.floor() as usize).max(1)
+}
+
+/// Eq. (5): Tucker2 rank r1 (with r2 = β·r1) achieving compression α on a
+/// `C×S×k×k` conv. Derived from `β k² r1² + (C + βS) r1 − CSk²/α = 0`.
+pub fn tucker_rank_eq5(c: usize, s: usize, k: usize, alpha: f64, beta: f64) -> usize {
+    assert!(alpha > 0.0 && beta > 0.0 && k >= 1);
+    let (cf, sf, kf) = (c as f64, s as f64, k as f64);
+    let b_term = (cf + beta * sf) / (beta * kf * kf);
+    let disc = b_term * b_term + 4.0 * cf * sf / (beta * alpha);
+    let r1 = (-b_term + disc.sqrt()) / 2.0;
+    (r1.floor() as usize).max(1)
+}
+
+/// Eq. (6): the sweep lower bound — the rank at which compression (α+1)
+/// is reached.
+pub fn tucker_rmin_eq6(c: usize, s: usize, k: usize, alpha: f64, beta: f64) -> usize {
+    tucker_rank_eq5(c, s, k, alpha + 1.0, beta)
+}
+
+/// SVD analogue of Eq. (6) for linear layers.
+pub fn svd_rmin(c: usize, s: usize, alpha: f64) -> usize {
+    svd_rank_for_compression(c, s, alpha + 1.0)
+}
+
+/// Decomposed parameter count for a layer at the given rank(s).
+pub fn decomposed_params(shape: &LayerShape, r1: usize, r2: usize) -> usize {
+    if shape.is_linear() {
+        debug_assert_eq!(r1, r2);
+        shape.c * r1 + r1 * shape.s
+    } else {
+        shape.c * r1 + r1 * r2 * shape.k * shape.k + r2 * shape.s
+    }
+}
+
+/// Achieved compression ratio at the given rank(s).
+pub fn compression_ratio(shape: &LayerShape, r1: usize, r2: usize) -> f64 {
+    shape.dense_params() as f64 / decomposed_params(shape, r1, r2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn svd_linear_full_rank_is_exact() {
+        let mut r = Rng::new(20);
+        let w = Tensor::randn(&[10, 6], 1.0, &mut r);
+        let f = svd_linear(&w, 6);
+        assert!(w.max_abs_diff(&f.reconstruct()) < 1e-4);
+    }
+
+    #[test]
+    fn svd_linear_truncated_error_bounded() {
+        let mut rng = Rng::new(21);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let full = svd_linear(&w, 16);
+        let half = svd_linear(&w, 8);
+        let e_full = reconstruction_error(&w, &full.reconstruct());
+        let e_half = reconstruction_error(&w, &half.reconstruct());
+        assert!(e_full < 1e-6);
+        assert!(e_half > e_full);
+        // half-rank of a random gaussian retains > 50% energy
+        assert!(e_half < w.norm().powi(2));
+    }
+
+    #[test]
+    fn svd_factor_shapes_and_params() {
+        let mut rng = Rng::new(22);
+        let w = Tensor::randn(&[32, 48], 1.0, &mut rng);
+        let f = svd_linear(&w, 5);
+        assert_eq!(f.a.shape(), &[32, 5]);
+        assert_eq!(f.b.shape(), &[5, 48]);
+        assert_eq!(f.params(), 32 * 5 + 5 * 48);
+        assert_eq!(f.rank(), 5);
+    }
+
+    #[test]
+    fn symmetric_sigma_split_balances_factor_norms() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(&[24, 24], 1.0, &mut rng);
+        let f = svd_linear(&w, 12);
+        let ratio = f.a.norm() / f.b.norm();
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn tucker_full_rank_reconstructs() {
+        let mut rng = Rng::new(24);
+        let w = Tensor::randn(&[6, 8, 3, 3], 1.0, &mut rng);
+        let f = tucker2_conv(&w, 6, 8);
+        let rec = f.reconstruct();
+        assert_eq!(rec.shape(), w.shape());
+        assert!(w.max_abs_diff(&rec) < 1e-3, "err {}", w.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn tucker_truncated_shapes() {
+        let mut rng = Rng::new(25);
+        let w = Tensor::randn(&[8, 12, 3, 3], 1.0, &mut rng);
+        let f = tucker2_conv(&w, 3, 4);
+        assert_eq!(f.first.shape(), &[8, 3]);
+        assert_eq!(f.core.shape(), &[3, 4, 3, 3]);
+        assert_eq!(f.last.shape(), &[4, 12]);
+        assert_eq!(f.params(), 8 * 3 + 3 * 4 * 9 + 4 * 12);
+    }
+
+    #[test]
+    fn tucker_error_decreases_with_rank() {
+        let mut rng = Rng::new(26);
+        let w = Tensor::randn(&[10, 10, 3, 3], 1.0, &mut rng);
+        let mut last_err = f32::INFINITY;
+        for r in [2, 4, 6, 8, 10] {
+            let f = tucker2_conv(&w, r, r);
+            let err = reconstruction_error(&w, &f.reconstruct());
+            assert!(err <= last_err + 1e-3, "r={r} err={err} last={last_err}");
+            last_err = err;
+        }
+        assert!(last_err < 1e-3);
+    }
+
+    #[test]
+    fn tucker_on_lowrank_tensor_is_exact() {
+        // Build W with true multilinear rank (2, 3): Tucker at (2,3) must
+        // reconstruct it exactly.
+        let mut rng = Rng::new(27);
+        let core = Tensor::randn(&[2, 3, 3, 3], 1.0, &mut rng);
+        let u = Tensor::randn(&[7, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 9], 1.0, &mut rng);
+        let w = TuckerFactors { first: u, core, last: v }.reconstruct();
+        let f = tucker2_conv(&w, 2, 3);
+        assert!(w.max_abs_diff(&f.reconstruct()) < 1e-3);
+    }
+
+    #[test]
+    fn eq5_matches_paper_example() {
+        // Paper §2.1: [512, 512, 3, 3] at 2x compression with β=1 → rank 309.
+        let r = tucker_rank_eq5(512, 512, 3, 2.0, 1.0);
+        assert!((308..=310).contains(&r), "r = {r}");
+    }
+
+    #[test]
+    fn eq5_achieves_requested_compression() {
+        for &(c, s, k) in &[(64usize, 64usize, 3usize), (128, 256, 3), (512, 512, 3)] {
+            for &alpha in &[1.5f64, 2.0, 3.0, 4.0] {
+                let r = tucker_rank_eq5(c, s, k, alpha, 1.0);
+                let shape = LayerShape::conv(c, s, k);
+                let achieved = compression_ratio(&shape, r, r);
+                // floor() ⇒ achieved ratio is at least α (within 5% slack of
+                // the integer rounding).
+                assert!(
+                    achieved >= alpha * 0.95,
+                    "c={c} s={s} α={alpha} r={r} achieved={achieved}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq6_below_eq5() {
+        let r5 = tucker_rank_eq5(512, 512, 3, 2.0, 1.0);
+        let r6 = tucker_rmin_eq6(512, 512, 3, 2.0, 1.0);
+        assert!(r6 < r5);
+        // 3x band for the paper's layer is around rank 242 (Fig. 2 sweep floor)
+        assert!((240..=254).contains(&r6), "rmin = {r6}");
+    }
+
+    #[test]
+    fn svd_rank_formula() {
+        // dense CS = r(C+S) at α ⇒ r = CS/(α(C+S))
+        let r = svd_rank_for_compression(512, 512, 2.0);
+        assert_eq!(r, 128);
+        assert_eq!(svd_rmin(512, 512, 2.0), 85); // α+1 = 3 ⇒ 512/6 ≈ 85
+    }
+
+    #[test]
+    fn compression_ratio_accounting() {
+        let shape = LayerShape::conv(512, 512, 3);
+        assert_eq!(shape.dense_params(), 512 * 512 * 9);
+        let r = 309;
+        let dec = decomposed_params(&shape, r, r);
+        assert_eq!(dec, 512 * 309 + 309 * 309 * 9 + 309 * 512);
+        let ratio = compression_ratio(&shape, r, r);
+        assert!((1.9..=2.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn beta_scales_second_rank() {
+        let r_b1 = tucker_rank_eq5(256, 512, 3, 2.0, 1.0);
+        let r_b2 = tucker_rank_eq5(256, 512, 3, 2.0, 2.0);
+        // with β=2, r1 shrinks but r2=2·r1; total params still ≈ target
+        assert!(r_b2 < r_b1);
+        let shape = LayerShape::conv(256, 512, 3);
+        let achieved = compression_ratio(&shape, r_b2, 2 * r_b2);
+        assert!(achieved >= 1.85, "achieved {achieved}");
+    }
+}

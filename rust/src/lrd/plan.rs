@@ -1,0 +1,265 @@
+//! Model-level decomposition planning: map every decomposable layer of a
+//! network to its LRD rank(s) for a target compression ratio, optionally
+//! snapping ranks to hardware-friendly sizes (the paper's "rank
+//! quantization"), and account for total parameters.
+
+use super::{
+    decomposed_params, svd_rank_for_compression, svd_rmin, tucker_rank_eq5,
+    tucker_rmin_eq6, LayerShape,
+};
+
+/// How ranks are chosen for a decomposition plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankMode {
+    /// Vanilla LRD: Eq. (5) / the SVD closed form, no adjustment.
+    Vanilla,
+    /// Rank quantization: snap the Eq.-(5) rank down to the nearest multiple
+    /// of the device tile width (never below the Eq.-(6) lower bound).
+    /// This is the *static* form of Algorithm 1; the dynamic, measured form
+    /// lives in `rankopt` and converges to the same ranks on tiled devices.
+    Quantized { tile: usize },
+}
+
+/// Planned decomposition of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub name: String,
+    pub shape: LayerShape,
+    /// (r1, r2); r1 == r2 == r for SVD layers.
+    pub r1: usize,
+    pub r2: usize,
+    /// Sweep lower bound from Eq. (6).
+    pub r_min: usize,
+    /// If false, the layer stays dense (decomposition would not help).
+    pub decompose: bool,
+}
+
+impl LayerPlan {
+    pub fn dense_params(&self) -> usize {
+        self.shape.dense_params()
+    }
+    pub fn planned_params(&self) -> usize {
+        if self.decompose {
+            decomposed_params(&self.shape, self.r1, self.r2)
+        } else {
+            self.dense_params()
+        }
+    }
+    pub fn achieved_ratio(&self) -> f64 {
+        self.dense_params() as f64 / self.planned_params() as f64
+    }
+}
+
+/// Decomposition plan over a whole model.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub layers: Vec<LayerPlan>,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl ModelPlan {
+    /// Build a plan for `layers` at compression `alpha` (β = r2/r1).
+    pub fn build(
+        layers: &[(String, LayerShape)],
+        alpha: f64,
+        beta: f64,
+        mode: RankMode,
+    ) -> ModelPlan {
+        let planned = layers
+            .iter()
+            .map(|(name, shape)| plan_layer(name, *shape, alpha, beta, mode))
+            .collect();
+        ModelPlan { layers: planned, alpha, beta }
+    }
+
+    pub fn total_dense_params(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_params()).sum()
+    }
+    pub fn total_planned_params(&self) -> usize {
+        self.layers.iter().map(|l| l.planned_params()).sum()
+    }
+    pub fn overall_ratio(&self) -> f64 {
+        self.total_dense_params() as f64 / self.total_planned_params() as f64
+    }
+    pub fn find(&self, name: &str) -> Option<&LayerPlan> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+fn plan_layer(
+    name: &str,
+    shape: LayerShape,
+    alpha: f64,
+    beta: f64,
+    mode: RankMode,
+) -> LayerPlan {
+    // Eq. 5 can exceed the mode-rank bound for skewed layers (e.g. a
+    // 3-channel stem); clamp to min(C, S)/C so the factors are well-posed
+    // and python/rust agree on artifact shapes.
+    let cap = if shape.is_linear() { shape.full_rank() } else { shape.c };
+    let (r_nom, r_min) = if shape.is_linear() {
+        (
+            svd_rank_for_compression(shape.c, shape.s, alpha).min(cap),
+            svd_rmin(shape.c, shape.s, alpha),
+        )
+    } else {
+        (
+            tucker_rank_eq5(shape.c, shape.s, shape.k, alpha, beta).min(cap),
+            tucker_rmin_eq6(shape.c, shape.s, shape.k, alpha, beta),
+        )
+    };
+    let r_min = r_min.min(r_nom);
+    let r1 = match mode {
+        RankMode::Vanilla => r_nom,
+        RankMode::Quantized { tile } => snap_rank(r_nom, r_min, tile).min(cap),
+    };
+    let r2 = if shape.is_linear() {
+        r1
+    } else {
+        ((r1 as f64 * beta).round() as usize).max(1).min(shape.s)
+    };
+    // Decomposing is only worthwhile if it actually removes parameters; tiny
+    // layers (e.g. 3-channel stems, 10-way heads) often fail this test, and
+    // the paper's Algorithm 1 keeps the original layer in that case.
+    let decompose = decomposed_params(&shape, r1, r2) < shape.dense_params();
+    LayerPlan { name: name.to_string(), shape, r1, r2, r_min, decompose }
+}
+
+/// Snap `r` down to a multiple of `tile`; refuse to cross below `r_min`
+/// (which would push compression past α+1); always at least 1.
+/// E.g. tile 16: 309 → 304; tile 64: 309 → 256 only if 256 ≥ r_min.
+pub fn snap_rank(r: usize, r_min: usize, tile: usize) -> usize {
+    assert!(tile >= 1);
+    let down = (r / tile) * tile;
+    if down >= r_min.max(1) && down >= 1 {
+        down
+    } else {
+        // nearest multiple at or above r (still hardware-aligned), unless
+        // that exceeds the nominal rank band badly — then keep r.
+        let up = r.div_ceil(tile) * tile;
+        if up <= r + tile / 2 {
+            up
+        } else {
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnetish() -> Vec<(String, LayerShape)> {
+        vec![
+            ("stem".into(), LayerShape::conv(3, 64, 3)),
+            ("b1.conv1".into(), LayerShape::conv(64, 64, 3)),
+            ("b2.conv1".into(), LayerShape::conv(128, 128, 3)),
+            ("b3.down".into(), LayerShape::linear(128, 256)),
+            ("head".into(), LayerShape::linear(256, 10)),
+        ]
+    }
+
+    #[test]
+    fn plan_respects_alpha_overall() {
+        let plan = ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Vanilla);
+        // Decomposable bulk dominates, so overall ratio should be near 2
+        // (stem and head stay dense, diluting slightly).
+        let ratio = plan.overall_ratio();
+        assert!(ratio > 1.5 && ratio < 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn skewed_stem_rank_is_clamped() {
+        // Eq. 5 for [3,64,3,3] gives r1=6 > C=3; the plan must clamp to the
+        // multilinear rank bound so factor shapes are well-posed.
+        let plan = ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Vanilla);
+        let stem = plan.find("stem").unwrap();
+        assert!(stem.r1 <= 3, "stem r1 {} > C", stem.r1);
+        assert!(stem.decompose, "clamped stem decomposition still pays");
+    }
+
+    #[test]
+    fn degenerate_layer_stays_dense() {
+        let layers = vec![("tiny".to_string(), LayerShape::linear(2, 2))];
+        let plan = ModelPlan::build(&layers, 2.0, 1.0, RankMode::Vanilla);
+        assert!(!plan.layers[0].decompose, "2x2 layer cannot compress");
+    }
+
+    #[test]
+    fn quantized_ranks_are_tile_multiples_or_unchanged() {
+        let vanilla = ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Vanilla);
+        let plan = ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Quantized { tile: 16 });
+        for (l, v) in plan.layers.iter().zip(&vanilla.layers) {
+            if !l.decompose {
+                continue;
+            }
+            // either snapped to the tile, or the band was too narrow to
+            // snap (small layers) and the nominal rank is kept
+            assert!(
+                l.r1 % 16 == 0 || l.r1 == v.r1,
+                "{} r1={} vanilla={}",
+                l.name,
+                l.r1,
+                v.r1
+            );
+        }
+        // the big layers do snap
+        let big = plan.find("b2.conv1").unwrap();
+        assert_eq!(big.r1 % 16, 0, "b2.conv1 r1={}", big.r1);
+    }
+
+    #[test]
+    fn quantized_never_below_rmin() {
+        for tile in [8, 16, 32, 64] {
+            let plan =
+                ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Quantized { tile });
+            for l in plan.layers.iter().filter(|l| l.decompose) {
+                assert!(
+                    l.r1 >= l.r_min || l.r1 % tile == 0,
+                    "{} r1={} rmin={} tile={tile}",
+                    l.name,
+                    l.r1,
+                    l.r_min
+                );
+                assert!(l.r1 >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn snap_rank_paper_example() {
+        // Fig. 2: rank 257 → 256 is the efficient choice; snapping 309 with
+        // tile 16 gives 304, with r_min 242 respected.
+        assert_eq!(snap_rank(309, 242, 16), 304);
+        assert_eq!(snap_rank(257, 242, 256), 256);
+        // snapping below r_min is refused; rounds up instead when close
+        assert_eq!(snap_rank(130, 128, 128), 128);
+    }
+
+    #[test]
+    fn snap_rank_degenerate() {
+        // down=0 < r_min, and rounding up to 16 is too far from r=1 → keep 1.
+        assert_eq!(snap_rank(1, 1, 16), 1);
+        // exact multiples are stable
+        assert_eq!(snap_rank(64, 32, 16), 64);
+    }
+
+    #[test]
+    fn plan_params_accounting_consistent() {
+        let plan = ModelPlan::build(&resnetish(), 2.0, 1.0, RankMode::Vanilla);
+        let dense: usize = plan.layers.iter().map(|l| l.dense_params()).sum();
+        assert_eq!(dense, plan.total_dense_params());
+        assert!(plan.total_planned_params() < dense);
+    }
+
+    #[test]
+    fn achieved_ratio_near_alpha_for_big_layer() {
+        let layers = vec![("big".to_string(), LayerShape::conv(512, 512, 3))];
+        let plan = ModelPlan::build(&layers, 2.0, 1.0, RankMode::Vanilla);
+        let l = &plan.layers[0];
+        assert!(l.decompose);
+        let r = l.achieved_ratio();
+        assert!((1.9..=2.2).contains(&r), "{r}");
+    }
+}

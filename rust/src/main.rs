@@ -1,0 +1,276 @@
+//! `lrta` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   pretrain   train the original (dense) mini model, save a checkpoint
+//!   decompose  apply closed-form LRD to a checkpoint (variant ranks)
+//!   train      fine-tune a variant with a freezing schedule
+//!   infer      batched-inference throughput of a variant
+//!   rank-opt   run Algorithm 1 for a layer shape on a timing backend
+//!   pipeline   pretrain → decompose → fine-tune → evaluate, end to end
+//!   info       print manifest / artifact inventory
+//!
+//! Everything runs on the PJRT CPU client against the AOT artifacts in
+//! `artifacts/` — python is never invoked.
+
+use anyhow::{anyhow, bail, Result};
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
+use lrta::devmodel::DeviceProfile;
+use lrta::freeze::FreezeMode;
+use lrta::lrd::LayerShape;
+use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
+use lrta::runtime::{Manifest, Runtime};
+use lrta::util::cli::Args;
+
+const USAGE: &str = "\
+lrta — Low-Rank Training Acceleration (sequential freezing + rank quantization)
+
+USAGE: lrta <subcommand> [options]
+
+SUBCOMMANDS
+  info                                    manifest inventory
+  pretrain  --model M --epochs N --out F  train dense model, save checkpoint
+  decompose --model M --variant V --ckpt F --out F
+  train     --model M --variant V --freeze {none|regular|sequential}
+            --epochs N --ckpt F [--lr X] [--cosine] [--out F]
+  infer     --model M --variant V --ckpt F [--reps N]
+  rank-opt  --c C --s S --k K [--m M] [--alpha A]
+            [--backend {v100|ascend910|tpuv4|pjrt}]
+  pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
+            [--epochs N]
+
+COMMON
+  --manifest PATH   (default artifacts/manifest.json)
+  --seed N          (default 0)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&[
+        "model", "variant", "freeze", "epochs", "lr", "cosine", "out", "ckpt", "manifest",
+        "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
+        "pretrain-epochs", "verbose", "stride",
+    ])
+    .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+
+    let Some(cmd) = args.subcommand.clone() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    match cmd.as_str() {
+        "info" => info(&args),
+        "pretrain" => pretrain(&args),
+        "decompose" => decompose(&args),
+        "train" => train(&args),
+        "infer" => infer(&args),
+        "rank-opt" => rank_opt(&args),
+        "pipeline" => pipeline(&args),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn load_manifest(args: &Args) -> Result<Manifest> {
+    Manifest::load(args.str_or("manifest", "artifacts/manifest.json"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    println!("manifest: alpha={} tile={} artifacts={}", m.alpha, m.tile, m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<34} kind={:<5} batch={:<4} trainable={:<3} frozen={}",
+            a.kind,
+            a.batch,
+            a.trainable.len(),
+            a.frozen.len()
+        );
+    }
+    for (model, p) in &m.init_checkpoints {
+        println!("  init[{model}] = {}", p.display());
+    }
+    Ok(())
+}
+
+fn base_config(args: &Args) -> TrainConfig {
+    let epochs = args.usize_or("epochs", 5);
+    TrainConfig {
+        model: args.str_or("model", "resnet_mini"),
+        variant: args.str_or("variant", "lrd"),
+        freeze: FreezeMode::parse(&args.str_or("freeze", "none")).unwrap_or(FreezeMode::None),
+        epochs,
+        lr: if args.has("cosine") {
+            LrSchedule::Cosine { base: args.f64_or("lr", 0.02) as f32, total_epochs: epochs }
+        } else {
+            LrSchedule::Fixed(args.f64_or("lr", 1e-3) as f32)
+        },
+        train_size: args.usize_or("train-size", 2048),
+        test_size: args.usize_or("test-size", 512),
+        seed: args.u64_or("seed", 0),
+        verbose: args.bool_or("verbose", true),
+    }
+}
+
+fn pretrain(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let rt = Runtime::cpu()?;
+    let mut cfg = base_config(args);
+    cfg.variant = "orig".into();
+    cfg.freeze = FreezeMode::None;
+    let model = cfg.model.clone();
+    let params = checkpoint::load(m.init_checkpoint(&model)?)?;
+    let mut trainer = Trainer::new(&rt, &m, cfg, params)?;
+    let record = trainer.run()?;
+    println!("pretrained {model}: final test acc {:.3}", record.final_test_acc());
+    let out = args.str_or("out", &format!("results/{model}_pretrained.bin"));
+    checkpoint::save(&out, &trainer.params)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn decompose(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let model = args.str_or("model", "resnet_mini");
+    let variant = args.str_or("variant", "lrd");
+    let ckpt = args.str_or("ckpt", &format!("results/{model}_pretrained.bin"));
+    let dense = checkpoint::load(&ckpt)?;
+    let cfg = m.config(&model, &variant)?;
+    let outcome = decompose_checkpoint(&dense, cfg)?;
+    println!(
+        "decomposed {model} ({variant}): {} layers in {:.2}s, Σ‖W−W'‖² = {:.4}",
+        outcome.layers_decomposed, outcome.secs, outcome.total_reconstruction_err
+    );
+    let out = args.str_or("out", &format!("results/{model}_{variant}.bin"));
+    checkpoint::save(&out, &outcome.params)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let rt = Runtime::cpu()?;
+    let cfg = base_config(args);
+    let default_ckpt = format!("results/{}_{}.bin", cfg.model, cfg.variant);
+    let ckpt = args.str_or("ckpt", &default_ckpt);
+    let params = checkpoint::load(&ckpt)?;
+    let out = args.str_or("out", "");
+    let mut trainer = Trainer::new(&rt, &m, cfg, params)?;
+    let record = trainer.run()?;
+    println!(
+        "final test acc {:.3}; median step {:.1} ms",
+        record.final_test_acc(),
+        record.median_step_secs() * 1e3
+    );
+    if !out.is_empty() {
+        checkpoint::save(&out, &trainer.params)?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let rt = Runtime::cpu()?;
+    let mut cfg = base_config(args);
+    cfg.epochs = 1;
+    let default_ckpt = format!("results/{}_{}.bin", cfg.model, cfg.variant);
+    let ckpt = args.str_or("ckpt", &default_ckpt);
+    let params = checkpoint::load(&ckpt)?;
+    let trainer = Trainer::new(&rt, &m, cfg, params)?;
+    let fps = trainer.infer_fps(args.usize_or("reps", 20))?;
+    println!("inference throughput: {fps:.0} fps");
+    Ok(())
+}
+
+fn rank_opt(args: &Args) -> Result<()> {
+    let c = args.usize_or("c", 512);
+    let s = args.usize_or("s", 512);
+    let k = args.usize_or("k", 3);
+    let shape = if k <= 1 { LayerShape::linear(c, s) } else { LayerShape::conv(c, s, k) };
+    let cfg = RankOptConfig {
+        alpha: args.f64_or("alpha", 2.0),
+        m: args.usize_or("m", 4096),
+        stride: args.usize_or("stride", 1),
+        ..Default::default()
+    };
+    let backend = args.str_or("backend", "v100");
+    let result = if backend == "pjrt" {
+        let rt = Runtime::cpu()?;
+        let mut t = PjrtTimer::new(&rt);
+        optimize_rank(&mut t, shape, &cfg)?
+    } else {
+        let dev = DeviceProfile::by_name(&backend)
+            .ok_or_else(|| anyhow!("unknown backend '{backend}'"))?;
+        optimize_rank(&mut ModelTimer(dev), shape, &cfg)?
+    };
+    println!(
+        "layer [{c},{s},{k}] backend={} | R(eq5)={} Rmin(eq6)={} -> R_opt={}",
+        result.backend, result.r_nominal, result.r_min, result.r_opt
+    );
+    println!(
+        "t_dense={:.3}ms t_nominal={:.3}ms t_opt={:.3}ms speedup_vs_lrd={:.2}x use_original={}",
+        result.t_dense * 1e3,
+        result.t_nominal * 1e3,
+        result.t_opt * 1e3,
+        result.speedup_vs_nominal(),
+        result.use_original
+    );
+    println!("rank,time_ms,ratio");
+    for p in &result.sweep {
+        println!("{},{:.5},{:.3}", p.r, p.t * 1e3, p.ratio);
+    }
+    Ok(())
+}
+
+fn pipeline(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let rt = Runtime::cpu()?;
+    let mut cfg = base_config(args);
+    let model = cfg.model.clone();
+    let variant = cfg.variant.clone();
+
+    // 1. pretrain dense
+    let mut pre_cfg = cfg.clone();
+    pre_cfg.variant = "orig".into();
+    pre_cfg.freeze = FreezeMode::None;
+    pre_cfg.epochs = args.usize_or("pretrain-epochs", 3);
+    let init = checkpoint::load(m.init_checkpoint(&model)?)?;
+    println!("== pretrain {model} ({} epochs) ==", pre_cfg.epochs);
+    let mut pre = Trainer::new(&rt, &m, pre_cfg, init)?;
+    let pre_record = pre.run()?;
+    println!("pretrain acc {:.3}", pre_record.final_test_acc());
+
+    // 2. decompose
+    let dense = pre.params.clone();
+    let params = if variant == "orig" {
+        dense
+    } else {
+        let outcome = decompose_checkpoint(&dense, m.config(&model, &variant)?)?;
+        println!(
+            "== decomposed {} layers in {:.2}s (err {:.3}) ==",
+            outcome.layers_decomposed, outcome.secs, outcome.total_reconstruction_err
+        );
+        outcome.params
+    };
+
+    // 3. fine-tune with the freezing schedule
+    println!("== fine-tune {model} {variant} freeze={:?} ==", cfg.freeze);
+    cfg.verbose = true;
+    let mut tr = Trainer::new(&rt, &m, cfg, params)?;
+    let record = tr.run()?;
+
+    // 4. report
+    println!(
+        "pipeline done: final acc {:.3} | median step {:.1} ms | infer {:.0} fps",
+        record.final_test_acc(),
+        record.median_step_secs() * 1e3,
+        tr.infer_fps(10)?
+    );
+    Ok(())
+}

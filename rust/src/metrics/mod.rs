@@ -1,0 +1,185 @@
+//! Run metrics: throughput meters (the paper reports fps = images/second),
+//! per-epoch training records, and report assembly helpers.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Accumulates per-step wall times and computes throughput.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputMeter {
+    step_secs: Vec<f64>,
+    items_per_step: usize,
+}
+
+impl ThroughputMeter {
+    pub fn new(items_per_step: usize) -> Self {
+        ThroughputMeter { step_secs: Vec::new(), items_per_step }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.step_secs.push(secs);
+    }
+
+    /// Time a closure as one step.
+    pub fn timed<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn steps(&self) -> usize {
+        self.step_secs.len()
+    }
+
+    /// Median step time in seconds (robust to warmup outliers).
+    pub fn median_step(&self) -> f64 {
+        if self.step_secs.is_empty() {
+            return f64::NAN;
+        }
+        Summary::of(&self.step_secs).median
+    }
+
+    /// Throughput in items/second, paper-style "Speed (fps)", computed
+    /// from the median step time.
+    pub fn fps(&self) -> f64 {
+        self.items_per_step as f64 / self.median_step()
+    }
+
+    /// Mean fps over the whole run (paper: "average time per step over an
+    /// epoch as a measure of throughput").
+    pub fn mean_fps(&self) -> f64 {
+        let total: f64 = self.step_secs.iter().sum();
+        (self.steps() * self.items_per_step) as f64 / total
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.step_secs)
+    }
+}
+
+/// One epoch of a training run.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// Median train-step time this epoch (s).
+    pub step_secs: f64,
+    pub freeze_pattern: String,
+}
+
+/// A full training run record (powers Fig. 3 / Tables 3-4 rows).
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl RunRecord {
+    pub fn new(name: impl Into<String>) -> Self {
+        RunRecord { name: name.into(), epochs: Vec::new() }
+    }
+
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_test_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.test_acc).fold(f64::NAN, f64::max)
+    }
+
+    /// First epoch reaching `acc`, or None (paper's convergence-speed
+    /// comparison in Fig. 3).
+    pub fn epochs_to_reach(&self, acc: f64) -> Option<usize> {
+        self.epochs.iter().find(|e| e.test_acc >= acc).map(|e| e.epoch)
+    }
+
+    /// Median train fps across epochs (items = batch).
+    pub fn median_step_secs(&self) -> f64 {
+        let xs: Vec<f64> = self.epochs.iter().map(|e| e.step_secs).collect();
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        Summary::of(&xs).median
+    }
+
+    /// CSV of the accuracy curve (for figures).
+    pub fn curve_csv(&self) -> String {
+        let mut s = String::from("epoch,loss,train_acc,test_acc,step_secs,pattern\n");
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{:.5},{:.4},{:.4},{:.6},{}\n",
+                e.epoch, e.loss, e.train_acc, e.test_acc, e.step_secs, e.freeze_pattern
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fps_is_items_over_median_step() {
+        let mut m = ThroughputMeter::new(64);
+        for t in [0.1, 0.1, 0.1, 0.5] {
+            m.record(t);
+        }
+        assert!((m.median_step() - 0.1).abs() < 1e-12);
+        assert!((m.fps() - 640.0).abs() < 1e-9);
+        assert_eq!(m.steps(), 4);
+    }
+
+    #[test]
+    fn mean_fps_accounts_total_time() {
+        let mut m = ThroughputMeter::new(10);
+        m.record(1.0);
+        m.record(3.0);
+        assert!((m.mean_fps() - 5.0).abs() < 1e-12); // 20 items / 4 s
+    }
+
+    #[test]
+    fn timed_records() {
+        let mut m = ThroughputMeter::new(1);
+        let v = m.timed(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.steps(), 1);
+        assert!(m.median_step() >= 0.0);
+    }
+
+    fn rec(epoch: usize, acc: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            loss: 1.0,
+            train_acc: acc,
+            test_acc: acc,
+            step_secs: 0.1,
+            freeze_pattern: "a".into(),
+        }
+    }
+
+    #[test]
+    fn run_record_queries() {
+        let mut r = RunRecord::new("x");
+        r.epochs.push(rec(0, 0.5));
+        r.epochs.push(rec(1, 0.8));
+        r.epochs.push(rec(2, 0.75));
+        assert_eq!(r.final_test_acc(), 0.75);
+        assert_eq!(r.best_test_acc(), 0.8);
+        assert_eq!(r.epochs_to_reach(0.8), Some(1));
+        assert_eq!(r.epochs_to_reach(0.9), None);
+        assert!((r.median_step_secs() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_csv_has_header_and_rows() {
+        let mut r = RunRecord::new("x");
+        r.epochs.push(rec(0, 0.5));
+        let csv = r.curve_csv();
+        assert!(csv.starts_with("epoch,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,318 @@
+//! Typed view over `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the contract between the build-time python layer and the
+//! rust runtime: artifact names → HLO files, ordered parameter signatures
+//! (trainable / frozen), data shapes, and each variant's decomposition
+//! config (layer kinds + ranks) so the rust LRD engine factorizes with
+//! exactly the ranks the artifacts were lowered for.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A named tensor slot in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSlot {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+    pub model: String,
+    pub variant: String,
+    /// "train" | "infer"
+    pub kind: String,
+    /// freeze pattern this step was lowered for: "none" | "a" | "b"
+    pub freeze: String,
+    pub batch: usize,
+    pub trainable: Vec<ParamSlot>,
+    pub frozen: Vec<ParamSlot>,
+    /// data input shapes: x always, y for train artifacts.
+    pub x_shape: Vec<usize>,
+    pub y_shape: Option<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    pub fn is_train(&self) -> bool {
+        self.kind == "train"
+    }
+    /// Total number of executable inputs (params [+frozen+momenta] + data).
+    pub fn input_arity(&self) -> usize {
+        if self.is_train() {
+            // trainable + frozen + momenta + x + y + lr
+            2 * self.trainable.len() + self.frozen.len() + 3
+        } else {
+            self.trainable.len() + self.frozen.len() + 1
+        }
+    }
+}
+
+/// Decomposition config for one layer of a variant (mirrors python).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerCfg {
+    Dense,
+    Svd { rank: usize, r_min: usize },
+    Tucker { r1: usize, r2: usize, r_min: usize },
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub alpha: f64,
+    pub tile: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// `{model}_{variant}` → per-layer config.
+    pub configs: BTreeMap<String, BTreeMap<String, LayerCfg>>,
+    /// model → init checkpoint path (relative to `dir`).
+    pub init_checkpoints: BTreeMap<String, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        if root.get("version").as_i64() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").as_arr().unwrap_or(&[]) {
+            let meta = parse_artifact(a)?;
+            artifacts.insert(meta.name.clone(), meta);
+        }
+        let mut configs = BTreeMap::new();
+        if let Some(obj) = root.get("configs").as_obj() {
+            for (key, cfg) in obj {
+                configs.insert(key.clone(), parse_config(cfg)?);
+            }
+        }
+        let mut init_checkpoints = BTreeMap::new();
+        if let Some(obj) = root.get("init_checkpoints").as_obj() {
+            for (model, p) in obj {
+                let rel = p.as_str().ok_or_else(|| anyhow!("bad init ckpt"))?;
+                init_checkpoints.insert(model.clone(), PathBuf::from(rel));
+            }
+        }
+        Ok(Manifest {
+            dir,
+            alpha: root.get("alpha").as_f64().unwrap_or(2.0),
+            tile: root.get("tile").as_usize().unwrap_or(16),
+            artifacts,
+            configs,
+            init_checkpoints,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+
+    pub fn config(&self, model: &str, variant: &str) -> Result<&BTreeMap<String, LayerCfg>> {
+        let key = format!("{model}_{variant}");
+        self.configs
+            .get(&key)
+            .ok_or_else(|| anyhow!("config '{key}' not in manifest"))
+    }
+
+    pub fn init_checkpoint(&self, model: &str) -> Result<PathBuf> {
+        self.init_checkpoints
+            .get(model)
+            .map(|p| self.dir.join(p))
+            .ok_or_else(|| anyhow!("no init checkpoint for '{model}'"))
+    }
+
+    /// Artifact naming convention helper.
+    pub fn name_of(model: &str, variant: &str, kind: &str, freeze: &str) -> String {
+        match kind {
+            "infer" => format!("{model}_{variant}_infer"),
+            _ => format!("{model}_{variant}_train_{freeze}"),
+        }
+    }
+}
+
+fn parse_slots(j: &Json) -> Result<Vec<ParamSlot>> {
+    let mut out = Vec::new();
+    for e in j.as_arr().unwrap_or(&[]) {
+        let name = e.get("name").as_str().ok_or_else(|| anyhow!("slot name"))?;
+        let shape = e
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("slot shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ParamSlot { name: name.to_string(), shape });
+    }
+    Ok(out)
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
+    let name = a.get("name").as_str().ok_or_else(|| anyhow!("artifact name"))?;
+    let x_shape = a
+        .get("data")
+        .get("x")
+        .as_arr()
+        .ok_or_else(|| anyhow!("artifact {name}: data.x"))?
+        .iter()
+        .filter_map(|d| d.as_usize())
+        .collect();
+    let y_shape = a
+        .get("data")
+        .get("y")
+        .as_arr()
+        .map(|arr| arr.iter().filter_map(|d| d.as_usize()).collect());
+    Ok(ArtifactMeta {
+        name: name.to_string(),
+        path: PathBuf::from(
+            a.get("path").as_str().ok_or_else(|| anyhow!("artifact path"))?,
+        ),
+        model: a.get("model").as_str().unwrap_or("").to_string(),
+        variant: a.get("variant").as_str().unwrap_or("").to_string(),
+        kind: a.get("kind").as_str().unwrap_or("").to_string(),
+        freeze: a.get("freeze").as_str().unwrap_or("none").to_string(),
+        batch: a.get("batch").as_usize().unwrap_or(0),
+        trainable: parse_slots(a.get("trainable"))?,
+        frozen: parse_slots(a.get("frozen"))?,
+        x_shape,
+        y_shape,
+    })
+}
+
+fn parse_config(cfg: &Json) -> Result<BTreeMap<String, LayerCfg>> {
+    let mut out = BTreeMap::new();
+    let obj = cfg.as_obj().ok_or_else(|| anyhow!("config not an object"))?;
+    for (layer, lcfg) in obj {
+        let kind = lcfg.get("kind").as_str().unwrap_or("dense");
+        let parsed = match kind {
+            "dense" => LayerCfg::Dense,
+            "svd" => LayerCfg::Svd {
+                rank: lcfg.get("rank").as_usize().ok_or_else(|| anyhow!("svd rank"))?,
+                r_min: lcfg.get("r_min").as_usize().unwrap_or(1),
+            },
+            "tucker" => LayerCfg::Tucker {
+                r1: lcfg.get("r1").as_usize().ok_or_else(|| anyhow!("tucker r1"))?,
+                r2: lcfg.get("r2").as_usize().ok_or_else(|| anyhow!("tucker r2"))?,
+                r_min: lcfg.get("r_min").as_usize().unwrap_or(1),
+            },
+            other => bail!("unknown layer kind {other}"),
+        };
+        out.insert(layer.clone(), parsed);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "alpha": 2.0, "tile": 16,
+      "artifacts": [
+        {"name": "m_lrd_train_a", "path": "m_lrd_train_a.hlo.txt",
+         "model": "m", "variant": "lrd", "kind": "train", "freeze": "a",
+         "batch": 64,
+         "trainable": [{"name": "l.b", "shape": [4, 8]}],
+         "frozen": [{"name": "l.a", "shape": [16, 4]}],
+         "data": {"x": [64, 32, 32, 3], "y": [64]},
+         "outputs": []},
+        {"name": "m_lrd_infer", "path": "m_lrd_infer.hlo.txt",
+         "model": "m", "variant": "lrd", "kind": "infer", "freeze": "none",
+         "batch": 128,
+         "trainable": [{"name": "l.a", "shape": [16, 4]},
+                        {"name": "l.b", "shape": [4, 8]}],
+         "frozen": [],
+         "data": {"x": [128, 32, 32, 3]},
+         "outputs": []}
+      ],
+      "configs": {
+        "m_lrd": {"l": {"kind": "svd", "rank": 4, "r_min": 2},
+                   "c": {"kind": "tucker", "r1": 3, "r2": 3, "r_min": 2},
+                   "d": {"kind": "dense"}}
+      },
+      "init_checkpoints": {"m": "m_init.bin"}
+    }"#;
+
+    #[test]
+    fn parses_artifacts() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.artifact("m_lrd_train_a").unwrap();
+        assert!(a.is_train());
+        assert_eq!(a.trainable[0].name, "l.b");
+        assert_eq!(a.frozen[0].shape, vec![16, 4]);
+        assert_eq!(a.y_shape.as_deref(), Some(&[64usize][..]));
+        // 1 trainable + 1 frozen + 1 momentum + x + y + lr
+        assert_eq!(a.input_arity(), 6);
+    }
+
+    #[test]
+    fn infer_arity() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        let a = m.artifact("m_lrd_infer").unwrap();
+        assert!(!a.is_train());
+        assert_eq!(a.input_arity(), 3); // 2 params + x
+    }
+
+    #[test]
+    fn parses_configs() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        let cfg = m.config("m", "lrd").unwrap();
+        assert_eq!(cfg["l"], LayerCfg::Svd { rank: 4, r_min: 2 });
+        assert_eq!(cfg["c"], LayerCfg::Tucker { r1: 3, r2: 3, r_min: 2 });
+        assert_eq!(cfg["d"], LayerCfg::Dense);
+    }
+
+    #[test]
+    fn paths_resolve_against_dir() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        let a = m.artifact("m_lrd_infer").unwrap();
+        assert_eq!(m.hlo_path(a), PathBuf::from("/arts/m_lrd_infer.hlo.txt"));
+        assert_eq!(m.init_checkpoint("m").unwrap(), PathBuf::from("/arts/m_init.bin"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.config("m", "nope").is_err());
+        assert!(m.init_checkpoint("nope").is_err());
+    }
+
+    #[test]
+    fn name_convention() {
+        assert_eq!(Manifest::name_of("m", "lrd", "infer", "none"), "m_lrd_infer");
+        assert_eq!(Manifest::name_of("m", "lrd", "train", "b"), "m_lrd_train_b");
+    }
+
+    #[test]
+    fn numel() {
+        let s = ParamSlot { name: "x".into(), shape: vec![2, 3, 4] };
+        assert_eq!(s.numel(), 24);
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them from
+//! the rust hot path, plus an `XlaBuilder`-based micro-benchmark factory
+//! used by the rank optimizer.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in proto form).
+
+pub mod builder;
+pub mod manifest;
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub use manifest::{ArtifactMeta, LayerCfg, Manifest, ParamSlot};
+
+/// Shared PJRT client + executable cache.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend on this image; `gpu`/`tpu`
+    /// constructors exist upstream and the rest of the crate is
+    /// backend-agnostic, which is the paper's platform-agnosticity claim).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Rc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Compile an in-memory `XlaComputation` (rank-opt microbenches).
+    pub fn compile(&self, comp: &xla::XlaComputation, name: &str) -> Result<Executable> {
+        let t0 = Instant::now();
+        let exe = self.client.compile(comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, name: name.to_string(), compile_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// A compiled executable plus metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened outputs.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single output
+    /// is a tuple that we decompose. Single-array computations (from the
+    /// builder) come back as one literal.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<L>(inputs).context("execute")?;
+        let mut lit = bufs[0][0].to_literal_sync().context("fetch output")?;
+        match lit.shape()? {
+            xla::Shape::Tuple(_) => Ok(lit.decompose_tuple()?),
+            _ => Ok(vec![lit]),
+        }
+    }
+
+    /// Execute with device-resident buffers (the hot path: parameters stay
+    /// on device between steps). Returns the raw output buffers.
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(inputs).context("execute_b")?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Time one synchronous execution (host literals in, host literal out).
+    pub fn time_once<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<f64> {
+        let t0 = Instant::now();
+        let bufs = self.exe.execute::<L>(inputs)?;
+        // force completion by syncing the (first) output to host
+        let _ = bufs[0][0].to_literal_sync()?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor <-> literal conversion
+// ---------------------------------------------------------------------------
+
+/// f32 Tensor → Literal with shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Literal → f32 Tensor (shape read from the literal).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    Ok(Tensor::new(&dims, data))
+}
+
+/// i32 labels → Literal `[n]`.
+pub fn labels_to_literal(labels: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(labels)
+}
+
+/// Scalar f32 literal (e.g. the learning rate input).
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // Runtime tests that need a PJRT client live in rust/tests/ (integration)
+    // to keep `cargo test --lib` free of libxla state; conversion helpers are
+    // testable here because literals don't need a client.
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let mut rng = Rng::new(40);
+        let t = Tensor::randn(&[3, 4, 2], 1.0, &mut rng);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_and_labels() {
+        let lit = scalar_literal(0.25);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 0.25);
+        let lab = labels_to_literal(&[1, 2, 3]);
+        assert_eq!(lab.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn tensor_literal_1d() {
+        let t = Tensor::new(&[5], vec![1., 2., 3., 4., 5.]);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

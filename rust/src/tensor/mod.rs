@@ -1,0 +1,377 @@
+//! Dense row-major f32 tensor with exactly the operations the LRD engine
+//! needs: matmul, transpose, mode-n unfolding/folding (for Tucker/HOSVD),
+//! reshape, slicing, and norms. Built from scratch — no ndarray offline.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major tensor of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---- construction ----------------------------------------------------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    /// Identity matrix n×n.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() * std).collect() }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access for 2-D tensors.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    // ---- shape ops ---------------------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2, "t() needs a matrix");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// General axis permutation.
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.ndim());
+        let nd = self.ndim();
+        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = strides(&self.shape);
+        let out_strides = strides(&out_shape);
+        let mut out = vec![0.0f32; self.data.len()];
+        let mut idx = vec![0usize; nd];
+        for (o, slot) in out.iter_mut().enumerate() {
+            // decode output index
+            let mut rem = o;
+            for d in 0..nd {
+                idx[d] = rem / out_strides[d];
+                rem %= out_strides[d];
+            }
+            // map to input offset: out dim d == in dim perm[d]
+            let mut src = 0;
+            for d in 0..nd {
+                src += idx[d] * in_strides[perm[d]];
+            }
+            *slot = self.data[src];
+        }
+        Tensor { shape: out_shape, data: out }
+    }
+
+    /// Mode-n unfolding: moves axis `mode` first, flattens the rest in
+    /// natural order. Result is `[shape[mode], prod(other dims)]` (the
+    /// standard Kolda-Bader unfolding up to column order, which is
+    /// consistent between `unfold` and `fold`).
+    pub fn unfold(&self, mode: usize) -> Tensor {
+        assert!(mode < self.ndim());
+        let nd = self.ndim();
+        let mut perm: Vec<usize> = vec![mode];
+        perm.extend((0..nd).filter(|&d| d != mode));
+        let moved = self.permute(&perm);
+        let rows = self.shape[mode];
+        let cols = self.data.len() / rows;
+        moved.reshape(&[rows, cols])
+    }
+
+    /// Inverse of [`unfold`]: fold a `[shape[mode], rest]` matrix back into
+    /// `shape` along `mode`.
+    pub fn fold(mat: &Tensor, mode: usize, shape: &[usize]) -> Tensor {
+        assert_eq!(mat.ndim(), 2);
+        let nd = shape.len();
+        let mut moved_shape = vec![shape[mode]];
+        moved_shape.extend((0..nd).filter(|&d| d != mode).map(|d| shape[d]));
+        let moved = mat.reshape(&moved_shape);
+        // inverse permutation of [mode, others...]
+        let mut perm: Vec<usize> = vec![mode];
+        perm.extend((0..nd).filter(|&d| d != mode));
+        let mut inv = vec![0usize; nd];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        moved.permute(&inv)
+    }
+
+    // ---- arithmetic ----------------------------------------------------------
+
+    /// Matrix multiply (2-D × 2-D). Blocked i-k-j loop over the row-major
+    /// layout; good cache behaviour without external BLAS.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(other.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        let a = &self.data;
+        let b = &other.data;
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|a| a * s).collect() }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared Frobenius distance ‖a − b‖² — Eq. (3)'s reconstruction error.
+    pub fn dist2(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>() as f32
+    }
+
+    /// Maximum absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Column `j` of a matrix.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0]).map(|i| self.at2(i, j)).collect()
+    }
+
+    /// Keep only the first `k` columns of a matrix.
+    pub fn first_cols(&self, k: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        assert!(k <= n);
+        let mut out = vec![0.0f32; m * k];
+        for i in 0..m {
+            out[i * k..(i + 1) * k].copy_from_slice(&self.data[i * n..i * n + k]);
+        }
+        Tensor { shape: vec![m, k], data: out }
+    }
+}
+
+/// Row-major strides for a shape.
+pub fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, v: &[f32]) -> Tensor {
+        Tensor::new(&[rows, cols], v.to_vec())
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t2(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = t2(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = t2(3, 1, &[1., 0., -1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), &[2, 1]);
+        assert_eq!(c.data(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut r);
+        let i = Tensor::eye(7);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(2);
+        let a = Tensor::randn(&[4, 9], 1.0, &mut r);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().shape(), &[9, 4]);
+        assert_eq!(a.at2(1, 3), a.t().at2(3, 1));
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let mut r = Rng::new(3);
+        let a = Tensor::randn(&[2, 3, 4], 1.0, &mut r);
+        let p = a.permute(&[2, 0, 1]);
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        // inverse of [2,0,1] is [1,2,0]
+        assert_eq!(p.permute(&[1, 2, 0]), a);
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip_all_modes() {
+        let mut r = Rng::new(4);
+        let a = Tensor::randn(&[3, 4, 5], 1.0, &mut r);
+        for mode in 0..3 {
+            let u = a.unfold(mode);
+            assert_eq!(u.shape()[0], a.shape()[mode]);
+            assert_eq!(u.shape()[1], 60 / a.shape()[mode]);
+            let back = Tensor::fold(&u, mode, a.shape());
+            assert_eq!(back, a, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn unfold_mode0_is_reshape() {
+        // For mode 0 the unfolding is exactly the natural [d0, rest] view.
+        let a = Tensor::new(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let u = a.unfold(0);
+        assert_eq!(u.data(), a.data());
+    }
+
+    #[test]
+    fn norms_and_dist() {
+        let a = t2(1, 3, &[3.0, 0.0, 4.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        let b = t2(1, 3, &[0.0, 0.0, 0.0]);
+        assert!((a.dist2(&b) - 25.0).abs() < 1e-5);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+
+    #[test]
+    fn first_cols_slices() {
+        let a = t2(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let f = a.first_cols(2);
+        assert_eq!(f.shape(), &[2, 2]);
+        assert_eq!(f.data(), &[1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = t2(1, 2, &[1.0, 2.0]);
+        let b = t2(1, 2, &[3.0, 5.0]);
+        assert_eq!(a.add(&b).data(), &[4.0, 7.0]);
+        assert_eq!(b.sub(&a).data(), &[2.0, 3.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with robust statistics, throughput
+//! accounting, and aligned table printing used by every `rust/benches/*`
+//! target to regenerate the paper's tables and figures.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub secs: Summary,
+    /// Items processed per iteration (for throughput), if set.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Median throughput in items/second (e.g. images/s == fps).
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|ipi| ipi / self.secs.median)
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.secs.median * 1e3
+    }
+}
+
+/// Timing configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, measure_iters: 15 }
+    }
+}
+
+/// Time `f` (one logical iteration per call).
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), secs: Summary::of(&samples), items_per_iter: None }
+}
+
+/// Time `f` and attach a throughput denominator (items per iteration).
+pub fn bench_throughput(
+    name: &str,
+    cfg: &BenchConfig,
+    items_per_iter: f64,
+    f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.items_per_iter = Some(items_per_iter);
+    r
+}
+
+/// Render a fixed-width text table. `rows` are cell strings; the first row
+/// is the header. Columns are sized to content.
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(|s| s.as_str()).unwrap_or("");
+            out.push(' ');
+            out.push_str(cell);
+            for _ in cell.chars().count()..*w {
+                out.push(' ');
+            }
+            out.push_str(" |");
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push('|');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('|');
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Write a report file under results/ (creating the directory) and echo the
+/// path. Used by bench targets so every table/figure lands in a file.
+pub fn write_report(path: &str, content: &str) {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(path, content).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("[report] wrote {path}");
+}
+
+/// Format a signed percentage delta the way the paper's tables do (+06.07).
+pub fn fmt_delta_pct(base: f64, new: f64) -> String {
+    let pct = (new / base - 1.0) * 100.0;
+    format!("{}{:05.2}", if pct >= 0.0 { "+" } else { "-" }, pct.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let cfg = BenchConfig { warmup_iters: 2, measure_iters: 5 };
+        let r = bench("count", &cfg, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.secs.n, 5);
+    }
+
+    #[test]
+    fn throughput_is_items_over_median() {
+        let cfg = BenchConfig { warmup_iters: 0, measure_iters: 3 };
+        let r = bench_throughput("t", &cfg, 100.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        let fps = r.throughput().unwrap();
+        assert!(fps > 1_000.0 && fps < 60_000.0, "fps {fps}");
+    }
+
+    #[test]
+    fn table_is_aligned() {
+        let t = table(&[
+            vec!["Method".into(), "fps".into()],
+            vec!["LRD".into(), "367".into()],
+            vec!["Combined".into(), "505".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+    }
+
+    #[test]
+    fn delta_pct_matches_paper_format() {
+        assert_eq!(fmt_delta_pct(346.0, 367.0), "+06.07");
+        assert_eq!(fmt_delta_pct(100.0, 60.0), "-40.00");
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let path = "/tmp/lrta_test_reports/sub/r.txt";
+        let _ = std::fs::remove_dir_all("/tmp/lrta_test_reports");
+        write_report(path, "hello");
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "hello");
+    }
+}

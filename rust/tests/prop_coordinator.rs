@@ -1,0 +1,184 @@
+//! Property suite: coordinator invariants — freeze scheduling (Algorithm 2),
+//! routing of epochs to artifacts, batching, and state management.
+
+use lrta::data::{BatchIter, Dataset, IMAGE_ELEMS};
+use lrta::freeze::{frozen_param_names, FreezeMode, FreezeScheduler, Pattern};
+use lrta::models::Method;
+use lrta::runtime::Manifest;
+use lrta::util::check::{forall, Config};
+use lrta::util::rng::Rng;
+use std::collections::BTreeSet;
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+fn random_layer_kinds(r: &mut Rng) -> Vec<(String, String)> {
+    let n = 1 + r.below(12);
+    (0..n)
+        .map(|i| {
+            let kind = if r.below(2) == 0 { "svd" } else { "tucker" };
+            (format!("layer{i}"), kind.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sequential_alternates_and_covers() {
+    // Algorithm 2: consecutive epochs use complementary patterns and over
+    // any window of ≥2 epochs every factor is trained at least once.
+    forall(
+        cfg(64, 201),
+        |r: &mut Rng| (random_layer_kinds(r), 2 + r.below(20)),
+        |(kinds, epochs)| {
+            let s = FreezeScheduler::new(FreezeMode::Sequential);
+            let all_factors: BTreeSet<String> = [Pattern::A, Pattern::B]
+                .iter()
+                .flat_map(|&p| frozen_param_names(kinds, p))
+                .collect();
+            let mut trained: BTreeSet<String> = BTreeSet::new();
+            for e in 0..*epochs {
+                let p = s.pattern(e);
+                if e > 0 && s.pattern(e - 1) == p {
+                    return false; // must alternate
+                }
+                let frozen: BTreeSet<String> =
+                    frozen_param_names(kinds, p).into_iter().collect();
+                for f in all_factors.difference(&frozen) {
+                    trained.insert(f.clone());
+                }
+            }
+            trained == all_factors
+        },
+    );
+}
+
+#[test]
+fn prop_patterns_partition_factors() {
+    // For any layer set: A-frozen and B-frozen factor sets are disjoint and
+    // their union is exactly the full factor set.
+    forall(
+        cfg(128, 202),
+        |r: &mut Rng| random_layer_kinds(r),
+        |kinds| {
+            let a: BTreeSet<String> = frozen_param_names(kinds, Pattern::A).into_iter().collect();
+            let b: BTreeSet<String> = frozen_param_names(kinds, Pattern::B).into_iter().collect();
+            let expected: BTreeSet<String> = kinds
+                .iter()
+                .flat_map(|(l, k)| {
+                    if k == "svd" {
+                        vec![format!("{l}.a"), format!("{l}.b")]
+                    } else {
+                        vec![format!("{l}.first"), format!("{l}.core"), format!("{l}.last")]
+                    }
+                })
+                .collect();
+            a.is_disjoint(&b) && a.union(&b).cloned().collect::<BTreeSet<_>>() == expected
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_is_deterministic_and_mode_consistent() {
+    forall(
+        cfg(128, 203),
+        |r: &mut Rng| {
+            let mode = match r.below(3) {
+                0 => FreezeMode::None,
+                1 => FreezeMode::Regular,
+                _ => FreezeMode::Sequential,
+            };
+            (mode, r.below(100))
+        },
+        |&(mode, epoch)| {
+            let s1 = FreezeScheduler::new(mode);
+            let s2 = FreezeScheduler::new(mode);
+            let p = s1.pattern(epoch);
+            if s2.pattern(epoch) != p {
+                return false;
+            }
+            match mode {
+                FreezeMode::None => p == Pattern::NoFreeze,
+                FreezeMode::Regular => p == Pattern::A,
+                FreezeMode::Sequential => {
+                    (epoch % 2 == 0 && p == Pattern::A) || (epoch % 2 == 1 && p == Pattern::B)
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_method_to_artifact_routing_total() {
+    // every (method, pattern) pair maps to a well-formed artifact name
+    forall(
+        cfg(64, 204),
+        |r: &mut Rng| {
+            let m = Method::ALL[r.below(5)];
+            let e = r.below(50);
+            (m, e)
+        },
+        |&(method, epoch)| {
+            let mode = if method.uses_freezing() {
+                FreezeMode::Sequential
+            } else {
+                FreezeMode::None
+            };
+            let pattern = FreezeScheduler::new(mode).pattern(epoch);
+            let suffix = if method.variant() == "orig" { "none" } else { pattern.suffix() };
+            let name = Manifest::name_of("resnet_mini", method.variant(), "train", suffix);
+            name.starts_with("resnet_mini_")
+                && name.contains(method.variant())
+                && name.ends_with(suffix)
+        },
+    );
+}
+
+#[test]
+fn prop_batch_iter_partitions_epoch() {
+    // every epoch: each index appears at most once; batch shapes constant;
+    // number of yielded samples = floor(n/batch)*batch.
+    forall(
+        cfg(24, 205),
+        |r: &mut Rng| {
+            let n = 16 + r.below(200);
+            let batch = 1 + r.below(32);
+            let seed = r.next_u64();
+            (n, batch, seed)
+        },
+        |&(n, batch, seed)| {
+            let data = Dataset::synthetic(n, 1);
+            let mut count = 0usize;
+            for (xs, ys) in BatchIter::new(&data, batch, seed) {
+                if xs.len() != batch * IMAGE_ELEMS || ys.len() != batch {
+                    return false;
+                }
+                count += batch;
+            }
+            count == (n / batch) * batch
+        },
+    );
+}
+
+#[test]
+fn prop_dataset_batches_agree_with_storage() {
+    forall(
+        cfg(24, 206),
+        |r: &mut Rng| (10 + r.below(50), r.below(40)),
+        |&(n, start)| {
+            let data = Dataset::synthetic(n, 3);
+            let (xs, ys) = data.batch(start, 4);
+            for i in 0..4 {
+                let idx = (start + i) % n;
+                if ys[i] != data.labels[idx] {
+                    return false;
+                }
+                let expect = &data.images[idx * IMAGE_ELEMS..(idx + 1) * IMAGE_ELEMS];
+                if &xs[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS] != expect {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}

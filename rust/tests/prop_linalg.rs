@@ -1,0 +1,175 @@
+//! Property suite: linear algebra + LRD invariants over random inputs
+//! (via the from-scratch `util::check` harness — the proptest substitute).
+
+use lrta::linalg::{orthogonality_defect, qr, svd, svd_truncated};
+use lrta::lrd::{
+    compression_ratio, decomposed_params, svd_linear, svd_rank_for_compression,
+    tucker2_conv, tucker_rank_eq5, tucker_rmin_eq6, LayerShape,
+};
+use lrta::tensor::Tensor;
+use lrta::util::check::{forall, Config};
+use lrta::util::rng::Rng;
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+#[test]
+fn prop_svd_reconstructs_at_full_rank() {
+    forall(
+        cfg(12, 101),
+        |r: &mut Rng| {
+            let m = 3 + r.below(14);
+            let n = 3 + r.below(14);
+            Tensor::randn(&[m, n], 1.0, r)
+        },
+        |a| {
+            let d = svd(a);
+            let k = a.shape()[0].min(a.shape()[1]);
+            a.max_abs_diff(&d.reconstruct(k)) < 1e-3
+        },
+    );
+}
+
+#[test]
+fn prop_singular_values_sorted_and_factors_orthonormal() {
+    forall(
+        cfg(10, 102),
+        |r: &mut Rng| {
+            let m = 4 + r.below(12);
+            let n = 4 + r.below(12);
+            Tensor::randn(&[m, n], 1.0, r)
+        },
+        |a| {
+            let d = svd(a);
+            d.s.windows(2).all(|w| w[0] >= w[1] - 1e-5)
+                && d.s.iter().all(|&s| s >= 0.0)
+                && orthogonality_defect(&d.u) < 1e-3
+                && orthogonality_defect(&d.v) < 1e-3
+        },
+    );
+}
+
+#[test]
+fn prop_truncation_error_monotone_in_rank() {
+    forall(
+        cfg(8, 103),
+        |r: &mut Rng| {
+            let m = 6 + r.below(10);
+            let n = 6 + r.below(10);
+            Tensor::randn(&[m, n], 1.0, r)
+        },
+        |a| {
+            let k = a.shape()[0].min(a.shape()[1]);
+            let mut last = f32::INFINITY;
+            for r in 1..=k {
+                let f = svd_truncated(a, r);
+                let err = a.dist2(&f.reconstruct(r));
+                if err > last + 1e-3 {
+                    return false;
+                }
+                last = err;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_qr_orthonormal_and_reconstructs() {
+    forall(
+        cfg(12, 104),
+        |r: &mut Rng| {
+            let m = 3 + r.below(20);
+            let n = 3 + r.below(20);
+            Tensor::randn(&[m, n], 1.0, r)
+        },
+        |a| {
+            let (q, rr) = qr(a);
+            orthogonality_defect(&q) < 1e-3 && a.max_abs_diff(&q.matmul(&rr)) < 1e-3
+        },
+    );
+}
+
+#[test]
+fn prop_svd_linear_factor_product_params() {
+    forall(
+        cfg(12, 105),
+        |r: &mut Rng| {
+            let c = 4 + r.below(20);
+            let s = 4 + r.below(20);
+            let rank = 1 + r.below(c.min(s));
+            (Tensor::randn(&[c, s], 1.0, r), rank)
+        },
+        |(w, rank)| {
+            let f = svd_linear(w, *rank);
+            f.a.shape() == [w.shape()[0], *rank]
+                && f.b.shape() == [*rank, w.shape()[1]]
+                && f.params() == w.shape()[0] * rank + rank * w.shape()[1]
+        },
+    );
+}
+
+#[test]
+fn prop_tucker_shapes_and_error_bounded() {
+    forall(
+        cfg(6, 106),
+        |r: &mut Rng| {
+            let c = 3 + r.below(8);
+            let s = 3 + r.below(8);
+            let r1 = 1 + r.below(c);
+            let r2 = 1 + r.below(s);
+            (Tensor::randn(&[c, s, 3, 3], 1.0, r), r1, r2)
+        },
+        |(w, r1, r2)| {
+            let f = tucker2_conv(w, *r1, *r2);
+            let rec = f.reconstruct();
+            // truncation error is bounded by the total energy
+            rec.shape() == w.shape() && w.dist2(&rec) <= w.norm().powi(2) * 1.01
+        },
+    );
+}
+
+#[test]
+fn prop_eq5_lands_in_compression_band() {
+    forall(
+        cfg(200, 107),
+        |r: &mut Rng| {
+            let c = 8 + r.below(512);
+            let s = 8 + r.below(512);
+            let k = [1usize, 3, 5][r.below(3)];
+            let alpha = [1.5f64, 2.0, 3.0][r.below(3)];
+            (c, s, k, alpha)
+        },
+        |&(c, s, k, alpha)| {
+            let (r1, shape) = if k == 1 {
+                (svd_rank_for_compression(c, s, alpha), LayerShape::linear(c, s))
+            } else {
+                (tucker_rank_eq5(c, s, k, alpha, 1.0), LayerShape::conv(c, s, k))
+            };
+            if r1 <= 1 {
+                return true; // degenerate band: nothing to check
+            }
+            // floor() ⇒ achieved ratio ≥ α (slack for integer effects)
+            compression_ratio(&shape, r1, r1) >= alpha * 0.9
+        },
+    );
+}
+
+#[test]
+fn prop_eq6_strictly_tightens() {
+    forall(
+        cfg(200, 108),
+        |r: &mut Rng| {
+            let c = 32 + r.below(480);
+            let s = 32 + r.below(480);
+            (c, s)
+        },
+        |&(c, s)| {
+            let r5 = tucker_rank_eq5(c, s, 3, 2.0, 1.0);
+            let r6 = tucker_rmin_eq6(c, s, 3, 2.0, 1.0);
+            r6 <= r5 && decomposed_params(&LayerShape::conv(c, s, 3), r6, r6)
+                <= decomposed_params(&LayerShape::conv(c, s, 3), r5, r5)
+        },
+    );
+}

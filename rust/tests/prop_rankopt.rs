@@ -1,0 +1,148 @@
+//! Property suite: Algorithm 1 invariants across random layer shapes and
+//! device profiles.
+
+use lrta::devmodel::DeviceProfile;
+use lrta::lrd::plan::snap_rank;
+use lrta::lrd::LayerShape;
+use lrta::rankopt::{optimize_rank, r2_of, ModelTimer, RankOptConfig};
+use lrta::util::check::{forall, Config};
+use lrta::util::rng::Rng;
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed }
+}
+
+fn random_device(r: &mut Rng) -> DeviceProfile {
+    match r.below(4) {
+        0 => DeviceProfile::v100(),
+        1 => DeviceProfile::ascend910(),
+        2 => DeviceProfile::tpu_v4(),
+        _ => DeviceProfile::cpu_sim(),
+    }
+}
+
+fn random_shape(r: &mut Rng) -> LayerShape {
+    if r.below(2) == 0 {
+        LayerShape::linear(32 + r.below(480), 32 + r.below(480))
+    } else {
+        LayerShape::conv(32 + r.below(224), 32 + r.below(224), 3)
+    }
+}
+
+#[test]
+fn prop_ropt_within_band_and_never_worse_than_nominal() {
+    forall(
+        cfg(40, 301),
+        |r: &mut Rng| (random_device(r), random_shape(r), 512 << r.below(4)),
+        |(dev, shape, m)| {
+            let mut timer = ModelTimer(dev.clone());
+            let cfg = RankOptConfig { m: *m, ..Default::default() };
+            let res = optimize_rank(&mut timer, *shape, &cfg).unwrap();
+            res.r_opt >= res.r_min
+                && res.r_opt <= res.r_nominal
+                && res.t_opt <= res.t_nominal + 1e-15
+                && res.speedup_vs_nominal() >= 1.0 - 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_sweep_well_formed() {
+    forall(
+        cfg(30, 302),
+        |r: &mut Rng| (random_device(r), random_shape(r)),
+        |(dev, shape)| {
+            let mut timer = ModelTimer(dev.clone());
+            let res = optimize_rank(&mut timer, *shape, &Default::default()).unwrap();
+            // descending ranks, stride 1, endpoints exact, delta aligned
+            let ok_order = res.sweep.windows(2).all(|w| w[0].r == w[1].r + 1);
+            let ok_ends = res.sweep.first().unwrap().r == res.r_nominal
+                && res.sweep.last().unwrap().r == res.r_min;
+            let ok_delta = res.delta.len() + 1 == res.sweep.len();
+            // compression grows monotonically as rank shrinks
+            let ok_ratio = res.sweep.windows(2).all(|w| w[1].ratio >= w[0].ratio - 1e-12);
+            ok_order && ok_ends && ok_delta && ok_ratio
+        },
+    );
+}
+
+#[test]
+fn prop_effective_time_is_min_of_choices() {
+    // Algorithm 1's fallback: what actually runs is never slower than both
+    // the dense layer and the chosen decomposition.
+    forall(
+        cfg(40, 303),
+        |r: &mut Rng| (random_device(r), random_shape(r), 256 << r.below(5)),
+        |(dev, shape, m)| {
+            let mut timer = ModelTimer(dev.clone());
+            let cfg = RankOptConfig { m: *m, ..Default::default() };
+            let res = optimize_rank(&mut timer, *shape, &cfg).unwrap();
+            let eff = res.effective_time();
+            eff <= res.t_dense + 1e-15 && eff <= res.t_opt + 1e-15
+        },
+    );
+}
+
+#[test]
+fn prop_devmodel_time_monotone_under_padding() {
+    // padding to the tile never *reduces* modelled time, and aligned dims
+    // are never slower than the next misaligned size up
+    forall(
+        cfg(200, 304),
+        |r: &mut Rng| {
+            let dev = random_device(r);
+            let m = 64 + r.below(2048);
+            let k = 16 + r.below(1024);
+            let n = 16 + r.below(1024);
+            (dev, m, k, n)
+        },
+        |(dev, m, k, n)| {
+            let t = dev.matmul_time(*m, *k, *n);
+            let t_up = dev.matmul_time(*m, k + 1, *n);
+            // growing k by 1 can cross a tile boundary (jump up) but can
+            // never make it faster... unless k+1 becomes aligned while k
+            // was not (the rank-quantization effect itself)
+            let k_aligned = k % dev.tile_k == 0;
+            let k1_aligned = (k + 1) % dev.tile_k == 0;
+            if !k_aligned && k1_aligned {
+                true // alignment may legitimately speed it up
+            } else {
+                t_up >= t - 1e-15
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_snap_rank_sound() {
+    forall(
+        cfg(300, 305),
+        |r: &mut Rng| {
+            let rank = 1 + r.below(512);
+            let rmin = 1 + r.below(rank);
+            let tile = [8usize, 16, 32, 64, 128][r.below(5)];
+            (rank, rmin, tile)
+        },
+        |&(rank, rmin, tile)| {
+            let s = snap_rank(rank, rmin, tile);
+            s >= 1 && (s % tile == 0 || s == rank) && s <= rank + tile / 2
+        },
+    );
+}
+
+#[test]
+fn prop_r2_of_bounds() {
+    forall(
+        cfg(300, 306),
+        |r: &mut Rng| {
+            let r1 = 1 + r.below(512);
+            let beta = [0.5f64, 1.0, 2.0][r.below(3)];
+            let s = 1 + r.below(1024);
+            (r1, beta, s)
+        },
+        |&(r1, beta, s)| {
+            let r2 = r2_of(r1, beta, s);
+            r2 >= 1 && r2 <= s
+        },
+    );
+}

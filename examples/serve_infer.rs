@@ -1,30 +1,75 @@
-//! Batched-inference serving driver (the Table-1 "Infer Speed" columns).
+//! Inference serving driver (the Table-1 "Infer Speed" columns) on top of
+//! the `lrta::serve` subsystem.
 //!
-//! Loads a trained (or init) checkpoint for each variant of a model, runs a
-//! stream of batched requests through the PJRT executable, and reports
-//! throughput (fps) plus batch-latency percentiles — original vs vanilla
-//! LRD vs rank-optimized. Freezing does not appear here on purpose: the
-//! paper's point is that freezing accelerates *training only*.
+//! Registers the `orig` / `lrd` / `rankopt` checkpoints of one model as
+//! router variants — each engine keeps its parameters **device-resident**
+//! (uploaded once, not per request) — and drives a synthetic closed-loop
+//! load generator with configurable concurrency through each variant.
+//! Freezing does not appear here on purpose: the paper's point is that
+//! freezing accelerates *training only*.
 //!
-//! Run: `cargo run --release --example serve_infer`
-//! Env: LRTA_MODEL (resnet_mini|vit_mini), LRTA_BATCHES (default 12)
+//! The old per-request parameter round-trip
+//! (`literal_to_tensor` → `tensor_to_literal` per request) is gone; pass
+//! `--reupload` (or `LRTA_REUPLOAD=1`) to restore it as a measurable
+//! baseline.
+//!
+//! Run:  `cargo run --release --example serve_infer [-- --flags]`
+//! Args: --model M --requests N --concurrency C --max-wait-ms X
+//!       --spot-check N --reupload --burst
+//! Env fallbacks: LRTA_MODEL, LRTA_REQUESTS, LRTA_CONCURRENCY,
+//!       LRTA_REUPLOAD
 
 use anyhow::Result;
 use lrta::checkpoint;
-use lrta::coordinator::{decompose_checkpoint, evaluate_with};
 use lrta::data::Dataset;
-use lrta::metrics::ThroughputMeter;
-use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
+use lrta::runtime::Manifest;
+use lrta::serve::{self, Server, ServerConfig, VariantSpec};
 use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::cli::Args;
+use std::time::Duration;
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
 
 fn main() -> Result<()> {
-    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
-    let batches: usize =
-        std::env::var("LRTA_BATCHES").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
+    let args = Args::from_env(&[
+        "model", "requests", "concurrency", "max-wait-ms", "spot-check", "reupload", "burst",
+    ])
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = args.str_or("model", &env_or("LRTA_MODEL", "resnet_mini"));
+    let requests = args.usize_or(
+        "requests",
+        env_or("LRTA_REQUESTS", "256").parse().unwrap_or(256),
+    );
+    let concurrency = args.usize_or(
+        "concurrency",
+        env_or("LRTA_CONCURRENCY", "32").parse().unwrap_or(32),
+    );
+    let reupload =
+        args.bool_or("reupload", false) || env_or("LRTA_REUPLOAD", "0") == "1";
+    let burst = args.bool_or("burst", false);
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
-    let rt = Runtime::cpu()?;
     let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+
+    let variants = ["orig", "lrd", "rankopt"];
+    let mut specs = Vec::new();
+    for variant in variants {
+        specs.push(VariantSpec::from_dense(&manifest, &model, variant, &dense)?);
+    }
+    let cfg = ServerConfig {
+        max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
+        reupload,
+        spot_check: args.usize_or("spot-check", 128),
+        ..Default::default()
+    };
+    let server = Server::start(&manifest, specs, &cfg)?;
+
+    // request stream: pre-generated samples (the data pipeline is not what
+    // we're measuring)
+    let data = Dataset::synthetic(512, 99);
+    let timeout = Duration::from_secs(120);
 
     let mut rows = vec![vec![
         "Variant".to_string(),
@@ -32,53 +77,18 @@ fn main() -> Result<()> {
         "Δ fps".to_string(),
         "p50 ms".to_string(),
         "p99 ms".to_string(),
+        "fill %".to_string(),
         "accuracy".to_string(),
     ]];
     let mut base_fps = None;
-
-    for variant in ["orig", "lrd", "rankopt"] {
-        let params = if variant == "orig" {
-            dense.clone()
+    for variant in variants {
+        let report = if burst {
+            serve::burst_loop(&server, &model, variant, &data, requests, timeout)
         } else {
-            decompose_checkpoint(&dense, manifest.config(&model, variant)?)?.params
+            serve::closed_loop(&server, &model, variant, &data, requests, concurrency, timeout)
         };
-        let meta = manifest.artifact(&format!("{model}_{variant}_infer"))?;
-        let exe = rt.load_hlo(manifest.hlo_path(meta))?;
-
-        // request stream: pre-generated batches (the data pipeline is not
-        // what we're measuring)
-        let eval = Dataset::synthetic(meta.batch * 2, 99);
-        let mut param_lits = Vec::new();
-        for slot in &meta.trainable {
-            param_lits.push(tensor_to_literal(&params[&slot.name])?);
-        }
-        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
-        let (xs, _) = eval.batch(0, meta.batch);
-
-        let make_inputs = |param_lits: &[xla::Literal]| -> Result<Vec<xla::Literal>> {
-            let mut v = Vec::with_capacity(param_lits.len() + 1);
-            for l in param_lits {
-                // re-upload params per request (serving keeps them resident;
-                // see bench_perf_micro for the buffer-resident variant)
-                let t = lrta::runtime::literal_to_tensor(l)?;
-                v.push(tensor_to_literal(&t)?);
-            }
-            v.push(xla::Literal::vec1(&xs).reshape(&x_dims)?);
-            Ok(v)
-        };
-
-        // warmup
-        exe.run(&make_inputs(&param_lits)?)?;
-        let mut meter = ThroughputMeter::new(meta.batch);
-        for _ in 0..batches {
-            let inputs = make_inputs(&param_lits)?;
-            let t0 = std::time::Instant::now();
-            exe.run(&inputs)?;
-            meter.record(t0.elapsed().as_secs_f64());
-        }
-        let acc = evaluate_with(&exe, meta, &params, &eval)?;
-
-        let fps = meter.fps();
+        let snap = server.stats(&model, variant).expect("registered variant");
+        let fps = report.observed_fps();
         let delta = match base_fps {
             None => {
                 base_fps = Some(fps);
@@ -86,20 +96,29 @@ fn main() -> Result<()> {
             }
             Some(base) => fmt_delta_pct(base, fps),
         };
-        let s = meter.summary();
         rows.push(vec![
             variant.to_string(),
             format!("{fps:.0}"),
             delta,
-            format!("{:.1}", s.median * 1e3),
-            format!("{:.1}", s.p99 * 1e3),
-            format!("{acc:.3}"),
+            format!("{:.1}", report.latency_ms(50.0)),
+            format!("{:.1}", report.latency_ms(99.0)),
+            format!("{:.0}", snap.mean_fill * 100.0),
+            snap.spot_check_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
         ]);
-        println!("{variant}: {fps:.0} fps");
+        println!(
+            "{variant}: {fps:.0} fps ({} ok / {} rejected retries / {} errors)",
+            report.completed, report.rejected, report.errors
+        );
     }
+    server.shutdown();
 
     let t = table(&rows);
-    println!("\n{model} inference serving ({} requests of batch per variant):\n{t}", batches);
+    let mode = if reupload { "reupload-per-batch (baseline)" } else { "device-resident" };
+    println!(
+        "\n{model} inference serving ({requests} single-image requests per variant, \
+         {mode}, {}):\n{t}",
+        if burst { "burst".to_string() } else { format!("concurrency {concurrency}") }
+    );
     write_report(&format!("results/serve_infer_{model}.txt"), &t);
     Ok(())
 }

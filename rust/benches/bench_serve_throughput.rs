@@ -1,0 +1,145 @@
+//! Serving-throughput benchmark: resident-vs-reupload and
+//! batched-vs-unbatched across the `orig` / `lrd` / `rankopt` variants.
+//!
+//! Three serving modes per variant:
+//!   1. **reupload, unbatched** — the old `serve_infer` behavior: one
+//!      synchronous executable run per request with every parameter
+//!      literal rebuilt and re-uploaded (host-literal path);
+//!   2. **reupload, batched** — the subsystem's dynamic batcher, but the
+//!      engine re-uploads parameters every batch (`reupload: true`);
+//!   3. **resident, batched** — the subsystem's default: parameters
+//!      uploaded once and kept device-resident.
+//!
+//! The LRD/rank-opt win the paper claims for inference only survives mode
+//! 3: smaller resident factors mean the per-request work is just the batch
+//! upload + the cheaper matmuls. Output: results/serve_throughput.txt
+//!
+//! Env: LRTA_MODEL (default resnet_mini), LRTA_SERVE_BENCH_REQS
+//! (requests per measurement, default 4× compiled batch)
+
+use anyhow::Result;
+use lrta::checkpoint;
+use lrta::data::Dataset;
+use lrta::metrics::ThroughputMeter;
+use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
+use lrta::serve::{self, Server, ServerConfig, VariantSpec};
+use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use std::time::Duration;
+
+/// Mode 1: per-request full re-upload through the host-literal path, no
+/// batching layer at all (each "request" still computes one compiled
+/// batch — that is the smallest unit the artifact can run).
+fn reupload_unbatched_fps(
+    manifest: &Manifest,
+    model: &str,
+    variant: &str,
+    params: &lrta::checkpoint::Params,
+    reqs: usize,
+) -> Result<f64> {
+    let rt = Runtime::cpu()?;
+    let meta = manifest.artifact(&format!("{model}_{variant}_infer"))?;
+    let exe = rt.load_hlo(manifest.hlo_path(meta))?;
+    let data = Dataset::synthetic(meta.batch, 99);
+    let (xs, _) = data.batch(0, meta.batch);
+    let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    let make_inputs = || -> Result<Vec<xla::Literal>> {
+        let mut v = Vec::with_capacity(meta.trainable.len() + meta.frozen.len() + 1);
+        for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+            // the old serve_infer waste: parameters cross the host/device
+            // boundary on every request
+            v.push(tensor_to_literal(&params[&slot.name])?);
+        }
+        v.push(xla::Literal::vec1(&xs).reshape(&x_dims)?);
+        Ok(v)
+    };
+    exe.run(&make_inputs()?)?; // warmup
+    let mut meter = ThroughputMeter::new(meta.batch);
+    let n = (reqs / meta.batch).max(3);
+    for _ in 0..n {
+        let inputs = make_inputs()?;
+        meter.timed(|| exe.run(&inputs))?;
+    }
+    Ok(meter.fps())
+}
+
+/// Modes 2 and 3: burst load through the serving subsystem.
+fn served_fps(
+    manifest: &Manifest,
+    model: &str,
+    variant: &str,
+    params: lrta::checkpoint::Params,
+    reqs: usize,
+    reupload: bool,
+) -> Result<f64> {
+    let cfg = ServerConfig {
+        reupload,
+        max_wait: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let server = Server::start(
+        manifest,
+        vec![VariantSpec::new(model, variant, params)],
+        &cfg,
+    )?;
+    let data = Dataset::synthetic(512, 99);
+    // warmup burst, then the measured burst
+    serve::burst_loop(&server, model, variant, &data, reqs / 4 + 1, Duration::from_secs(120));
+    let report =
+        serve::burst_loop(&server, model, variant, &data, reqs, Duration::from_secs(120));
+    server.shutdown();
+    Ok(report.observed_fps())
+}
+
+fn main() -> Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+
+    let mut rows = vec![vec![
+        "Variant".to_string(),
+        "reupload unbatched fps".to_string(),
+        "reupload batched fps".to_string(),
+        "resident batched fps".to_string(),
+        "Δ resident vs reupload".to_string(),
+    ]];
+    let mut resident_beats_reupload = true;
+    for variant in ["orig", "lrd", "rankopt"] {
+        let params = VariantSpec::from_dense(&manifest, &model, variant, &dense)?.params;
+        let batch = manifest.artifact(&format!("{model}_{variant}_infer"))?.batch;
+        let reqs: usize = std::env::var("LRTA_SERVE_BENCH_REQS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(batch * 4);
+
+        let unbatched =
+            reupload_unbatched_fps(&manifest, &model, variant, &params, reqs)?;
+        let batched_reupload =
+            served_fps(&manifest, &model, variant, params.clone(), reqs, true)?;
+        let batched_resident =
+            served_fps(&manifest, &model, variant, params, reqs, false)?;
+        if variant != "orig" && batched_resident <= batched_reupload {
+            resident_beats_reupload = false;
+        }
+        println!(
+            "{variant}: unbatched {unbatched:.0} | batched+reupload {batched_reupload:.0} | \
+             batched+resident {batched_resident:.0} fps"
+        );
+        rows.push(vec![
+            variant.to_string(),
+            format!("{unbatched:.0}"),
+            format!("{batched_reupload:.0}"),
+            format!("{batched_resident:.0}"),
+            fmt_delta_pct(batched_reupload, batched_resident),
+        ]);
+    }
+
+    let t = table(&rows);
+    println!("\n{model} serving throughput:\n{t}");
+    println!(
+        "resident-parameter batched serving beats the re-upload baseline for \
+         lrd+rankopt: {}",
+        if resident_beats_reupload { "YES" } else { "NO (check machine load)" }
+    );
+    write_report("results/serve_throughput.txt", &t);
+    Ok(())
+}

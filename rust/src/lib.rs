@@ -15,6 +15,14 @@
 //!   Algorithm 2), and the training/inference orchestration that runs the
 //!   AOT artifacts via PJRT ([`runtime`], [`coordinator`]).
 //!
+//! On top of L3 sits the **serving layer** ([`serve`]): a production-style
+//! inference server — bounded admission-controlled queues, a dynamic
+//! batcher onto the compiled batch shape, per-variant engines with
+//! parameters uploaded once and kept device-resident, and a router that
+//! serves `orig` / `lrd` / `rankopt` checkpoints side-by-side for A/B
+//! throughput comparison (the Table-1 "Infer Speed" claim as a running
+//! system; `lrta serve`, `examples/serve_infer.rs`).
+//!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
 
@@ -29,5 +37,6 @@ pub mod metrics;
 pub mod models;
 pub mod rankopt;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -5,6 +5,8 @@
 //!   decompose  apply closed-form LRD to a checkpoint (variant ranks)
 //!   train      fine-tune a variant with a freezing schedule
 //!   infer      batched-inference throughput of a variant
+//!   serve      production-style inference serving: dynamic batching,
+//!              resident parameters, variant routing + synthetic load
 //!   rank-opt   run Algorithm 1 for a layer shape on a timing backend
 //!   pipeline   pretrain → decompose → fine-tune → evaluate, end to end
 //!   info       print manifest / artifact inventory
@@ -15,12 +17,17 @@
 use anyhow::{anyhow, bail, Result};
 use lrta::checkpoint;
 use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
+use lrta::data::Dataset;
 use lrta::devmodel::DeviceProfile;
 use lrta::freeze::FreezeMode;
 use lrta::lrd::LayerShape;
 use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::{Manifest, Runtime};
+use lrta::serve as serve_load;
+use lrta::serve::{Server, ServerConfig, StatsSnapshot, VariantSpec};
+use lrta::util::bench::table;
 use lrta::util::cli::Args;
+use std::time::Duration;
 
 const USAGE: &str = "\
 lrta — Low-Rank Training Acceleration (sequential freezing + rank quantization)
@@ -34,6 +41,9 @@ SUBCOMMANDS
   train     --model M --variant V --freeze {none|regular|sequential}
             --epochs N --ckpt F [--lr X] [--cosine] [--out F]
   infer     --model M --variant V --ckpt F [--reps N]
+  serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
+            [--requests N] [--concurrency C] [--depth D]
+            [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -42,6 +52,13 @@ SUBCOMMANDS
 COMMON
   --manifest PATH   (default artifacts/manifest.json)
   --seed N          (default 0)
+
+SERVE
+  Starts one engine per variant (parameters uploaded once and kept
+  device-resident; --reupload restores the old per-batch upload as a
+  measurable baseline), drives a synthetic closed-loop load through the
+  router (--burst switches to an open-loop burst that keeps batches
+  full), and prints per-variant fps + latency percentiles.
 ";
 
 fn main() {
@@ -55,7 +72,8 @@ fn run() -> Result<()> {
     let args = Args::from_env(&[
         "model", "variant", "freeze", "epochs", "lr", "cosine", "out", "ckpt", "manifest",
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
-        "pretrain-epochs", "verbose", "stride",
+        "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
+        "depth", "max-wait-ms", "spot-check", "reupload", "burst",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -70,6 +88,7 @@ fn run() -> Result<()> {
         "decompose" => decompose(&args),
         "train" => train(&args),
         "infer" => infer(&args),
+        "serve" => serve(&args),
         "rank-opt" => rank_opt(&args),
         "pipeline" => pipeline(&args),
         other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
@@ -185,6 +204,91 @@ fn infer(args: &Args) -> Result<()> {
     let trainer = Trainer::new(&rt, &m, cfg, params)?;
     let fps = trainer.infer_fps(args.usize_or("reps", 20))?;
     println!("inference throughput: {fps:.0} fps");
+    Ok(())
+}
+
+/// `lrta serve` — start the serving subsystem for every requested variant
+/// of one model and drive a synthetic load through the router.
+fn serve(args: &Args) -> Result<()> {
+    if !args.positional.is_empty() {
+        // e.g. `--variants orig, lrd` parses "lrd" as a positional — fail
+        // loudly instead of silently serving fewer variants than asked
+        bail!(
+            "unexpected arguments {:?} (write comma lists without spaces: --variants orig,lrd)",
+            args.positional
+        );
+    }
+    let m = load_manifest(args)?;
+    let model = args.str_or("model", "resnet_mini");
+    let variants = args.list_or("variants", &["orig", "lrd", "rankopt"]);
+    let requests = args.usize_or("requests", 256);
+    let concurrency = args.usize_or("concurrency", 32);
+    let seed = args.u64_or("seed", 0);
+    let burst = args.bool_or("burst", false);
+
+    // checkpoint: --ckpt, or the manifest's init checkpoint (same default
+    // as the benches — serving speed does not depend on training state)
+    let ckpt = args.str_or("ckpt", "");
+    let dense = if ckpt.is_empty() {
+        checkpoint::load(m.init_checkpoint(&model)?)?
+    } else {
+        checkpoint::load(&ckpt)?
+    };
+
+    let mut specs = Vec::new();
+    for variant in &variants {
+        specs.push(VariantSpec::from_dense(&m, &model, variant, &dense)?);
+    }
+
+    let cfg = ServerConfig {
+        queue_depth: args.usize_or("depth", 0),
+        max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
+        reupload: args.bool_or("reupload", false),
+        spot_check: args.usize_or("spot-check", 128),
+        ..Default::default()
+    };
+    println!(
+        "serving {model} [{}] params={} requests={requests} {} ...",
+        variants.join(", "),
+        if cfg.reupload { "reupload-per-batch" } else { "device-resident" },
+        if burst { "burst".to_string() } else { format!("concurrency={concurrency}") },
+    );
+    let server = Server::start(&m, specs, &cfg)?;
+
+    let data = Dataset::synthetic(512, seed ^ 0x5E12E);
+    let timeout = Duration::from_secs(120);
+    let mut rows = vec![StatsSnapshot::table_header()];
+    let mut reports = Vec::new();
+    for variant in &variants {
+        let report = if burst {
+            serve_load::burst_loop(&server, &model, variant, &data, requests, timeout)
+        } else {
+            serve_load::closed_loop(
+                &server, &model, variant, &data, requests, concurrency, timeout,
+            )
+        };
+        let snap = server.stats(&model, variant).expect("registered variant");
+        println!(
+            "{variant}: {:.0} fps observed ({} ok, {} rejected retries, {} errors)",
+            report.observed_fps(),
+            report.completed,
+            report.rejected,
+            report.errors
+        );
+        rows.push(snap.table_row());
+        reports.push((variant.clone(), report));
+    }
+    println!("\n{}", table(&rows));
+    for (variant, report) in &reports {
+        println!(
+            "{variant}: observed {:.0} fps | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+            report.observed_fps(),
+            report.latency_ms(50.0),
+            report.latency_ms(95.0),
+            report.latency_ms(99.0)
+        );
+    }
+    server.shutdown();
     Ok(())
 }
 

@@ -41,16 +41,30 @@ impl ThroughputMeter {
     }
 
     /// Throughput in items/second, paper-style "Speed (fps)", computed
-    /// from the median step time.
+    /// from the median step time. An empty (or zero-duration) meter reports
+    /// 0.0 rather than NaN/∞ so report columns stay finite.
     pub fn fps(&self) -> f64 {
-        self.items_per_step as f64 / self.median_step()
+        if self.step_secs.is_empty() {
+            return 0.0;
+        }
+        let med = self.median_step();
+        if med > 0.0 {
+            self.items_per_step as f64 / med
+        } else {
+            0.0
+        }
     }
 
     /// Mean fps over the whole run (paper: "average time per step over an
-    /// epoch as a measure of throughput").
+    /// epoch as a measure of throughput"). 0.0 on an empty meter (no
+    /// division by a zero total).
     pub fn mean_fps(&self) -> f64 {
         let total: f64 = self.step_secs.iter().sum();
-        (self.steps() * self.items_per_step) as f64 / total
+        if total > 0.0 {
+            (self.steps() * self.items_per_step) as f64 / total
+        } else {
+            0.0
+        }
     }
 
     pub fn summary(&self) -> Summary {
@@ -139,6 +153,42 @@ mod tests {
         m.record(1.0);
         m.record(3.0);
         assert!((m.mean_fps() - 5.0).abs() < 1e-12); // 20 items / 4 s
+    }
+
+    #[test]
+    fn empty_meter_reports_zero_not_nan() {
+        let m = ThroughputMeter::new(64);
+        assert_eq!(m.steps(), 0);
+        assert_eq!(m.fps(), 0.0);
+        assert_eq!(m.mean_fps(), 0.0);
+        assert!(m.median_step().is_nan()); // documented empty sentinel
+    }
+
+    #[test]
+    fn single_step_meter() {
+        let mut m = ThroughputMeter::new(32);
+        m.record(0.5);
+        assert!((m.fps() - 64.0).abs() < 1e-12);
+        assert!((m.mean_fps() - 64.0).abs() < 1e-12);
+        assert!((m.median_step() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outlier_heavy_meter_stays_robust() {
+        let mut m = ThroughputMeter::new(10);
+        for _ in 0..9 {
+            m.record(0.01);
+        }
+        m.record(10.0); // pathological straggler
+        // median-based fps ignores the outlier ...
+        assert!((m.fps() - 1000.0).abs() < 1e-9);
+        // ... mean-based fps pays for it
+        assert!(m.mean_fps() < 10.0);
+        // zero-duration steps must not produce ∞
+        let mut z = ThroughputMeter::new(10);
+        z.record(0.0);
+        assert_eq!(z.fps(), 0.0);
+        assert_eq!(z.mean_fps(), 0.0);
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub mod manifest;
 
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
@@ -21,6 +23,9 @@ pub use manifest::{ArtifactMeta, LayerCfg, Manifest, ParamSlot};
 /// Shared PJRT client + executable cache.
 pub struct Runtime {
     client: Rc<xla::PjRtClient>,
+    /// Identity executables used by [`Runtime::upload`], cached per shape so
+    /// the compile cost is paid once per distinct tensor shape.
+    upload_exes: RefCell<HashMap<Vec<i64>, Executable>>,
 }
 
 impl Runtime {
@@ -29,7 +34,7 @@ impl Runtime {
     /// backend-agnostic, which is the paper's platform-agnosticity claim).
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client: Rc::new(client) })
+        Ok(Runtime { client: Rc::new(client), upload_exes: RefCell::new(HashMap::new()) })
     }
 
     pub fn platform(&self) -> String {
@@ -62,6 +67,29 @@ impl Runtime {
         let exe = self.client.compile(comp).with_context(|| format!("compiling {name}"))?;
         Ok(Executable { exe, name: name.to_string(), compile_secs: t0.elapsed().as_secs_f64() })
     }
+
+    /// Upload an f32 host literal to a device-resident buffer.
+    ///
+    /// The serving hot path keeps model parameters resident on device and
+    /// passes them to [`Executable::run_buffers`] request after request,
+    /// so upload cost is paid once instead of per request. The transfer is
+    /// expressed as a compiled identity computation (parameter → root), the
+    /// one host→device channel every PJRT backend supports; the executable
+    /// is cached per shape.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit.array_shape().context("upload expects an array literal")?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        if !self.upload_exes.borrow().contains_key(&dims) {
+            let name = format!("upload_f32_{dims:?}");
+            let b = xla::XlaBuilder::new(&name);
+            let x = b.parameter(0, xla::ElementType::F32, &dims, "x")?;
+            let exe = self.compile(&x.build()?, &name)?;
+            self.upload_exes.borrow_mut().insert(dims.clone(), exe);
+        }
+        let cache = self.upload_exes.borrow();
+        let mut bufs = cache[&dims].run_to_buffers(&[lit])?;
+        Ok(bufs.swap_remove(0))
+    }
 }
 
 /// A compiled executable plus metadata.
@@ -82,18 +110,41 @@ impl Executable {
         inputs: &[L],
     ) -> Result<Vec<xla::Literal>> {
         let bufs = self.exe.execute::<L>(inputs).context("execute")?;
-        let mut lit = bufs[0][0].to_literal_sync().context("fetch output")?;
+        Self::buffer_to_literals(&bufs[0][0])
+    }
+
+    /// Execute with device-resident buffers (the hot path: parameters stay
+    /// on device between steps). Accepts owned or borrowed buffers — the
+    /// serving path uploads parameters once ([`Runtime::upload`]) and mixes
+    /// in only the fresh batch input per request via `&[&PjRtBuffer]`.
+    /// Returns the raw output buffers.
+    pub fn run_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(inputs).context("execute_b")?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Execute with host literals but keep the outputs on device (used by
+    /// [`Runtime::upload`] and pipelined serving).
+    pub fn run_to_buffers<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute::<L>(inputs).context("execute")?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Sync one output buffer to host and flatten it, mirroring the output
+    /// handling of [`Executable::run`] (tuple roots decompose, single arrays
+    /// pass through).
+    pub fn buffer_to_literals(buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        let mut lit = buf.to_literal_sync().context("fetch output")?;
         match lit.shape()? {
             xla::Shape::Tuple(_) => Ok(lit.decompose_tuple()?),
             _ => Ok(vec![lit]),
         }
-    }
-
-    /// Execute with device-resident buffers (the hot path: parameters stay
-    /// on device between steps). Returns the raw output buffers.
-    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut out = self.exe.execute_b(inputs).context("execute_b")?;
-        Ok(out.swap_remove(0))
     }
 
     /// Time one synchronous execution (host literals in, host literal out).

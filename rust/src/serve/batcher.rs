@@ -1,0 +1,170 @@
+//! Dynamic batcher: coalesce queued requests onto the artifact's compiled
+//! batch shape.
+//!
+//! AOT artifacts are lowered for one constant batch size, so the batcher's
+//! contract is simple: deliver *up to* `batch` requests per executable run,
+//! waiting at most `max_wait` past the first request before shipping a
+//! partial (zero-padded) batch. GroupNorm/LayerNorm in the mini models
+//! normalize per sample, so padded rows never perturb real rows — the demux
+//! in the engine returns each request exactly the logits row its image
+//! produced.
+
+use super::queue::{Bounded, Pop};
+use super::Request;
+use std::time::{Duration, Instant};
+
+/// Batching policy for one engine.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Compiled batch size of the artifact (coalescing ceiling).
+    pub batch: usize,
+    /// Elements per request payload (e.g. `32·32·3`).
+    pub item_elems: usize,
+    /// How long to hold a partial batch open after its first request.
+    pub max_wait: Duration,
+    /// Idle poll interval: how often a sleeping worker re-checks for
+    /// shutdown when no traffic arrives.
+    pub idle_poll: Duration,
+}
+
+/// What the worker loop should do next.
+pub enum NextBatch {
+    /// One coalesced batch, `1 ..= batch` requests in FIFO order.
+    Batch(Vec<Request>),
+    /// No traffic within the idle poll window.
+    Idle,
+    /// Queue closed and drained — worker exits.
+    Closed,
+}
+
+/// Block for the next batch: wait (bounded) for a first request, then
+/// coalesce until the batch is full or `max_wait` expires.
+pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig) -> NextBatch {
+    let first = match queue.pop_timeout(cfg.idle_poll) {
+        Pop::Item(r) => r,
+        Pop::TimedOut => return NextBatch::Idle,
+        Pop::Closed => return NextBatch::Closed,
+    };
+    let mut reqs = vec![first];
+    let deadline = Instant::now() + cfg.max_wait;
+    while reqs.len() < cfg.batch {
+        match queue.pop_deadline(deadline) {
+            Pop::Item(r) => reqs.push(r),
+            // Closed still ships the in-hand partial batch; the *next*
+            // next_batch call observes Closed and exits the worker.
+            Pop::TimedOut | Pop::Closed => break,
+        }
+    }
+    NextBatch::Batch(reqs)
+}
+
+/// Flatten request payloads into one `[batch · item_elems]` buffer in FIFO
+/// order, zero-padding unfilled rows. Returns `(xs, padded_slots)`.
+pub fn assemble(reqs: &[Request], batch: usize, item_elems: usize) -> (Vec<f32>, usize) {
+    debug_assert!(reqs.len() <= batch, "batcher over-coalesced");
+    let mut xs = vec![0.0f32; batch * item_elems];
+    for (i, r) in reqs.iter().enumerate() {
+        xs[i * item_elems..(i + 1) * item_elems].copy_from_slice(&r.x);
+    }
+    (xs, batch - reqs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Response, ServeError};
+    use std::sync::mpsc;
+
+    const ELEMS: usize = 4;
+
+    fn req(fill: f32) -> (Request, mpsc::Receiver<Result<Response, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request { id: 0, x: vec![fill; ELEMS], enqueued: Instant::now(), tx };
+        (r, rx)
+    }
+
+    fn cfg(batch: usize, max_wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            batch,
+            item_elems: ELEMS,
+            max_wait: Duration::from_millis(max_wait_ms),
+            idle_poll: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn coalesces_full_batch_without_waiting_out_deadline() {
+        let q = Bounded::new(8);
+        for i in 0..4 {
+            q.try_push(req(i as f32).0).unwrap();
+        }
+        let t0 = Instant::now();
+        match next_batch(&q, &cfg(4, 5_000)) {
+            NextBatch::Batch(reqs) => {
+                assert_eq!(reqs.len(), 4);
+                // FIFO order preserved
+                for (i, r) in reqs.iter().enumerate() {
+                    assert_eq!(r.x[0], i as f32);
+                }
+            }
+            _ => panic!("expected a batch"),
+        }
+        // a full batch must not wait for the 5 s deadline
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn partial_batch_ships_at_deadline() {
+        let q = Bounded::new(8);
+        q.try_push(req(1.0).0).unwrap();
+        q.try_push(req(2.0).0).unwrap();
+        let t0 = Instant::now();
+        match next_batch(&q, &cfg(4, 30)) {
+            NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
+            _ => panic!("expected a partial batch"),
+        }
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "shipped too early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "deadline ignored: {waited:?}");
+    }
+
+    #[test]
+    fn idle_then_closed() {
+        let q: Bounded<Request> = Bounded::new(2);
+        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Idle));
+        q.close();
+        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Closed));
+    }
+
+    #[test]
+    fn close_ships_drained_partial_then_closed() {
+        let q = Bounded::new(4);
+        q.try_push(req(3.0).0).unwrap();
+        q.close();
+        match next_batch(&q, &cfg(4, 5_000)) {
+            NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 1),
+            _ => panic!("expected drained partial batch"),
+        }
+        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Closed));
+    }
+
+    #[test]
+    fn assemble_pads_with_zeros_in_fifo_order() {
+        let (r1, _k1) = req(1.0);
+        let (r2, _k2) = req(2.0);
+        let (xs, padded) = assemble(&[r1, r2], 4, ELEMS);
+        assert_eq!(padded, 2);
+        assert_eq!(xs.len(), 4 * ELEMS);
+        assert!(xs[0..ELEMS].iter().all(|&v| v == 1.0));
+        assert!(xs[ELEMS..2 * ELEMS].iter().all(|&v| v == 2.0));
+        assert!(xs[2 * ELEMS..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn assemble_full_batch_has_no_padding() {
+        let reqs: Vec<Request> = (0..3).map(|i| req(i as f32).0).collect();
+        let (xs, padded) = assemble(&reqs, 3, ELEMS);
+        assert_eq!(padded, 0);
+        assert_eq!(xs.len(), 3 * ELEMS);
+    }
+}

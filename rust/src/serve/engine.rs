@@ -1,0 +1,211 @@
+//! Serving engine: one worker thread per registered variant.
+//!
+//! The worker owns its own PJRT client (the client holds an `Rc` and is not
+//! `Send`, so it must be created inside the thread), compiles the variant's
+//! infer artifact once, and — the point of the subsystem — uploads every
+//! parameter to a device-resident buffer **once** at startup. Each batch
+//! then uploads only the fresh `x` and executes against the resident
+//! buffers via [`Executable::run_buffers`], eliminating the per-request
+//! parameter round-trip the old `serve_infer` example paid.
+//!
+//! `reupload: true` keeps the old behavior measurable as a baseline: every
+//! batch rebuilds all parameter literals from the host tensors and executes
+//! through the host-literal path (`bench_serve_throughput` quantifies the
+//! gap per variant).
+
+use super::batcher::{self, BatcherConfig, NextBatch};
+use super::queue::Bounded;
+use super::stats::SharedStats;
+use super::{Request, Response, ServeError};
+use crate::checkpoint::Params;
+use crate::coordinator::evaluate_with;
+use crate::data::Dataset;
+use crate::runtime::{
+    literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, Runtime,
+};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Per-engine policy (the router clones the server-wide config into one of
+/// these per variant).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: String,
+    pub variant: String,
+    /// Hold a partial batch open this long after its first request.
+    pub max_wait: Duration,
+    /// Idle shutdown-check interval for a trafficless worker.
+    pub idle_poll: Duration,
+    /// Baseline mode: re-upload all parameters every batch.
+    pub reupload: bool,
+    /// If > 0, run a serving-side accuracy spot check over this many
+    /// synthetic samples at startup (reuses the coordinator's
+    /// [`evaluate_with`]) and record it in the stats.
+    pub spot_check: usize,
+}
+
+/// Spawn the worker thread. `ready` receives `Ok(())` once the engine is
+/// compiled, resident and serving (or the startup error); the router blocks
+/// on it so `Server::start` fails fast.
+/// Closes the queue when the worker exits for *any* reason — including a
+/// panic unwinding the thread. Without this, producers would keep getting
+/// `QueueFull` (never `Closed`) from a dead engine and retry forever.
+struct CloseQueueOnExit(Arc<Bounded<Request>>);
+
+impl Drop for CloseQueueOnExit {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+pub fn spawn(
+    manifest: Manifest,
+    meta: ArtifactMeta,
+    params: Params,
+    cfg: EngineConfig,
+    queue: Arc<Bounded<Request>>,
+    stats: SharedStats,
+    ready: mpsc::Sender<Result<(), String>>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("lrta-serve-{}-{}", cfg.model, cfg.variant))
+        .spawn(move || {
+            let _guard = CloseQueueOnExit(Arc::clone(&queue));
+            match Engine::init(&manifest, meta, params, &cfg, stats) {
+                Ok(engine) => {
+                    let _ = ready.send(Ok(()));
+                    engine.run(&queue, &cfg);
+                }
+                Err(e) => {
+                    let _ = ready.send(Err(format!("{e:#}")));
+                }
+            }
+        })
+        .expect("spawn serve engine thread")
+}
+
+struct Engine {
+    rt: Runtime,
+    exe: Executable,
+    meta: ArtifactMeta,
+    /// Host-side parameters, kept for the reupload baseline and spot checks.
+    params: Params,
+    /// Device-resident parameter buffers in artifact slot order
+    /// (`None` in reupload mode).
+    resident: Option<Vec<xla::PjRtBuffer>>,
+    x_dims: Vec<i64>,
+    item_elems: usize,
+    stats: SharedStats,
+}
+
+impl Engine {
+    fn init(
+        manifest: &Manifest,
+        meta: ArtifactMeta,
+        params: Params,
+        cfg: &EngineConfig,
+        stats: SharedStats,
+    ) -> Result<Engine> {
+        let rt = Runtime::cpu()?;
+        let exe = rt
+            .load_hlo(manifest.hlo_path(&meta))
+            .with_context(|| format!("loading infer artifact {}", meta.name))?;
+        let resident = if cfg.reupload {
+            None
+        } else {
+            let mut bufs = Vec::with_capacity(meta.trainable.len() + meta.frozen.len());
+            for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+                let t = params
+                    .get(&slot.name)
+                    .ok_or_else(|| anyhow!("missing param {} for {}", slot.name, meta.name))?;
+                bufs.push(rt.upload(&tensor_to_literal(t)?)?);
+            }
+            Some(bufs)
+        };
+        if cfg.spot_check > 0 {
+            // serving-side accuracy spot check through the same executable
+            let n = cfg.spot_check.max(meta.batch);
+            let eval = Dataset::synthetic(n, 0xACC);
+            let acc = evaluate_with(&exe, &meta, &params, &eval)?;
+            stats.set_spot_check(acc);
+        }
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let item_elems = meta.x_shape.iter().skip(1).product();
+        Ok(Engine { rt, exe, meta, params, resident, x_dims, item_elems, stats })
+    }
+
+    fn run(&self, queue: &Bounded<Request>, cfg: &EngineConfig) {
+        let bcfg = BatcherConfig {
+            batch: self.meta.batch,
+            item_elems: self.item_elems,
+            max_wait: cfg.max_wait,
+            idle_poll: cfg.idle_poll,
+        };
+        loop {
+            match batcher::next_batch(queue, &bcfg) {
+                NextBatch::Closed => break,
+                NextBatch::Idle => continue,
+                NextBatch::Batch(reqs) => self.serve_batch(reqs),
+            }
+        }
+    }
+
+    fn serve_batch(&self, reqs: Vec<Request>) {
+        let (xs, padded) = batcher::assemble(&reqs, self.meta.batch, self.item_elems);
+        let t0 = Instant::now();
+        let result = self.execute(&xs);
+        let exec_secs = t0.elapsed().as_secs_f64();
+        match result {
+            Ok(logits) => {
+                let classes = logits.shape()[1];
+                let fill = reqs.len();
+                let done = Instant::now();
+                let mut latencies = Vec::with_capacity(fill);
+                for (i, req) in reqs.into_iter().enumerate() {
+                    let row = logits.data()[i * classes..(i + 1) * classes].to_vec();
+                    let latency = done.duration_since(req.enqueued);
+                    latencies.push(latency.as_secs_f64());
+                    req.respond(Ok(Response { logits: row, latency, batch_fill: fill }));
+                }
+                self.stats.on_batch(fill, padded, exec_secs, &latencies);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                self.stats.on_error(reqs.len());
+                for req in reqs {
+                    req.respond(Err(ServeError::Engine(msg.clone())));
+                }
+            }
+        }
+    }
+
+    /// Run one assembled batch; returns the `[batch, classes]` logits.
+    fn execute(&self, xs: &[f32]) -> Result<Tensor> {
+        let x_lit = xla::Literal::vec1(xs).reshape(&self.x_dims)?;
+        let out = if let Some(bufs) = &self.resident {
+            // hot path: resident parameters + freshly uploaded batch input
+            let x_buf = self.rt.upload(&x_lit)?;
+            let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+            refs.push(&x_buf);
+            let outs = self.exe.run_buffers(&refs)?;
+            let mut lits = Executable::buffer_to_literals(&outs[0])?;
+            lits.swap_remove(0)
+        } else {
+            // measured baseline: host→device upload of every parameter,
+            // every batch (what examples/serve_infer.rs used to do
+            // per request)
+            let n = self.meta.trainable.len() + self.meta.frozen.len();
+            let mut inputs = Vec::with_capacity(n + 1);
+            for slot in self.meta.trainable.iter().chain(self.meta.frozen.iter()) {
+                inputs.push(tensor_to_literal(&self.params[&slot.name])?);
+            }
+            inputs.push(x_lit);
+            let mut lits = self.exe.run(&inputs)?;
+            lits.swap_remove(0)
+        };
+        literal_to_tensor(&out)
+    }
+}

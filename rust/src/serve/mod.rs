@@ -1,0 +1,341 @@
+//! `lrta::serve` — the production inference-serving subsystem (Table 1's
+//! "Infer Speed" claim, turned into an actual serving layer).
+//!
+//! The paper's headline inference result — up to 37% faster serving from
+//! rank-optimized LRD — only materializes in a server that exploits the
+//! smaller parameter footprint: compressed weights stay **resident on
+//! device** and requests are **batched** onto the compiled batch shape.
+//! This module is that layer:
+//!
+//! ```text
+//!  submit(model, variant, image)
+//!        │
+//!        ▼
+//!  [router]──(model, variant)──▶ [queue]  bounded, admission-controlled
+//!                                   │     (reject past depth = backpressure)
+//!                                   ▼
+//!                               [batcher]  coalesce ≤ compiled batch,
+//!                                   │      max-wait deadline, zero-pad
+//!                                   ▼
+//!                               [engine]   one worker thread per variant:
+//!                                   │      own PJRT client + executable,
+//!                                   │      parameters uploaded once and
+//!                                   │      kept resident as device buffers
+//!                                   ▼
+//!                               demux rows ──▶ per-request [`Response`]
+//! ```
+//!
+//! `orig`, `lrd` and `rankopt` checkpoints of the same model register as
+//! separate variants and serve side-by-side, so A/B throughput comparison
+//! is a routing decision, not a redeploy. Per-variant latency percentiles,
+//! queue-depth gauges and fps live in [`stats`].
+//!
+//! The PJRT client is not `Send` (it holds an `Rc`), so each engine worker
+//! creates its *own* [`Runtime`](crate::runtime::Runtime) inside its thread;
+//! requests and responses cross threads as plain `Send` data (`Vec<f32>` +
+//! mpsc senders). Shutdown closes every queue, drains in-flight work and
+//! joins the workers.
+//!
+//! Entry points: [`Server::start`], [`Server::submit`], the `lrta serve`
+//! subcommand, and `examples/serve_infer.rs`.
+
+pub mod batcher;
+pub mod engine;
+pub mod queue;
+pub mod router;
+pub mod stats;
+
+pub use router::{Router, Server, ServerConfig, VariantSpec};
+pub use stats::{LatencyHistogram, SharedStats, StatsSnapshot};
+
+use crate::data::{Dataset, IMAGE_ELEMS};
+use crate::util::stats::percentile_sorted;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One enqueued inference request: a single sample (row-major `[32,32,3]`
+/// image) plus the response channel it is demuxed back onto.
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+    pub tx: mpsc::Sender<Result<Response, ServeError>>,
+}
+
+impl Request {
+    /// Deliver the result; a hung-up client is not an error.
+    pub(crate) fn respond(self, r: Result<Response, ServeError>) {
+        let _ = self.tx.send(r);
+    }
+}
+
+/// Per-request result demuxed out of a batched execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// This request's logits row (`[num_classes]`).
+    pub logits: Vec<f32>,
+    /// End-to-end latency: enqueue → demux (includes queue wait).
+    pub latency: Duration,
+    /// Real requests in the executed batch (rest was padding).
+    pub batch_fill: usize,
+}
+
+impl Response {
+    pub fn predicted_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Serving-layer errors surfaced to clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control rejected the request (queue at capacity).
+    QueueFull { depth: usize },
+    /// The target engine is shut down.
+    Closed,
+    /// No response within the client's wait deadline.
+    Timeout,
+    /// `(model, variant)` was never registered with the router.
+    UnknownVariant(String),
+    /// Payload length does not match the artifact's per-item element count.
+    BadInput { expected: usize, got: usize },
+    /// The engine failed executing the batch.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth } => write!(f, "queue full (depth {depth})"),
+            ServeError::Closed => write!(f, "server closed"),
+            ServeError::Timeout => write!(f, "timed out waiting for response"),
+            ServeError::UnknownVariant(k) => write!(f, "unknown variant '{k}'"),
+            ServeError::BadInput { expected, got } => {
+                write!(f, "bad input: expected {expected} elements, got {got}")
+            }
+            ServeError::Engine(e) => write!(f, "engine error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Handle to an in-flight request.
+#[derive(Debug)]
+pub struct Pending {
+    pub(crate) rx: mpsc::Receiver<Result<Response, ServeError>>,
+}
+
+impl Pending {
+    /// Block until the engine responds (or `timeout` elapses).
+    pub fn wait(&self, timeout: Duration) -> Result<Response, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Closed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic load generation (shared by `lrta serve`, the example, the bench)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one load-generation run against a single variant.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub completed: usize,
+    pub errors: usize,
+    /// Admission-control rejections observed (each was retried).
+    pub rejected: u64,
+    pub wall_secs: f64,
+    /// Sorted end-to-end request latencies in seconds.
+    pub latencies: Vec<f64>,
+}
+
+impl LoadReport {
+    /// Completed requests per second of wall time (goodput).
+    pub fn observed_fps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.completed as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency percentile in milliseconds (`p` in `[0, 100]`).
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&self.latencies, p) * 1e3
+        }
+    }
+
+    fn finish(mut self, t0: Instant) -> LoadReport {
+        self.wall_secs = t0.elapsed().as_secs_f64();
+        self.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.completed = self.latencies.len();
+        self
+    }
+}
+
+fn image_of(data: &Dataset, i: usize) -> Vec<f32> {
+    assert!(!data.is_empty(), "load generator needs a non-empty dataset");
+    let idx = i % data.len();
+    data.images[idx * IMAGE_ELEMS..(idx + 1) * IMAGE_ELEMS].to_vec()
+}
+
+/// Closed-loop load: `concurrency` synthetic clients, each submitting its
+/// next request only after the previous response arrives. Latency under
+/// this load is what a real client would observe; queue-full rejections are
+/// retried (and counted) so backpressure is visible in the report.
+pub fn closed_loop(
+    server: &Server,
+    model: &str,
+    variant: &str,
+    data: &Dataset,
+    requests: usize,
+    concurrency: usize,
+    timeout: Duration,
+) -> LoadReport {
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let next = AtomicUsize::new(0);
+    let rejected = AtomicU64::new(0);
+    let errors = AtomicUsize::new(0);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= requests {
+                    break;
+                }
+                let outcome = loop {
+                    match server.submit(model, variant, image_of(data, i)) {
+                        Ok(p) => break Some(p),
+                        Err(ServeError::QueueFull { .. }) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(_) => break None,
+                    }
+                };
+                match outcome.map(|p| p.wait(timeout)) {
+                    Some(Ok(resp)) => {
+                        latencies.lock().unwrap().push(resp.latency.as_secs_f64());
+                    }
+                    _ => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let report = LoadReport {
+        requests,
+        completed: 0,
+        errors: errors.into_inner(),
+        rejected: rejected.into_inner(),
+        wall_secs: 0.0,
+        latencies: latencies.into_inner().unwrap(),
+    };
+    report.finish(t0)
+}
+
+/// Open-loop burst: submit all `requests` as fast as admission control
+/// allows (retrying rejections), then await every response. Keeps batches
+/// full without an army of client threads — the throughput-measuring mode.
+pub fn burst_loop(
+    server: &Server,
+    model: &str,
+    variant: &str,
+    data: &Dataset,
+    requests: usize,
+    timeout: Duration,
+) -> LoadReport {
+    let mut report = LoadReport { requests, ..Default::default() };
+    let mut pendings = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        loop {
+            match server.submit(model, variant, image_of(data, i)) {
+                Ok(p) => {
+                    pendings.push(p);
+                    break;
+                }
+                Err(ServeError::QueueFull { .. }) => {
+                    report.rejected += 1;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(_) => {
+                    report.errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    for p in &pendings {
+        match p.wait(timeout) {
+            Ok(resp) => report.latencies.push(resp.latency.as_secs_f64()),
+            Err(_) => report.errors += 1,
+        }
+    }
+    report.finish(t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_predicted_class() {
+        let r = Response {
+            logits: vec![0.1, 2.0, -1.0],
+            latency: Duration::from_millis(1),
+            batch_fill: 1,
+        };
+        assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn serve_error_displays() {
+        assert!(ServeError::QueueFull { depth: 8 }.to_string().contains("depth 8"));
+        assert!(ServeError::BadInput { expected: 4, got: 2 }.to_string().contains("4"));
+        assert!(ServeError::UnknownVariant("m/v".into()).to_string().contains("m/v"));
+    }
+
+    #[test]
+    fn pending_times_out_and_disconnects() {
+        let (tx, rx) = mpsc::channel();
+        let p = Pending { rx };
+        assert_eq!(p.wait(Duration::from_millis(5)), Err(ServeError::Timeout));
+        drop(tx);
+        assert_eq!(p.wait(Duration::from_millis(5)), Err(ServeError::Closed));
+    }
+
+    #[test]
+    fn load_report_stats() {
+        let r = LoadReport {
+            requests: 3,
+            completed: 3,
+            errors: 0,
+            rejected: 1,
+            wall_secs: 2.0,
+            latencies: vec![0.001, 0.002, 0.010],
+        };
+        assert!((r.observed_fps() - 1.5).abs() < 1e-12);
+        assert!((r.latency_ms(50.0) - 2.0).abs() < 1e-9);
+        assert_eq!(LoadReport::default().observed_fps(), 0.0);
+        assert_eq!(LoadReport::default().latency_ms(99.0), 0.0);
+    }
+}

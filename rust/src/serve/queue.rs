@@ -1,0 +1,211 @@
+//! Bounded MPSC request queue with admission control.
+//!
+//! `try_push` never blocks: past the configured depth it rejects, which is
+//! the server's backpressure signal (clients see
+//! [`ServeError::QueueFull`](super::ServeError::QueueFull) and retry or shed
+//! load). The consumer side is deadline-oriented — `pop_deadline` is what
+//! lets the batcher wait "until the batch is full or the max-wait deadline
+//! passes" without busy-polling.
+//!
+//! Built on `Mutex<VecDeque>` + `Condvar`: the std primitives are all the
+//! offline image offers, and one uncontended lock per request is noise next
+//! to a PJRT dispatch.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Rejected push, returning the item to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity (admission control).
+    Full(T),
+    /// Queue closed for shutdown.
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    /// Deadline passed with the queue still empty.
+    TimedOut,
+    /// Queue closed *and* drained.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer single-consumer queue.
+pub struct Bounded<T> {
+    capacity: usize,
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(capacity: usize) -> Bounded<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Bounded {
+            capacity,
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking admission-controlled push. On success returns the queue
+    /// depth *after* the push (the stats layer's gauge sample).
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        let depth = g.items.len();
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Pop, waiting until an item arrives, `deadline` passes, or the queue
+    /// is closed and drained. Remaining items are still delivered after
+    /// `close` so shutdown drains gracefully.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Pop::Item(item);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (g2, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Pop with a relative timeout.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        self.pop_deadline(Instant::now() + timeout)
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Close for shutdown: producers are rejected immediately, the consumer
+    /// drains what is left and then sees [`Pop::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_depth() {
+        let q = Bounded::new(4);
+        assert_eq!(q.try_push(1).unwrap(), 1);
+        assert_eq!(q.try_push(2).unwrap(), 2);
+        assert_eq!(q.len(), 2);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(1)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(2)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rejects_past_capacity() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // pop frees a slot, admission resumes
+        assert!(matches!(q.try_pop(), Some(1)));
+        assert_eq!(q.try_push(3).unwrap(), 2);
+    }
+
+    #[test]
+    fn pop_times_out_when_empty() {
+        let q: Bounded<u8> = Bounded::new(1);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(20)), Pop::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn close_rejects_producers_and_drains_consumer() {
+        let q = Bounded::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(8), Err(PushError::Closed(8))));
+        // drained item still delivered, then Closed without waiting
+        assert!(matches!(q.pop_timeout(Duration::from_secs(5)), Pop::Item(7)));
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_secs(5)), Pop::Closed));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(Bounded::new(8));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..100 {
+                    loop {
+                        match q.try_push(i) {
+                            Ok(_) => break,
+                            Err(PushError::Full(_)) => std::thread::yield_now(),
+                            Err(PushError::Closed(_)) => panic!("closed early"),
+                        }
+                    }
+                }
+                q.close();
+            })
+        };
+        let mut seen = Vec::new();
+        loop {
+            match q.pop_timeout(Duration::from_secs(5)) {
+                Pop::Item(i) => seen.push(i),
+                Pop::Closed => break,
+                Pop::TimedOut => panic!("starved"),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,300 @@
+//! Variant registry and router: `(model, variant)` → engine.
+//!
+//! `orig`, `lrd` and `rankopt` checkpoints of the same model register as
+//! independent engines (own queue, own worker, own stats) and serve
+//! side-by-side, so A/B throughput comparison — the Table-1 experiment — is
+//! just two `submit` targets. The router is the only thread-shared entry
+//! point; it validates payloads, applies admission control via the bounded
+//! queue, and exposes per-variant stats snapshots.
+
+use super::engine::{self, EngineConfig};
+use super::queue::{Bounded, PushError};
+use super::stats::{SharedStats, StatsSnapshot};
+use super::{Pending, Request, ServeError};
+use crate::checkpoint::Params;
+use crate::runtime::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server-wide serving policy (applied to every registered variant).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Queue depth per variant; `0` means `4 × compiled batch`.
+    pub queue_depth: usize,
+    /// Batcher max-wait: how long a partial batch stays open.
+    pub max_wait: Duration,
+    /// Idle worker poll interval (shutdown latency bound when trafficless).
+    pub idle_poll: Duration,
+    /// Re-upload parameters every batch (the measurable old baseline)
+    /// instead of keeping them device-resident.
+    pub reupload: bool,
+    /// Startup accuracy spot-check sample count (0 = off).
+    pub spot_check: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_depth: 0,
+            max_wait: Duration::from_millis(2),
+            idle_poll: Duration::from_millis(25),
+            reupload: false,
+            spot_check: 0,
+        }
+    }
+}
+
+/// One variant to register: the checkpoint must already match the variant
+/// (decompose first for `lrd` / `rankopt`).
+pub struct VariantSpec {
+    pub model: String,
+    pub variant: String,
+    pub params: Params,
+}
+
+impl VariantSpec {
+    pub fn new(model: &str, variant: &str, params: Params) -> VariantSpec {
+        VariantSpec { model: model.to_string(), variant: variant.to_string(), params }
+    }
+
+    /// Spec for `variant` derived from a dense checkpoint: identity for
+    /// `orig`, closed-form LRD at the manifest's configured ranks otherwise
+    /// (the one construction every serve entry point shares).
+    pub fn from_dense(
+        manifest: &Manifest,
+        model: &str,
+        variant: &str,
+        dense: &Params,
+    ) -> Result<VariantSpec> {
+        let params = if variant == "orig" {
+            dense.clone()
+        } else {
+            crate::coordinator::decompose_checkpoint(dense, manifest.config(model, variant)?)?
+                .params
+        };
+        Ok(VariantSpec::new(model, variant, params))
+    }
+}
+
+/// Live engine registration.
+struct EngineHandle {
+    queue: Arc<Bounded<Request>>,
+    stats: SharedStats,
+    item_elems: usize,
+    batch: usize,
+    join: Option<JoinHandle<()>>,
+}
+
+/// `(model, variant)` → engine lookup table.
+#[derive(Default)]
+pub struct Router {
+    engines: BTreeMap<String, EngineHandle>,
+}
+
+impl Router {
+    /// Routing key convention.
+    pub fn key(model: &str, variant: &str) -> String {
+        format!("{model}/{variant}")
+    }
+
+    fn get(&self, model: &str, variant: &str) -> Option<&EngineHandle> {
+        self.engines.get(&Self::key(model, variant))
+    }
+
+    /// Registered keys in deterministic order.
+    pub fn keys(&self) -> Vec<String> {
+        self.engines.keys().cloned().collect()
+    }
+
+    /// Close every queue and join every worker (idempotent).
+    fn close_and_join(&mut self) {
+        for h in self.engines.values() {
+            h.queue.close();
+        }
+        for h in self.engines.values_mut() {
+            if let Some(join) = h.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+/// The serving subsystem's front door: a router over per-variant engines
+/// plus lifecycle management. `Sync` — share it by reference across client
+/// threads.
+pub struct Server {
+    router: Router,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start one engine per spec — all in parallel, since each worker owns
+    /// an independent PJRT client — then block until every engine reports
+    /// compiled-and-resident. Fails fast (and tears the partial fleet down)
+    /// if any artifact is missing or won't load.
+    pub fn start(
+        manifest: &Manifest,
+        specs: Vec<VariantSpec>,
+        cfg: &ServerConfig,
+    ) -> Result<Server> {
+        let mut router = Router::default();
+        let mut pending = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let name = Manifest::name_of(&spec.model, &spec.variant, "infer", "none");
+            let meta = match manifest.artifact(&name) {
+                Ok(m) => m.clone(),
+                Err(e) => {
+                    router.close_and_join();
+                    return Err(e);
+                }
+            };
+            let batch = meta.batch;
+            let item_elems: usize = meta.x_shape.iter().skip(1).product();
+            let depth = if cfg.queue_depth == 0 { batch * 4 } else { cfg.queue_depth };
+            let queue = Arc::new(Bounded::new(depth));
+            let stats = SharedStats::new(&spec.model, &spec.variant, batch);
+            let ecfg = EngineConfig {
+                model: spec.model.clone(),
+                variant: spec.variant.clone(),
+                max_wait: cfg.max_wait,
+                idle_poll: cfg.idle_poll,
+                reupload: cfg.reupload,
+                spot_check: cfg.spot_check,
+            };
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let key = Router::key(&spec.model, &spec.variant);
+            if router.engines.contains_key(&key) {
+                // a silent overwrite would leak the first engine's worker
+                router.close_and_join();
+                return Err(anyhow!("variant '{key}' registered twice"));
+            }
+            let join = engine::spawn(
+                manifest.clone(),
+                meta,
+                spec.params,
+                ecfg,
+                Arc::clone(&queue),
+                stats.clone(),
+                ready_tx,
+            );
+            router.engines.insert(
+                key.clone(),
+                EngineHandle { queue, stats, item_elems, batch, join: Some(join) },
+            );
+            pending.push((key, ready_rx));
+        }
+        // collect startup results; on any failure don't leak the engines
+        // that did come up (threads + their resident device buffers)
+        for (key, ready_rx) in pending {
+            let startup = match ready_rx.recv() {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => Err(anyhow!("engine {key} failed to start: {e}")),
+                Err(_) => Err(anyhow!("engine {key} died during startup")),
+            };
+            if let Err(e) = startup {
+                router.close_and_join();
+                return Err(e);
+            }
+        }
+        Ok(Server { router, next_id: AtomicU64::new(0) })
+    }
+
+    /// Enqueue one sample for `(model, variant)`. Returns immediately with
+    /// a [`Pending`] handle, or an admission-control / routing error.
+    pub fn submit(&self, model: &str, variant: &str, x: Vec<f32>) -> Result<Pending, ServeError> {
+        let h = self
+            .router
+            .get(model, variant)
+            .ok_or_else(|| ServeError::UnknownVariant(Router::key(model, variant)))?;
+        if x.len() != h.item_elems {
+            return Err(ServeError::BadInput { expected: h.item_elems, got: x.len() });
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            x,
+            enqueued: Instant::now(),
+            tx,
+        };
+        match h.queue.try_push(req) {
+            Ok(depth) => {
+                h.stats.on_enqueue(depth);
+                Ok(Pending { rx })
+            }
+            Err(PushError::Full(_)) => {
+                h.stats.on_reject();
+                Err(ServeError::QueueFull { depth: h.queue.capacity() })
+            }
+            Err(PushError::Closed(_)) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Compiled batch size of a registered variant.
+    pub fn batch_of(&self, model: &str, variant: &str) -> Option<usize> {
+        self.router.get(model, variant).map(|h| h.batch)
+    }
+
+    /// Registered routing keys (`model/variant`).
+    pub fn keys(&self) -> Vec<String> {
+        self.router.keys()
+    }
+
+    /// Stats snapshot for one variant (queue depth sampled live).
+    pub fn stats(&self, model: &str, variant: &str) -> Option<StatsSnapshot> {
+        self.router.get(model, variant).map(|h| h.stats.snapshot(h.queue.len()))
+    }
+
+    /// Rendered latency histogram for one variant.
+    pub fn histogram(&self, model: &str, variant: &str, width: usize) -> Option<String> {
+        self.router.get(model, variant).map(|h| h.stats.histogram(width))
+    }
+
+    /// Snapshots for every variant, in key order.
+    pub fn snapshots(&self) -> Vec<StatsSnapshot> {
+        self.router.engines.values().map(|h| h.stats.snapshot(h.queue.len())).collect()
+    }
+
+    /// Close every queue, drain in-flight work, join the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.router.close_and_join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_key_convention() {
+        assert_eq!(Router::key("resnet_mini", "lrd"), "resnet_mini/lrd");
+    }
+
+    #[test]
+    fn empty_router_has_no_engines() {
+        let r = Router::default();
+        assert!(r.keys().is_empty());
+        assert!(r.get("m", "v").is_none());
+    }
+
+    #[test]
+    fn default_config_is_resident_mode() {
+        let c = ServerConfig::default();
+        assert!(!c.reupload);
+        assert_eq!(c.queue_depth, 0);
+        assert!(c.max_wait >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,342 @@
+//! Per-variant serving telemetry: latency histograms (p50/p95/p99),
+//! queue-depth gauges, batch-fill accounting, and fps built on
+//! [`ThroughputMeter`](crate::metrics::ThroughputMeter).
+//!
+//! One [`SharedStats`] is cloned into the router's submit path and the
+//! engine's worker thread; a single uncontended mutex guards the counters
+//! (one lock per batch / per submit — noise next to a PJRT dispatch).
+
+use crate::metrics::ThroughputMeter;
+use crate::util::stats::percentile_sorted;
+use std::sync::{Arc, Mutex};
+
+/// Number of doubling latency buckets, first edge at 0.25 ms — covers
+/// 0.25 ms .. ~8 s.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Cap on retained raw latency samples (percentiles are computed over the
+/// first `SAMPLE_CAP` requests; the bucket counts keep accumulating).
+const SAMPLE_CAP: usize = 1 << 18;
+
+/// Log₂-bucketed latency histogram that also retains (capped) raw samples
+/// for exact percentiles.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    samples: Vec<f64>,
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; HIST_BUCKETS], samples: Vec::new(), count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a latency: bucket `i` holds `secs < 0.25ms · 2^i`
+    /// (last bucket is open-ended).
+    pub fn bucket_of(secs: f64) -> usize {
+        let mut edge = 0.25e-3;
+        let mut i = 0;
+        while i + 1 < HIST_BUCKETS && secs >= edge {
+            edge *= 2.0;
+            i += 1;
+        }
+        i
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(secs);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact percentiles over the retained samples, one sort for all of
+    /// them (zeros when empty). This runs under the shared stats mutex, so
+    /// batching the sort matters for snapshot cost.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| percentile_sorted(&s, p)).collect()
+    }
+
+    /// Exact percentile over the retained samples (0.0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// ASCII rendering, one row per non-empty bucket.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return "(no samples)\n".to_string();
+        }
+        let mut out = String::new();
+        let mut edge = 0.25e-3;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            let upper = if i + 1 == HIST_BUCKETS { f64::INFINITY } else { edge };
+            if n > 0 {
+                let bar = "#".repeat(((n as f64 / max as f64) * width as f64).ceil() as usize);
+                out.push_str(&format!("< {:>8.2} ms | {bar} {n}\n", upper * 1e3));
+            }
+            edge *= 2.0;
+        }
+        out
+    }
+}
+
+/// Counters behind the shared mutex.
+#[derive(Debug)]
+struct Inner {
+    hist: LatencyHistogram,
+    /// One record per executable run; items = compiled batch size, so
+    /// `fps()` is the paper-style full-batch device throughput.
+    exec_meter: ThroughputMeter,
+    exec_secs_total: f64,
+    requests_ok: u64,
+    rejected: u64,
+    errors: u64,
+    batches: u64,
+    served: u64,
+    padded_slots: u64,
+    max_queue_depth: usize,
+    spot_check_acc: Option<f64>,
+}
+
+/// Thread-shared per-variant stats sink.
+#[derive(Clone)]
+pub struct SharedStats {
+    model: String,
+    variant: String,
+    batch: usize,
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl SharedStats {
+    pub fn new(model: &str, variant: &str, batch: usize) -> SharedStats {
+        SharedStats {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            batch,
+            inner: Arc::new(Mutex::new(Inner {
+                hist: LatencyHistogram::new(),
+                exec_meter: ThroughputMeter::new(batch),
+                exec_secs_total: 0.0,
+                requests_ok: 0,
+                rejected: 0,
+                errors: 0,
+                batches: 0,
+                served: 0,
+                padded_slots: 0,
+                max_queue_depth: 0,
+                spot_check_acc: None,
+            })),
+        }
+    }
+
+    /// Gauge sample from the submit path (`depth` = queue depth after push).
+    pub fn on_enqueue(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_ok += 1;
+        g.max_queue_depth = g.max_queue_depth.max(depth);
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_error(&self, requests: usize) {
+        self.inner.lock().unwrap().errors += requests as u64;
+    }
+
+    /// Record one executed batch: `fill` real requests, `padded` zero rows,
+    /// the executable wall time, and per-request end-to-end latencies.
+    pub fn on_batch(&self, fill: usize, padded: usize, exec_secs: f64, latencies: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.served += fill as u64;
+        g.padded_slots += padded as u64;
+        g.exec_meter.record(exec_secs);
+        g.exec_secs_total += exec_secs;
+        for &l in latencies {
+            g.hist.record(l);
+        }
+    }
+
+    pub fn set_spot_check(&self, acc: f64) {
+        self.inner.lock().unwrap().spot_check_acc = Some(acc);
+    }
+
+    /// Point-in-time snapshot; `queue_depth` is sampled by the caller (the
+    /// router owns the queue handle).
+    pub fn snapshot(&self, queue_depth: usize) -> StatsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mean_fill = if g.batches > 0 {
+            g.served as f64 / (g.batches as f64 * self.batch as f64)
+        } else {
+            0.0
+        };
+        let request_fps = if g.exec_secs_total > 0.0 {
+            g.served as f64 / g.exec_secs_total
+        } else {
+            0.0
+        };
+        let pcts = g.hist.percentiles(&[50.0, 95.0, 99.0]);
+        StatsSnapshot {
+            model: self.model.clone(),
+            variant: self.variant.clone(),
+            batch: self.batch,
+            requests_ok: g.requests_ok,
+            rejected: g.rejected,
+            errors: g.errors,
+            batches: g.batches,
+            served: g.served,
+            padded_slots: g.padded_slots,
+            queue_depth,
+            max_queue_depth: g.max_queue_depth,
+            exec_fps: g.exec_meter.fps(),
+            request_fps,
+            mean_fill,
+            p50_ms: pcts[0] * 1e3,
+            p95_ms: pcts[1] * 1e3,
+            p99_ms: pcts[2] * 1e3,
+            spot_check_acc: g.spot_check_acc,
+        }
+    }
+
+    /// Rendered latency histogram for operator output.
+    pub fn histogram(&self, width: usize) -> String {
+        self.inner.lock().unwrap().hist.render(width)
+    }
+}
+
+/// Immutable stats snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+    pub requests_ok: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub served: u64,
+    pub padded_slots: u64,
+    pub queue_depth: usize,
+    pub max_queue_depth: usize,
+    /// Compiled-batch device throughput (batch / median exec time).
+    pub exec_fps: f64,
+    /// Goodput: real requests served per second of executable time.
+    pub request_fps: f64,
+    /// served / (batches · batch) — how full batches ran on average.
+    pub mean_fill: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub spot_check_acc: Option<f64>,
+}
+
+impl StatsSnapshot {
+    pub fn table_header() -> Vec<String> {
+        ["variant", "served", "rej", "batches", "fill%", "exec fps", "p50 ms", "p95 ms", "p99 ms", "acc"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.variant.clone(),
+            self.served.to_string(),
+            self.rejected.to_string(),
+            self.batches.to_string(),
+            format!("{:.0}", self.mean_fill * 100.0),
+            format!("{:.0}", self.exec_fps),
+            format!("{:.2}", self.p50_ms),
+            format!("{:.2}", self.p95_ms),
+            format!("{:.2}", self.p99_ms),
+            self.spot_check_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_monotone() {
+        assert_eq!(LatencyHistogram::bucket_of(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(0.1e-3), 0);
+        assert_eq!(LatencyHistogram::bucket_of(0.3e-3), 1);
+        let mut last = 0;
+        for ms in [0.1, 0.3, 0.6, 1.5, 3.0, 10.0, 100.0, 1000.0, 20_000.0] {
+            let b = LatencyHistogram::bucket_of(ms * 1e-3);
+            assert!(b >= last, "bucket not monotone at {ms} ms");
+            last = b;
+        }
+        assert!(last < HIST_BUCKETS);
+    }
+
+    #[test]
+    fn histogram_percentiles_and_render() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert!(h.render(10).contains("no samples"));
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 0.0505).abs() < 1e-3);
+        assert!(h.percentile(99.0) > 0.098);
+        let rendered = h.render(20);
+        assert!(rendered.contains('#'));
+    }
+
+    #[test]
+    fn snapshot_counts_and_fill() {
+        let s = SharedStats::new("m", "lrd", 8);
+        s.on_enqueue(3);
+        s.on_enqueue(5);
+        s.on_reject();
+        s.on_batch(6, 2, 0.010, &[0.011, 0.012, 0.013, 0.014, 0.015, 0.016]);
+        s.set_spot_check(0.9);
+        let snap = s.snapshot(1);
+        assert_eq!(snap.requests_ok, 2);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.served, 6);
+        assert_eq!(snap.padded_slots, 2);
+        assert_eq!(snap.max_queue_depth, 5);
+        assert_eq!(snap.queue_depth, 1);
+        assert!((snap.mean_fill - 0.75).abs() < 1e-12);
+        assert!((snap.exec_fps - 800.0).abs() < 1e-6); // 8 items / 10 ms
+        assert!((snap.request_fps - 600.0).abs() < 1e-6); // 6 real / 10 ms
+        assert_eq!(snap.spot_check_acc, Some(0.9));
+        assert!(snap.p50_ms > 10.0 && snap.p99_ms < 17.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_finite() {
+        let s = SharedStats::new("m", "orig", 4);
+        let snap = s.snapshot(0);
+        assert_eq!(snap.exec_fps, 0.0);
+        assert_eq!(snap.request_fps, 0.0);
+        assert_eq!(snap.mean_fill, 0.0);
+        assert_eq!(snap.p99_ms, 0.0);
+        assert!(snap.table_row().len() == StatsSnapshot::table_header().len());
+    }
+}

@@ -104,14 +104,27 @@ pub fn table(rows: &[Vec<String>]) -> String {
     out
 }
 
-/// Write a report file under results/ (creating the directory) and echo the
-/// path. Used by bench targets so every table/figure lands in a file.
-pub fn write_report(path: &str, content: &str) {
+/// Write a report file (creating parent directories) and echo the path.
+/// Used by bench targets so every table/figure lands in a file. A report is
+/// a side artifact: write failure (read-only fs, bad path) logs a warning
+/// and returns `false` instead of killing a finished benchmark run.
+pub fn write_report(path: &str, content: &str) -> bool {
     if let Some(dir) = std::path::Path::new(path).parent() {
-        let _ = std::fs::create_dir_all(dir);
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("[report] WARN: cannot create {}: {e}", dir.display());
+            return false;
+        }
     }
-    std::fs::write(path, content).unwrap_or_else(|e| panic!("write {path}: {e}"));
-    println!("[report] wrote {path}");
+    match std::fs::write(path, content) {
+        Ok(()) => {
+            println!("[report] wrote {path}");
+            true
+        }
+        Err(e) => {
+            eprintln!("[report] WARN: cannot write {path}: {e}");
+            false
+        }
+    }
 }
 
 /// Format a signed percentage delta the way the paper's tables do (+06.07).
@@ -166,7 +179,18 @@ mod tests {
     fn write_report_creates_dirs() {
         let path = "/tmp/lrta_test_reports/sub/r.txt";
         let _ = std::fs::remove_dir_all("/tmp/lrta_test_reports");
-        write_report(path, "hello");
+        assert!(write_report(path, "hello"));
         assert_eq!(std::fs::read_to_string(path).unwrap(), "hello");
+    }
+
+    #[test]
+    fn write_report_failure_warns_instead_of_panicking() {
+        // parent "directory" is a regular file -> create_dir_all must fail
+        let blocker = "/tmp/lrta_test_reports_blocker";
+        let _ = std::fs::remove_dir_all(blocker);
+        let _ = std::fs::remove_file(blocker);
+        std::fs::write(blocker, "file").unwrap();
+        assert!(!write_report(&format!("{blocker}/sub/r.txt"), "hello"));
+        let _ = std::fs::remove_file(blocker);
     }
 }

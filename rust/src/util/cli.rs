@@ -86,6 +86,21 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Comma-separated list accessor (`--variants orig,lrd,rankopt`);
+    /// entries are trimmed and empties dropped. `default` applies when the
+    /// flag is absent.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             Some("true") | Some("1") | Some("yes") => true,
@@ -141,6 +156,17 @@ mod tests {
         let a = Args::parse_tokens(&toks("report table1 table2 --out x.md"), &["out"]).unwrap();
         assert_eq!(a.subcommand.as_deref(), Some("report"));
         assert_eq!(a.positional, vec!["table1", "table2"]);
+    }
+
+    #[test]
+    fn comma_lists() {
+        let a = Args::parse_tokens(&toks("serve --variants orig,lrd, rankopt"), &["variants"])
+            .unwrap();
+        // note: " rankopt" arrives as a separate token in real argv only if
+        // quoted; here the parser sees "orig,lrd," and trims/drops empties
+        assert_eq!(a.list_or("variants", &[]), vec!["orig", "lrd"]);
+        let b = Args::parse_tokens(&toks("serve"), &["variants"]).unwrap();
+        assert_eq!(b.list_or("variants", &["orig", "lrd"]), vec!["orig", "lrd"]);
     }
 
     #[test]

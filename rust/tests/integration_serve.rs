@@ -1,0 +1,203 @@
+//! Integration: the serving subsystem against the real AOT artifacts.
+//!
+//! Serves variants of `resnet_mini` through the router and asserts
+//! per-request results are bit-identical to direct `Executable::run`
+//! outputs (same images, same rows, same executable — resident device
+//! buffers must not change a single bit). Requires `make artifacts`
+//! (skips gracefully otherwise, like the other integration suites).
+
+use lrta::checkpoint;
+use lrta::data::{Dataset, IMAGE_ELEMS};
+use lrta::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Runtime};
+use lrta::serve::{Server, ServerConfig, ServeError, VariantSpec};
+use lrta::tensor::Tensor;
+use std::time::Duration;
+
+const MODEL: &str = "resnet_mini";
+
+fn manifest() -> Option<Manifest> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(path).expect("manifest parses"))
+}
+
+fn variant_params(m: &Manifest, variant: &str) -> checkpoint::Params {
+    let dense = checkpoint::load(m.init_checkpoint(MODEL).unwrap()).unwrap();
+    VariantSpec::from_dense(m, MODEL, variant, &dense).unwrap().params
+}
+
+/// Direct reference: run the infer executable once on `xs` (already padded
+/// to the compiled batch) and return the logits tensor.
+fn direct_logits(m: &Manifest, variant: &str, params: &checkpoint::Params, xs: &[f32]) -> Tensor {
+    let rt = Runtime::cpu().unwrap();
+    let meta = m.artifact(&format!("{MODEL}_{variant}_infer")).unwrap();
+    let exe = rt.load_hlo(m.hlo_path(meta)).unwrap();
+    let mut inputs = Vec::new();
+    for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+        inputs.push(tensor_to_literal(&params[&slot.name]).unwrap());
+    }
+    let dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    inputs.push(xla::Literal::vec1(xs).reshape(&dims).unwrap());
+    let out = exe.run(&inputs).unwrap();
+    literal_to_tensor(&out[0]).unwrap()
+}
+
+#[test]
+fn router_serves_bit_identical_to_direct_run() {
+    let Some(m) = manifest() else { return };
+    // both checkpoint variants of the model: dense orig + decomposed lrd
+    let variants = ["orig", "lrd"];
+    let specs: Vec<VariantSpec> =
+        variants.iter().map(|v| VariantSpec::new(MODEL, v, variant_params(&m, v))).collect();
+    let cfg = ServerConfig {
+        // generous: a single-threaded submitter must fill the whole batch
+        max_wait: Duration::from_secs(2),
+        spot_check: 0,
+        ..Default::default()
+    };
+    let server = Server::start(&m, specs, &cfg).expect("server starts");
+
+    for variant in variants {
+        let batch = server.batch_of(MODEL, variant).unwrap();
+        let data = Dataset::synthetic(batch, 42);
+        let params = variant_params(&m, variant);
+
+        // submit one request per image, in order, from one thread
+        let pendings: Vec<_> = (0..batch)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                server.submit(MODEL, variant, x).expect("admitted")
+            })
+            .collect();
+        let responses: Vec<_> = pendings
+            .iter()
+            .map(|p| p.wait(Duration::from_secs(120)).expect("served"))
+            .collect();
+
+        // FIFO + full coalescing: every request rode one full batch
+        for r in &responses {
+            assert_eq!(r.batch_fill, batch, "{variant}: batch did not coalesce fully");
+        }
+
+        // reference: the same images as one direct executable run
+        let (xs, _) = data.batch(0, batch);
+        let reference = direct_logits(&m, variant, &params, &xs);
+        let classes = reference.shape()[1];
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(
+                r.logits,
+                reference.data()[i * classes..(i + 1) * classes].to_vec(),
+                "{variant}: request {i} logits differ from direct run"
+            );
+        }
+
+        let snap = server.stats(MODEL, variant).unwrap();
+        assert_eq!(snap.served, batch as u64);
+        assert_eq!(snap.errors, 0);
+        assert!(snap.batches >= 1);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn partial_batch_pads_and_still_matches_direct_run() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let params = variant_params(&m, variant);
+    let cfg = ServerConfig { max_wait: Duration::from_millis(300), ..Default::default() };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, variant, variant_params(&m, variant))],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    assert!(batch > 3, "test assumes a compiled batch > 3");
+
+    let data = Dataset::synthetic(8, 7);
+    let n = 3usize;
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+            server.submit(MODEL, variant, x).expect("admitted")
+        })
+        .collect();
+    let responses: Vec<_> =
+        pendings.iter().map(|p| p.wait(Duration::from_secs(120)).expect("served")).collect();
+    for r in &responses {
+        assert_eq!(r.batch_fill, n, "partial batch should hold exactly the {n} requests");
+    }
+
+    // reference: same three images zero-padded to the compiled batch
+    let mut xs = vec![0.0f32; batch * IMAGE_ELEMS];
+    xs[..n * IMAGE_ELEMS].copy_from_slice(&data.images[..n * IMAGE_ELEMS]);
+    let reference = direct_logits(&m, variant, &params, &xs);
+    let classes = reference.shape()[1];
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.logits, reference.data()[i * classes..(i + 1) * classes].to_vec());
+    }
+
+    let snap = server.stats(MODEL, variant).unwrap();
+    assert_eq!(snap.served, n as u64);
+    assert_eq!(snap.padded_slots, (batch - n) as u64);
+    server.shutdown();
+}
+
+#[test]
+fn resident_and_reupload_paths_agree() {
+    let Some(m) = manifest() else { return };
+    let variant = "rankopt";
+    let data = Dataset::synthetic(4, 11);
+    let x = data.images[..IMAGE_ELEMS].to_vec();
+    let mut outputs = Vec::new();
+    for reupload in [false, true] {
+        let cfg = ServerConfig {
+            reupload,
+            max_wait: Duration::from_millis(50),
+            spot_check: 64,
+            ..Default::default()
+        };
+        let server = Server::start(
+            &m,
+            vec![VariantSpec::new(MODEL, variant, variant_params(&m, variant))],
+            &cfg,
+        )
+        .expect("server starts");
+        let r = server
+            .submit(MODEL, variant, x.clone())
+            .expect("admitted")
+            .wait(Duration::from_secs(120))
+            .expect("served");
+        let snap = server.stats(MODEL, variant).unwrap();
+        assert!(snap.spot_check_acc.is_some(), "spot check requested but not recorded");
+        outputs.push(r.logits);
+        server.shutdown();
+    }
+    assert_eq!(outputs[0], outputs[1], "resident buffers changed the math");
+}
+
+#[test]
+fn router_rejects_unknown_variant_and_bad_input() {
+    let Some(m) = manifest() else { return };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, "orig", variant_params(&m, "orig"))],
+        &ServerConfig::default(),
+    )
+    .expect("server starts");
+    match server.submit(MODEL, "nope", vec![0.0; IMAGE_ELEMS]) {
+        Err(ServeError::UnknownVariant(k)) => assert!(k.contains("nope")),
+        other => panic!("expected UnknownVariant, got {other:?}"),
+    }
+    match server.submit(MODEL, "orig", vec![0.0; 7]) {
+        Err(ServeError::BadInput { expected, got }) => {
+            assert_eq!(expected, IMAGE_ELEMS);
+            assert_eq!(got, 7);
+        }
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    server.shutdown();
+}

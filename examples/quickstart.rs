@@ -64,6 +64,7 @@ fn main() -> Result<()> {
         test_size: 256,
         seed: 0,
         verbose: true,
+        resident: true,
     };
     let mut trainer = Trainer::new(&rt, &manifest, train_cfg, outcome.params)?;
     let record = trainer.run()?;

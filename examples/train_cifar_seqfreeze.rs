@@ -10,8 +10,14 @@
 //! and printing the convergence comparison the paper makes
 //! ("sequential reaches the target accuracy epochs earlier").
 //!
+//! Fine-tuning steps run through the device-resident engine by default
+//! (`lrta::train`: params/momenta uploaded once, steps chained
+//! buffer-to-buffer, pattern a↔b swaps re-bound in place); set
+//! `LRTA_RESIDENT=0` for the host-literal round-trip baseline.
+//!
 //! Run: `cargo run --release --example train_cifar_seqfreeze`
-//! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024)
+//! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024),
+//!       LRTA_RESIDENT (default 1)
 
 use anyhow::Result;
 use lrta::coordinator::{
@@ -29,6 +35,9 @@ fn env_usize(key: &str, default: usize) -> usize {
 fn main() -> Result<()> {
     let epochs = env_usize("LRTA_EPOCHS", 10);
     let train_size = env_usize("LRTA_TRAIN", 1024);
+    let resident = std::env::var("LRTA_RESIDENT")
+        .map(|v| !matches!(v.trim(), "0" | "false" | "no" | "off"))
+        .unwrap_or(true);
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let rt = Runtime::cpu()?;
@@ -49,7 +58,10 @@ fn main() -> Result<()> {
         ("regular", FreezeMode::Regular),
         ("sequential", FreezeMode::Sequential),
     ] {
-        println!("== fine-tune with {label} freezing ({epochs} epochs) ==");
+        println!(
+            "== fine-tune with {label} freezing ({epochs} epochs, {} steps) ==",
+            if resident { "buffer-chained" } else { "literal round-trip" }
+        );
         let cfg = TrainConfig {
             model: "resnet_mini".into(),
             variant: "lrd".into(),
@@ -60,9 +72,13 @@ fn main() -> Result<()> {
             test_size: 256,
             seed: 0,
             verbose: true,
+            resident,
         };
         let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
         let record = trainer.run()?;
+        if let Some(report) = trainer.residency_report() {
+            println!("   {report}");
+        }
         write_report(&format!("results/fig3_curves/{label}.csv"), &record.curve_csv());
         records.push((label, record));
         println!();

@@ -46,6 +46,7 @@ fn main() {
             test_size: 256,
             seed: 0,
             verbose: true,
+            resident: true,
         };
         let mut trainer =
             Trainer::new(&rt, &manifest, cfg, decomposed.params.clone()).expect("trainer");

@@ -19,6 +19,7 @@ use lrta::metrics::ThroughputMeter;
 use lrta::models::zoo::{paper_plan, resnet_full};
 use lrta::models::Method;
 use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
+use lrta::train::Engine;
 use lrta::util::bench::{fmt_delta_pct, table, write_report};
 
 /// Fraction of the *dense* model's layer time spent in work decomposition
@@ -86,6 +87,8 @@ fn measured_table(rt: &Runtime, manifest: &Manifest) -> anyhow::Result<String> {
         "Method".into(),
         "Train fps".into(),
         "Train Δ%".into(),
+        "Resident fps".into(),
+        "Res Δ%".into(),
         "Infer fps".into(),
         "Infer Δ%".into(),
     ]];
@@ -117,6 +120,18 @@ fn measured_table(rt: &Runtime, manifest: &Manifest) -> anyhow::Result<String> {
         }
         let train_fps = meter.fps();
 
+        // the same step through the buffer-chained resident engine
+        // (bench_train_resident has the full variant × freeze matrix)
+        let mut engine = Engine::upload(rt, &params, &zero_momenta(&params))?;
+        engine.step(&texe, tmeta, &xs, &ys, 1e-3)?; // warmup
+        let mut rmeter = ThroughputMeter::new(tmeta.batch);
+        for _ in 0..4 {
+            let t0 = std::time::Instant::now();
+            engine.step(&texe, tmeta, &xs, &ys, 1e-3)?;
+            rmeter.record(t0.elapsed().as_secs_f64());
+        }
+        let resident_fps = rmeter.fps();
+
         // inference throughput
         let imeta = manifest.artifact(&format!("{model}_{variant}_infer"))?;
         let iexe = rt.load_hlo(manifest.hlo_path(imeta))?;
@@ -146,10 +161,15 @@ fn measured_table(rt: &Runtime, manifest: &Manifest) -> anyhow::Result<String> {
             if method == Method::Original { format!("{model}") } else { format!("  {}", method.label()) },
             format!("{train_fps:.1}"),
             if method == Method::Original { "0".into() } else { fmt_delta_pct(bt, train_fps) },
+            format!("{resident_fps:.1}"),
+            fmt_delta_pct(train_fps, resident_fps),
             format!("{infer_fps:.1}"),
             if method == Method::Original { "0".into() } else { fmt_delta_pct(bi, infer_fps) },
         ]);
-        println!("  measured {:<10} train {train_fps:.1} fps, infer {infer_fps:.1} fps", method.label());
+        println!(
+            "  measured {:<10} train {train_fps:.1} fps (resident {resident_fps:.1}), infer {infer_fps:.1} fps",
+            method.label()
+        );
     }
     Ok(table(&rows))
 }

@@ -105,6 +105,7 @@ fn main() {
             test_size: 512,
             seed: 0,
             verbose: false,
+            resident: true,
         };
         let mut trainer = Trainer::new(&rt, &manifest, cfg, params).expect("trainer");
         let record = trainer.run().expect("train");

@@ -4,6 +4,13 @@
 //! parameter/momentum state and the metrics. Python is nowhere in sight:
 //! every epoch the scheduler picks a freeze pattern, the trainer selects
 //! the matching AOT executable and streams batches through it.
+//!
+//! Stepping itself is delegated: by default the trainer drives the
+//! device-resident engine ([`crate::train::Engine`] — params/momenta
+//! uploaded once, steps chained buffer-to-buffer, pattern swaps re-bound
+//! in place); `TrainConfig::resident = false` keeps the original
+//! host-literal round-trip loop ([`run_train_step`]) as the measurable
+//! baseline (`lrta train --no-resident`, `bench_train_resident`).
 
 pub mod decompose;
 
@@ -15,8 +22,11 @@ use crate::runtime::{
     labels_to_literal, literal_to_tensor, scalar_literal, tensor_to_literal, ArtifactMeta,
     Executable, Manifest, Runtime,
 };
+use crate::train;
+use crate::util::stats::count_correct;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 pub use decompose::{decompose_checkpoint, zero_momenta, DecomposeOutcome};
 
@@ -52,6 +62,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Print per-epoch progress lines.
     pub verbose: bool,
+    /// Step through the device-resident engine (`lrta::train`) — params
+    /// and momenta uploaded once, steps chained buffer-to-buffer. `false`
+    /// restores the literal round-trip baseline (`--no-resident`).
+    pub resident: bool,
 }
 
 impl Default for TrainConfig {
@@ -66,6 +80,7 @@ impl Default for TrainConfig {
             test_size: 512,
             seed: 0,
             verbose: false,
+            resident: true,
         }
     }
 }
@@ -84,6 +99,14 @@ pub struct Trainer<'rt> {
     infer_exe: Executable,
     infer_meta: ArtifactMeta,
     scheduler: FreezeScheduler,
+    /// The device-resident engine (`None` on the `--no-resident` baseline).
+    /// While it exists it holds the authoritative training state; `params`
+    /// / `momenta` sync from it at the end of [`Trainer::run`].
+    engine: Option<train::Engine<'rt>>,
+    /// Demux fallbacks observed during the last [`Trainer::run`] — the
+    /// runtime counter is cumulative, so the per-run delta is what
+    /// [`Trainer::residency_report`] may honestly attribute to that run.
+    last_run_fallbacks: usize,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -126,6 +149,11 @@ impl<'rt> Trainer<'rt> {
         let infer_exe = rt.load_hlo(manifest.hlo_path(&infer_meta))?;
 
         let momenta = zero_momenta(&params);
+        let engine = if cfg.resident {
+            Some(train::Engine::upload(rt, &params, &momenta)?)
+        } else {
+            None
+        };
         Ok(Trainer {
             rt,
             manifest,
@@ -136,12 +164,20 @@ impl<'rt> Trainer<'rt> {
             infer_exe,
             infer_meta,
             scheduler,
+            engine,
+            last_run_fallbacks: 0,
         })
     }
 
     /// Run the configured number of epochs; returns the full record.
+    ///
+    /// Both step paths (resident engine / literal baseline) consume the
+    /// same batches in the same order and run the same executables, so
+    /// their loss/accuracy trajectories match bit-for-bit (pinned by
+    /// `rust/tests/integration_train_resident.rs`).
     pub fn run(&mut self) -> Result<RunRecord> {
-        let train = Dataset::synthetic(self.cfg.train_size, self.cfg.seed);
+        let fallbacks_before = self.rt.demux_fallbacks();
+        let train_data = Arc::new(Dataset::synthetic(self.cfg.train_size, self.cfg.seed));
         let test = Dataset::synthetic(self.cfg.test_size, self.cfg.seed ^ 0xDEAD_BEEF);
         let mut record = RunRecord::new(format!(
             "{}_{}_{:?}",
@@ -156,35 +192,59 @@ impl<'rt> Trainer<'rt> {
                 self.scheduler.pattern(epoch).suffix()
             };
             // direct field access keeps the exe borrow disjoint from the
-            // params/momenta mutations inside the step loop
+            // params/momenta/engine mutations inside the step loop
             let (exe, meta) = self
                 .train_exes
                 .get(suffix)
                 .ok_or_else(|| anyhow!("no train executable for pattern '{suffix}'"))?;
             let batch = meta.batch;
             let pattern = suffix.to_string();
+            let epoch_seed = self.cfg.seed ^ epoch as u64;
 
-            let mut meter = ThroughputMeter::new(batch);
-            let mut loss_sum = 0.0f64;
-            let mut correct_sum = 0.0f64;
-            let mut samples = 0usize;
-            let mut n_batches = 0usize;
-            for (xs, ys) in BatchIter::new(&train, batch, self.cfg.seed ^ epoch as u64) {
-                let t0 = std::time::Instant::now();
-                let (loss, correct) =
-                    run_train_step(exe, meta, &mut self.params, &mut self.momenta, &xs, &ys, lr)?;
-                meter.record(t0.elapsed().as_secs_f64());
-                loss_sum += loss as f64;
-                correct_sum += correct as f64;
-                samples += ys.len();
-                n_batches += 1;
-            }
+            let (meter, loss, train_acc) = if let Some(engine) = self.engine.as_mut() {
+                // epoch boundary: Algorithm 2 may have swapped pattern a↔b
+                // — re-bind the resident buffers to the new slot layout
+                // (pure permutation; uploads nothing)
+                engine.state().rebind_for(meta)?;
+                let stats = engine.run_epoch(exe, meta, &train_data, epoch_seed, lr)?;
+                (stats.meter, stats.loss, stats.train_acc)
+            } else {
+                let mut meter = ThroughputMeter::new(batch);
+                let mut loss_sum = 0.0f64;
+                let mut correct_sum = 0.0f64;
+                let mut samples = 0usize;
+                let mut n_batches = 0usize;
+                for (xs, ys) in BatchIter::new(&train_data, batch, epoch_seed) {
+                    let t0 = std::time::Instant::now();
+                    let (loss, correct) = run_train_step(
+                        exe,
+                        meta,
+                        &mut self.params,
+                        &mut self.momenta,
+                        &xs,
+                        &ys,
+                        lr,
+                    )?;
+                    meter.record(t0.elapsed().as_secs_f64());
+                    loss_sum += loss as f64;
+                    correct_sum += correct as f64;
+                    samples += ys.len();
+                    n_batches += 1;
+                }
+                let loss = loss_sum / n_batches.max(1) as f64;
+                (meter, loss, correct_sum / samples.max(1) as f64)
+            };
 
-            let test_acc = self.evaluate(&test)?;
+            // eval is a semantically-required host sync point — but the
+            // resident path still runs it on the device-resident params
+            let test_acc = match &self.engine {
+                Some(engine) => engine.evaluate(&self.infer_exe, &self.infer_meta, &test)?,
+                None => self.evaluate(&test)?,
+            };
             let rec = EpochRecord {
                 epoch,
-                loss: loss_sum / n_batches.max(1) as f64,
-                train_acc: correct_sum / samples.max(1) as f64,
+                loss,
+                train_acc,
                 test_acc,
                 step_secs: meter.median_step(),
                 freeze_pattern: pattern.clone(),
@@ -198,6 +258,16 @@ impl<'rt> Trainer<'rt> {
             }
             record.epochs.push(rec);
         }
+
+        // final host sync: the resident engine held the authoritative state
+        // for the whole run — download it once so checkpointing and the
+        // public `params`/`momenta` fields see the trained values
+        if let Some(engine) = &self.engine {
+            let (params, momenta) = engine.sync()?;
+            self.params = params;
+            self.momenta = momenta;
+        }
+        self.last_run_fallbacks = self.rt.demux_fallbacks() - fallbacks_before;
         Ok(record)
     }
 
@@ -207,27 +277,69 @@ impl<'rt> Trainer<'rt> {
         evaluate_with(&self.infer_exe, &self.infer_meta, &self.params, data)
     }
 
-    /// Measured inference throughput (fps) over `reps` batches.
+    /// Measured inference throughput (fps) over `reps` batches, on the
+    /// shared resident-params path (`train::ResidentParams`) — parameters
+    /// upload once and every rep runs against the device buffers, exactly
+    /// what the serving engines measure. The resident engine's buffers are
+    /// reused when the trainer has one; the `--no-resident` baseline
+    /// uploads a temporary set (still once, not per rep).
     pub fn infer_fps(&self, reps: usize) -> Result<f64> {
         let batch = self.infer_meta.batch;
         let data = Dataset::synthetic(batch, 123);
         let (xs, _) = data.batch(0, batch);
-        let mut inputs = Vec::new();
-        for slot in &self.infer_meta.trainable {
-            inputs.push(tensor_to_literal(&self.params[&slot.name])?);
-        }
+        let slots = || self.infer_meta.trainable.iter().chain(self.infer_meta.frozen.iter());
+        let temp;
+        let resident = match &self.engine {
+            Some(engine) => &engine.state().params,
+            None => {
+                temp = train::ResidentParams::upload_for_slots(self.rt, &self.params, slots())?;
+                &temp
+            }
+        };
         let x_dims: Vec<i64> = self.infer_meta.x_shape.iter().map(|&d| d as i64).collect();
-        inputs.push(xla::Literal::vec1(&xs).reshape(&x_dims)?);
-        let input_refs: Vec<&xla::Literal> = inputs.iter().collect();
+        let x_buf = self.rt.upload(&xla::Literal::vec1(&xs).reshape(&x_dims)?)?;
+        let mut inputs = resident.ordered(slots())?;
+        inputs.push(&x_buf);
         let mut meter = ThroughputMeter::new(batch);
         // warmup
-        self.infer_exe.run(&input_refs)?;
+        self.infer_exe.run_buffers(&inputs)?;
         for _ in 0..reps {
             let t0 = std::time::Instant::now();
-            self.infer_exe.run(&input_refs)?;
+            let outs = self.infer_exe.run_buffers(&inputs)?;
+            // force completion: the logits must actually reach the host
+            let _ = Executable::buffer_to_literals(&outs[0])?;
             meter.record(t0.elapsed().as_secs_f64());
         }
         Ok(meter.fps())
+    }
+
+    /// Host→device parameter/momentum uploads performed by the resident
+    /// engine (`None` on the literal baseline). Stays at the initial
+    /// upload count for the whole run: steps chain buffer-to-buffer and
+    /// pattern swaps re-bind — they never re-upload (pinned by
+    /// `rust/tests/integration_train_resident.rs`).
+    pub fn param_uploads(&self) -> Option<usize> {
+        self.engine.as_ref().map(|e| e.param_uploads())
+    }
+
+    /// One-line transfer accounting for the last resident [`Trainer::run`]
+    /// (`None` on the literal baseline). The single source of the
+    /// "buffer-to-buffer" claim the CLI and examples print — it only makes
+    /// the claim when this run's demux-fallback delta is actually zero.
+    pub fn residency_report(&self) -> Option<String> {
+        let uploads = self.param_uploads()?;
+        Some(if self.last_run_fallbacks == 0 {
+            format!(
+                "resident engine: {uploads} parameter uploads total (steps + pattern swaps \
+                 chained buffer-to-buffer)"
+            )
+        } else {
+            format!(
+                "resident engine: {uploads} parameter uploads, but {} demux fallbacks — the \
+                 backend packed tuple outputs, steps round-tripped through the host",
+                self.last_run_fallbacks
+            )
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -267,6 +379,7 @@ pub fn ensure_pretrained(
         test_size: 256,
         seed,
         verbose: true,
+        resident: true,
     };
     let init = crate::checkpoint::load(manifest.init_checkpoint(model)?)?;
     let mut trainer = Trainer::new(rt, manifest, cfg, init)?;
@@ -364,19 +477,10 @@ pub fn evaluate_with(
         let out = exe.run(&inputs).context("infer batch")?;
         let logits = literal_to_tensor(&out[0])?;
         let classes = logits.shape()[1];
-        for (i, &y) in ys.iter().enumerate() {
-            let row = &logits.data()[i * classes..(i + 1) * classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap();
-            if pred == y as usize {
-                correct += 1;
-            }
-            total += 1;
-        }
+        // NaN-safe: a single NaN logit used to panic the whole evaluation
+        // through `partial_cmp().unwrap()` (now total_cmp in argmax_f32)
+        correct += count_correct(logits.data(), classes, &ys);
+        total += ys.len();
     }
     Ok(correct as f64 / total.max(1) as f64)
 }
@@ -407,5 +511,7 @@ mod tests {
         let c = TrainConfig::default();
         assert_eq!(c.model, "resnet_mini");
         assert!(c.train_size >= c.test_size);
+        // the resident engine is the default; --no-resident is the baseline
+        assert!(c.resident);
     }
 }

@@ -97,6 +97,69 @@ impl FreezeScheduler {
     }
 }
 
+/// Role of one train-step input slot under a freeze pattern. Which *role*
+/// a factor plays swaps between patterns a and b; the parameter itself
+/// (and its device buffer) is the same either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotRole {
+    Trainable,
+    Frozen,
+    /// Momentum of the trainable slot with the same name.
+    Momentum,
+}
+
+/// One named input slot of a train-step executable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotBinding<'a> {
+    pub name: &'a str,
+    pub role: SlotRole,
+}
+
+/// Ordered input-slot bindings of a train artifact — the AOT contract from
+/// `python/compile/aot.py`: `[trainable…, frozen…, momenta(trainable)…]`,
+/// followed by the per-step data/lr inputs. This map is the single source
+/// of truth for "pattern → slot layout": the resident training engine
+/// gathers device buffers in exactly this order, so an epoch-boundary
+/// pattern swap is a pure re-permutation of the same buffers.
+pub fn train_slot_bindings(meta: &crate::runtime::ArtifactMeta) -> Vec<SlotBinding<'_>> {
+    let mut out = Vec::with_capacity(2 * meta.trainable.len() + meta.frozen.len());
+    for s in &meta.trainable {
+        out.push(SlotBinding { name: &s.name, role: SlotRole::Trainable });
+    }
+    for s in &meta.frozen {
+        out.push(SlotBinding { name: &s.name, role: SlotRole::Frozen });
+    }
+    for s in &meta.trainable {
+        out.push(SlotBinding { name: &s.name, role: SlotRole::Momentum });
+    }
+    out
+}
+
+/// Names a pattern swap `from → to` would have to upload fresh — i.e. slots
+/// of `to` whose parameters are not covered by `from`. Patterns of the same
+/// variant partition the same parameter universe, so this is empty and the
+/// swap re-binds existing resident buffers without any host↔device traffic.
+/// This is the pure-map form of the invariant, pinned by the unit tests
+/// below; at run time `train::ResidentState::rebind_for` enforces the
+/// equivalent check against the live buffer set.
+pub fn rebind_upload_set(
+    from: &crate::runtime::ArtifactMeta,
+    to: &crate::runtime::ArtifactMeta,
+) -> Vec<String> {
+    let have: std::collections::BTreeSet<&str> = from
+        .trainable
+        .iter()
+        .chain(from.frozen.iter())
+        .map(|s| s.name.as_str())
+        .collect();
+    to.trainable
+        .iter()
+        .chain(to.frozen.iter())
+        .filter(|s| !have.contains(s.name.as_str()))
+        .map(|s| s.name.clone())
+        .collect()
+}
+
 /// Bookkeeping: which factor parameter names are frozen under a pattern.
 /// `layer_kinds` maps layer name → ("svd" | "tucker"). Mirrors
 /// `python/compile/train.py::frozen_names_for_pattern` (pinned by tests).
@@ -191,6 +254,64 @@ mod tests {
             .collect();
         let union: std::collections::BTreeSet<_> = a.union(&b).cloned().collect();
         assert_eq!(union, all);
+    }
+
+    fn meta_of(trainable: &[&str], frozen: &[&str]) -> crate::runtime::ArtifactMeta {
+        use crate::runtime::{ArtifactMeta, ParamSlot};
+        let slot = |n: &&str| ParamSlot { name: n.to_string(), shape: vec![2, 2] };
+        ArtifactMeta {
+            name: "m_lrd_train_x".into(),
+            path: std::path::PathBuf::from("x.hlo.txt"),
+            model: "m".into(),
+            variant: "lrd".into(),
+            kind: "train".into(),
+            freeze: "a".into(),
+            batch: 4,
+            trainable: trainable.iter().map(slot).collect(),
+            frozen: frozen.iter().map(slot).collect(),
+            x_shape: vec![4, 32, 32, 3],
+            y_shape: Some(vec![4]),
+        }
+    }
+
+    #[test]
+    fn slot_bindings_follow_aot_contract() {
+        let meta = meta_of(&["l.b", "fc.w"], &["l.a"]);
+        let binds = train_slot_bindings(&meta);
+        let got: Vec<(&str, SlotRole)> = binds.iter().map(|b| (b.name, b.role)).collect();
+        assert_eq!(
+            got,
+            vec![
+                ("l.b", SlotRole::Trainable),
+                ("fc.w", SlotRole::Trainable),
+                ("l.a", SlotRole::Frozen),
+                ("l.b", SlotRole::Momentum),
+                ("fc.w", SlotRole::Momentum),
+            ]
+        );
+    }
+
+    #[test]
+    fn pattern_swap_rebinds_without_uploads() {
+        // a↔b swap the trainable/frozen roles of the factor groups; the
+        // parameter universe is identical, so re-binding the *same* resident
+        // buffers to the new slot layout needs zero uploads either way.
+        let a = meta_of(&["l.b", "fc.w"], &["l.a"]);
+        let b = meta_of(&["l.a", "fc.w"], &["l.b"]);
+        assert!(rebind_upload_set(&a, &b).is_empty());
+        assert!(rebind_upload_set(&b, &a).is_empty());
+        // the binding maps are permutations of one name set
+        let names = |m: &crate::runtime::ArtifactMeta| -> std::collections::BTreeSet<String> {
+            train_slot_bindings(m).iter().map(|s| s.name.to_string()).collect()
+        };
+        assert_eq!(names(&a), names(&b));
+    }
+
+    #[test]
+    fn rebind_to_foreign_artifact_reports_missing_buffers() {
+        let a = meta_of(&["l.b"], &["l.a"]);
+        let other = meta_of(&["new.w"], &["l.a"]);
+        assert_eq!(rebind_upload_set(&a, &other), vec!["new.w".to_string()]);
     }
 
     #[test]

@@ -15,13 +15,21 @@
 //!   Algorithm 2), and the training/inference orchestration that runs the
 //!   AOT artifacts via PJRT ([`runtime`], [`coordinator`]).
 //!
-//! On top of L3 sits the **serving layer** ([`serve`]): a production-style
-//! inference server — bounded admission-controlled queues, a dynamic
-//! batcher onto the compiled batch shape, per-variant engines with
-//! parameters uploaded once and kept device-resident, and a router that
-//! serves `orig` / `lrd` / `rankopt` checkpoints side-by-side for A/B
-//! throughput comparison (the Table-1 "Infer Speed" claim as a running
-//! system; `lrta serve`, `examples/serve_infer.rs`).
+//! On top of L3 sit two device-residency subsystems:
+//! - the **serving layer** ([`serve`]): a production-style inference
+//!   server — bounded admission-controlled queues, a dynamic batcher onto
+//!   the compiled batch shape, per-variant engines with parameters
+//!   uploaded once and kept device-resident, and a router that serves
+//!   `orig` / `lrd` / `rankopt` checkpoints side-by-side for A/B
+//!   throughput comparison (the Table-1 "Infer Speed" claim as a running
+//!   system; `lrta serve`, `examples/serve_infer.rs`);
+//! - the **training engine** ([`train`]): parameters *and* momenta are
+//!   uploaded once, steps chain buffer-to-buffer (step N's output buffers
+//!   are step N+1's inputs), epoch-boundary freeze-pattern swaps re-bind
+//!   the same buffers to the new slot layout, and batches prefetch while
+//!   the current step executes — the Table-1 "Train Speed" claim as a
+//!   running system (`lrta train`, `bench_train_resident`; the literal
+//!   round-trip loop survives as the `--no-resident` baseline).
 //!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
@@ -39,4 +47,5 @@ pub mod rankopt;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod train;
 pub mod util;

@@ -39,7 +39,7 @@ SUBCOMMANDS
   pretrain  --model M --epochs N --out F  train dense model, save checkpoint
   decompose --model M --variant V --ckpt F --out F
   train     --model M --variant V --freeze {none|regular|sequential}
-            --epochs N --ckpt F [--lr X] [--cosine] [--out F]
+            --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
@@ -52,6 +52,8 @@ SUBCOMMANDS
 COMMON
   --manifest PATH   (default artifacts/manifest.json)
   --seed N          (default 0)
+  --no-resident     train through the host-literal round-trip baseline
+                    instead of the device-resident buffer-chained engine
 
 SERVE
   Starts one engine per variant (parameters uploaded once and kept
@@ -73,7 +75,7 @@ fn run() -> Result<()> {
         "model", "variant", "freeze", "epochs", "lr", "cosine", "out", "ckpt", "manifest",
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
-        "depth", "max-wait-ms", "spot-check", "reupload", "burst",
+        "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -133,6 +135,7 @@ fn base_config(args: &Args) -> TrainConfig {
         test_size: args.usize_or("test-size", 512),
         seed: args.u64_or("seed", 0),
         verbose: args.bool_or("verbose", true),
+        resident: !args.bool_or("no-resident", false),
     }
 }
 
@@ -186,6 +189,9 @@ fn train(args: &Args) -> Result<()> {
         record.final_test_acc(),
         record.median_step_secs() * 1e3
     );
+    if let Some(report) = trainer.residency_report() {
+        println!("{report}");
+    }
     if !out.is_empty() {
         checkpoint::save(&out, &trainer.params)?;
         println!("saved {out}");
@@ -198,6 +204,9 @@ fn infer(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let mut cfg = base_config(args);
     cfg.epochs = 1;
+    // no training happens here: skip the engine's full params+momenta
+    // upload — infer_fps uploads exactly the infer artifact's slots once
+    cfg.resident = false;
     let default_ckpt = format!("results/{}_{}.bin", cfg.model, cfg.variant);
     let ckpt = args.str_or("ckpt", &default_ckpt);
     let params = checkpoint::load(&ckpt)?;

@@ -11,8 +11,8 @@ pub mod builder;
 pub mod manifest;
 
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -23,9 +23,20 @@ pub use manifest::{ArtifactMeta, LayerCfg, Manifest, ParamSlot};
 /// Shared PJRT client + executable cache.
 pub struct Runtime {
     client: Rc<xla::PjRtClient>,
-    /// Identity executables used by [`Runtime::upload`], cached per shape so
-    /// the compile cost is paid once per distinct tensor shape.
-    upload_exes: RefCell<HashMap<Vec<i64>, Executable>>,
+    /// Identity executables used by [`Runtime::upload`], cached per
+    /// (element type, shape) so the compile cost is paid once per distinct
+    /// tensor signature.
+    upload_exes: RefCell<HashMap<(u8, Vec<i64>), Executable>>,
+    /// Times [`Executable::run_buffers_demux`] had to fall back to a host
+    /// decompose + re-upload because the backend handed back a packed tuple
+    /// buffer instead of per-leaf buffers. The buffer-chained training hot
+    /// path is only zero-copy when this stays 0.
+    demux_fallbacks: Cell<usize>,
+    /// Total host→device transfers through [`Runtime::upload`] and friends
+    /// — *every* upload flows through here, so tests can pin "only the
+    /// per-step data crossed the boundary" exactly (see
+    /// `integration_train_resident`).
+    uploads: Cell<usize>,
 }
 
 impl Runtime {
@@ -34,7 +45,12 @@ impl Runtime {
     /// backend-agnostic, which is the paper's platform-agnosticity claim).
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client: Rc::new(client), upload_exes: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            client: Rc::new(client),
+            upload_exes: RefCell::new(HashMap::new()),
+            demux_fallbacks: Cell::new(0),
+            uploads: Cell::new(0),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -70,25 +86,62 @@ impl Runtime {
 
     /// Upload an f32 host literal to a device-resident buffer.
     ///
-    /// The serving hot path keeps model parameters resident on device and
-    /// passes them to [`Executable::run_buffers`] request after request,
-    /// so upload cost is paid once instead of per request. The transfer is
-    /// expressed as a compiled identity computation (parameter → root), the
-    /// one host→device channel every PJRT backend supports; the executable
-    /// is cached per shape.
+    /// The serving and training hot paths keep model parameters resident on
+    /// device and pass them to [`Executable::run_buffers`] request after
+    /// request (step after step), so upload cost is paid once instead of
+    /// per execution. The transfer is expressed as a compiled identity
+    /// computation (parameter → root), the one host→device channel every
+    /// PJRT backend supports; the executable is cached per signature.
     pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.upload_as(lit, xla::ElementType::F32)
+    }
+
+    /// Upload i32 class labels (`[n]`) to a device-resident buffer — the
+    /// per-step `y` input of the resident training engine.
+    pub fn upload_labels(&self, labels: &[i32]) -> Result<xla::PjRtBuffer> {
+        self.upload_as(&labels_to_literal(labels), xla::ElementType::S32)
+    }
+
+    /// Upload a scalar f32 (the learning-rate input; the training engine
+    /// caches the buffer per distinct value, so this runs once per epoch).
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload_as(&scalar_literal(v), xla::ElementType::F32)
+    }
+
+    fn upload_as(&self, lit: &xla::Literal, ty: xla::ElementType) -> Result<xla::PjRtBuffer> {
         let shape = lit.array_shape().context("upload expects an array literal")?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        if !self.upload_exes.borrow().contains_key(&dims) {
-            let name = format!("upload_f32_{dims:?}");
+        // sits on the per-step training hot path (x/y uploads), so the
+        // warm-cache key is allocation-free apart from the dims vec
+        let tag: u8 = match ty {
+            xla::ElementType::F32 => 0,
+            xla::ElementType::S32 => 1,
+            _ => bail!("upload_as: unsupported element type {ty:?}"),
+        };
+        let key = (tag, shape.dims().to_vec());
+        if !self.upload_exes.borrow().contains_key(&key) {
+            let dims = &key.1;
+            let name = format!("upload_{ty:?}_{dims:?}");
             let b = xla::XlaBuilder::new(&name);
-            let x = b.parameter(0, xla::ElementType::F32, &dims, "x")?;
+            let x = b.parameter(0, ty, dims, "x")?;
             let exe = self.compile(&x.build()?, &name)?;
-            self.upload_exes.borrow_mut().insert(dims.clone(), exe);
+            self.upload_exes.borrow_mut().insert(key.clone(), exe);
         }
         let cache = self.upload_exes.borrow();
-        let mut bufs = cache[&dims].run_to_buffers(&[lit])?;
+        let mut bufs = cache[&key].run_to_buffers(&[lit])?;
+        self.uploads.set(self.uploads.get() + 1);
         Ok(bufs.swap_remove(0))
+    }
+
+    /// How often [`Executable::run_buffers_demux`] fell back to a host
+    /// round-trip — 0 means every demuxed execution stayed buffer-to-buffer.
+    pub fn demux_fallbacks(&self) -> usize {
+        self.demux_fallbacks.get()
+    }
+
+    /// Total host→device transfers so far (all dtypes, data and parameters
+    /// alike).
+    pub fn uploads(&self) -> usize {
+        self.uploads.get()
     }
 }
 
@@ -102,15 +155,24 @@ pub struct Executable {
 impl Executable {
     /// Execute with host literals; returns the flattened outputs.
     ///
-    /// Artifacts are lowered with `return_tuple=True`, so the single output
-    /// is a tuple that we decompose. Single-array computations (from the
-    /// builder) come back as one literal.
+    /// Artifacts are lowered with `return_tuple=True`. Depending on the
+    /// backend's untupling behavior the tuple root comes back either as a
+    /// single packed buffer (decomposed here) or as one buffer per leaf
+    /// (synced leaf by leaf) — both flatten to the same output list.
     pub fn run<L: std::borrow::Borrow<xla::Literal>>(
         &self,
         inputs: &[L],
     ) -> Result<Vec<xla::Literal>> {
         let bufs = self.exe.execute::<L>(inputs).context("execute")?;
-        Self::buffer_to_literals(&bufs[0][0])
+        let outs = &bufs[0];
+        if outs.len() == 1 {
+            return Self::buffer_to_literals(&outs[0]);
+        }
+        let mut lits = Vec::with_capacity(outs.len());
+        for buf in outs {
+            lits.extend(Self::buffer_to_literals(buf)?);
+        }
+        Ok(lits)
     }
 
     /// Execute with device-resident buffers (the hot path: parameters stay
@@ -134,6 +196,50 @@ impl Executable {
     ) -> Result<Vec<xla::PjRtBuffer>> {
         let mut out = self.exe.execute::<L>(inputs).context("execute")?;
         Ok(out.swap_remove(0))
+    }
+
+    /// Execute with device-resident buffers and return the `expected`
+    /// outputs as *individual* device buffers — the buffer-chained training
+    /// hot path: step N's output buffers (new params, new momenta) feed
+    /// step N+1 with no host transfer.
+    ///
+    /// A PJRT backend that untuples tuple roots already hands back one
+    /// buffer per leaf, which passes through untouched. If the backend
+    /// returns a single packed tuple buffer instead, fall back to a host
+    /// decompose + per-leaf re-upload (correct, but it round-trips the
+    /// step state) and count it on the [`Runtime`] so benches and tests can
+    /// assert the fast path actually ran.
+    pub fn run_buffers_demux<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        rt: &Runtime,
+        inputs: &[B],
+        expected: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self.run_buffers(inputs)?;
+        if outs.len() == expected {
+            return Ok(outs);
+        }
+        if outs.len() == 1 && expected > 1 {
+            rt.demux_fallbacks.set(rt.demux_fallbacks.get() + 1);
+            let lits = Self::buffer_to_literals(&outs[0])?;
+            if lits.len() != expected {
+                bail!(
+                    "'{}' returned {} outputs, expected {expected}",
+                    self.name,
+                    lits.len()
+                );
+            }
+            let mut bufs = Vec::with_capacity(expected);
+            for lit in &lits {
+                bufs.push(rt.upload(lit)?);
+            }
+            return Ok(bufs);
+        }
+        bail!(
+            "'{}' returned {} output buffers, expected {expected}",
+            self.name,
+            outs.len()
+        )
     }
 
     /// Sync one output buffer to host and flatten it, mirroring the output
@@ -174,6 +280,18 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let data = lit.to_vec::<f32>()?;
     let dims = if dims.is_empty() { vec![1] } else { dims };
     Ok(Tensor::new(&dims, data))
+}
+
+/// Sync a single-array device buffer back to a host tensor. The resident
+/// training engine calls this only where host state is semantically
+/// required: checkpointing and returning the final parameters.
+pub fn download_tensor(buf: &xla::PjRtBuffer) -> Result<Tensor> {
+    literal_to_tensor(&buf.to_literal_sync().context("download buffer")?)
+}
+
+/// Sync a scalar f32 device buffer (per-step loss / correct-count outputs).
+pub fn download_scalar(buf: &xla::PjRtBuffer) -> Result<f32> {
+    Ok(buf.to_literal_sync().context("download scalar")?.get_first_element::<f32>()?)
 }
 
 /// i32 labels → Literal `[n]`.

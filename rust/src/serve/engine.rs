@@ -24,7 +24,8 @@ use crate::runtime::{
     literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, Runtime,
 };
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
+use crate::train::ResidentParams;
+use anyhow::{Context, Result};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -93,8 +94,10 @@ struct Engine {
     meta: ArtifactMeta,
     /// Host-side parameters, kept for the reupload baseline and spot checks.
     params: Params,
-    /// Device-resident parameter buffers in artifact slot order
-    /// (`None` in reupload mode).
+    /// Device-resident parameters, uploaded through the shared
+    /// [`ResidentParams`] path and gathered once into artifact slot order —
+    /// serving never re-binds, so the hot path indexes a dense Vec instead
+    /// of a name-keyed map (`None` in reupload mode).
     resident: Option<Vec<xla::PjRtBuffer>>,
     x_dims: Vec<i64>,
     item_elems: usize,
@@ -116,13 +119,10 @@ impl Engine {
         let resident = if cfg.reupload {
             None
         } else {
-            let mut bufs = Vec::with_capacity(meta.trainable.len() + meta.frozen.len());
-            for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
-                let t = params
-                    .get(&slot.name)
-                    .ok_or_else(|| anyhow!("missing param {} for {}", slot.name, meta.name))?;
-                bufs.push(rt.upload(&tensor_to_literal(t)?)?);
-            }
+            let slots = || meta.trainable.iter().chain(meta.frozen.iter());
+            let bufs = ResidentParams::upload_for_slots(&rt, &params, slots())
+                .and_then(|r| r.into_ordered(slots()))
+                .with_context(|| format!("uploading resident params for {}", meta.name))?;
             Some(bufs)
         };
         if cfg.spot_check > 0 {

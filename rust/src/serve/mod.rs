@@ -81,13 +81,10 @@ pub struct Response {
 }
 
 impl Response {
+    /// NaN-safe argmax over the logits row (shared with the evaluation
+    /// paths — see [`crate::util::stats::argmax_f32`]).
     pub fn predicted_class(&self) -> usize {
-        self.logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        crate::util::stats::argmax_f32(&self.logits)
     }
 }
 

@@ -1,0 +1,193 @@
+//! `lrta::train` — the device-resident training engine.
+//!
+//! The paper's headline number is *training* throughput (+60% for rank
+//! optimization + sequential freezing combined), and the literal-based
+//! step loop ([`run_train_step`](crate::coordinator::run_train_step))
+//! gives most of that back by round-tripping every parameter and momentum
+//! tensor through host literals on every step. This module is the training
+//! counterpart of the serving layer's residency work:
+//!
+//! ```text
+//!   upload params+momenta once ──▶ [ResidentState]   (named device buffers)
+//!                                        │
+//!        ┌── epoch ──────────────────────▼──────────────────────────────┐
+//!        │ [Prefetcher] assemble batch N+1 ║ step N executes on device  │
+//!        │     x,y,lr upload (data only) ──▶ [train exe] run_buffers    │
+//!        │     new params / momenta ◀────── demuxed output buffers      │
+//!        │     (re-bound in place — step N+1 reads them directly)       │
+//!        └───────────────────────────────────────────────────────────────┘
+//!                                        │
+//!             epoch boundary: Algorithm 2 swaps pattern a↔b —
+//!             the *same* buffers re-bind to the new executable's
+//!             slot layout (trainable↔frozen roles swap; nothing is
+//!             downloaded or re-uploaded)
+//!                                        │
+//!             host sync only where semantics demand it: per-step
+//!             loss/correct scalars, per-epoch eval (which itself runs
+//!             on the resident buffers), checkpoint/final-state download
+//! ```
+//!
+//! [`Engine`] owns the state and the step/epoch/eval primitives;
+//! [`crate::coordinator::Trainer`] drives it (freeze schedule, records,
+//! learning-rate schedule) and falls back to the literal baseline when
+//! `TrainConfig::resident` is off (`lrta train --no-resident`), which is
+//! what `bench_train_resident` compares against.
+
+pub mod prefetch;
+pub mod resident;
+
+pub use prefetch::Prefetcher;
+pub use resident::{ResidentParams, ResidentState};
+
+use crate::checkpoint::Params;
+use crate::data::Dataset;
+use crate::metrics::ThroughputMeter;
+use crate::runtime::{literal_to_tensor, ArtifactMeta, Executable, Runtime};
+use crate::util::stats::count_correct;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Aggregates of one training epoch through the resident engine.
+pub struct EpochStats {
+    /// Mean per-batch training loss.
+    pub loss: f64,
+    /// Training accuracy over the epoch.
+    pub train_acc: f64,
+    pub samples: usize,
+    pub batches: usize,
+    /// Per-step wall times (batch-upload + execute + scalar sync).
+    pub meter: ThroughputMeter,
+}
+
+/// The device-resident training engine: buffer-to-buffer step chaining
+/// with freeze-pattern rebinding. See the module docs for the data flow.
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    state: ResidentState,
+    /// The learning rate is an executable input; its device buffer is
+    /// cached per distinct value (it changes once per epoch at most).
+    lr_cache: Option<(f32, xla::PjRtBuffer)>,
+}
+
+impl<'rt> Engine<'rt> {
+    /// Upload the full training state (all parameters, all momenta) once.
+    pub fn upload(rt: &'rt Runtime, params: &Params, momenta: &Params) -> Result<Engine<'rt>> {
+        Ok(Engine { rt, state: ResidentState::upload(rt, params, momenta)?, lr_cache: None })
+    }
+
+    pub fn state(&self) -> &ResidentState {
+        &self.state
+    }
+
+    /// See [`ResidentState::param_uploads`].
+    pub fn param_uploads(&self) -> usize {
+        self.state.param_uploads()
+    }
+
+    /// One buffer-chained SGD step: uploads only the fresh batch (`x`, `y`)
+    /// and — when it changed — the `lr` scalar, executes against the
+    /// resident buffers, re-binds the output buffers as the new state, and
+    /// returns the `(loss, correct)` scalars.
+    pub fn step(
+        &mut self,
+        exe: &Executable,
+        meta: &ArtifactMeta,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let x_buf = self.rt.upload(&xla::Literal::vec1(xs).reshape(&x_dims)?)?;
+        let y_buf = self.rt.upload_labels(ys)?;
+        let lr_stale = match &self.lr_cache {
+            Some((v, _)) => *v != lr,
+            None => true,
+        };
+        if lr_stale {
+            self.lr_cache = Some((lr, self.rt.upload_scalar(lr)?));
+        }
+        let n_tr = meta.trainable.len();
+        let mut inputs = self.state.step_inputs(meta)?;
+        inputs.push(&x_buf);
+        inputs.push(&y_buf);
+        inputs.push(&self.lr_cache.as_ref().expect("just refreshed").1);
+        let outs = exe.run_buffers_demux(self.rt, &inputs, 2 * n_tr + 2)?;
+        drop(inputs);
+        self.state.absorb_step(meta, outs)
+    }
+
+    /// One epoch over `data`: batches assemble on the [`Prefetcher`] thread
+    /// while steps execute, in exactly the order the literal baseline uses
+    /// for the same `epoch_seed` (trajectories stay comparable bit-for-bit).
+    pub fn run_epoch(
+        &mut self,
+        exe: &Executable,
+        meta: &ArtifactMeta,
+        data: &Arc<Dataset>,
+        epoch_seed: u64,
+        lr: f32,
+    ) -> Result<EpochStats> {
+        let expected_batches = data.len() / meta.batch;
+        let mut pf = Prefetcher::start(Arc::clone(data), meta.batch, epoch_seed);
+        let mut meter = ThroughputMeter::new(meta.batch);
+        let mut loss_sum = 0.0f64;
+        let mut correct_sum = 0.0f64;
+        let mut samples = 0usize;
+        let mut batches = 0usize;
+        while let Some((xs, ys)) = pf.next_batch() {
+            let t0 = Instant::now();
+            let (loss, correct) = self.step(exe, meta, &xs, &ys, lr)?;
+            meter.record(t0.elapsed().as_secs_f64());
+            loss_sum += loss as f64;
+            correct_sum += correct as f64;
+            samples += ys.len();
+            batches += 1;
+        }
+        if batches != expected_batches {
+            bail!(
+                "prefetch ended early: {batches} of {expected_batches} batches (epoch seed {epoch_seed})"
+            );
+        }
+        Ok(EpochStats {
+            loss: loss_sum / batches.max(1) as f64,
+            train_acc: correct_sum / samples.max(1) as f64,
+            samples,
+            batches,
+            meter,
+        })
+    }
+
+    /// Accuracy over `data` through an infer executable running directly on
+    /// the resident parameter buffers — per batch, only `x` goes up and the
+    /// logits come down. Drops the partial final batch (constant AOT batch
+    /// shape), like the literal-path evaluation.
+    pub fn evaluate(&self, exe: &Executable, meta: &ArtifactMeta, data: &Dataset) -> Result<f64> {
+        let params = self
+            .state
+            .params
+            .ordered(meta.trainable.iter().chain(meta.frozen.iter()))?;
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let batch = meta.batch;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..data.len() / batch {
+            let (xs, ys) = data.batch(bi * batch, batch);
+            let x_buf = self.rt.upload(&xla::Literal::vec1(&xs).reshape(&x_dims)?)?;
+            let mut refs = params.clone();
+            refs.push(&x_buf);
+            let outs = exe.run_buffers(&refs)?;
+            let mut lits = Executable::buffer_to_literals(&outs[0])?;
+            let logits = literal_to_tensor(&lits.swap_remove(0))?;
+            correct += count_correct(logits.data(), logits.shape()[1], &ys);
+            total += ys.len();
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Download the full training state — the semantically-required host
+    /// syncs (checkpointing, returning final parameters) go through here.
+    pub fn sync(&self) -> Result<(Params, Params)> {
+        self.state.sync()
+    }
+}

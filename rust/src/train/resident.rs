@@ -1,0 +1,239 @@
+//! Device-resident parameter state: named tensors that live in PJRT
+//! buffers from the first upload until the run's final host sync.
+//!
+//! [`ResidentParams`] is the shared building block — serving engines keep
+//! one set per variant, [`Trainer::infer_fps`](crate::coordinator::Trainer)
+//! measures against one, and the training engine composes two of them
+//! ([`ResidentState`]: parameters ∪ momenta). Buffers are keyed by
+//! parameter *name*; which executable input slot a buffer feeds is decided
+//! per artifact by [`crate::freeze::train_slot_bindings`], so a freeze-pattern
+//! swap (Algorithm 2, a↔b) re-binds the same buffers to the new slot
+//! layout instead of moving anything across the host boundary.
+//!
+//! Upload accounting is explicit: `uploads()` only ever counts host→device
+//! parameter transfers through this type; step outputs re-bind via
+//! [`ResidentParams::rebind`] (a pure ownership move). The proof that a run
+//! stayed buffer-to-buffer is this counter staying at the initial value
+//! *together with* [`crate::runtime::Runtime::demux_fallbacks`] staying 0
+//! (the fallback re-uploads step outputs outside this counter); both are
+//! asserted in `rust/tests/integration_train_resident.rs`.
+
+use crate::checkpoint::Params;
+use crate::freeze::{train_slot_bindings, SlotRole};
+use crate::runtime::{
+    download_scalar, download_tensor, tensor_to_literal, ArtifactMeta, ParamSlot, Runtime,
+};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A named set of device-resident tensors (uploaded once).
+pub struct ResidentParams {
+    bufs: BTreeMap<String, xla::PjRtBuffer>,
+    uploads: usize,
+}
+
+impl ResidentParams {
+    /// Upload every tensor of `params` to a device buffer.
+    pub fn upload(rt: &Runtime, params: &Params) -> Result<ResidentParams> {
+        let mut bufs = BTreeMap::new();
+        for (name, t) in params {
+            bufs.insert(name.clone(), rt.upload(&tensor_to_literal(t)?)?);
+        }
+        let uploads = bufs.len();
+        Ok(ResidentParams { bufs, uploads })
+    }
+
+    /// Upload exactly the tensors an artifact's signature names (what a
+    /// serving engine needs: its variant's slots, nothing else).
+    pub fn upload_for_slots<'a, I>(
+        rt: &Runtime,
+        params: &Params,
+        slots: I,
+    ) -> Result<ResidentParams>
+    where
+        I: IntoIterator<Item = &'a ParamSlot>,
+    {
+        let mut bufs = BTreeMap::new();
+        for slot in slots {
+            let t = params
+                .get(&slot.name)
+                .ok_or_else(|| anyhow!("missing param {}", slot.name))?;
+            bufs.insert(slot.name.clone(), rt.upload(&tensor_to_literal(t)?)?);
+        }
+        let uploads = bufs.len();
+        Ok(ResidentParams { bufs, uploads })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Host→device parameter transfers performed so far. Re-binding step
+    /// outputs never increments this.
+    pub fn uploads(&self) -> usize {
+        self.uploads
+    }
+
+    pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
+        self.bufs.get(name)
+    }
+
+    /// Buffers gathered in `slots` order — the executable input contract.
+    pub fn ordered<'a, I>(&self, slots: I) -> Result<Vec<&xla::PjRtBuffer>>
+    where
+        I: IntoIterator<Item = &'a ParamSlot>,
+    {
+        slots
+            .into_iter()
+            .map(|s| {
+                self.bufs
+                    .get(&s.name)
+                    .ok_or_else(|| anyhow!("no resident buffer for '{}'", s.name))
+            })
+            .collect()
+    }
+
+    /// Consume the set into a dense buffer list laid out in `slots` order —
+    /// for engines whose binding never changes (serving): gather once at
+    /// startup, then reuse the Vec batch after batch with no map lookups on
+    /// the latency-measured path.
+    pub fn into_ordered<'a, I>(mut self, slots: I) -> Result<Vec<xla::PjRtBuffer>>
+    where
+        I: IntoIterator<Item = &'a ParamSlot>,
+    {
+        let mut out = Vec::new();
+        for slot in slots {
+            out.push(
+                self.bufs
+                    .remove(&slot.name)
+                    .ok_or_else(|| anyhow!("no resident buffer for '{}'", slot.name))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Re-bind `name` to a step-output buffer: pure ownership transfer of a
+    /// buffer that already lives on device — no host traffic, no upload.
+    pub fn rebind(&mut self, name: &str, buf: xla::PjRtBuffer) -> Result<()> {
+        match self.bufs.get_mut(name) {
+            Some(slot) => {
+                *slot = buf;
+                Ok(())
+            }
+            None => bail!("rebind of unknown resident buffer '{name}'"),
+        }
+    }
+
+    /// Download the whole set back to host tensors (checkpointing / final
+    /// state sync — the places host state is semantically required).
+    pub fn download(&self) -> Result<Params> {
+        let mut out = Params::new();
+        for (name, buf) in &self.bufs {
+            out.insert(name.clone(), download_tensor(buf)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Full training state on device: every parameter and every momentum of
+/// the model, across all freeze patterns the schedule will use.
+pub struct ResidentState {
+    pub params: ResidentParams,
+    pub momenta: ResidentParams,
+}
+
+impl ResidentState {
+    /// Upload parameters and momenta once, before the first step.
+    pub fn upload(rt: &Runtime, params: &Params, momenta: &Params) -> Result<ResidentState> {
+        Ok(ResidentState {
+            params: ResidentParams::upload(rt, params)?,
+            momenta: ResidentParams::upload(rt, momenta)?,
+        })
+    }
+
+    /// Gather one train step's parameter/momentum inputs in the artifact's
+    /// slot order ([`train_slot_bindings`]); the caller appends the
+    /// per-step `x`/`y`/`lr` buffers. Gathered per step, not cached: every
+    /// step re-binds the trainable/momentum buffers, so yesterday's refs
+    /// are stale by construction (the map walk is noise next to the step
+    /// execution it feeds).
+    pub fn step_inputs(&self, meta: &ArtifactMeta) -> Result<Vec<&xla::PjRtBuffer>> {
+        let mut refs = Vec::with_capacity(2 * meta.trainable.len() + meta.frozen.len());
+        for b in train_slot_bindings(meta) {
+            let set = match b.role {
+                SlotRole::Momentum => &self.momenta,
+                SlotRole::Trainable | SlotRole::Frozen => &self.params,
+            };
+            refs.push(set.get(b.name).ok_or_else(|| {
+                anyhow!("no resident {:?} buffer for '{}' ({})", b.role, b.name, meta.name)
+            })?);
+        }
+        Ok(refs)
+    }
+
+    /// Absorb a step's demuxed outputs: the new trainable parameters and
+    /// momenta re-bind in place (buffer ownership moves; step N+1 will read
+    /// them straight from device), and the two trailing scalars (loss,
+    /// correct-count) sync to host for the epoch record.
+    pub fn absorb_step(
+        &mut self,
+        meta: &ArtifactMeta,
+        outs: Vec<xla::PjRtBuffer>,
+    ) -> Result<(f32, f32)> {
+        let n_tr = meta.trainable.len();
+        if outs.len() != 2 * n_tr + 2 {
+            bail!(
+                "train step '{}' produced {} outputs, expected {}",
+                meta.name,
+                outs.len(),
+                2 * n_tr + 2
+            );
+        }
+        let mut it = outs.into_iter();
+        for slot in &meta.trainable {
+            self.params.rebind(&slot.name, it.next().expect("length checked"))?;
+        }
+        for slot in &meta.trainable {
+            self.momenta.rebind(&slot.name, it.next().expect("length checked"))?;
+        }
+        let loss = download_scalar(&it.next().expect("length checked"))?;
+        let correct = download_scalar(&it.next().expect("length checked"))?;
+        Ok((loss, correct))
+    }
+
+    /// Validate an epoch-boundary pattern swap: every slot of the new
+    /// executable must already be resident (patterns of one variant span
+    /// the same parameter universe — see [`crate::freeze::rebind_upload_set`]).
+    /// Uploads nothing, by construction.
+    pub fn rebind_for(&self, meta: &ArtifactMeta) -> Result<()> {
+        for b in train_slot_bindings(meta) {
+            let set = match b.role {
+                SlotRole::Momentum => &self.momenta,
+                SlotRole::Trainable | SlotRole::Frozen => &self.params,
+            };
+            if set.get(b.name).is_none() {
+                bail!(
+                    "pattern swap to '{}' requires non-resident buffer '{}'",
+                    meta.name,
+                    b.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter/momentum uploads — constant after construction as
+    /// long as every step and pattern swap stayed buffer-to-buffer.
+    pub fn param_uploads(&self) -> usize {
+        self.params.uploads() + self.momenta.uploads()
+    }
+
+    /// Download the full training state to host maps.
+    pub fn sync(&self) -> Result<(Params, Params)> {
+        Ok((self.params.download()?, self.momenta.download()?))
+    }
+}

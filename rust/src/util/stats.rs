@@ -70,6 +70,29 @@ pub fn diff(ys: &[f64]) -> Vec<f64> {
     ys.windows(2).map(|w| w[1] - w[0]).collect()
 }
 
+/// NaN-safe argmax over f32 logits (IEEE total order). The evaluation
+/// paths used `partial_cmp().unwrap()`, which panics the whole run on a
+/// single NaN logit; under `total_cmp` a (positive) NaN simply ranks above
+/// +∞, so a corrupted row yields a (wrong) prediction instead of a crash.
+/// Last index wins ties — same as the `max_by` it replaces. 0 on empty.
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Rows of flat `[n, classes]` logits whose [`argmax_f32`] equals the
+/// label — the one accuracy-counting loop shared by the literal and
+/// resident evaluation paths and the serving spot check.
+pub fn count_correct(logits: &[f32], classes: usize, ys: &[i32]) -> usize {
+    ys.iter()
+        .enumerate()
+        .filter(|&(i, &y)| argmax_f32(&logits[i * classes..(i + 1) * classes]) == y as usize)
+        .count()
+}
+
 /// Index of the maximum value (first on ties). None on empty input.
 pub fn argmax(xs: &[f64]) -> Option<usize> {
     xs.iter()
@@ -145,6 +168,32 @@ mod tests {
         // ties at 0.0 (indices 0 and 3): first wins
         assert_eq!(argmax(&d), Some(0));
         assert_eq!(argmin(&d), Some(1)); // steepest drop
+    }
+
+    #[test]
+    fn argmax_f32_basic() {
+        assert_eq!(argmax_f32(&[0.1, 2.0, -1.0]), 1);
+        assert_eq!(argmax_f32(&[-3.0]), 0);
+        assert_eq!(argmax_f32(&[]), 0);
+    }
+
+    #[test]
+    fn count_correct_rows() {
+        // 3 rows × 2 classes; labels hit rows 0 and 2
+        let logits = [1.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        assert_eq!(count_correct(&logits, 2, &[0, 1, 1]), 3);
+        assert_eq!(count_correct(&logits, 2, &[1, 0, 0]), 0);
+        assert_eq!(count_correct(&logits, 2, &[0, 0, 0]), 2);
+        assert_eq!(count_correct(&[], 2, &[]), 0);
+    }
+
+    #[test]
+    fn argmax_f32_survives_nan_logits() {
+        // regression: `partial_cmp().unwrap()` panicked here and took the
+        // whole evaluation down with it
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0, 0.5]), 0); // +NaN tops the total order
+        assert_eq!(argmax_f32(&[1.0, f32::NEG_INFINITY, 0.5]), 0);
+        assert_eq!(argmax_f32(&[f32::NAN, f32::NAN]), 1); // all-NaN: no panic
     }
 
     #[test]

@@ -28,6 +28,9 @@ fn tiny_cfg(model: &str, variant: &str, freeze: FreezeMode, epochs: usize) -> Tr
         test_size: 128,
         seed: 0,
         verbose: false,
+        // the resident engine is the default step path — these seed tests
+        // now exercise buffer-chained stepping end to end
+        resident: true,
     }
 }
 

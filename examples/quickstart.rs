@@ -65,6 +65,7 @@ fn main() -> Result<()> {
         seed: 0,
         verbose: true,
         resident: true,
+        pipelined: true,
     };
     let mut trainer = Trainer::new(&rt, &manifest, train_cfg, outcome.params)?;
     let record = trainer.run()?;

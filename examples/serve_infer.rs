@@ -15,9 +15,9 @@
 //!
 //! Run:  `cargo run --release --example serve_infer [-- --flags]`
 //! Args: --model M --requests N --concurrency C --max-wait-ms X
-//!       --spot-check N --reupload --burst
+//!       --spot-check N --reupload --burst --no-pipeline
 //! Env fallbacks: LRTA_MODEL, LRTA_REQUESTS, LRTA_CONCURRENCY,
-//!       LRTA_REUPLOAD
+//!       LRTA_REUPLOAD, LRTA_PIPELINED
 
 use anyhow::Result;
 use lrta::checkpoint;
@@ -35,6 +35,7 @@ fn env_or(key: &str, default: &str) -> String {
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "model", "requests", "concurrency", "max-wait-ms", "spot-check", "reupload", "burst",
+        "no-pipeline",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     let model = args.str_or("model", &env_or("LRTA_MODEL", "resnet_mini"));
@@ -61,6 +62,14 @@ fn main() -> Result<()> {
     let cfg = ServerConfig {
         max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
         reupload,
+        // streaming admission is the default; --no-pipeline (or
+        // LRTA_PIPELINED=0) restores the lockstep engine loop (same env
+        // truthiness as examples/train_cifar_seqfreeze.rs)
+        pipelined: !args.bool_or("no-pipeline", false)
+            && !matches!(
+                env_or("LRTA_PIPELINED", "1").trim(),
+                "0" | "false" | "no" | "off"
+            ),
         spot_check: args.usize_or("spot-check", 128),
         ..Default::default()
     };

@@ -12,12 +12,15 @@
 //!
 //! Fine-tuning steps run through the device-resident engine by default
 //! (`lrta::train`: params/momenta uploaded once, steps chained
-//! buffer-to-buffer, pattern a↔b swaps re-bound in place); set
-//! `LRTA_RESIDENT=0` for the host-literal round-trip baseline.
+//! buffer-to-buffer, pattern a↔b swaps re-bound in place) with the
+//! overlapped pipeline on top (double-buffered batch uploads, on-device
+//! epoch metrics, side-thread eval); set `LRTA_RESIDENT=0` for the
+//! host-literal round-trip baseline or `LRTA_PIPELINED=0` for the serial
+//! resident loop.
 //!
 //! Run: `cargo run --release --example train_cifar_seqfreeze`
 //! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024),
-//!       LRTA_RESIDENT (default 1)
+//!       LRTA_RESIDENT (default 1), LRTA_PIPELINED (default 1)
 
 use anyhow::Result;
 use lrta::coordinator::{
@@ -35,9 +38,13 @@ fn env_usize(key: &str, default: usize) -> usize {
 fn main() -> Result<()> {
     let epochs = env_usize("LRTA_EPOCHS", 10);
     let train_size = env_usize("LRTA_TRAIN", 1024);
-    let resident = std::env::var("LRTA_RESIDENT")
-        .map(|v| !matches!(v.trim(), "0" | "false" | "no" | "off"))
-        .unwrap_or(true);
+    let env_on = |key: &str| {
+        std::env::var(key)
+            .map(|v| !matches!(v.trim(), "0" | "false" | "no" | "off"))
+            .unwrap_or(true)
+    };
+    let resident = env_on("LRTA_RESIDENT");
+    let pipelined = env_on("LRTA_PIPELINED");
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let rt = Runtime::cpu()?;
@@ -60,7 +67,13 @@ fn main() -> Result<()> {
     ] {
         println!(
             "== fine-tune with {label} freezing ({epochs} epochs, {} steps) ==",
-            if resident { "buffer-chained" } else { "literal round-trip" }
+            if resident && pipelined {
+                "pipelined buffer-chained"
+            } else if resident {
+                "buffer-chained"
+            } else {
+                "literal round-trip"
+            }
         );
         let cfg = TrainConfig {
             model: "resnet_mini".into(),
@@ -73,6 +86,7 @@ fn main() -> Result<()> {
             seed: 0,
             verbose: true,
             resident,
+            pipelined,
         };
         let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
         let record = trainer.run()?;

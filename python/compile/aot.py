@@ -131,6 +131,41 @@ def lower_infer(model, variant, out_dir, alpha, tile):
     }
 
 
+def lower_metrics_acc(out_dir):
+    """The on-device metric-accumulation step of the pipelined trainer:
+    ``acc' = acc + loss*e_loss + correct*e_correct`` over a resident
+    ``[loss_sum, correct_sum]`` buffer. Model-independent (one artifact for
+    the whole manifest); the rust runtime falls back to an identical
+    XlaBuilder-built computation when this artifact is absent
+    (``rust/src/runtime/builder.rs::metrics_accumulate_computation`` — the
+    two must keep the same 5-input contract)."""
+
+    def acc_step(acc, loss, correct, e_loss, e_correct):
+        return acc + loss * e_loss + correct * e_correct
+
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    args = [spec([2]), scalar, scalar, spec([2]), spec([2])]
+    name = "metrics_acc"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(acc_step).lower(*args)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name,
+        "path": os.path.basename(path),
+        "model": "",
+        "variant": "",
+        "kind": "metrics",
+        "freeze": "none",
+        "batch": 1,
+        "trainable": [],
+        "frozen": [],
+        # data.x is the accumulator shape (the manifest schema requires x)
+        "data": {"x": [2]},
+        "outputs": ["acc"],
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts/manifest.json",
@@ -153,6 +188,10 @@ def main():
         "configs": {},
         "init_checkpoints": {},
     }
+
+    entry = lower_metrics_acc(out_dir)
+    manifest["artifacts"].append(entry)
+    print(f"[aot] lowered {entry['name']}")
 
     for model in args.models.split(","):
         model = model.strip()

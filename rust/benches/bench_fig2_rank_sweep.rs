@@ -10,7 +10,7 @@ use lrta::devmodel::DeviceProfile;
 use lrta::lrd::LayerShape;
 use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::Runtime;
-use lrta::util::bench::{table, write_report};
+use lrta::util::bench::{runtime_counters_json, table, write_json_section, write_report};
 use lrta::util::stats;
 
 fn main() {
@@ -87,5 +87,6 @@ fn main() {
     let t = table(&rows);
     println!("{t}");
     write_report("results/fig2_summary.txt", &t);
+    write_json_section("results/bench_counters.json", "fig2", runtime_counters_json(&rt));
     println!("fig2 bench OK — curves in results/fig2_*.csv");
 }

@@ -12,7 +12,7 @@ use lrta::coordinator::{
 use lrta::freeze::FreezeMode;
 use lrta::metrics::RunRecord;
 use lrta::runtime::{Manifest, Runtime};
-use lrta::util::bench::{table, write_report};
+use lrta::util::bench::{runtime_counters_json, table, write_json_section, write_report};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -47,6 +47,7 @@ fn main() {
             seed: 0,
             verbose: true,
             resident: true,
+            pipelined: true,
         };
         let mut trainer =
             Trainer::new(&rt, &manifest, cfg, decomposed.params.clone()).expect("trainer");
@@ -91,5 +92,6 @@ fn main() {
     println!("\nshape to match (paper Fig. 3): sequential reaches the target accuracy");
     println!("earlier and ends at-or-above regular (95.46 vs 95.27 in the paper).");
     write_report("results/fig3.txt", &summary);
+    write_json_section("results/bench_counters.json", "fig3", runtime_counters_json(&rt));
     println!("fig3 bench OK");
 }

@@ -14,7 +14,7 @@ use lrta::linalg::svd_truncated;
 use lrta::lrd::tucker2_conv;
 use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
 use lrta::tensor::Tensor;
-use lrta::util::bench::{bench, table, write_report, BenchConfig};
+use lrta::util::bench::{bench, runtime_counters_json, table, write_json_section, write_report, BenchConfig};
 use lrta::util::rng::Rng;
 
 fn main() {
@@ -107,6 +107,11 @@ fn main() {
             format!("{:.1} ms", r.median_ms()),
             format!("{:.1}% of step", r.median_ms() / host_ms * 100.0),
         ]);
+        write_json_section(
+            "results/bench_counters.json",
+            "perf_micro",
+            runtime_counters_json(&rt),
+        );
     }
 
     let out = table(&rows);

@@ -1,18 +1,26 @@
-//! Serving-throughput benchmark: resident-vs-reupload and
-//! batched-vs-unbatched across the `orig` / `lrd` / `rankopt` variants.
+//! Serving-throughput benchmark: resident-vs-reupload, batched-vs-unbatched
+//! and lockstep-vs-pipelined across the `orig` / `lrd` / `rankopt` variants.
 //!
-//! Three serving modes per variant:
+//! Four serving modes per variant:
 //!   1. **reupload, unbatched** — the old `serve_infer` behavior: one
 //!      synchronous executable run per request with every parameter
 //!      literal rebuilt and re-uploaded (host-literal path);
 //!   2. **reupload, batched** — the subsystem's dynamic batcher, but the
 //!      engine re-uploads parameters every batch (`reupload: true`);
-//!   3. **resident, batched** — the subsystem's default: parameters
-//!      uploaded once and kept device-resident.
+//!   3. **resident, batched** — parameters uploaded once and kept
+//!      device-resident, lockstep execute-then-respond (`pipelined: false`,
+//!      the PR-2 behavior);
+//!   4. **resident, pipelined** — the subsystem's default: streaming
+//!      admission — batch N+1 coalesces/uploads/dispatches while batch N
+//!      executes (split dispatch/fetch), so the device never waits on the
+//!      host between batches under backlog.
 //!
-//! The LRD/rank-opt win the paper claims for inference only survives mode
-//! 3: smaller resident factors mean the per-request work is just the batch
-//! upload + the cheaper matmuls. Output: results/serve_throughput.txt
+//! The LRD/rank-opt win the paper claims for inference only survives modes
+//! 3-4: smaller resident factors mean the per-request work is just the
+//! batch upload + the cheaper matmuls. Output:
+//! results/serve_throughput.txt + results/serve_throughput.json and a
+//! `serve` section in results/BENCH_pipeline.json (upload/demux counters
+//! included per variant, from the engine stats gauges).
 //!
 //! Env: LRTA_MODEL (default resnet_mini), LRTA_SERVE_BENCH_REQS
 //! (requests per measurement, default 4× compiled batch)
@@ -23,7 +31,8 @@ use lrta::data::Dataset;
 use lrta::metrics::ThroughputMeter;
 use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
 use lrta::serve::{self, Server, ServerConfig, VariantSpec};
-use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::bench::{fmt_delta_pct, table, write_json_section, write_report};
+use lrta::util::json::Json;
 use std::time::Duration;
 
 /// Mode 1: per-request full re-upload through the host-literal path, no
@@ -62,7 +71,9 @@ fn reupload_unbatched_fps(
     Ok(meter.fps())
 }
 
-/// Modes 2 and 3: burst load through the serving subsystem.
+/// Modes 2-4: burst load through the serving subsystem. Returns the
+/// observed fps plus the engine's transfer-counter gauges
+/// `(uploads, demux_fallbacks)`.
 fn served_fps(
     manifest: &Manifest,
     model: &str,
@@ -70,9 +81,11 @@ fn served_fps(
     params: lrta::checkpoint::Params,
     reqs: usize,
     reupload: bool,
-) -> Result<f64> {
+    pipelined: bool,
+) -> Result<(f64, u64, u64)> {
     let cfg = ServerConfig {
         reupload,
+        pipelined,
         max_wait: Duration::from_millis(5),
         ..Default::default()
     };
@@ -86,8 +99,9 @@ fn served_fps(
     serve::burst_loop(&server, model, variant, &data, reqs / 4 + 1, Duration::from_secs(120));
     let report =
         serve::burst_loop(&server, model, variant, &data, reqs, Duration::from_secs(120));
+    let snap = server.stats(model, variant).expect("registered variant");
     server.shutdown();
-    Ok(report.observed_fps())
+    Ok((report.observed_fps(), snap.uploads, snap.demux_fallbacks))
 }
 
 fn main() -> Result<()> {
@@ -100,9 +114,13 @@ fn main() -> Result<()> {
         "reupload unbatched fps".to_string(),
         "reupload batched fps".to_string(),
         "resident batched fps".to_string(),
-        "Δ resident vs reupload".to_string(),
+        "pipelined fps".to_string(),
+        "Δ pipelined vs resident".to_string(),
+        "uploads (resident/pipelined)".to_string(),
     ]];
+    let mut json_rows = Vec::new();
     let mut resident_beats_reupload = true;
+    let mut pipelined_keeps_up = true;
     for variant in ["orig", "lrd", "rankopt"] {
         let params = VariantSpec::from_dense(&manifest, &model, variant, &dense)?.params;
         let batch = manifest.artifact(&format!("{model}_{variant}_infer"))?.batch;
@@ -113,24 +131,43 @@ fn main() -> Result<()> {
 
         let unbatched =
             reupload_unbatched_fps(&manifest, &model, variant, &params, reqs)?;
-        let batched_reupload =
-            served_fps(&manifest, &model, variant, params.clone(), reqs, true)?;
-        let batched_resident =
-            served_fps(&manifest, &model, variant, params, reqs, false)?;
+        let (batched_reupload, _, _) =
+            served_fps(&manifest, &model, variant, params.clone(), reqs, true, false)?;
+        let (batched_resident, res_uploads, res_fallbacks) =
+            served_fps(&manifest, &model, variant, params.clone(), reqs, false, false)?;
+        let (batched_pipelined, pipe_uploads, pipe_fallbacks) =
+            served_fps(&manifest, &model, variant, params, reqs, false, true)?;
         if variant != "orig" && batched_resident <= batched_reupload {
             resident_beats_reupload = false;
         }
+        if batched_pipelined < 0.9 * batched_resident {
+            pipelined_keeps_up = false;
+        }
         println!(
             "{variant}: unbatched {unbatched:.0} | batched+reupload {batched_reupload:.0} | \
-             batched+resident {batched_resident:.0} fps"
+             batched+resident {batched_resident:.0} | pipelined {batched_pipelined:.0} fps \
+             | uploads {res_uploads}/{pipe_uploads}"
         );
         rows.push(vec![
             variant.to_string(),
             format!("{unbatched:.0}"),
             format!("{batched_reupload:.0}"),
             format!("{batched_resident:.0}"),
-            fmt_delta_pct(batched_reupload, batched_resident),
+            format!("{batched_pipelined:.0}"),
+            fmt_delta_pct(batched_resident, batched_pipelined),
+            format!("{res_uploads}/{pipe_uploads}"),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("reupload_unbatched_fps", Json::num(unbatched)),
+            ("reupload_batched_fps", Json::num(batched_reupload)),
+            ("resident_batched_fps", Json::num(batched_resident)),
+            ("pipelined_fps", Json::num(batched_pipelined)),
+            ("uploads_resident", Json::int(res_uploads as i64)),
+            ("uploads_pipelined", Json::int(pipe_uploads as i64)),
+            ("demux_fallbacks_resident", Json::int(res_fallbacks as i64)),
+            ("demux_fallbacks_pipelined", Json::int(pipe_fallbacks as i64)),
+        ]));
     }
 
     let t = table(&rows);
@@ -140,6 +177,18 @@ fn main() -> Result<()> {
          lrd+rankopt: {}",
         if resident_beats_reupload { "YES" } else { "NO (check machine load)" }
     );
+    println!(
+        "streaming admission keeps up with (or beats) the lockstep resident loop: {}",
+        if pipelined_keeps_up { "YES" } else { "NO (check machine load)" }
+    );
     write_report("results/serve_throughput.txt", &t);
+    let section = Json::obj(vec![
+        ("model", Json::str(model.as_str())),
+        ("rows", Json::arr(json_rows)),
+        ("pipelined_keeps_up", Json::Bool(pipelined_keeps_up)),
+    ]);
+    write_json_section("results/serve_throughput.json", "serve", section.clone());
+    write_json_section("results/BENCH_pipeline.json", "serve", section);
+    println!("serve_throughput bench OK");
     Ok(())
 }

@@ -20,7 +20,7 @@ use lrta::models::zoo::{paper_plan, resnet_full};
 use lrta::models::Method;
 use lrta::runtime::{tensor_to_literal, Manifest, Runtime};
 use lrta::train::Engine;
-use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::bench::{fmt_delta_pct, runtime_counters_json, table, write_json_section, write_report};
 
 /// Fraction of the *dense* model's layer time spent in work decomposition
 /// cannot touch (norms, activations, optimizer update, data pipeline,
@@ -186,5 +186,6 @@ fn main() {
     let measured = measured_table(&rt, &manifest).expect("measured table");
     println!("\n{measured}");
     write_report("results/table1_measured.txt", &measured);
+    write_json_section("results/bench_counters.json", "table1", runtime_counters_json(&rt));
     println!("table1 bench OK");
 }

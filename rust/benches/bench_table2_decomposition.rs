@@ -19,7 +19,7 @@ use lrta::models::zoo::{paper_plan, resnet_full};
 use lrta::rankopt::{optimize_rank, PjrtTimer, RankOptConfig};
 use lrta::runtime::Runtime;
 use lrta::tensor::Tensor;
-use lrta::util::bench::{table, write_report};
+use lrta::util::bench::{runtime_counters_json, table, write_json_section, write_report};
 use lrta::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -102,5 +102,6 @@ fn main() {
     println!("shape to match (paper Table 2): rank-opt > vanilla = freezing,");
     println!("all growing with depth; overhead minutes-scale vs hours of training.");
     write_report("results/table2.txt", &t);
+    write_json_section("results/bench_counters.json", "table2", runtime_counters_json(&rt));
     println!("table2 bench OK");
 }

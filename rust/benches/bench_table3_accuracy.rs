@@ -15,7 +15,7 @@ use lrta::coordinator::{
 use lrta::freeze::FreezeMode;
 use lrta::models::Method;
 use lrta::runtime::{Manifest, Runtime};
-use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::bench::{fmt_delta_pct, runtime_counters_json, table, write_json_section, write_report};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -65,6 +65,7 @@ fn main() {
             seed: 0,
             verbose: false,
             resident: true,
+            pipelined: true,
         };
         let mut trainer = Trainer::new(&rt, &manifest, cfg, params).expect("trainer");
         let record = trainer.run().expect("train");
@@ -104,5 +105,6 @@ fn main() {
     println!("RankOpt ≳ Freezing ≳ Combined with small gaps; speed-up ordering");
     println!("Combined > RankOpt ≈ Freezing > LRD > 0.");
     write_report("results/table3.txt", &t);
+    write_json_section("results/bench_counters.json", "table3", runtime_counters_json(&rt));
     println!("table3 bench OK");
 }

@@ -18,7 +18,7 @@ use lrta::lrd::plan::RankMode;
 use lrta::models::zoo::{paper_plan, vit_b16};
 use lrta::models::Method;
 use lrta::runtime::{Manifest, Runtime};
-use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::bench::{fmt_delta_pct, runtime_counters_json, table, write_json_section, write_report};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -106,6 +106,7 @@ fn main() {
             seed: 0,
             verbose: false,
             resident: true,
+            pipelined: true,
         };
         let mut trainer = Trainer::new(&rt, &manifest, cfg, params).expect("trainer");
         let record = trainer.run().expect("train");
@@ -134,5 +135,6 @@ fn main() {
     let t = table(&rows);
     println!("\n{t}");
     write_report("results/table4.txt", &t);
+    write_json_section("results/bench_counters.json", "table4", runtime_counters_json(&rt));
     println!("table4 bench OK");
 }

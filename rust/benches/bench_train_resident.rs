@@ -1,18 +1,24 @@
-//! Resident-vs-roundtrip training throughput — the tentpole claim of the
-//! `lrta::train` engine, per variant × freeze mode:
+//! Resident-vs-roundtrip-vs-pipelined training throughput — the tentpole
+//! claims of the `lrta::train` engine, per variant × freeze mode:
 //!
 //!   - **literal** — `run_train_step`: every parameter and momentum tensor
 //!     crosses the host/device boundary on every step (the old hot loop,
 //!     kept as the `--no-resident` baseline);
-//!   - **resident** — `train::Engine`: params/momenta uploaded once, steps
-//!     chained buffer-to-buffer, only the batch (`x`, `y`) and the cached
-//!     `lr` scalar go up, only the loss/correct scalars come down.
+//!   - **resident** — `train::Engine::run_epoch`: params/momenta uploaded
+//!     once, steps chained buffer-to-buffer, only the batch (`x`, `y`) and
+//!     the cached `lr` scalar go up; loss/correct sync per step (2 scalars);
+//!   - **pipelined** — `train::Engine::run_epoch_pipelined`: the overlapped
+//!     loop on top of residency — batch N+1 uploads while step N executes
+//!     (split dispatch/fetch), metrics accumulate on device and sync once
+//!     per epoch.
 //!
-//! Sequential-freeze cases run half the steps under pattern "a", re-bind,
-//! and finish under "b" — the bench reports host→device transfers beyond
-//! the per-step x/y data (must be 0: swaps re-bind, steps chain) and any
-//! demux fallbacks the backend forced.
-//! Output: results/train_resident.txt
+//! Sequential-freeze cases run one epoch under pattern "a", re-bind, and one
+//! under "b". The bench reports host→device transfers beyond the per-step
+//! x/y data (must be 0 for resident; pipelined additionally pays the
+//! documented per-epoch accumulator reset), counted host fetches (2/step
+//! serial vs 1/epoch pipelined), and any demux fallbacks.
+//! Output: results/train_resident.txt + results/train_resident.json and a
+//! `train` section in results/BENCH_pipeline.json.
 //!
 //! Env: LRTA_MODEL (default resnet_mini), LRTA_TRAIN_BENCH_STEPS
 //! (steps per measurement per pattern, default 4)
@@ -20,10 +26,14 @@
 use lrta::checkpoint;
 use lrta::coordinator::{decompose_checkpoint, run_train_step, zero_momenta};
 use lrta::data::Dataset;
-use lrta::metrics::ThroughputMeter;
 use lrta::runtime::{ArtifactMeta, Executable, Manifest, Runtime};
 use lrta::train::Engine;
-use lrta::util::bench::{fmt_delta_pct, table, write_report};
+use lrta::util::bench::{
+    fmt_delta_pct, runtime_counters_json, table, write_json_section, write_report,
+};
+use lrta::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -59,11 +69,16 @@ fn main() -> anyhow::Result<()> {
         "Freeze".to_string(),
         "literal fps".to_string(),
         "resident fps".to_string(),
-        "Δ resident".to_string(),
+        "pipelined fps".to_string(),
+        "Δ pipelined".to_string(),
         "extra uploads".to_string(),
+        "fetches (res/pipe)".to_string(),
     ]];
+    let mut json_rows = Vec::new();
     let mut resident_wins_lrd = true;
+    let mut pipelined_keeps_up = true;
     let mut swaps_clean = true;
+    let mut metric_fetch_budget_held = true;
 
     for variant in ["orig", "lrd", "rankopt"] {
         let params = if variant == "orig" {
@@ -79,82 +94,139 @@ fn main() -> anyhow::Result<()> {
         for (freeze, suffixes) in cases {
             let exes = load_patterns(&rt, &manifest, &model, variant, suffixes)?;
             let batch = exes[0].1.batch;
-            let data = Dataset::synthetic(batch * 2, 5);
+            // one "epoch" of `steps` batches per pattern
+            let data = Arc::new(Dataset::synthetic(batch * steps, 5));
+            let samples = (batch * steps * exes.len()) as f64;
             let (xs, ys) = data.batch(0, batch);
 
-            // literal round-trip baseline
+            // --- literal round-trip baseline ------------------------------
             let mut p = params.clone();
             let mut mom = zero_momenta(&p);
             run_train_step(&exes[0].0, exes[0].1, &mut p, &mut mom, &xs, &ys, 1e-3)?; // warmup
-            let mut lit_meter = ThroughputMeter::new(batch);
+            let t0 = Instant::now();
             for (exe, meta) in &exes {
-                for _ in 0..steps {
-                    let t0 = std::time::Instant::now();
-                    run_train_step(exe, meta, &mut p, &mut mom, &xs, &ys, 1e-3)?;
-                    lit_meter.record(t0.elapsed().as_secs_f64());
+                for bi in 0..steps {
+                    let (bxs, bys) = data.batch(bi * batch, batch);
+                    run_train_step(exe, meta, &mut p, &mut mom, &bxs, &bys, 1e-3)?;
                 }
             }
+            let lit_fps = samples / t0.elapsed().as_secs_f64();
 
-            // resident buffer-chained engine; the a→b transition between
-            // the pattern blocks is the epoch-boundary rebind. Extra
-            // transfers are measured at the runtime's upload channel —
-            // every host→device transfer flows through it, so the measured
-            // window may contain exactly the x/y data uploads (the lr
-            // scalar is cached at warmup) and nothing else; any swap
-            // re-upload or demux fallback shows up as a surplus.
+            // --- resident serial engine -----------------------------------
+            // warmup epoch compiles the upload executables and caches lr;
+            // the a→b transition between pattern blocks is the
+            // epoch-boundary rebind. Extra transfers are measured at the
+            // runtime's upload channel — the measured window may contain
+            // exactly the per-step x/y data uploads and nothing else.
             let mut engine = Engine::upload(&rt, &params, &zero_momenta(&params))?;
-            engine.step(&exes[0].0, exes[0].1, &xs, &ys, 1e-3)?; // warmup
+            engine.run_epoch(&exes[0].0, exes[0].1, &data, 5, 1e-3)?; // warmup
             let uploads0 = rt.uploads();
-            let mut res_meter = ThroughputMeter::new(batch);
+            let fetches0 = rt.fetches();
+            let t0 = Instant::now();
             for (exe, meta) in &exes {
                 engine.state().rebind_for(meta)?;
-                for _ in 0..steps {
-                    let t0 = std::time::Instant::now();
-                    engine.step(exe, meta, &xs, &ys, 1e-3)?;
-                    res_meter.record(t0.elapsed().as_secs_f64());
-                }
+                engine.run_epoch(exe, meta, &data, 5, 1e-3)?;
             }
+            let res_fps = samples / t0.elapsed().as_secs_f64();
             let data_uploads = exes.len() * steps * 2; // x + y per step
             let swap_uploads = rt.uploads() - uploads0 - data_uploads;
+            let res_fetches = rt.fetches() - fetches0;
 
-            let (lit_fps, res_fps) = (lit_meter.fps(), res_meter.fps());
+            // --- pipelined engine -----------------------------------------
+            // same state-residency story plus overlap; the accumulator's
+            // mask/zero uploads are the only transfers beyond x/y:
+            // 2 masks once (lazy create in the warmup epoch) + 1 zero-reset
+            // per epoch.
+            let mut engine = Engine::upload(&rt, &params, &zero_momenta(&params))?;
+            engine.run_epoch_pipelined(&exes[0].0, exes[0].1, &data, 5, 1e-3)?; // warmup
+            let uploads0 = rt.uploads();
+            let fetches0 = rt.fetches();
+            let t0 = Instant::now();
+            for (exe, meta) in &exes {
+                engine.state().rebind_for(meta)?;
+                engine.run_epoch_pipelined(exe, meta, &data, 5, 1e-3)?;
+            }
+            let pipe_fps = samples / t0.elapsed().as_secs_f64();
+            let pipe_extra = rt.uploads() - uploads0 - data_uploads - exes.len(); // - resets
+            let pipe_fetches = rt.fetches() - fetches0;
+
             if variant != "orig" && res_fps <= lit_fps {
                 resident_wins_lrd = false;
             }
-            if swap_uploads != 0 {
+            if pipe_fps < 0.9 * res_fps {
+                pipelined_keeps_up = false;
+            }
+            if swap_uploads != 0 || pipe_extra != 0 {
                 swaps_clean = false;
             }
+            // the tentpole's accounting claim: 2 scalars per step serial,
+            // one metrics fetch per epoch pipelined
+            if res_fetches != exes.len() * steps * 2 || pipe_fetches != exes.len() {
+                metric_fetch_budget_held = false;
+            }
             println!(
-                "{variant:<8} {freeze:<10} literal {lit_fps:.1} fps | resident {res_fps:.1} fps \
-                 | extra uploads {swap_uploads}"
+                "{variant:<8} {freeze:<10} literal {lit_fps:.1} | resident {res_fps:.1} | \
+                 pipelined {pipe_fps:.1} fps | extra uploads {swap_uploads}+{pipe_extra} | \
+                 fetches {res_fetches}/{pipe_fetches}"
             );
             rows.push(vec![
                 variant.to_string(),
                 freeze.to_string(),
                 format!("{lit_fps:.1}"),
                 format!("{res_fps:.1}"),
-                fmt_delta_pct(lit_fps, res_fps),
-                format!("{swap_uploads}"),
+                format!("{pipe_fps:.1}"),
+                fmt_delta_pct(res_fps, pipe_fps),
+                format!("{swap_uploads}+{pipe_extra}"),
+                format!("{res_fetches}/{pipe_fetches}"),
             ]);
+            json_rows.push(Json::obj(vec![
+                ("variant", Json::str(variant)),
+                ("freeze", Json::str(*freeze)),
+                ("literal_fps", Json::num(lit_fps)),
+                ("resident_fps", Json::num(res_fps)),
+                ("pipelined_fps", Json::num(pipe_fps)),
+                ("extra_uploads_resident", Json::int(swap_uploads as i64)),
+                ("extra_uploads_pipelined", Json::int(pipe_extra as i64)),
+                ("fetches_resident", Json::int(res_fetches as i64)),
+                ("fetches_pipelined", Json::int(pipe_fetches as i64)),
+            ]));
         }
     }
 
     let t = table(&rows);
-    println!("\n{model} training throughput (resident vs literal round-trip):\n{t}");
+    println!("\n{model} training throughput (literal vs resident vs pipelined):\n{t}");
     println!(
         "buffer-chained stepping beats the literal round-trip for lrd+rankopt: {}",
         if resident_wins_lrd { "YES" } else { "NO (check machine load)" }
     );
     println!(
-        "resident runs performed zero host→device transfers beyond the per-step x/y data \
-         (swaps re-bound, steps chained): {}",
+        "pipelined epochs keep up with (or beat) the serial resident loop: {}",
+        if pipelined_keeps_up { "YES" } else { "NO (check machine load)" }
+    );
+    println!(
+        "zero host→device transfers beyond per-step x/y data (+1 accumulator reset \
+         per pipelined epoch): {}",
         if swaps_clean { "YES" } else { "NO" }
+    );
+    println!(
+        "host-sync budget held (2 scalars/step serial, 1 fetch/epoch pipelined): {}",
+        if metric_fetch_budget_held { "YES" } else { "NO" }
     );
     println!(
         "demux fallbacks (host round-trips forced by the backend): {}",
         rt.demux_fallbacks()
     );
     write_report("results/train_resident.txt", &t);
+    let section = Json::obj(vec![
+        ("model", Json::str(model.as_str())),
+        ("steps_per_pattern", Json::int(steps as i64)),
+        ("rows", Json::arr(json_rows)),
+        ("runtime", runtime_counters_json(&rt)),
+        ("pipelined_keeps_up", Json::Bool(pipelined_keeps_up)),
+        ("fetch_budget_held", Json::Bool(metric_fetch_budget_held)),
+    ]);
+    write_json_section("results/train_resident.json", "train", section.clone());
+    write_json_section("results/BENCH_pipeline.json", "train", section);
     println!("train_resident bench OK");
     Ok(())
 }

@@ -8,9 +8,13 @@
 //! Stepping itself is delegated: by default the trainer drives the
 //! device-resident engine ([`crate::train::Engine`] — params/momenta
 //! uploaded once, steps chained buffer-to-buffer, pattern swaps re-bound
-//! in place); `TrainConfig::resident = false` keeps the original
-//! host-literal round-trip loop ([`run_train_step`]) as the measurable
-//! baseline (`lrta train --no-resident`, `bench_train_resident`).
+//! in place) through its *pipelined* epoch driver (double-buffered batch
+//! uploads, on-device metric accumulation, per-epoch eval overlapped on a
+//! side thread whose results join at the next epoch boundary);
+//! `TrainConfig::pipelined = false` falls back to the serial resident loop
+//! and `TrainConfig::resident = false` to the original host-literal
+//! round-trip loop ([`run_train_step`]) — both measurable baselines
+//! (`lrta train --no-pipeline` / `--no-resident`, `bench_train_resident`).
 
 pub mod decompose;
 
@@ -66,6 +70,12 @@ pub struct TrainConfig {
     /// and momenta uploaded once, steps chained buffer-to-buffer. `false`
     /// restores the literal round-trip baseline (`--no-resident`).
     pub resident: bool,
+    /// Overlapped execution on the resident engine (`--no-pipeline` turns
+    /// it off): double-buffered batch uploads + split dispatch/fetch,
+    /// on-device epoch-metric accumulation (one host fetch per epoch), and
+    /// per-epoch eval on a snapshot via a side thread while the next
+    /// epoch's steps run. Ignored when `resident` is off.
+    pub pipelined: bool,
 }
 
 impl Default for TrainConfig {
@@ -81,6 +91,7 @@ impl Default for TrainConfig {
             seed: 0,
             verbose: false,
             resident: true,
+            pipelined: true,
         }
     }
 }
@@ -150,7 +161,13 @@ impl<'rt> Trainer<'rt> {
 
         let momenta = zero_momenta(&params);
         let engine = if cfg.resident {
-            Some(train::Engine::upload(rt, &params, &momenta)?)
+            let mut engine = train::Engine::upload(rt, &params, &momenta)?;
+            if cfg.pipelined {
+                // prefer the AOT-lowered metrics_acc artifact when the
+                // manifest carries one; the builder form is the fallback
+                engine.attach_metrics(train::MetricsAccumulator::create(rt, Some(manifest))?);
+            }
+            Some(engine)
         } else {
             None
         };
@@ -178,11 +195,23 @@ impl<'rt> Trainer<'rt> {
     pub fn run(&mut self) -> Result<RunRecord> {
         let fallbacks_before = self.rt.demux_fallbacks();
         let train_data = Arc::new(Dataset::synthetic(self.cfg.train_size, self.cfg.seed));
-        let test = Dataset::synthetic(self.cfg.test_size, self.cfg.seed ^ 0xDEAD_BEEF);
+        let test = Arc::new(Dataset::synthetic(self.cfg.test_size, self.cfg.seed ^ 0xDEAD_BEEF));
         let mut record = RunRecord::new(format!(
             "{}_{}_{:?}",
             self.cfg.model, self.cfg.variant, self.cfg.freeze
         ));
+        let pipelined = self.cfg.pipelined && self.engine.is_some();
+        // overlapped eval: the worker owns its own PJRT client and compiles
+        // the infer artifact on its thread — even that overlaps epoch 0
+        let mut eval_worker = if pipelined {
+            Some(train::EvalWorker::spawn(
+                self.manifest.hlo_path(&self.infer_meta),
+                self.infer_meta.clone(),
+                Arc::clone(&test),
+            ))
+        } else {
+            None
+        };
 
         for epoch in 0..self.cfg.epochs {
             let lr = self.cfg.lr.lr_at(epoch);
@@ -206,7 +235,11 @@ impl<'rt> Trainer<'rt> {
                 // — re-bind the resident buffers to the new slot layout
                 // (pure permutation; uploads nothing)
                 engine.state().rebind_for(meta)?;
-                let stats = engine.run_epoch(exe, meta, &train_data, epoch_seed, lr)?;
+                let stats = if pipelined {
+                    engine.run_epoch_pipelined(exe, meta, &train_data, epoch_seed, lr)?
+                } else {
+                    engine.run_epoch(exe, meta, &train_data, epoch_seed, lr)?
+                };
                 (stats.meter, stats.loss, stats.train_acc)
             } else {
                 let mut meter = ThroughputMeter::new(batch);
@@ -235,11 +268,20 @@ impl<'rt> Trainer<'rt> {
                 (meter, loss, correct_sum / samples.max(1) as f64)
             };
 
-            // eval is a semantically-required host sync point — but the
-            // resident path still runs it on the device-resident params
-            let test_acc = match &self.engine {
-                Some(engine) => engine.evaluate(&self.infer_exe, &self.infer_meta, &test)?,
-                None => self.evaluate(&test)?,
+            // eval is a semantically-required host sync point. Overlapped
+            // mode hands a parameter snapshot to the side-thread worker and
+            // keeps going (the accuracy lands in the record at the next
+            // epoch boundary / end-of-run join); the serial paths evaluate
+            // inline as before.
+            let test_acc = match (&mut eval_worker, &self.engine) {
+                (Some(worker), Some(engine)) => {
+                    worker.submit(epoch, engine.state().params.download()?)?;
+                    f64::NAN // placeholder until the worker reports back
+                }
+                (_, Some(engine)) => {
+                    engine.evaluate(&self.infer_exe, &self.infer_meta, &test)?
+                }
+                (_, None) => self.evaluate(&test)?,
             };
             let rec = EpochRecord {
                 epoch,
@@ -250,13 +292,44 @@ impl<'rt> Trainer<'rt> {
                 freeze_pattern: pattern.clone(),
             };
             if self.cfg.verbose {
+                let acc_col = if test_acc.is_nan() {
+                    "pending".to_string()
+                } else {
+                    format!("{test_acc:.3}")
+                };
                 println!(
-                    "[{}] epoch {:>3} pattern={} lr={:.5} loss={:.4} train_acc={:.3} test_acc={:.3} step={:.1}ms fps={:.0}",
-                    record.name, epoch, pattern, lr, rec.loss, rec.train_acc, rec.test_acc,
+                    "[{}] epoch {:>3} pattern={} lr={:.5} loss={:.4} train_acc={:.3} test_acc={} step={:.1}ms fps={:.0}",
+                    record.name, epoch, pattern, lr, rec.loss, rec.train_acc, acc_col,
                     rec.step_secs * 1e3, meter.fps()
                 );
             }
             record.epochs.push(rec);
+            // join point: absorb whatever the eval worker finished while
+            // this epoch ran (the "next freeze-pattern swap" boundary)
+            if let Some(worker) = &mut eval_worker {
+                for (e, acc) in worker.try_collect()? {
+                    record.epochs[e].test_acc = acc;
+                    if self.cfg.verbose {
+                        println!(
+                            "[{}] epoch {e:>3} test_acc={acc:.3} (overlapped eval)",
+                            record.name
+                        );
+                    }
+                }
+            }
+        }
+        // end-of-run join: every submitted epoch must report before the
+        // record leaves this function
+        if let Some(worker) = &mut eval_worker {
+            for (e, acc) in worker.drain()? {
+                record.epochs[e].test_acc = acc;
+                if self.cfg.verbose {
+                    println!(
+                        "[{}] epoch {e:>3} test_acc={acc:.3} (overlapped eval)",
+                        record.name
+                    );
+                }
+            }
         }
 
         // final host sync: the resident engine held the authoritative state
@@ -380,6 +453,7 @@ pub fn ensure_pretrained(
         seed,
         verbose: true,
         resident: true,
+        pipelined: true,
     };
     let init = crate::checkpoint::load(manifest.init_checkpoint(model)?)?;
     let mut trainer = Trainer::new(rt, manifest, cfg, init)?;
@@ -513,5 +587,8 @@ mod tests {
         assert!(c.train_size >= c.test_size);
         // the resident engine is the default; --no-resident is the baseline
         assert!(c.resident);
+        // overlapped execution is the default; --no-pipeline is the
+        // serial-resident baseline
+        assert!(c.pipelined);
     }
 }

@@ -31,6 +31,16 @@
 //!   running system (`lrta train`, `bench_train_resident`; the literal
 //!   round-trip loop survives as the `--no-resident` baseline).
 //!
+//! Both subsystems execute through the **overlapped pipeline layer**
+//! ([`runtime::pipeline`], default; `--no-pipeline` restores the serial
+//! loops): executions split into non-blocking dispatch + demuxing fetch so
+//! batch N+1's data uploads while batch N computes, training epoch metrics
+//! accumulate in a device-resident buffer (one host fetch per epoch instead
+//! of two scalars per step), per-epoch eval runs on a parameter snapshot on
+//! a side thread, and serving admits/uploads the next batch while the
+//! current one executes — all bit-identical to the serial paths by
+//! construction, asserted in the integration suites.
+//!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
 

@@ -40,10 +40,12 @@ SUBCOMMANDS
   decompose --model M --variant V --ckpt F --out F
   train     --model M --variant V --freeze {none|regular|sequential}
             --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
+            [--no-pipeline]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
             [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
+            [--no-pipeline]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -54,13 +56,18 @@ COMMON
   --seed N          (default 0)
   --no-resident     train through the host-literal round-trip baseline
                     instead of the device-resident buffer-chained engine
+  --no-pipeline     disable overlapped execution (double-buffered batch
+                    uploads, split dispatch/fetch, on-device epoch metrics,
+                    side-thread eval / streaming admission) and run the
+                    serial resident loops instead
 
 SERVE
   Starts one engine per variant (parameters uploaded once and kept
   device-resident; --reupload restores the old per-batch upload as a
-  measurable baseline), drives a synthetic closed-loop load through the
-  router (--burst switches to an open-loop burst that keeps batches
-  full), and prints per-variant fps + latency percentiles.
+  measurable baseline; streaming admission uploads batch N+1 while N
+  executes unless --no-pipeline), drives a synthetic closed-loop load
+  through the router (--burst switches to an open-loop burst that keeps
+  batches full), and prints per-variant fps + latency percentiles.
 ";
 
 fn main() {
@@ -76,6 +83,7 @@ fn run() -> Result<()> {
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
+        "no-pipeline",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -136,6 +144,7 @@ fn base_config(args: &Args) -> TrainConfig {
         seed: args.u64_or("seed", 0),
         verbose: args.bool_or("verbose", true),
         resident: !args.bool_or("no-resident", false),
+        pipelined: !args.bool_or("no-pipeline", false),
     }
 }
 
@@ -253,13 +262,20 @@ fn serve(args: &Args) -> Result<()> {
         queue_depth: args.usize_or("depth", 0),
         max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
         reupload: args.bool_or("reupload", false),
+        pipelined: !args.bool_or("no-pipeline", false),
         spot_check: args.usize_or("spot-check", 128),
         ..Default::default()
     };
     println!(
         "serving {model} [{}] params={} requests={requests} {} ...",
         variants.join(", "),
-        if cfg.reupload { "reupload-per-batch" } else { "device-resident" },
+        if cfg.reupload {
+            "reupload-per-batch"
+        } else if cfg.pipelined {
+            "device-resident+pipelined"
+        } else {
+            "device-resident"
+        },
         if burst { "burst".to_string() } else { format!("concurrency={concurrency}") },
     );
     let server = Server::start(&m, specs, &cfg)?;

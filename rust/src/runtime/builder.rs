@@ -16,6 +16,34 @@
 use anyhow::Result;
 use xla::ElementType;
 
+/// The on-device metric-accumulation computation of the pipelined training
+/// engine: `acc' = acc + loss·e_loss + correct·e_correct` over a resident
+/// `[2]` accumulator (`[loss_sum, correct_sum]`).
+///
+/// `e_loss = [1, 0]` and `e_correct = [0, 1]` arrive as parameters uploaded
+/// once (constants would need literal-embedding APIs this builder never
+/// relies on), and the scalar×mask products broadcast implicitly (XLA binary
+/// ops broadcast rank-0 operands). Because the masks are exactly 0/1, each
+/// lane reduces to one IEEE f32 add of the raw scalar — the device-side
+/// accumulation is bit-identical to summing the same scalars in f32 on the
+/// host, which is what makes the pipelined epoch's metrics exactly
+/// comparable to the serial engine's (pinned in
+/// `integration_train_resident`).
+///
+/// Input order (shared with the AOT-lowered `metrics_acc` artifact from
+/// `python/compile/aot.py`): `(acc[2], loss[], correct[], e_loss[2],
+/// e_correct[2]) -> acc'[2]`.
+pub fn metrics_accumulate_computation() -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("metrics_acc");
+    let acc = b.parameter(0, ElementType::F32, &[2], "acc")?;
+    let loss = b.parameter(1, ElementType::F32, &[], "loss")?;
+    let correct = b.parameter(2, ElementType::F32, &[], "correct")?;
+    let e_loss = b.parameter(3, ElementType::F32, &[2], "e_loss")?;
+    let e_correct = b.parameter(4, ElementType::F32, &[2], "e_correct")?;
+    let out = acc.add_(&e_loss.mul_(&loss)?)?.add_(&e_correct.mul_(&correct)?)?;
+    Ok(out.build()?)
+}
+
 /// A decomposable layer's micro-benchmark spec: spatial positions `m`
 /// (batch·H·W), input channels `c`, output channels `s`, kernel `k`.
 #[derive(Clone, Copy, Debug)]

@@ -9,6 +9,7 @@
 
 pub mod builder;
 pub mod manifest;
+pub mod pipeline;
 
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
@@ -19,6 +20,7 @@ use std::rc::Rc;
 use std::time::Instant;
 
 pub use manifest::{ArtifactMeta, LayerCfg, Manifest, ParamSlot};
+pub use pipeline::{DoubleBuffered, InFlight};
 
 /// Shared PJRT client + executable cache.
 pub struct Runtime {
@@ -37,6 +39,13 @@ pub struct Runtime {
     /// per-step data crossed the boundary" exactly (see
     /// `integration_train_resident`).
     uploads: Cell<usize>,
+    /// Counted device→host syncs through [`Runtime::fetch_scalar`] /
+    /// [`Runtime::fetch_f32s`] — the training hot path's semantically
+    /// required host syncs route through these so tests can assert the
+    /// pipelined engine really dropped from 2 scalar syncs per step to one
+    /// metrics fetch per epoch. Syncs outside the step/metric path (eval
+    /// logits, checkpoint downloads) intentionally do not count.
+    fetches: Cell<usize>,
 }
 
 impl Runtime {
@@ -50,6 +59,7 @@ impl Runtime {
             upload_exes: RefCell::new(HashMap::new()),
             demux_fallbacks: Cell::new(0),
             uploads: Cell::new(0),
+            fetches: Cell::new(0),
         })
     }
 
@@ -143,6 +153,30 @@ impl Runtime {
     pub fn uploads(&self) -> usize {
         self.uploads.get()
     }
+
+    /// Counted device→host syncs on the step/metric path so far (see the
+    /// field docs: eval/checkpoint downloads are deliberately outside this).
+    pub fn fetches(&self) -> usize {
+        self.fetches.get()
+    }
+
+    /// Sync a scalar f32 buffer to host, counting the fetch — the per-step
+    /// loss/correct syncs of the serial resident engine go through here.
+    pub fn fetch_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
+        self.fetches.set(self.fetches.get() + 1);
+        download_scalar(buf)
+    }
+
+    /// Sync a small f32 vector buffer to host, counting the fetch — the
+    /// once-per-epoch metrics-accumulator download of the pipelined engine.
+    pub fn fetch_f32s(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        self.fetches.set(self.fetches.get() + 1);
+        let mut lits = Executable::buffer_to_literals(buf)?;
+        if lits.len() != 1 {
+            bail!("fetch_f32s expects a single-array buffer, got {} leaves", lits.len());
+        }
+        Ok(lits.swap_remove(0).to_vec::<f32>()?)
+    }
 }
 
 /// A compiled executable plus metadata.
@@ -203,43 +237,18 @@ impl Executable {
     /// hot path: step N's output buffers (new params, new momenta) feed
     /// step N+1 with no host transfer.
     ///
-    /// A PJRT backend that untuples tuple roots already hands back one
-    /// buffer per leaf, which passes through untouched. If the backend
-    /// returns a single packed tuple buffer instead, fall back to a host
-    /// decompose + per-leaf re-upload (correct, but it round-trips the
-    /// step state) and count it on the [`Runtime`] so benches and tests can
-    /// assert the fast path actually ran.
+    /// This is the fused form of the split pair
+    /// [`Executable::dispatch_buffers`] → [`pipeline::InFlight::fetch`];
+    /// engines that want to overlap work between the two halves call them
+    /// directly (see [`pipeline`]). Demux semantics and the
+    /// packed-tuple-fallback accounting live in `InFlight::fetch`.
     pub fn run_buffers_demux<B: std::borrow::Borrow<xla::PjRtBuffer>>(
         &self,
         rt: &Runtime,
         inputs: &[B],
         expected: usize,
     ) -> Result<Vec<xla::PjRtBuffer>> {
-        let outs = self.run_buffers(inputs)?;
-        if outs.len() == expected {
-            return Ok(outs);
-        }
-        if outs.len() == 1 && expected > 1 {
-            rt.demux_fallbacks.set(rt.demux_fallbacks.get() + 1);
-            let lits = Self::buffer_to_literals(&outs[0])?;
-            if lits.len() != expected {
-                bail!(
-                    "'{}' returned {} outputs, expected {expected}",
-                    self.name,
-                    lits.len()
-                );
-            }
-            let mut bufs = Vec::with_capacity(expected);
-            for lit in &lits {
-                bufs.push(rt.upload(lit)?);
-            }
-            return Ok(bufs);
-        }
-        bail!(
-            "'{}' returned {} output buffers, expected {expected}",
-            self.name,
-            outs.len()
-        )
+        self.dispatch_buffers(inputs, expected)?.fetch(rt)
     }
 
     /// Sync one output buffer to host and flatten it, mirroring the output

@@ -1,0 +1,195 @@
+//! Overlapped execution primitives: split dispatch/fetch and double-buffered
+//! staging.
+//!
+//! PJRT executes asynchronously — `execute_b` enqueues the computation and
+//! returns output buffer handles immediately; only a host sync
+//! (`to_literal_sync`) blocks. The monolithic
+//! [`Executable::run_buffers_demux`] hid that: callers got the output
+//! buffers back only bundled with the demux bookkeeping, so every engine
+//! loop was written dispatch-then-immediately-consume. This module splits
+//! the call into its two halves so engines can put work *between* them:
+//!
+//! ```text
+//!   let inflight = exe.dispatch_buffers(&inputs, n)?;  // non-blocking
+//!   /* overlap window: upload batch N+1, coalesce requests, ... */
+//!   let outs = inflight.fetch(&rt)?;                   // demux (+ fallback)
+//! ```
+//!
+//! [`DoubleBuffered`] is the companion staging structure: a two-slot queue
+//! holding the uploaded `x`/`y` buffers of the *next* batch while the
+//! current one executes. XLA handles (`PjRtBuffer`, the client `Rc`) are not
+//! `Send`, so there is no upload *thread*: the engine thread itself uploads
+//! into the back slot right after dispatching the current step — the upload
+//! is itself an async PJRT execution, so it proceeds concurrently with the
+//! step on the device side while the host goes back to waiting on results.
+//! (The host-side batch *assembly* does run on a real worker thread — see
+//! [`crate::train::Prefetcher`] — because plain `Vec<f32>`s are `Send`.)
+
+use super::{Executable, Runtime};
+use anyhow::{bail, Result};
+
+/// A dispatched-but-not-yet-consumed execution: the output buffer handles of
+/// an asynchronous `execute_b` call, plus what the demux step will need.
+/// Produced by [`Executable::dispatch_buffers`]; consumed by
+/// [`InFlight::fetch`].
+pub struct InFlight {
+    outs: Vec<xla::PjRtBuffer>,
+    expected: usize,
+    exe_name: String,
+}
+
+impl Executable {
+    /// Non-blocking half of [`Executable::run_buffers_demux`]: enqueue the
+    /// execution and return the in-flight handle. The computation proceeds
+    /// asynchronously; nothing blocks until [`InFlight::fetch`] (or a host
+    /// sync on one of the output buffers).
+    pub fn dispatch_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+        expected: usize,
+    ) -> Result<InFlight> {
+        Ok(InFlight {
+            outs: self.run_buffers(inputs)?,
+            expected,
+            exe_name: self.name.clone(),
+        })
+    }
+}
+
+impl InFlight {
+    /// Blocking half: demux the outputs into exactly `expected` per-leaf
+    /// device buffers.
+    ///
+    /// A PJRT backend that untuples tuple roots already handed back one
+    /// buffer per leaf at dispatch time, so this is a pure hand-over (the
+    /// buffers may still be materializing on device — only a later host
+    /// sync blocks). If the backend returned a single packed tuple buffer
+    /// instead, fall back to a host decompose + per-leaf re-upload (correct,
+    /// but it round-trips the state) and count it on the [`Runtime`] so
+    /// benches and tests can assert the fast path ran.
+    pub fn fetch(self, rt: &Runtime) -> Result<Vec<xla::PjRtBuffer>> {
+        let InFlight { outs, expected, exe_name } = self;
+        if outs.len() == expected {
+            return Ok(outs);
+        }
+        if outs.len() == 1 && expected > 1 {
+            rt.demux_fallbacks.set(rt.demux_fallbacks.get() + 1);
+            let lits = Executable::buffer_to_literals(&outs[0])?;
+            if lits.len() != expected {
+                bail!("'{exe_name}' returned {} outputs, expected {expected}", lits.len());
+            }
+            let mut bufs = Vec::with_capacity(expected);
+            for lit in &lits {
+                bufs.push(rt.upload(lit)?);
+            }
+            return Ok(bufs);
+        }
+        bail!("'{exe_name}' returned {} output buffers, expected {expected}", outs.len())
+    }
+}
+
+/// A two-slot FIFO: the "current" item (consumed by the step about to
+/// dispatch) and the "staged" item (uploaded during the previous step's
+/// overlap window). Generic so the train engine can stage `(x, y)` buffer
+/// pairs and tests can exercise it with plain values.
+pub struct DoubleBuffered<T> {
+    slots: [Option<T>; 2],
+    /// Index of the oldest occupied slot.
+    head: usize,
+    len: usize,
+}
+
+impl<T> Default for DoubleBuffered<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DoubleBuffered<T> {
+    pub fn new() -> Self {
+        DoubleBuffered { slots: [None, None], head: 0, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Is there a free slot to stage into?
+    pub fn has_room(&self) -> bool {
+        self.len < 2
+    }
+
+    /// Stage an item into the back slot. Errors when both slots are
+    /// occupied — the caller's pipeline depth is 2 by construction, so this
+    /// firing means a bookkeeping bug, not load.
+    pub fn stage(&mut self, item: T) -> Result<()> {
+        if !self.has_room() {
+            bail!("DoubleBuffered overflow: both slots occupied");
+        }
+        let back = (self.head + self.len) % 2;
+        self.slots[back] = Some(item);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Take the oldest item (the one whose turn it is to dispatch).
+    pub fn take(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let item = self.slots[self.head].take();
+        self.head = (self.head + 1) % 2;
+        self.len -= 1;
+        item
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn double_buffered_is_fifo() {
+        let mut db = DoubleBuffered::new();
+        assert!(db.is_empty());
+        db.stage(1).unwrap();
+        db.stage(2).unwrap();
+        assert_eq!(db.len(), 2);
+        assert!(!db.has_room());
+        assert_eq!(db.take(), Some(1));
+        db.stage(3).unwrap();
+        assert_eq!(db.take(), Some(2));
+        assert_eq!(db.take(), Some(3));
+        assert_eq!(db.take(), None);
+        assert!(db.is_empty());
+    }
+
+    #[test]
+    fn double_buffered_rejects_third_stage() {
+        let mut db = DoubleBuffered::new();
+        db.stage("a").unwrap();
+        db.stage("b").unwrap();
+        assert!(db.stage("c").is_err());
+        // the failed stage must not corrupt the queue
+        assert_eq!(db.take(), Some("a"));
+        assert_eq!(db.take(), Some("b"));
+        assert_eq!(db.take(), None);
+    }
+
+    #[test]
+    fn double_buffered_steady_state_alternates_slots() {
+        // the pipelined epoch's steady state: one in flight, one staged
+        let mut db = DoubleBuffered::new();
+        db.stage(0).unwrap();
+        for i in 1..10 {
+            let cur = db.take().unwrap();
+            assert_eq!(cur, i - 1);
+            db.stage(i).unwrap();
+            assert_eq!(db.len(), 1);
+        }
+    }
+}

@@ -58,6 +58,18 @@ pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig) -> NextBatch {
     NextBatch::Batch(reqs)
 }
 
+/// Streaming-admission decision point: should the engine keep the current
+/// batch's results in flight and go coalesce the next batch first?
+///
+/// Overlap only pays when there is actually queued work — with an empty
+/// queue the pipelined engine fetches and responds immediately instead of
+/// holding finished results hostage until the next arrival (or the idle
+/// poll). This is the whole latency story of the overlapped engine: burst
+/// traffic pipelines, trickle traffic behaves exactly like the serial loop.
+pub fn has_backlog(queue: &Bounded<Request>) -> bool {
+    !queue.is_empty()
+}
+
 /// Flatten request payloads into one `[batch · item_elems]` buffer in FIFO
 /// order, zero-padding unfilled rows. Returns `(xs, padded_slots)`.
 pub fn assemble(reqs: &[Request], batch: usize, item_elems: usize) -> (Vec<f32>, usize) {
@@ -158,6 +170,16 @@ mod tests {
         assert!(xs[0..ELEMS].iter().all(|&v| v == 1.0));
         assert!(xs[ELEMS..2 * ELEMS].iter().all(|&v| v == 2.0));
         assert!(xs[2 * ELEMS..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn backlog_reflects_queue_depth() {
+        let q = Bounded::new(4);
+        assert!(!has_backlog(&q));
+        q.try_push(req(1.0).0).unwrap();
+        assert!(has_backlog(&q));
+        let _ = q.try_pop();
+        assert!(!has_backlog(&q));
     }
 
     #[test]

@@ -5,13 +5,24 @@
 //! infer artifact once, and — the point of the subsystem — uploads every
 //! parameter to a device-resident buffer **once** at startup. Each batch
 //! then uploads only the fresh `x` and executes against the resident
-//! buffers via [`Executable::run_buffers`], eliminating the per-request
-//! parameter round-trip the old `serve_infer` example paid.
+//! buffers, eliminating the per-request parameter round-trip the old
+//! `serve_infer` example paid.
+//!
+//! **Streaming admission** (default resident mode): the engine splits each
+//! execution into dispatch/fetch halves ([`Executable::dispatch_buffers`] /
+//! [`InFlight::fetch`](crate::runtime::InFlight::fetch)). While batch N
+//! executes asynchronously on the device, the worker goes back to the
+//! batcher, coalesces batch N+1, assembles and uploads it, dispatches it,
+//! and only then fetches N's logits — the queue drains continuously instead
+//! of in lockstep. The overlap engages only when the queue actually has
+//! backlog ([`batcher::has_backlog`]); with no queued work the engine
+//! fetches immediately, so trickle-traffic latency is unchanged.
 //!
 //! `reupload: true` keeps the old behavior measurable as a baseline: every
 //! batch rebuilds all parameter literals from the host tensors and executes
 //! through the host-literal path (`bench_serve_throughput` quantifies the
-//! gap per variant).
+//! gap per variant). `pipelined: false` keeps the serial resident loop as
+//! the second baseline (the PR-2 behavior).
 
 use super::batcher::{self, BatcherConfig, NextBatch};
 use super::queue::Bounded;
@@ -21,7 +32,7 @@ use crate::checkpoint::Params;
 use crate::coordinator::evaluate_with;
 use crate::data::Dataset;
 use crate::runtime::{
-    literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, Runtime,
+    literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, InFlight, Manifest, Runtime,
 };
 use crate::tensor::Tensor;
 use crate::train::ResidentParams;
@@ -42,6 +53,10 @@ pub struct EngineConfig {
     pub idle_poll: Duration,
     /// Baseline mode: re-upload all parameters every batch.
     pub reupload: bool,
+    /// Streaming admission: dispatch batch N, coalesce/upload batch N+1
+    /// while N executes, then fetch N. Resident mode only (the reupload
+    /// baseline stays lockstep by construction).
+    pub pipelined: bool,
     /// If > 0, run a serving-side accuracy spot check over this many
     /// synthetic samples at startup (reuses the coordinator's
     /// [`evaluate_with`]) and record it in the stats.
@@ -86,6 +101,16 @@ pub fn spawn(
             }
         })
         .expect("spawn serve engine thread")
+}
+
+/// One dispatched-but-unfetched batch of the streaming-admission loop: the
+/// requests riding it, the in-flight execution handle, and the host time
+/// already spent assembling/uploading/dispatching it.
+struct InFlightBatch {
+    reqs: Vec<Request>,
+    padded: usize,
+    pending: InFlight,
+    dispatch_secs: f64,
 }
 
 struct Engine {
@@ -144,20 +169,114 @@ impl Engine {
             max_wait: cfg.max_wait,
             idle_poll: cfg.idle_poll,
         };
+        // streaming admission needs resident buffers to dispatch against;
+        // the reupload baseline stays lockstep by construction
+        let pipelined = cfg.pipelined && self.resident.is_some();
+        self.stats.set_transfers(self.rt.uploads() as u64, self.rt.demux_fallbacks() as u64);
+        // at most one batch in flight: the second half of the double buffer
+        // is the batch being coalesced/uploaded in the batcher right now
+        let mut inflight: Option<InFlightBatch> = None;
         loop {
             match batcher::next_batch(queue, &bcfg) {
-                NextBatch::Closed => break,
-                NextBatch::Idle => continue,
-                NextBatch::Batch(reqs) => self.serve_batch(reqs),
+                NextBatch::Closed => {
+                    if let Some(p) = inflight.take() {
+                        self.finish_batch(p);
+                    }
+                    break;
+                }
+                NextBatch::Idle => {
+                    // no traffic: never hold finished results hostage
+                    if let Some(p) = inflight.take() {
+                        self.finish_batch(p);
+                    }
+                }
+                NextBatch::Batch(reqs) => {
+                    if !pipelined {
+                        self.serve_batch(reqs);
+                        continue;
+                    }
+                    let (xs, padded) =
+                        batcher::assemble(&reqs, self.meta.batch, self.item_elems);
+                    let t0 = Instant::now();
+                    match self.dispatch(&xs) {
+                        Ok(pending) => {
+                            // batch N+1 is dispatched (and its x uploaded)
+                            // *before* batch N's results are fetched — the
+                            // device never waits on the host between batches
+                            let staged = InFlightBatch {
+                                reqs,
+                                padded,
+                                pending,
+                                dispatch_secs: t0.elapsed().as_secs_f64(),
+                            };
+                            if let Some(prev) = inflight.replace(staged) {
+                                self.finish_batch(prev);
+                            }
+                            if !batcher::has_backlog(queue) {
+                                // queue drained: respond now instead of
+                                // waiting for the next arrival / idle poll
+                                if let Some(p) = inflight.take() {
+                                    self.finish_batch(p);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            if let Some(p) = inflight.take() {
+                                self.finish_batch(p);
+                            }
+                            self.respond_batch(reqs, padded, 0.0, Err(e));
+                        }
+                    }
+                }
             }
         }
     }
 
+    /// Serial (lockstep) batch service — the reupload baseline and the
+    /// `pipelined: false` resident baseline.
     fn serve_batch(&self, reqs: Vec<Request>) {
         let (xs, padded) = batcher::assemble(&reqs, self.meta.batch, self.item_elems);
         let t0 = Instant::now();
         let result = self.execute(&xs);
         let exec_secs = t0.elapsed().as_secs_f64();
+        self.respond_batch(reqs, padded, exec_secs, result);
+    }
+
+    /// Dispatch one assembled batch against the resident buffers without
+    /// blocking (upload `x`, enqueue the execution).
+    fn dispatch(&self, xs: &[f32]) -> Result<InFlight> {
+        let bufs = self.resident.as_ref().expect("dispatch requires resident buffers");
+        let x_lit = xla::Literal::vec1(xs).reshape(&self.x_dims)?;
+        let x_buf = self.rt.upload(&x_lit)?;
+        let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        refs.push(&x_buf);
+        self.exe.dispatch_buffers(&refs, 1)
+    }
+
+    /// Fetch a dispatched batch's logits and respond to its requests.
+    fn finish_batch(&self, b: InFlightBatch) {
+        let InFlightBatch { reqs, padded, pending, dispatch_secs } = b;
+        let t0 = Instant::now();
+        let result = pending
+            .fetch(&self.rt)
+            .and_then(|outs| Executable::buffer_to_literals(&outs[0]))
+            .and_then(|mut lits| literal_to_tensor(&lits.swap_remove(0)));
+        // host-side occupancy (dispatch + fetch); in overlapped mode the
+        // device time between the halves belongs to no single batch, so
+        // end-to-end throughput is the load report's number, not this one
+        let exec_secs = dispatch_secs + t0.elapsed().as_secs_f64();
+        self.respond_batch(reqs, padded, exec_secs, result);
+    }
+
+    /// Demux per-request rows out of a batch result (or fail every request)
+    /// and update the stats — shared tail of the serial and pipelined paths.
+    fn respond_batch(
+        &self,
+        reqs: Vec<Request>,
+        padded: usize,
+        exec_secs: f64,
+        result: Result<Tensor>,
+    ) {
         match result {
             Ok(logits) => {
                 let classes = logits.shape()[1];
@@ -180,17 +299,16 @@ impl Engine {
                 }
             }
         }
+        self.stats.set_transfers(self.rt.uploads() as u64, self.rt.demux_fallbacks() as u64);
     }
 
     /// Run one assembled batch; returns the `[batch, classes]` logits.
     fn execute(&self, xs: &[f32]) -> Result<Tensor> {
-        let x_lit = xla::Literal::vec1(xs).reshape(&self.x_dims)?;
-        let out = if let Some(bufs) = &self.resident {
-            // hot path: resident parameters + freshly uploaded batch input
-            let x_buf = self.rt.upload(&x_lit)?;
-            let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-            refs.push(&x_buf);
-            let outs = self.exe.run_buffers(&refs)?;
+        let out = if self.resident.is_some() {
+            // hot path: the same dispatch→fetch sequence the streaming
+            // loop uses, just with the two halves back to back — the
+            // serial baseline can never diverge from the pipelined path
+            let outs = self.dispatch(xs)?.fetch(&self.rt)?;
             let mut lits = Executable::buffer_to_literals(&outs[0])?;
             lits.swap_remove(0)
         } else {
@@ -202,7 +320,7 @@ impl Engine {
             for slot in self.meta.trainable.iter().chain(self.meta.frozen.iter()) {
                 inputs.push(tensor_to_literal(&self.params[&slot.name])?);
             }
-            inputs.push(x_lit);
+            inputs.push(xla::Literal::vec1(xs).reshape(&self.x_dims)?);
             let mut lits = self.exe.run(&inputs)?;
             lits.swap_remove(0)
         };

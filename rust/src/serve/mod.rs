@@ -28,7 +28,16 @@
 //! `orig`, `lrd` and `rankopt` checkpoints of the same model register as
 //! separate variants and serve side-by-side, so A/B throughput comparison
 //! is a routing decision, not a redeploy. Per-variant latency percentiles,
-//! queue-depth gauges and fps live in [`stats`].
+//! queue-depth gauges, fps and host↔device transfer counters live in
+//! [`stats`].
+//!
+//! **Streaming admission** (default): resident engines split execution into
+//! dispatch/fetch halves ([`crate::runtime::pipeline`]) — while batch N
+//! executes, the worker coalesces and uploads batch N+1 and dispatches it
+//! before fetching N's logits, so under backlog the device never idles
+//! between batches. With an empty queue the engine fetches immediately, so
+//! low-traffic latency is unchanged (`ServerConfig::pipelined = false`
+//! restores the lockstep loop as a baseline).
 //!
 //! The PJRT client is not `Send` (it holds an `Rc`), so each engine worker
 //! creates its *own* [`Runtime`](crate::runtime::Runtime) inside its thread;

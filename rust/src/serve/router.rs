@@ -32,6 +32,11 @@ pub struct ServerConfig {
     /// Re-upload parameters every batch (the measurable old baseline)
     /// instead of keeping them device-resident.
     pub reupload: bool,
+    /// Streaming admission (default): engines dispatch batch N, coalesce
+    /// and upload batch N+1 while N executes, then fetch N. `false` keeps
+    /// the serial lockstep loop as a measurable baseline. Only effective in
+    /// resident mode.
+    pub pipelined: bool,
     /// Startup accuracy spot-check sample count (0 = off).
     pub spot_check: usize,
 }
@@ -43,6 +48,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             idle_poll: Duration::from_millis(25),
             reupload: false,
+            pipelined: true,
             spot_check: 0,
         }
     }
@@ -163,6 +169,7 @@ impl Server {
                 max_wait: cfg.max_wait,
                 idle_poll: cfg.idle_poll,
                 reupload: cfg.reupload,
+                pipelined: cfg.pipelined,
                 spot_check: cfg.spot_check,
             };
             let (ready_tx, ready_rx) = mpsc::channel();
@@ -291,9 +298,10 @@ mod tests {
     }
 
     #[test]
-    fn default_config_is_resident_mode() {
+    fn default_config_is_resident_pipelined_mode() {
         let c = ServerConfig::default();
         assert!(!c.reupload);
+        assert!(c.pipelined);
         assert_eq!(c.queue_depth, 0);
         assert!(c.max_wait >= Duration::from_millis(1));
     }

@@ -115,6 +115,13 @@ struct Inner {
     padded_slots: u64,
     max_queue_depth: usize,
     spot_check_acc: Option<f64>,
+    /// Host→device transfers on the engine's runtime (gauge, set by the
+    /// worker after each batch) — upload regressions surface in every
+    /// report instead of hiding inside the worker thread.
+    uploads: u64,
+    /// Demux fallbacks on the engine's runtime (gauge; nonzero means the
+    /// backend packed tuple outputs and executions round-tripped the host).
+    demux_fallbacks: u64,
 }
 
 /// Thread-shared per-variant stats sink.
@@ -144,6 +151,8 @@ impl SharedStats {
                 padded_slots: 0,
                 max_queue_depth: 0,
                 spot_check_acc: None,
+                uploads: 0,
+                demux_fallbacks: 0,
             })),
         }
     }
@@ -181,6 +190,16 @@ impl SharedStats {
         self.inner.lock().unwrap().spot_check_acc = Some(acc);
     }
 
+    /// Gauge sample of the engine runtime's transfer counters
+    /// ([`Runtime::uploads`](crate::runtime::Runtime::uploads) /
+    /// [`Runtime::demux_fallbacks`](crate::runtime::Runtime::demux_fallbacks)),
+    /// set by the worker thread — the only thread that can see its runtime.
+    pub fn set_transfers(&self, uploads: u64, demux_fallbacks: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.uploads = uploads;
+        g.demux_fallbacks = demux_fallbacks;
+    }
+
     /// Point-in-time snapshot; `queue_depth` is sampled by the caller (the
     /// router owns the queue handle).
     pub fn snapshot(&self, queue_depth: usize) -> StatsSnapshot {
@@ -215,6 +234,8 @@ impl SharedStats {
             p95_ms: pcts[1] * 1e3,
             p99_ms: pcts[2] * 1e3,
             spot_check_acc: g.spot_check_acc,
+            uploads: g.uploads,
+            demux_fallbacks: g.demux_fallbacks,
         }
     }
 
@@ -248,14 +269,22 @@ pub struct StatsSnapshot {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub spot_check_acc: Option<f64>,
+    /// Engine-runtime host→device transfer count at snapshot time.
+    pub uploads: u64,
+    /// Engine-runtime demux-fallback count at snapshot time (0 = every
+    /// execution stayed buffer-to-buffer).
+    pub demux_fallbacks: u64,
 }
 
 impl StatsSnapshot {
     pub fn table_header() -> Vec<String> {
-        ["variant", "served", "rej", "batches", "fill%", "exec fps", "p50 ms", "p95 ms", "p99 ms", "acc"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect()
+        [
+            "variant", "served", "rej", "batches", "fill%", "exec fps", "p50 ms", "p95 ms",
+            "p99 ms", "acc", "uploads",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
     }
 
     pub fn table_row(&self) -> Vec<String> {
@@ -270,6 +299,7 @@ impl StatsSnapshot {
             format!("{:.2}", self.p95_ms),
             format!("{:.2}", self.p99_ms),
             self.spot_check_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+            self.uploads.to_string(),
         ]
     }
 }
@@ -327,6 +357,17 @@ mod tests {
         assert!((snap.request_fps - 600.0).abs() < 1e-6); // 6 real / 10 ms
         assert_eq!(snap.spot_check_acc, Some(0.9));
         assert!(snap.p50_ms > 10.0 && snap.p99_ms < 17.0);
+    }
+
+    #[test]
+    fn transfer_counters_are_gauges() {
+        let s = SharedStats::new("m", "lrd", 8);
+        assert_eq!(s.snapshot(0).uploads, 0);
+        s.set_transfers(41, 0);
+        s.set_transfers(42, 1);
+        let snap = s.snapshot(0);
+        assert_eq!(snap.uploads, 42);
+        assert_eq!(snap.demux_fallbacks, 1);
     }
 
     #[test]

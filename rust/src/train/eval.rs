@@ -1,0 +1,177 @@
+//! Overlapped per-epoch evaluation: test-set accuracy computed on a side
+//! thread while the next epoch's steps already run.
+//!
+//! The serial resident path blocks the whole epoch loop on evaluation
+//! (`Engine::evaluate`). PJRT handles are not `Send`, so the overlap cannot
+//! share the trainer's client: instead the worker owns its *own* PJRT
+//! client and compiled infer executable (exactly the serving-engine
+//! pattern), and each epoch hands it a host **snapshot** of the resident
+//! parameters (`Params` is plain `Send` data). The snapshot download is the
+//! one synchronous cost on the engine thread; the eval itself — upload
+//! snapshot, stream test batches, count correct — overlaps with epoch N+1.
+//!
+//! Determinism: the worker runs the same artifact on the same test batches
+//! in the same order as `Engine::evaluate`, so the reported accuracy is
+//! bit-identical to the inline eval's (XLA CPU compilation is
+//! deterministic; pinned in `integration_train_resident`).
+//!
+//! Join points are the *caller's* job: [`crate::coordinator::Trainer`]
+//! collects finished epochs at each epoch boundary (the next freeze-pattern
+//! swap) and drains the tail after the last epoch.
+
+use crate::checkpoint::Params;
+use crate::data::Dataset;
+use crate::runtime::{ArtifactMeta, Executable, Runtime};
+use crate::train::ResidentParams;
+use crate::util::stats::count_correct;
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// One eval request: the epoch index it reports for plus the parameter
+/// snapshot to evaluate.
+struct Job {
+    epoch: usize,
+    params: Params,
+}
+
+/// A finished (or failed) evaluation.
+type Outcome = (usize, Result<f64, String>);
+
+/// Side-thread evaluator over snapshots of the resident parameters.
+pub struct EvalWorker {
+    tx: Option<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<Outcome>,
+    join: Option<thread::JoinHandle<()>>,
+    /// Submitted but not yet collected epochs.
+    pending: usize,
+}
+
+impl EvalWorker {
+    /// Spawn the worker: it creates its own PJRT client and compiles the
+    /// infer artifact at `hlo_path` *on the side thread*, so even that
+    /// startup cost overlaps with the first epoch's steps.
+    pub fn spawn(hlo_path: PathBuf, meta: ArtifactMeta, test: Arc<Dataset>) -> EvalWorker {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (out_tx, out_rx) = mpsc::channel::<Outcome>();
+        let join = thread::Builder::new()
+            .name("lrta-train-eval".into())
+            .spawn(move || {
+                let init = (|| -> Result<(Runtime, Executable)> {
+                    let rt = Runtime::cpu()?;
+                    let exe = rt.load_hlo(&hlo_path)?;
+                    Ok((rt, exe))
+                })();
+                match init {
+                    Ok((rt, exe)) => {
+                        while let Ok(job) = job_rx.recv() {
+                            let acc = evaluate_snapshot(&rt, &exe, &meta, &job.params, &test)
+                                .map_err(|e| format!("{e:#}"));
+                            if out_tx.send((job.epoch, acc)).is_err() {
+                                break; // trainer gone — nothing left to report to
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // startup failed: answer every job with the error so
+                        // the trainer surfaces it instead of hanging
+                        let msg = format!("eval worker failed to start: {e:#}");
+                        while let Ok(job) = job_rx.recv() {
+                            if out_tx.send((job.epoch, Err(msg.clone()))).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn eval worker thread");
+        EvalWorker { tx: Some(job_tx), rx: out_rx, join: Some(join), pending: 0 }
+    }
+
+    /// Queue one epoch's snapshot for evaluation (non-blocking).
+    pub fn submit(&mut self, epoch: usize, params: Params) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("eval worker shut down"))?;
+        tx.send(Job { epoch, params }).map_err(|_| anyhow!("eval worker died"))?;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// Collect every evaluation that has already finished, without blocking
+    /// — the per-epoch-boundary join point.
+    pub fn try_collect(&mut self) -> Result<Vec<(usize, f64)>> {
+        let mut out = Vec::new();
+        while self.pending > 0 {
+            match self.rx.try_recv() {
+                Ok((epoch, acc)) => {
+                    self.pending -= 1;
+                    out.push((epoch, acc.map_err(|e| anyhow!(e))?));
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    bail!("eval worker died with {} evaluations pending", self.pending)
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block until every submitted epoch has been evaluated — the
+    /// end-of-run join point.
+    pub fn drain(&mut self) -> Result<Vec<(usize, f64)>> {
+        let mut out = Vec::new();
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok((epoch, acc)) => {
+                    self.pending -= 1;
+                    out.push((epoch, acc.map_err(|e| anyhow!(e))?));
+                }
+                Err(_) => bail!("eval worker died with {} evaluations pending", self.pending),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for EvalWorker {
+    fn drop(&mut self) {
+        // closing the job channel ends the worker loop; join so the thread
+        // (and its PJRT client) never outlives the trainer run
+        self.tx.take();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// The eval math, shared shape with `Engine::evaluate`: upload the snapshot
+/// once, then per test batch upload only `x` and count correct argmaxes.
+/// Drops the partial final batch (constant AOT batch shape) like every
+/// other evaluation path.
+fn evaluate_snapshot(
+    rt: &Runtime,
+    exe: &Executable,
+    meta: &ArtifactMeta,
+    params: &Params,
+    data: &Dataset,
+) -> Result<f64> {
+    let slots = || meta.trainable.iter().chain(meta.frozen.iter());
+    let resident = ResidentParams::upload_for_slots(rt, params, slots())?;
+    let ordered = resident.ordered(slots())?;
+    let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    let batch = meta.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for bi in 0..data.len() / batch {
+        let (xs, ys) = data.batch(bi * batch, batch);
+        let x_buf = rt.upload(&xla::Literal::vec1(&xs).reshape(&x_dims)?)?;
+        let mut refs = ordered.clone();
+        refs.push(&x_buf);
+        let outs = exe.run_buffers(&refs)?;
+        let mut lits = Executable::buffer_to_literals(&outs[0])?;
+        let logits = crate::runtime::literal_to_tensor(&lits.swap_remove(0))?;
+        correct += count_correct(logits.data(), logits.shape()[1], &ys);
+        total += ys.len();
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}

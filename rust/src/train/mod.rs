@@ -32,17 +32,30 @@
 //! learning-rate schedule) and falls back to the literal baseline when
 //! `TrainConfig::resident` is off (`lrta train --no-resident`), which is
 //! what `bench_train_resident` compares against.
+//!
+//! On top of the resident engine sits the **overlapped pipeline**
+//! (default; `--no-pipeline` restores the serial resident loop):
+//! [`Engine::run_epoch_pipelined`] splits each step into dispatch/fetch
+//! halves ([`crate::runtime::pipeline`]) and uploads batch N+1's `x`/`y`
+//! into a [`DoubleBuffered`] staging pair while step N executes; epoch
+//! loss/correct accumulate on device ([`MetricsAccumulator`]) and sync once
+//! per epoch instead of twice per step; and per-epoch eval runs on a
+//! parameter snapshot on a side thread ([`EvalWorker`]) while the next
+//! epoch's steps proceed. All three overlaps preserve bit-identical
+//! parameters and metrics (pinned in `integration_train_resident`).
 
+pub mod eval;
 pub mod prefetch;
 pub mod resident;
 
+pub use eval::EvalWorker;
 pub use prefetch::Prefetcher;
-pub use resident::{ResidentParams, ResidentState};
+pub use resident::{MetricsAccumulator, ResidentParams, ResidentState};
 
 use crate::checkpoint::Params;
 use crate::data::Dataset;
 use crate::metrics::ThroughputMeter;
-use crate::runtime::{literal_to_tensor, ArtifactMeta, Executable, Runtime};
+use crate::runtime::{literal_to_tensor, ArtifactMeta, DoubleBuffered, Executable, Runtime};
 use crate::util::stats::count_correct;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -62,18 +75,42 @@ pub struct EpochStats {
 
 /// The device-resident training engine: buffer-to-buffer step chaining
 /// with freeze-pattern rebinding. See the module docs for the data flow.
+///
+/// Two epoch drivers share the state:
+/// - [`Engine::run_epoch`] — the serial PR-2 loop (upload, execute, sync 2
+///   scalars, repeat);
+/// - [`Engine::run_epoch_pipelined`] — the overlapped loop: dispatch step N
+///   without blocking, upload batch N+1's `x`/`y` into the
+///   [`DoubleBuffered`] staging pair while N executes, fold the loss/correct
+///   scalars into the device-resident [`MetricsAccumulator`], and fetch the
+///   epoch metrics exactly once at the epoch boundary.
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
     state: ResidentState,
     /// The learning rate is an executable input; its device buffer is
     /// cached per distinct value (it changes once per epoch at most).
     lr_cache: Option<(f32, xla::PjRtBuffer)>,
+    /// On-device epoch metrics (pipelined path only; lazily compiled from
+    /// the builder unless a manifest-lowered artifact was attached).
+    metrics: Option<MetricsAccumulator>,
 }
 
 impl<'rt> Engine<'rt> {
     /// Upload the full training state (all parameters, all momenta) once.
     pub fn upload(rt: &'rt Runtime, params: &Params, momenta: &Params) -> Result<Engine<'rt>> {
-        Ok(Engine { rt, state: ResidentState::upload(rt, params, momenta)?, lr_cache: None })
+        Ok(Engine {
+            rt,
+            state: ResidentState::upload(rt, params, momenta)?,
+            lr_cache: None,
+            metrics: None,
+        })
+    }
+
+    /// Attach a pre-built metrics accumulator (e.g. compiled from the
+    /// manifest's AOT-lowered `metrics_acc` artifact). Without this, the
+    /// pipelined epoch lazily compiles the `XlaBuilder` form on first use.
+    pub fn attach_metrics(&mut self, metrics: MetricsAccumulator) {
+        self.metrics = Some(metrics);
     }
 
     pub fn state(&self) -> &ResidentState {
@@ -97,16 +134,8 @@ impl<'rt> Engine<'rt> {
         ys: &[i32],
         lr: f32,
     ) -> Result<(f32, f32)> {
-        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
-        let x_buf = self.rt.upload(&xla::Literal::vec1(xs).reshape(&x_dims)?)?;
-        let y_buf = self.rt.upload_labels(ys)?;
-        let lr_stale = match &self.lr_cache {
-            Some((v, _)) => *v != lr,
-            None => true,
-        };
-        if lr_stale {
-            self.lr_cache = Some((lr, self.rt.upload_scalar(lr)?));
-        }
+        let (x_buf, y_buf) = self.upload_batch(meta, xs, ys)?;
+        self.refresh_lr(lr)?;
         let n_tr = meta.trainable.len();
         let mut inputs = self.state.step_inputs(meta)?;
         inputs.push(&x_buf);
@@ -114,7 +143,32 @@ impl<'rt> Engine<'rt> {
         inputs.push(&self.lr_cache.as_ref().expect("just refreshed").1);
         let outs = exe.run_buffers_demux(self.rt, &inputs, 2 * n_tr + 2)?;
         drop(inputs);
-        self.state.absorb_step(meta, outs)
+        self.state.absorb_step(self.rt, meta, outs)
+    }
+
+    /// Upload one batch's `x`/`y` to device buffers.
+    fn upload_batch(
+        &self,
+        meta: &ArtifactMeta,
+        xs: &[f32],
+        ys: &[i32],
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let x_buf = self.rt.upload(&xla::Literal::vec1(xs).reshape(&x_dims)?)?;
+        let y_buf = self.rt.upload_labels(ys)?;
+        Ok((x_buf, y_buf))
+    }
+
+    /// Refresh the cached learning-rate buffer when the value changed.
+    fn refresh_lr(&mut self, lr: f32) -> Result<()> {
+        let stale = match &self.lr_cache {
+            Some((v, _)) => *v != lr,
+            None => true,
+        };
+        if stale {
+            self.lr_cache = Some((lr, self.rt.upload_scalar(lr)?));
+        }
+        Ok(())
     }
 
     /// One epoch over `data`: batches assemble on the [`Prefetcher`] thread
@@ -131,16 +185,19 @@ impl<'rt> Engine<'rt> {
         let expected_batches = data.len() / meta.batch;
         let mut pf = Prefetcher::start(Arc::clone(data), meta.batch, epoch_seed);
         let mut meter = ThroughputMeter::new(meta.batch);
-        let mut loss_sum = 0.0f64;
-        let mut correct_sum = 0.0f64;
+        // f32 accumulation, in step order — the exact arithmetic the
+        // pipelined path's on-device accumulator performs, so the two
+        // engines report bit-identical epoch metrics
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
         let mut samples = 0usize;
         let mut batches = 0usize;
         while let Some((xs, ys)) = pf.next_batch() {
             let t0 = Instant::now();
             let (loss, correct) = self.step(exe, meta, &xs, &ys, lr)?;
             meter.record(t0.elapsed().as_secs_f64());
-            loss_sum += loss as f64;
-            correct_sum += correct as f64;
+            loss_sum += loss;
+            correct_sum += correct;
             samples += ys.len();
             batches += 1;
         }
@@ -150,8 +207,102 @@ impl<'rt> Engine<'rt> {
             );
         }
         Ok(EpochStats {
-            loss: loss_sum / batches.max(1) as f64,
-            train_acc: correct_sum / samples.max(1) as f64,
+            loss: loss_sum as f64 / batches.max(1) as f64,
+            train_acc: correct_sum as f64 / samples.max(1) as f64,
+            samples,
+            batches,
+            meter,
+        })
+    }
+
+    /// The overlapped epoch: the same batches, executables and update math
+    /// as [`Engine::run_epoch`] — bit-identical parameters and metrics —
+    /// with the three serial stalls removed:
+    ///
+    /// 1. **double-buffered uploads** — batch N+1's `x`/`y` upload right
+    ///    after step N dispatches, so the host→device transfer rides the
+    ///    overlap window instead of serializing before the step;
+    /// 2. **split dispatch/fetch** — the step is dispatched asynchronously
+    ///    ([`Executable::dispatch_buffers`]) and its outputs demuxed only
+    ///    after the next batch is staged;
+    /// 3. **on-device metrics** — loss/correct fold into the resident
+    ///    [`MetricsAccumulator`]; the per-step 2-scalar host sync becomes
+    ///    one fetch per epoch.
+    pub fn run_epoch_pipelined(
+        &mut self,
+        exe: &Executable,
+        meta: &ArtifactMeta,
+        data: &Arc<Dataset>,
+        epoch_seed: u64,
+        lr: f32,
+    ) -> Result<EpochStats> {
+        let expected_batches = data.len() / meta.batch;
+        if self.metrics.is_none() {
+            self.metrics = Some(MetricsAccumulator::create(self.rt, None)?);
+        }
+        self.refresh_lr(lr)?;
+        {
+            let metrics = self.metrics.as_mut().expect("just created");
+            metrics.reset(self.rt)?;
+        }
+        let mut pf = Prefetcher::start(Arc::clone(data), meta.batch, epoch_seed);
+        let mut meter = ThroughputMeter::new(meta.batch);
+        let mut staged: DoubleBuffered<(xla::PjRtBuffer, xla::PjRtBuffer, usize)> =
+            DoubleBuffered::new();
+        if let Some((xs, ys)) = pf.next_batch() {
+            let n = ys.len();
+            let (x, y) = self.upload_batch(meta, &xs, &ys)?;
+            staged.stage((x, y, n))?;
+        }
+        let n_tr = meta.trainable.len();
+        let mut samples = 0usize;
+        let mut batches = 0usize;
+        while let Some((x_buf, y_buf, n)) = staged.take() {
+            let t0 = Instant::now();
+            // dispatch step N (non-blocking: PJRT executes asynchronously)
+            let inflight = {
+                let mut inputs = self.state.step_inputs(meta)?;
+                inputs.push(&x_buf);
+                inputs.push(&y_buf);
+                inputs.push(&self.lr_cache.as_ref().expect("refreshed above").1);
+                exe.dispatch_buffers(&inputs, 2 * n_tr + 2)?
+            };
+            // overlap window: upload batch N+1 while step N executes
+            if let Some((xs, ys)) = pf.next_batch() {
+                let m = ys.len();
+                let (x, y) = self.upload_batch(meta, &xs, &ys)?;
+                staged.stage((x, y, m))?;
+            }
+            // demux step N's outputs and re-bind the state; the scalars
+            // stay on device and fold into the resident accumulator
+            let outs = inflight.fetch(self.rt)?;
+            let (loss_buf, correct_buf) = self.state.absorb_step_deferred(meta, outs)?;
+            self.metrics
+                .as_mut()
+                .expect("created above")
+                .accumulate(&loss_buf, &correct_buf)?;
+            meter.record(t0.elapsed().as_secs_f64());
+            samples += n;
+            batches += 1;
+        }
+        if batches != expected_batches {
+            bail!(
+                "prefetch ended early: {batches} of {expected_batches} batches (epoch seed {epoch_seed})"
+            );
+        }
+        // the epoch's single metric host sync; the accumulator must have
+        // folded exactly one (loss, correct) pair per executed step
+        let metrics = self.metrics.as_ref().expect("created above");
+        if metrics.steps() != batches {
+            bail!(
+                "metrics accumulator folded {} steps, epoch ran {batches}",
+                metrics.steps()
+            );
+        }
+        let (loss_sum, correct_sum) = metrics.fetch(self.rt)?;
+        Ok(EpochStats {
+            loss: loss_sum as f64 / batches.max(1) as f64,
+            train_acc: correct_sum as f64 / samples.max(1) as f64,
             samples,
             batches,
             meter,

@@ -29,35 +29,73 @@ impl Prefetcher {
     /// Start assembling the epoch's batches (shuffled by `epoch_seed`,
     /// partial final batch dropped — same contract as [`BatchIter`]).
     pub fn start(data: Arc<Dataset>, batch: usize, epoch_seed: u64) -> Prefetcher {
+        Self::spawn_producer(move |tx| {
+            for b in BatchIter::new(&data, batch, epoch_seed) {
+                // a dropped receiver (engine error mid-epoch) just ends
+                // the producer early
+                if tx.send(b).is_err() {
+                    break;
+                }
+            }
+        })
+    }
+
+    fn spawn_producer(
+        produce: impl FnOnce(mpsc::SyncSender<(Vec<f32>, Vec<i32>)>) + Send + 'static,
+    ) -> Prefetcher {
         let (tx, rx) = mpsc::sync_channel(PIPELINE_DEPTH);
         let join = thread::Builder::new()
             .name("lrta-train-prefetch".into())
-            .spawn(move || {
-                for b in BatchIter::new(&data, batch, epoch_seed) {
-                    // a dropped receiver (engine error mid-epoch) just ends
-                    // the producer early
-                    if tx.send(b).is_err() {
-                        break;
-                    }
-                }
-            })
+            .spawn(move || produce(tx))
             .expect("spawn prefetch thread");
         Prefetcher { rx: Some(rx), join: Some(join) }
     }
 
     /// Next assembled `(xs, ys)` batch; `None` once the epoch is exhausted.
+    ///
+    /// A worker panic must not masquerade as a short epoch: the channel
+    /// disconnecting looks identical to normal exhaustion from the receive
+    /// side, so on disconnect the worker is joined right here and its panic
+    /// payload re-raised on the engine thread ([`std::panic::resume_unwind`])
+    /// instead of silently ending the epoch early.
     pub fn next_batch(&mut self) -> Option<(Vec<f32>, Vec<i32>)> {
-        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+        match self.rx.as_ref()?.recv() {
+            Ok(b) => Some(b),
+            Err(_) => {
+                // producer gone: either finished (clean join) or panicked
+                self.rx.take();
+                self.join_propagating();
+                None
+            }
+        }
+    }
+
+    /// Join the worker if it is still attached; re-raise its panic, if any.
+    fn join_propagating(&mut self) {
+        if let Some(join) = self.join.take() {
+            if let Err(payload) = join.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
         // close the channel first so a producer blocked in `send` unblocks,
-        // then join so the thread never outlives the epoch that spawned it
+        // then join so the thread never outlives the epoch that spawned it.
+        // A worker panic is swallowed here only when this drop is itself
+        // part of an unwind (a double panic would abort); on the normal
+        // path `next_batch` already re-raised it.
         self.rx.take();
         if let Some(join) = self.join.take() {
-            let _ = join.join();
+            match join.join() {
+                Ok(()) => {}
+                Err(payload) if !std::thread::panicking() => {
+                    std::panic::resume_unwind(payload)
+                }
+                Err(_) => {}
+            }
         }
     }
 }
@@ -88,5 +126,39 @@ mod tests {
         let mut pf = Prefetcher::start(data, 16, 0);
         let _ = pf.next_batch();
         drop(pf); // producer blocked on a full channel must unblock + join
+    }
+
+    #[test]
+    fn worker_panic_propagates_instead_of_ending_epoch_early() {
+        let mut pf = Prefetcher::spawn_producer(|tx| {
+            tx.send((vec![1.0], vec![1])).unwrap();
+            panic!("prefetch worker exploded");
+        });
+        assert!(pf.next_batch().is_some());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // the disconnect must re-raise the worker panic, not return None
+            while pf.next_batch().is_some() {}
+        }))
+        .expect_err("worker panic must propagate to the engine thread");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("exploded"), "unexpected payload: {msg}");
+    }
+
+    #[test]
+    fn clean_exhaustion_still_returns_none() {
+        let data = Arc::new(Dataset::synthetic(32, 1));
+        let mut pf = Prefetcher::start(data, 16, 0);
+        let mut n = 0;
+        while pf.next_batch().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 2);
+        // idempotent after exhaustion
+        assert!(pf.next_batch().is_none());
     }
 }

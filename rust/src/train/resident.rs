@@ -21,7 +21,8 @@
 use crate::checkpoint::Params;
 use crate::freeze::{train_slot_bindings, SlotRole};
 use crate::runtime::{
-    download_scalar, download_tensor, tensor_to_literal, ArtifactMeta, ParamSlot, Runtime,
+    builder, download_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, ParamSlot,
+    Runtime,
 };
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -178,12 +179,28 @@ impl ResidentState {
     /// Absorb a step's demuxed outputs: the new trainable parameters and
     /// momenta re-bind in place (buffer ownership moves; step N+1 will read
     /// them straight from device), and the two trailing scalars (loss,
-    /// correct-count) sync to host for the epoch record.
+    /// correct-count) sync to host for the epoch record (counted on the
+    /// runtime's fetch channel).
     pub fn absorb_step(
         &mut self,
+        rt: &Runtime,
         meta: &ArtifactMeta,
         outs: Vec<xla::PjRtBuffer>,
     ) -> Result<(f32, f32)> {
+        let (loss_buf, correct_buf) = self.absorb_step_deferred(meta, outs)?;
+        Ok((rt.fetch_scalar(&loss_buf)?, rt.fetch_scalar(&correct_buf)?))
+    }
+
+    /// The host-sync-free half of [`ResidentState::absorb_step`]: re-bind
+    /// the new parameters/momenta and hand the loss/correct scalar *buffers*
+    /// back without downloading them — the pipelined engine folds them into
+    /// the device-resident [`MetricsAccumulator`] instead, so nothing
+    /// crosses to the host per step.
+    pub fn absorb_step_deferred(
+        &mut self,
+        meta: &ArtifactMeta,
+        outs: Vec<xla::PjRtBuffer>,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
         let n_tr = meta.trainable.len();
         if outs.len() != 2 * n_tr + 2 {
             bail!(
@@ -200,8 +217,8 @@ impl ResidentState {
         for slot in &meta.trainable {
             self.momenta.rebind(&slot.name, it.next().expect("length checked"))?;
         }
-        let loss = download_scalar(&it.next().expect("length checked"))?;
-        let correct = download_scalar(&it.next().expect("length checked"))?;
+        let loss = it.next().expect("length checked");
+        let correct = it.next().expect("length checked");
         Ok((loss, correct))
     }
 
@@ -235,5 +252,89 @@ impl ResidentState {
     /// Download the full training state to host maps.
     pub fn sync(&self) -> Result<(Params, Params)> {
         Ok((self.params.download()?, self.momenta.download()?))
+    }
+}
+
+/// Device-resident epoch-metric state: a `[loss_sum, correct_sum]` buffer
+/// that absorbs every step's loss/correct scalar *on device* via the
+/// accumulate computation, replacing the serial engine's 2-scalar-per-step
+/// host sync with one fetch per epoch.
+///
+/// The computation comes from the AOT-lowered `metrics_acc` artifact when
+/// the manifest carries one (`python/compile/aot.py` lowers it beside the
+/// train steps) and otherwise from the always-available `XlaBuilder` form
+/// ([`builder::metrics_accumulate_computation`]) — both implement the same
+/// 5-input contract, so which one compiled is invisible to callers.
+pub struct MetricsAccumulator {
+    exe: Executable,
+    /// `[1, 0]` / `[0, 1]` lane masks, uploaded once.
+    e_loss: xla::PjRtBuffer,
+    e_correct: xla::PjRtBuffer,
+    /// The live accumulator buffer; re-binds to the accumulate output every
+    /// step, exactly like the parameter buffers chain across train steps.
+    acc: Option<xla::PjRtBuffer>,
+    /// Steps folded in since the last [`MetricsAccumulator::reset`].
+    steps: usize,
+}
+
+impl MetricsAccumulator {
+    /// Compile the accumulate computation (manifest artifact if available,
+    /// builder fallback) and upload the lane masks.
+    pub fn create(rt: &Runtime, manifest: Option<&Manifest>) -> Result<MetricsAccumulator> {
+        let from_manifest = manifest
+            .and_then(|m| m.artifact("metrics_acc").ok().map(|meta| m.hlo_path(meta)))
+            .and_then(|path| rt.load_hlo(path).ok());
+        let exe = match from_manifest {
+            Some(exe) => exe,
+            None => rt.compile(&builder::metrics_accumulate_computation()?, "metrics_acc")?,
+        };
+        Ok(MetricsAccumulator {
+            exe,
+            e_loss: rt.upload(&xla::Literal::vec1(&[1.0f32, 0.0]))?,
+            e_correct: rt.upload(&xla::Literal::vec1(&[0.0f32, 1.0]))?,
+            acc: None,
+            steps: 0,
+        })
+    }
+
+    /// Zero the accumulator for a fresh epoch (one tiny upload).
+    pub fn reset(&mut self, rt: &Runtime) -> Result<()> {
+        self.acc = Some(rt.upload(&xla::Literal::vec1(&[0.0f32, 0.0]))?);
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// Fold one step's loss/correct scalar buffers into the accumulator —
+    /// an asynchronous device-side add; no host traffic.
+    pub fn accumulate(
+        &mut self,
+        loss: &xla::PjRtBuffer,
+        correct: &xla::PjRtBuffer,
+    ) -> Result<()> {
+        let acc = self.acc.as_ref().ok_or_else(|| anyhow!("metrics accumulator not reset"))?;
+        let inputs: [&xla::PjRtBuffer; 5] = [acc, loss, correct, &self.e_loss, &self.e_correct];
+        let mut outs = self.exe.run_buffers(&inputs)?;
+        if outs.len() != 1 {
+            bail!("metrics_acc produced {} outputs, expected 1", outs.len());
+        }
+        self.acc = Some(outs.swap_remove(0));
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Steps folded in since the last reset.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// The epoch's single host sync: download `(loss_sum, correct_sum)`
+    /// (counted on the runtime's fetch channel).
+    pub fn fetch(&self, rt: &Runtime) -> Result<(f32, f32)> {
+        let acc = self.acc.as_ref().ok_or_else(|| anyhow!("metrics accumulator not reset"))?;
+        let v = rt.fetch_f32s(acc)?;
+        if v.len() != 2 {
+            bail!("metrics accumulator holds {} values, expected 2", v.len());
+        }
+        Ok((v[0], v[1]))
     }
 }

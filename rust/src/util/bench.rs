@@ -4,6 +4,7 @@
 //! accounting, and aligned table printing used by every `rust/benches/*`
 //! target to regenerate the paper's tables and figures.
 
+use super::json::Json;
 use super::stats::Summary;
 use std::time::Instant;
 
@@ -127,6 +128,36 @@ pub fn write_report(path: &str, content: &str) -> bool {
     }
 }
 
+/// Merge `section` under `key` into the JSON report at `path`, preserving
+/// every other top-level key — several bench targets append their results
+/// to one perf-trajectory file (`BENCH_pipeline.json`) without clobbering
+/// each other. A fresh/unreadable file starts from an empty object. Same
+/// side-artifact contract as [`write_report`]: failures warn, return
+/// `false`, and never kill a finished benchmark run.
+pub fn write_json_section(path: &str, key: &str, section: Json) -> bool {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| match j {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(key.to_string(), section);
+    write_report(path, &Json::Obj(root).emit())
+}
+
+/// The transfer counters every runtime-backed bench surfaces in its JSON
+/// report, so upload regressions and demux fallbacks are visible in the
+/// perf trajectory (not just inside integration tests).
+pub fn runtime_counters_json(rt: &crate::runtime::Runtime) -> Json {
+    Json::obj(vec![
+        ("uploads", Json::int(rt.uploads() as i64)),
+        ("demux_fallbacks", Json::int(rt.demux_fallbacks() as i64)),
+        ("fetches", Json::int(rt.fetches() as i64)),
+    ])
+}
+
 /// Format a signed percentage delta the way the paper's tables do (+06.07).
 pub fn fmt_delta_pct(base: f64, new: f64) -> String {
     let pct = (new / base - 1.0) * 100.0;
@@ -181,6 +212,29 @@ mod tests {
         let _ = std::fs::remove_dir_all("/tmp/lrta_test_reports");
         assert!(write_report(path, "hello"));
         assert_eq!(std::fs::read_to_string(path).unwrap(), "hello");
+    }
+
+    #[test]
+    fn json_sections_merge_without_clobbering() {
+        let path = "/tmp/lrta_test_reports/bench.json";
+        let _ = std::fs::remove_file(path);
+        assert!(write_json_section(path, "a", Json::obj(vec![("x", Json::int(1))])));
+        assert!(write_json_section(path, "b", Json::obj(vec![("y", Json::int(2))])));
+        // overwrite of one section keeps the other
+        assert!(write_json_section(path, "a", Json::obj(vec![("x", Json::int(3))])));
+        let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(root.get("a").get("x").as_i64(), Some(3));
+        assert_eq!(root.get("b").get("y").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn json_section_recovers_from_corrupt_file() {
+        let path = "/tmp/lrta_test_reports/corrupt.json";
+        std::fs::create_dir_all("/tmp/lrta_test_reports").unwrap();
+        std::fs::write(path, "not json at all").unwrap();
+        assert!(write_json_section(path, "k", Json::int(7)));
+        let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(root.get("k").as_i64(), Some(7));
     }
 
     #[test]

@@ -38,6 +38,40 @@ fn manifest_lists_all_variants() {
     }
 }
 
+/// Runtime-level pipeline primitives — needs a PJRT client but no AOT
+/// artifacts, so it runs even on checkouts without `make artifacts`:
+/// the dispatch/fetch split must hand back usable buffers, and the
+/// builder-built metrics-accumulate computation must chain buffer-to-buffer
+/// with exact f32 sums and exactly one counted fetch at the end.
+#[test]
+fn dispatch_fetch_split_and_metrics_accumulate_chain_on_device() {
+    let rt = Runtime::cpu().unwrap();
+    let comp = lrta::runtime::builder::metrics_accumulate_computation().unwrap();
+    let acc_exe = rt.compile(&comp, "metrics_acc").unwrap();
+    let e_loss = rt.upload(&xla::Literal::vec1(&[1.0f32, 0.0])).unwrap();
+    let e_correct = rt.upload(&xla::Literal::vec1(&[0.0f32, 1.0])).unwrap();
+    let mut acc = rt.upload(&xla::Literal::vec1(&[0.0f32, 0.0])).unwrap();
+
+    let fetches0 = rt.fetches();
+    for i in 0..5 {
+        let loss = rt.upload_scalar(0.5 + i as f32).unwrap();
+        let correct = rt.upload_scalar(i as f32).unwrap();
+        // dispatch (non-blocking) … fetch (demux) — the split pair the
+        // pipelined engines are built on
+        let inflight = acc_exe
+            .dispatch_buffers(&[&acc, &loss, &correct, &e_loss, &e_correct], 1)
+            .unwrap();
+        let mut outs = inflight.fetch(&rt).unwrap();
+        assert_eq!(outs.len(), 1);
+        acc = outs.swap_remove(0); // buffer-to-buffer chaining, no host sync
+    }
+    assert_eq!(rt.fetches(), fetches0, "accumulation must not touch the host");
+    let sums = rt.fetch_f32s(&acc).unwrap();
+    // integer-valued and half-integer f32 sums are exact
+    assert_eq!(sums, vec![12.5, 10.0]);
+    assert_eq!(rt.fetches(), fetches0 + 1, "one counted fetch for the epoch");
+}
+
 #[test]
 fn infer_artifact_runs_and_is_deterministic() {
     let Some(m) = manifest() else { return };

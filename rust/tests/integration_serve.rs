@@ -3,8 +3,12 @@
 //! Serves variants of `resnet_mini` through the router and asserts
 //! per-request results are bit-identical to direct `Executable::run`
 //! outputs (same images, same rows, same executable — resident device
-//! buffers must not change a single bit). Requires `make artifacts`
-//! (skips gracefully otherwise, like the other integration suites).
+//! buffers must not change a single bit). The default server config is the
+//! *pipelined* streaming-admission engine, so every test here exercises the
+//! split dispatch/fetch path; `pipelined_backlog_stays_bit_identical`
+//! additionally forces real overlap (multiple batches in the queue at
+//! once). Requires `make artifacts` (skips gracefully otherwise, like the
+//! other integration suites).
 
 use lrta::checkpoint;
 use lrta::data::{Dataset, IMAGE_ELEMS};
@@ -144,6 +148,72 @@ fn partial_batch_pads_and_still_matches_direct_run() {
     assert_eq!(snap.served, n as u64);
     assert_eq!(snap.padded_slots, (batch - n) as u64);
     server.shutdown();
+}
+
+/// Force actual overlap: enqueue several full batches before the engine can
+/// drain them, so batch N+1 is dispatched while batch N's results are still
+/// in flight — and assert every row still matches a direct run bit for bit,
+/// for both the pipelined engine and the serial (`pipelined: false`)
+/// baseline.
+#[test]
+fn pipelined_backlog_stays_bit_identical() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let params = variant_params(&m, variant);
+    let n_batches = 3usize;
+    for pipelined in [true, false] {
+        let cfg = ServerConfig {
+            pipelined,
+            // full batches ship immediately; the deadline only guards the
+            // (non-occurring) partial case
+            max_wait: Duration::from_secs(2),
+            ..Default::default()
+        };
+        let server = Server::start(
+            &m,
+            vec![VariantSpec::new(MODEL, variant, params.clone())],
+            &cfg,
+        )
+        .expect("server starts");
+        let batch = server.batch_of(MODEL, variant).unwrap();
+        let data = Dataset::synthetic(batch * n_batches, 21);
+
+        // submit every request up front: the queue holds n_batches full
+        // batches, so the engine sees backlog after each dispatch
+        let pendings: Vec<_> = (0..batch * n_batches)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                server.submit(MODEL, variant, x).expect("admitted")
+            })
+            .collect();
+        let responses: Vec<_> = pendings
+            .iter()
+            .map(|p| p.wait(Duration::from_secs(120)).expect("served"))
+            .collect();
+
+        for (bi, chunk) in responses.chunks(batch).enumerate() {
+            let (xs, _) = data.batch(bi * batch, batch);
+            let reference = direct_logits(&m, variant, &params, &xs);
+            let classes = reference.shape()[1];
+            for (i, r) in chunk.iter().enumerate() {
+                assert_eq!(r.batch_fill, batch, "batch {bi} did not coalesce fully");
+                assert_eq!(
+                    r.logits,
+                    reference.data()[i * classes..(i + 1) * classes].to_vec(),
+                    "pipelined={pipelined}: batch {bi} request {i} diverged from direct run"
+                );
+            }
+        }
+        let snap = server.stats(MODEL, variant).unwrap();
+        assert_eq!(snap.served, (batch * n_batches) as u64);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.demux_fallbacks, 0, "executions must stay buffer-to-buffer");
+        assert!(
+            snap.uploads > 0,
+            "engine transfer counters must surface in the stats snapshot"
+        );
+        server.shutdown();
+    }
 }
 
 #[test]

@@ -31,6 +31,7 @@ fn tiny_cfg(model: &str, variant: &str, freeze: FreezeMode, epochs: usize) -> Tr
         // the resident engine is the default step path — these seed tests
         // now exercise buffer-chained stepping end to end
         resident: true,
+        pipelined: true,
     }
 }
 

@@ -18,9 +18,15 @@
 //! host-literal round-trip baseline or `LRTA_PIPELINED=0` for the serial
 //! resident loop.
 //!
+//! Setting `LRTA_REPLICAS=N` (N > 1) fine-tunes data-parallel instead: N
+//! engine replicas — one PJRT client and resident state each — step on
+//! disjoint batch shards and average their trainable parameters at the
+//! buffer level every `LRTA_AVG_EVERY` steps (0 = epoch boundaries only).
+//!
 //! Run: `cargo run --release --example train_cifar_seqfreeze`
 //! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024),
-//!       LRTA_RESIDENT (default 1), LRTA_PIPELINED (default 1)
+//!       LRTA_RESIDENT (default 1), LRTA_PIPELINED (default 1),
+//!       LRTA_REPLICAS (default 1), LRTA_AVG_EVERY (default 0)
 
 use anyhow::Result;
 use lrta::coordinator::{
@@ -29,6 +35,7 @@ use lrta::coordinator::{
 use lrta::freeze::FreezeMode;
 use lrta::metrics::RunRecord;
 use lrta::runtime::{Manifest, Runtime};
+use lrta::train::{run_replicas, ReplicaConfig};
 use lrta::util::bench::write_report;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -45,6 +52,8 @@ fn main() -> Result<()> {
     };
     let resident = env_on("LRTA_RESIDENT");
     let pipelined = env_on("LRTA_PIPELINED");
+    let replicas = env_usize("LRTA_REPLICAS", 1);
+    let avg_every = env_usize("LRTA_AVG_EVERY", 0);
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let rt = Runtime::cpu()?;
@@ -67,7 +76,9 @@ fn main() -> Result<()> {
     ] {
         println!(
             "== fine-tune with {label} freezing ({epochs} epochs, {} steps) ==",
-            if resident && pipelined {
+            if replicas > 1 {
+                "replica data-parallel"
+            } else if resident && pipelined {
                 "pipelined buffer-chained"
             } else if resident {
                 "buffer-chained"
@@ -88,11 +99,29 @@ fn main() -> Result<()> {
             resident,
             pipelined,
         };
-        let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
-        let record = trainer.run()?;
-        if let Some(report) = trainer.residency_report() {
-            println!("   {report}");
-        }
+        let record = if replicas > 1 {
+            let rcfg = ReplicaConfig { replicas, avg_every, ..Default::default() };
+            let run = run_replicas(&manifest, &cfg, &rcfg, &decomposed.params)?;
+            for r in &run.reports {
+                println!(
+                    "   replica {}: {} initial uploads + {} averaging uploads \
+                     ({} unaccounted), {} demux fallbacks",
+                    r.replica,
+                    r.initial_param_uploads,
+                    r.avg_slot_uploads,
+                    r.unaccounted_uploads(),
+                    r.demux_fallbacks
+                );
+            }
+            run.record
+        } else {
+            let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
+            let record = trainer.run()?;
+            if let Some(report) = trainer.residency_report() {
+                println!("   {report}");
+            }
+            record
+        };
         write_report(&format!("results/fig3_curves/{label}.csv"), &record.curve_csv());
         records.push((label, record));
         println!();

@@ -1,0 +1,163 @@
+//! Data-parallel training throughput: N engine replicas on disjoint batch
+//! shards (buffer-level parameter averaging) vs the single-engine resident
+//! baseline — the scaling claim of `train::replica`.
+//!
+//! Both paths run the same fine-tune (variant `lrd`, same dataset, same
+//! epochs, eval each epoch) end to end, including engine construction and
+//! artifact compilation, and report samples/second over the wall clock:
+//!
+//!   - **baseline** — one `coordinator::Trainer` on the serial resident
+//!     engine (`--no-pipeline` semantics): the 1-replica reference whose
+//!     trajectory the replica path reproduces bit-for-bit on identical
+//!     shards (`integration_train_replicas`);
+//!   - **replicas** — `train::replica::run_replicas`: N PJRT clients, one
+//!     resident state each, round-robin disjoint shards, averaging every
+//!     `LRTA_AVG_EVERY` steps (0 = epoch boundaries only).
+//!
+//! The table carries the per-replica transfer accounting next to the fps
+//! so a scaling win can't hide residency regressions: unaccounted uploads
+//! (must be 0 — steps and freeze swaps never re-upload) and demux
+//! fallbacks (must be 0). Output: results/train_replicas.txt and a
+//! `replicas` section in results/BENCH_replicas.json (CI `train-smoke`
+//! uploads it as an artifact).
+//!
+//! Env: LRTA_MODEL (default resnet_mini), LRTA_REPLICAS (default 2),
+//! LRTA_AVG_EVERY (default 0), LRTA_REPLICA_TRAIN (dataset size, default
+//! 512), LRTA_REPLICA_EPOCHS (default 2)
+
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
+use lrta::freeze::FreezeMode;
+use lrta::runtime::{Manifest, Runtime};
+use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
+use lrta::util::bench::{fmt_delta_pct, table, write_json_section, write_report};
+use lrta::util::json::Json;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let replicas = env_usize("LRTA_REPLICAS", 2);
+    let avg_every = env_usize("LRTA_AVG_EVERY", 0);
+    let train_size = env_usize("LRTA_REPLICA_TRAIN", 512);
+    let epochs = env_usize("LRTA_REPLICA_EPOCHS", 2);
+    let manifest = Manifest::load("artifacts/manifest.json").expect("run `make artifacts`");
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+    let params = decompose_checkpoint(&dense, manifest.config(&model, "lrd")?)?.params;
+
+    let mut rows = vec![vec![
+        "Freeze".to_string(),
+        "baseline fps".to_string(),
+        format!("{replicas}-replica fps"),
+        "Δ replicas".to_string(),
+        "events/replica".to_string(),
+        "unaccounted uploads".to_string(),
+        "demux fallbacks".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    let mut residency_clean = true;
+
+    for freeze in [FreezeMode::None, FreezeMode::Sequential] {
+        let cfg = TrainConfig {
+            model: model.clone(),
+            variant: "lrd".into(),
+            freeze,
+            epochs,
+            lr: LrSchedule::Fixed(1e-3),
+            train_size,
+            test_size: 128,
+            seed: 0,
+            verbose: false,
+            resident: true,
+            pipelined: false,
+        };
+        let suffix0 = if freeze == FreezeMode::None { "none" } else { "a" };
+        let batch = manifest.artifact(&format!("{model}_lrd_train_{suffix0}"))?.batch;
+        let total_batches = train_size / batch;
+
+        // --- single-engine resident baseline ------------------------------
+        // construction (state upload + exe compile) counts: the replica
+        // path pays the same per replica inside its own timing window
+        let t0 = Instant::now();
+        let rt = Runtime::cpu()?;
+        let mut trainer = Trainer::new(&rt, &manifest, cfg.clone(), params.clone())?;
+        trainer.run()?;
+        let base_secs = t0.elapsed().as_secs_f64();
+        let base_samples = epochs * total_batches * batch;
+        let base_fps = base_samples as f64 / base_secs;
+
+        // --- N replicas on disjoint shards --------------------------------
+        let rcfg = ReplicaConfig {
+            replicas,
+            avg_every,
+            momenta: MomentumPolicy::Average,
+            identical_shards: false,
+        };
+        let t0 = Instant::now();
+        let run = run_replicas(&manifest, &cfg, &rcfg, &params)?;
+        let rep_secs = t0.elapsed().as_secs_f64();
+        // ragged tails are dropped for equal shard lengths, so count what
+        // actually ran instead of assuming the full epoch
+        let rep_samples: usize =
+            run.reports.iter().map(|r| r.batches).sum::<usize>() * batch;
+        let rep_fps = rep_samples as f64 / rep_secs;
+
+        let events: Vec<usize> = run.reports.iter().map(|r| r.avg_events).collect();
+        let unaccounted: usize = run.reports.iter().map(|r| r.unaccounted_uploads()).sum();
+        let fallbacks: usize = run.reports.iter().map(|r| r.demux_fallbacks).sum();
+        if unaccounted != 0 || fallbacks != 0 {
+            residency_clean = false;
+        }
+
+        println!(
+            "{freeze:?}: baseline {base_fps:.1} fps | {replicas} replicas {rep_fps:.1} fps \
+             (x{:.2}) | events {events:?} | unaccounted {unaccounted} | fallbacks {fallbacks}",
+            rep_fps / base_fps
+        );
+        rows.push(vec![
+            format!("{freeze:?}"),
+            format!("{base_fps:.1}"),
+            format!("{rep_fps:.1}"),
+            fmt_delta_pct(base_fps, rep_fps),
+            format!("{events:?}"),
+            format!("{unaccounted}"),
+            format!("{fallbacks}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("freeze", Json::str(&format!("{freeze:?}"))),
+            ("baseline_fps", Json::num(base_fps)),
+            ("replicas_fps", Json::num(rep_fps)),
+            ("scaling", Json::num(rep_fps / base_fps)),
+            ("avg_events_per_replica", Json::arr(
+                events.iter().map(|&e| Json::int(e as i64)).collect(),
+            )),
+            ("unaccounted_uploads", Json::int(unaccounted as i64)),
+            ("demux_fallbacks", Json::int(fallbacks as i64)),
+        ]));
+    }
+
+    let t = table(&rows);
+    println!(
+        "\n{model} data-parallel training ({replicas} replicas, avg-every={avg_every}):\n{t}"
+    );
+    println!(
+        "replica runs stayed buffer-chained (0 unaccounted uploads, 0 demux fallbacks): {}",
+        if residency_clean { "YES" } else { "NO" }
+    );
+    write_report("results/train_replicas.txt", &t);
+    let section = Json::obj(vec![
+        ("model", Json::str(model.as_str())),
+        ("replicas", Json::int(replicas as i64)),
+        ("avg_every", Json::int(avg_every as i64)),
+        ("train_size", Json::int(train_size as i64)),
+        ("epochs", Json::int(epochs as i64)),
+        ("rows", Json::arr(json_rows)),
+        ("residency_clean", Json::Bool(residency_clean)),
+    ]);
+    write_json_section("results/BENCH_replicas.json", "replicas", section);
+    println!("train_replicas bench OK");
+    Ok(())
+}

@@ -15,6 +15,14 @@
 //! and `TrainConfig::resident = false` to the original host-literal
 //! round-trip loop ([`run_train_step`]) — both measurable baselines
 //! (`lrta train --no-pipeline` / `--no-resident`, `bench_train_resident`).
+//!
+//! Scaling beyond one engine is delegated too: `lrta train --replicas N`
+//! routes through [`crate::train::replica`] (N single-engine replicas on
+//! disjoint shards with periodic buffer-level parameter averaging), which
+//! reuses this module's schedule resolution ([`effective_pattern_suffix`])
+//! so freeze swaps stay synchronized with the single-engine semantics.
+//! [`Trainer::checkpoint_epochs_to`] additionally persists each epoch's
+//! snapshot asynchronously ([`train::CheckpointWriter`]).
 
 pub mod decompose;
 
@@ -30,9 +38,49 @@ use crate::train;
 use crate::util::stats::count_correct;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 pub use decompose::{decompose_checkpoint, zero_momenta, DecomposeOutcome};
+
+/// Artifact-name suffix one epoch's schedule resolves to. The original
+/// (undecomposed) model has no factor groups, so every pattern degrades to
+/// `"none"`; decomposed variants use the pattern's own suffix. Shared by
+/// [`Trainer`] and the data-parallel replicas
+/// ([`crate::train::replica`]), which must resolve patterns identically
+/// for their epoch-boundary swaps to stay synchronized.
+pub fn effective_pattern_suffix(variant: &str, pattern: Pattern) -> &'static str {
+    if variant == "orig" {
+        "none"
+    } else {
+        pattern.suffix()
+    }
+}
+
+/// Load one train executable per freeze pattern `cfg`'s schedule will
+/// actually use. Shared by [`Trainer::new`] and each data-parallel replica
+/// ([`crate::train::replica`]) — executables are client-local, so every
+/// replica compiles its own set from the same schedule resolution.
+pub fn load_schedule_executables(
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+) -> Result<BTreeMap<&'static str, (Executable, ArtifactMeta)>> {
+    let scheduler = FreezeScheduler::new(cfg.freeze);
+    let mut needed: Vec<&'static str> = (0..cfg.epochs.max(1))
+        .map(|e| effective_pattern_suffix(&cfg.variant, scheduler.pattern(e)))
+        .collect();
+    needed.sort_unstable();
+    needed.dedup();
+    let mut train_exes = BTreeMap::new();
+    for suffix in needed {
+        let name = Manifest::name_of(&cfg.model, &cfg.variant, "train", suffix);
+        let meta = manifest.artifact(&name)?.clone();
+        let exe = rt.load_hlo(manifest.hlo_path(&meta))?;
+        train_exes.insert(suffix, (exe, meta));
+    }
+    Ok(train_exes)
+}
 
 /// Learning-rate schedule (paper: cosine for ImageNet, fixed for CIFAR).
 #[derive(Clone, Copy, Debug)]
@@ -118,6 +166,10 @@ pub struct Trainer<'rt> {
     /// runtime counter is cumulative, so the per-run delta is what
     /// [`Trainer::residency_report`] may honestly attribute to that run.
     last_run_fallbacks: usize,
+    /// When set, each epoch's parameter snapshot also persists as
+    /// `<dir>/epoch_NNN.bin` on a side thread
+    /// ([`train::CheckpointWriter`]) while the next epoch trains.
+    ckpt_dir: Option<PathBuf>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -130,31 +182,7 @@ impl<'rt> Trainer<'rt> {
         params: Params,
     ) -> Result<Trainer<'rt>> {
         let scheduler = FreezeScheduler::new(cfg.freeze);
-        // Original model has no factors: every pattern degrades to "none".
-        let effective = |p: Pattern| -> &'static str {
-            if cfg.variant == "orig" {
-                "none"
-            } else {
-                match p {
-                    Pattern::NoFreeze => "none",
-                    Pattern::A => "a",
-                    Pattern::B => "b",
-                }
-            }
-        };
-        let mut needed: Vec<&'static str> = (0..cfg.epochs.max(1))
-            .map(|e| effective(scheduler.pattern(e)))
-            .collect();
-        needed.sort_unstable();
-        needed.dedup();
-
-        let mut train_exes = BTreeMap::new();
-        for suffix in needed {
-            let name = Manifest::name_of(&cfg.model, &cfg.variant, "train", suffix);
-            let meta = manifest.artifact(&name)?.clone();
-            let exe = rt.load_hlo(manifest.hlo_path(&meta))?;
-            train_exes.insert(suffix, (exe, meta));
-        }
+        let train_exes = load_schedule_executables(rt, manifest, &cfg)?;
         let infer_name = Manifest::name_of(&cfg.model, &cfg.variant, "infer", "none");
         let infer_meta = manifest.artifact(&infer_name)?.clone();
         let infer_exe = rt.load_hlo(manifest.hlo_path(&infer_meta))?;
@@ -183,7 +211,19 @@ impl<'rt> Trainer<'rt> {
             scheduler,
             engine,
             last_run_fallbacks: 0,
+            ckpt_dir: None,
         })
+    }
+
+    /// Persist every epoch's parameters as `<dir>/epoch_NNN.bin`. The write
+    /// happens on a side thread off the same per-epoch snapshot the
+    /// overlapped evaluator consumes, so epoch N's checkpoint lands on disk
+    /// while epoch N+1's steps already run (ROADMAP "checkpoint snapshot
+    /// offload"); a failed write fails [`Trainer::run`] at its end-of-run
+    /// join. Written files are byte-identical to an inline
+    /// [`crate::checkpoint::save`] of the same epoch's state.
+    pub fn checkpoint_epochs_to(&mut self, dir: impl Into<PathBuf>) {
+        self.ckpt_dir = Some(dir.into());
     }
 
     /// Run the configured number of epochs; returns the full record.
@@ -212,14 +252,14 @@ impl<'rt> Trainer<'rt> {
         } else {
             None
         };
+        // async checkpointing rides the same per-epoch snapshot
+        let mut ckpt_writer =
+            self.ckpt_dir.as_ref().map(|dir| train::CheckpointWriter::spawn(dir.clone()));
 
         for epoch in 0..self.cfg.epochs {
             let lr = self.cfg.lr.lr_at(epoch);
-            let suffix = if self.cfg.variant == "orig" {
-                "none"
-            } else {
-                self.scheduler.pattern(epoch).suffix()
-            };
+            let suffix =
+                effective_pattern_suffix(&self.cfg.variant, self.scheduler.pattern(epoch));
             // direct field access keeps the exe borrow disjoint from the
             // params/momenta/engine mutations inside the step loop
             let (exe, meta) = self
@@ -268,14 +308,34 @@ impl<'rt> Trainer<'rt> {
                 (meter, loss, correct_sum / samples.max(1) as f64)
             };
 
+            // one parameter snapshot per epoch serves both overlapped
+            // consumers: the side-thread evaluator and the async checkpoint
+            // writer — the download is the single synchronous cost here
+            let mut snapshot = if eval_worker.is_some() || ckpt_writer.is_some() {
+                Some(match &self.engine {
+                    Some(engine) => engine.state().params.download()?,
+                    None => self.params.clone(),
+                })
+            } else {
+                None
+            };
+            if let Some(writer) = &mut ckpt_writer {
+                let snap = snapshot.as_ref().expect("snapshot taken when a consumer exists");
+                // clone only when the eval worker also needs the snapshot
+                if eval_worker.is_some() {
+                    writer.submit(epoch, snap.clone())?;
+                } else {
+                    writer.submit(epoch, snapshot.take().expect("checked above"))?;
+                }
+            }
             // eval is a semantically-required host sync point. Overlapped
-            // mode hands a parameter snapshot to the side-thread worker and
-            // keeps going (the accuracy lands in the record at the next
-            // epoch boundary / end-of-run join); the serial paths evaluate
+            // mode hands the snapshot to the side-thread worker and keeps
+            // going (the accuracy lands in the record at the next epoch
+            // boundary / end-of-run join); the serial paths evaluate
             // inline as before.
             let test_acc = match (&mut eval_worker, &self.engine) {
-                (Some(worker), Some(engine)) => {
-                    worker.submit(epoch, engine.state().params.download()?)?;
+                (Some(worker), Some(_)) => {
+                    worker.submit(epoch, snapshot.take().expect("eval worker implies snapshot"))?;
                     f64::NAN // placeholder until the worker reports back
                 }
                 (_, Some(engine)) => {
@@ -328,6 +388,16 @@ impl<'rt> Trainer<'rt> {
                         "[{}] epoch {e:>3} test_acc={acc:.3} (overlapped eval)",
                         record.name
                     );
+                }
+            }
+        }
+
+        // end-of-run join for the async checkpoints: every submitted epoch
+        // must be durably on disk (or fail the run) before we return
+        if let Some(writer) = &mut ckpt_writer {
+            for (e, path) in writer.drain()? {
+                if self.cfg.verbose {
+                    println!("[{}] epoch {e:>3} checkpoint {}", record.name, path.display());
                 }
             }
         }

@@ -102,25 +102,78 @@ fn gen_image(class: i32, rng: &mut Rng, out: &mut Vec<f32>) {
     }
 }
 
-/// Epoch iterator: shuffled batch starts over a dataset.
+/// One replica's slice of an epoch's batch stream — the data-parallel
+/// sharding contract of `train::replica`.
+///
+/// All shards derive the epoch permutation from the epoch seed alone, so
+/// every replica sees the *same* shuffled batch sequence and the full
+/// batches are dealt round-robin: batch `b` belongs to the shard with
+/// `b % count == index`. That makes shards **disjoint by construction**
+/// and **equal-length**: the trailing `B mod count` batches of an epoch
+/// are dropped (exactly like the partial final batch already is), so every
+/// replica runs the same number of steps between data-parallel averaging
+/// barriers — no replica ever waits on a barrier its peers will not reach.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// This shard's position in `0..count`.
+    pub index: usize,
+    /// Total number of shards the batch stream is dealt across.
+    pub count: usize,
+}
+
+impl Shard {
+    /// The degenerate single-shard view: the whole batch stream.
+    pub fn full() -> Shard {
+        Shard { index: 0, count: 1 }
+    }
+
+    /// Shard `index` of `count`.
+    ///
+    /// # Panics
+    /// If `count` is zero or `index` is out of range.
+    pub fn of(index: usize, count: usize) -> Shard {
+        assert!(count > 0, "shard count must be positive");
+        assert!(index < count, "shard index {index} out of range 0..{count}");
+        Shard { index, count }
+    }
+
+    /// How many of `total_batches` full batches this shard receives. Equal
+    /// for every shard of the same `count` (ragged tails are dropped).
+    pub fn num_batches(&self, total_batches: usize) -> usize {
+        total_batches / self.count
+    }
+}
+
+/// Epoch iterator: shuffled batch starts over a dataset (optionally one
+/// shard of the epoch's batch stream — see [`Shard`]).
 pub struct BatchIter<'a> {
     data: &'a Dataset,
     order: Vec<usize>,
     batch: usize,
+    /// Shard-local batch index (`0..num_batches()`).
     cursor: usize,
+    shard: Shard,
 }
 
 impl<'a> BatchIter<'a> {
     /// Batches of `batch` samples in a per-epoch shuffled order. The final
     /// partial batch is dropped (constant AOT batch shape).
     pub fn new(data: &'a Dataset, batch: usize, epoch_seed: u64) -> Self {
-        let mut order: Vec<usize> = (0..data.len()).collect();
-        Rng::new(epoch_seed ^ 0x5EED_BA7C).shuffle(&mut order);
-        BatchIter { data, order, batch, cursor: 0 }
+        Self::new_sharded(data, batch, epoch_seed, Shard::full())
     }
 
+    /// Like [`BatchIter::new`], but yielding only `shard`'s round-robin
+    /// slice of the epoch's batches. The shuffle depends on `epoch_seed`
+    /// alone, so shards of the same epoch partition one batch sequence.
+    pub fn new_sharded(data: &'a Dataset, batch: usize, epoch_seed: u64, shard: Shard) -> Self {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        Rng::new(epoch_seed ^ 0x5EED_BA7C).shuffle(&mut order);
+        BatchIter { data, order, batch, cursor: 0, shard }
+    }
+
+    /// Batches this iterator will yield (the shard's equal-length slice).
     pub fn num_batches(&self) -> usize {
-        self.data.len() / self.batch
+        self.shard.num_batches(self.data.len() / self.batch)
     }
 }
 
@@ -128,18 +181,20 @@ impl Iterator for BatchIter<'_> {
     type Item = (Vec<f32>, Vec<i32>);
 
     fn next(&mut self) -> Option<Self::Item> {
-        if self.cursor + self.batch > self.order.len() {
+        if self.cursor >= self.num_batches() {
             return None;
         }
+        let global = self.cursor * self.shard.count + self.shard.index;
+        let start = global * self.batch;
         let mut xs = Vec::with_capacity(self.batch * IMAGE_ELEMS);
         let mut ys = Vec::with_capacity(self.batch);
-        for &idx in &self.order[self.cursor..self.cursor + self.batch] {
+        for &idx in &self.order[start..start + self.batch] {
             xs.extend_from_slice(
                 &self.data.images[idx * IMAGE_ELEMS..(idx + 1) * IMAGE_ELEMS],
             );
             ys.push(self.data.labels[idx]);
         }
-        self.cursor += self.batch;
+        self.cursor += 1;
         Some((xs, ys))
     }
 }
@@ -254,5 +309,74 @@ mod tests {
         let d = Dataset::synthetic(70, 9);
         let it = BatchIter::new(&d, 32, 0);
         assert_eq!(it.count(), 2); // 70/32 = 2 full batches
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shard_index_must_be_in_range() {
+        Shard::of(2, 2);
+    }
+
+    /// Shards of one epoch must partition the unsharded batch stream:
+    /// round-robin interleave, pairwise disjoint, nothing invented.
+    fn assert_shards_partition(n_samples: usize, batch: usize, count: usize) {
+        let d = Dataset::synthetic(n_samples, 21);
+        let full: Vec<(Vec<f32>, Vec<i32>)> = BatchIter::new(&d, batch, 7).collect();
+        let per_shard = full.len() / count;
+        let mut seen = 0usize;
+        for index in 0..count {
+            let got: Vec<(Vec<f32>, Vec<i32>)> =
+                BatchIter::new_sharded(&d, batch, 7, Shard::of(index, count)).collect();
+            assert_eq!(got.len(), per_shard, "shard {index}/{count} length");
+            for (j, b) in got.iter().enumerate() {
+                // shard-local batch j is exactly global batch j*count+index
+                assert_eq!(b, &full[j * count + index], "shard {index} batch {j}");
+                seen += 1;
+            }
+        }
+        // coverage: together the shards yield every batch of the truncated
+        // equal-length prefix, and only those
+        assert_eq!(seen, per_shard * count);
+    }
+
+    #[test]
+    fn shards_partition_even_dataset() {
+        // 64 samples / batch 16 = 4 batches; 2 shards * 2 batches, no drop
+        assert_shards_partition(64, 16, 2);
+    }
+
+    #[test]
+    fn shards_partition_ragged_dataset() {
+        // 70 samples / batch 16 = 4 full batches; 3 shards * 1 batch — the
+        // ragged tail (1 batch + the partial) is dropped for equal lengths
+        assert_shards_partition(70, 16, 3);
+        let d = Dataset::synthetic(70, 21);
+        let it = BatchIter::new_sharded(&d, 16, 7, Shard::of(0, 3));
+        assert_eq!(it.num_batches(), 1);
+    }
+
+    #[test]
+    fn sharded_batches_are_sample_disjoint() {
+        let d = Dataset::synthetic(96, 13);
+        let mut labels_seen = 0usize;
+        let mut used = vec![0usize; 96];
+        for index in 0..3 {
+            for (xs, ys) in BatchIter::new_sharded(&d, 16, 9, Shard::of(index, 3)) {
+                labels_seen += ys.len();
+                // recover each sample's identity by matching its pixels
+                for s in 0..ys.len() {
+                    let img = &xs[s * IMAGE_ELEMS..(s + 1) * IMAGE_ELEMS];
+                    let idx = (0..d.len())
+                        .find(|&i| {
+                            d.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS] == *img
+                        })
+                        .expect("sample must come from the dataset");
+                    used[idx] += 1;
+                }
+            }
+        }
+        assert_eq!(labels_seen, 96);
+        // every sample appears exactly once across all shards
+        assert!(used.iter().all(|&c| c == 1), "{used:?}");
     }
 }

@@ -29,7 +29,12 @@
 //!   the same buffers to the new slot layout, and batches prefetch while
 //!   the current step executes — the Table-1 "Train Speed" claim as a
 //!   running system (`lrta train`, `bench_train_resident`; the literal
-//!   round-trip loop survives as the `--no-resident` baseline).
+//!   round-trip loop survives as the `--no-resident` baseline). Scaling
+//!   past one device is [`train::replica`]: N engine replicas (one PJRT
+//!   client and resident state each) step on disjoint batch shards
+//!   ([`data::Shard`]) with periodic buffer-level parameter averaging and
+//!   freeze swaps synchronized at epoch boundaries (`lrta train
+//!   --replicas N`, `bench_train_replicas`).
 //!
 //! Both subsystems execute through the **overlapped pipeline layer**
 //! ([`runtime::pipeline`], default; `--no-pipeline` restores the serial
@@ -43,6 +48,11 @@
 //!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
+//!
+//! `ARCHITECTURE.md` at the repository root is the top-to-bottom map of
+//! all of this — lowering → runtime/pipeline → train/serve → coordinator/
+//! CLI → benches/CI — including the data + buffer lifecycle (residency,
+//! demux chaining, freeze rebinding) that the module docs above assume.
 
 pub mod checkpoint;
 pub mod coordinator;

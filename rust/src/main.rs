@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   pretrain   train the original (dense) mini model, save a checkpoint
 //!   decompose  apply closed-form LRD to a checkpoint (variant ranks)
-//!   train      fine-tune a variant with a freezing schedule
+//!   train      fine-tune a variant with a freezing schedule (optionally
+//!              data-parallel across N engine replicas with buffer-level
+//!              parameter averaging)
 //!   infer      batched-inference throughput of a variant
 //!   serve      production-style inference serving: dynamic batching,
 //!              resident parameters, variant routing + synthetic load
@@ -25,6 +27,7 @@ use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::{Manifest, Runtime};
 use lrta::serve as serve_load;
 use lrta::serve::{Server, ServerConfig, StatsSnapshot, VariantSpec};
+use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
 use lrta::util::bench::table;
 use lrta::util::cli::Args;
 use std::time::Duration;
@@ -40,7 +43,8 @@ SUBCOMMANDS
   decompose --model M --variant V --ckpt F --out F
   train     --model M --variant V --freeze {none|regular|sequential}
             --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
-            [--no-pipeline]
+            [--no-pipeline] [--replicas N] [--avg-every K]
+            [--momenta {avg|reset}] [--epoch-ckpts DIR]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
@@ -60,6 +64,17 @@ COMMON
                     uploads, split dispatch/fetch, on-device epoch metrics,
                     side-thread eval / streaming admission) and run the
                     serial resident loops instead
+
+TRAIN SCALING
+  --replicas N      data-parallel training: N engine replicas (one PJRT
+                    client + resident state each) step on disjoint batch
+                    shards with buffer-level parameter averaging
+  --avg-every K     average every K steps (0 = only at epoch boundaries;
+                    boundaries always sync so freeze swaps stay aligned)
+  --momenta P       momenta at an averaging event: avg (default) | reset
+  --epoch-ckpts DIR persist every epoch's parameters as DIR/epoch_NNN.bin
+                    on a side thread while the next epoch trains
+                    (single-replica trainer only)
 
 SERVE
   Starts one engine per variant (parameters uploaded once and kept
@@ -83,7 +98,7 @@ fn run() -> Result<()> {
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
-        "no-pipeline",
+        "no-pipeline", "replicas", "avg-every", "momenta", "epoch-ckpts",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -185,13 +200,82 @@ fn decompose(args: &Args) -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let m = load_manifest(args)?;
-    let rt = Runtime::cpu()?;
     let cfg = base_config(args);
     let default_ckpt = format!("results/{}_{}.bin", cfg.model, cfg.variant);
     let ckpt = args.str_or("ckpt", &default_ckpt);
     let params = checkpoint::load(&ckpt)?;
     let out = args.str_or("out", "");
+
+    // data-parallel path: each replica owns its PJRT client on its own
+    // thread, so no main-thread runtime is created here. Parse strictly —
+    // a typo'd or zero count must not silently fall back to single-engine
+    let replicas = match args.get("replicas") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("--replicas expects a positive integer, got '{v}'"))?,
+        None => 1,
+    };
+    if replicas == 0 {
+        bail!("--replicas must be at least 1");
+    }
+    if replicas > 1 {
+        // fail loudly on flags the replica path would otherwise silently
+        // ignore: replicas always step the serial resident engine, and
+        // epoch checkpointing is single-engine only
+        if args.has("epoch-ckpts") {
+            bail!("--epoch-ckpts is not supported with --replicas > 1 (single-engine trainer only)");
+        }
+        if args.bool_or("no-resident", false) || args.bool_or("no-pipeline", false) {
+            bail!(
+                "--no-resident / --no-pipeline do not apply with --replicas > 1: \
+                 replicas always step the serial resident engine"
+            );
+        }
+        let momenta_arg = args.str_or("momenta", "avg");
+        let rcfg = ReplicaConfig {
+            replicas,
+            avg_every: args.usize_or("avg-every", 0),
+            momenta: MomentumPolicy::parse(&momenta_arg)
+                .ok_or_else(|| anyhow!("unknown momentum policy '{momenta_arg}'"))?,
+            identical_shards: false,
+        };
+        let run = run_replicas(&m, &cfg, &rcfg, &params)?;
+        println!(
+            "final test acc {:.3}; median step {:.1} ms ({replicas} replicas, avg-every={})",
+            run.record.final_test_acc(),
+            run.record.median_step_secs() * 1e3,
+            rcfg.avg_every
+        );
+        for r in &run.reports {
+            println!(
+                "replica {}: {} initial uploads + {} averaging uploads over {} events \
+                 ({} unaccounted), {} demux fallbacks, {} batches",
+                r.replica,
+                r.initial_param_uploads,
+                r.avg_slot_uploads,
+                r.avg_events,
+                r.unaccounted_uploads(),
+                r.demux_fallbacks,
+                r.batches
+            );
+        }
+        if !out.is_empty() {
+            checkpoint::save(&out, &run.params)?;
+            println!("saved {out}");
+        }
+        return Ok(());
+    }
+    // the mirror-image guard: replica-only flags must not silently no-op
+    // on the single-engine path
+    if args.has("avg-every") || args.has("momenta") {
+        bail!("--avg-every / --momenta require --replicas > 1");
+    }
+
+    let rt = Runtime::cpu()?;
     let mut trainer = Trainer::new(&rt, &m, cfg, params)?;
+    if let Some(dir) = args.get("epoch-ckpts") {
+        trainer.checkpoint_epochs_to(dir);
+    }
     let record = trainer.run()?;
     println!(
         "final test acc {:.3}; median step {:.1} ms",

@@ -1,5 +1,15 @@
 //! Run metrics: throughput meters (the paper reports fps = images/second),
 //! per-epoch training records, and report assembly helpers.
+//!
+//! [`ThroughputMeter`] is the shared timing primitive — training engines
+//! record one sample per step, serving benches one per batch — and reports
+//! both the paper-style median-based fps (robust to warmup/straggler
+//! outliers) and a mean-based fps that pays for them. [`RunRecord`] /
+//! [`EpochRecord`] carry a fine-tune's loss/accuracy trajectory, power the
+//! Fig.-3 convergence comparison (`epochs_to_reach`) and serialize to the
+//! CSV curves under `results/fig3_curves/`. Multi-replica runs fold one
+//! combined record out of per-shard stats (`train::replica`), so every
+//! consumer of a [`RunRecord`] works unchanged at N replicas.
 
 use crate::util::stats::Summary;
 use std::time::Instant;

@@ -1,0 +1,171 @@
+//! Asynchronous end-of-epoch checkpointing: epoch N's checkpoint persists
+//! on a side thread while epoch N+1's steps already run.
+//!
+//! The overlapped trainer already downloads one parameter snapshot per
+//! epoch for the side-thread evaluator ([`crate::train::EvalWorker`]) —
+//! that download is the single synchronous cost on the engine thread, and
+//! this module makes it pay twice: [`crate::coordinator::Trainer`] hands
+//! the *same* snapshot to a [`CheckpointWriter`], whose worker serializes
+//! it with [`crate::checkpoint::save`] off the hot path (the ROADMAP's
+//! "checkpoint snapshot offload" item). `Params` is plain `Send` host
+//! data, so unlike PJRT handles it can cross threads freely.
+//!
+//! Files land as `<dir>/epoch_NNN.bin` in the shared binary checkpoint
+//! format. Determinism: `save` writes tensors in sorted-name order, so a
+//! checkpoint written asynchronously here is byte-identical to one written
+//! inline from the same state — pinned against the serial path in
+//! `rust/tests/integration_train_resident.rs`.
+//!
+//! Join points mirror [`crate::train::EvalWorker`]: submission never
+//! blocks; [`CheckpointWriter::drain`] (the end-of-run join) surfaces
+//! every outcome, so a failed write fails the run instead of vanishing.
+
+use crate::checkpoint::{self, Params};
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+/// One write request: the epoch index plus the snapshot to persist.
+struct Job {
+    epoch: usize,
+    params: Params,
+}
+
+/// A finished (or failed) checkpoint write.
+type Outcome = (usize, Result<PathBuf, String>);
+
+/// Side-thread checkpoint persister over per-epoch parameter snapshots.
+pub struct CheckpointWriter {
+    tx: Option<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<Outcome>,
+    join: Option<thread::JoinHandle<()>>,
+    /// Submitted but not yet collected epochs.
+    pending: usize,
+}
+
+impl CheckpointWriter {
+    /// Spawn the writer; checkpoints land as `dir/epoch_NNN.bin`.
+    pub fn spawn(dir: PathBuf) -> CheckpointWriter {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (out_tx, out_rx) = mpsc::channel::<Outcome>();
+        let join = thread::Builder::new()
+            .name("lrta-train-ckpt".into())
+            .spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    let path = dir.join(format!("epoch_{:03}.bin", job.epoch));
+                    let outcome = checkpoint::save(&path, &job.params)
+                        .map(|()| path)
+                        .map_err(|e| format!("{e:#}"));
+                    if out_tx.send((job.epoch, outcome)).is_err() {
+                        break; // trainer gone — nothing left to report to
+                    }
+                }
+            })
+            .expect("spawn checkpoint writer thread");
+        CheckpointWriter { tx: Some(job_tx), rx: out_rx, join: Some(join), pending: 0 }
+    }
+
+    /// Queue one epoch's snapshot for persistence (non-blocking — the
+    /// write proceeds while the next epoch trains).
+    pub fn submit(&mut self, epoch: usize, params: Params) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("checkpoint writer shut down"))?;
+        tx.send(Job { epoch, params }).map_err(|_| anyhow!("checkpoint writer died"))?;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// Block until every submitted epoch has been written — the end-of-run
+    /// join point. Returns `(epoch, path)` pairs; any failed write fails
+    /// the drain (and with it the run that submitted it).
+    pub fn drain(&mut self) -> Result<Vec<(usize, PathBuf)>> {
+        let mut out = Vec::new();
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok((epoch, outcome)) => {
+                    self.pending -= 1;
+                    let path = outcome
+                        .map_err(|e| anyhow!("epoch {epoch} checkpoint failed: {e}"))?;
+                    out.push((epoch, path));
+                }
+                Err(_) => {
+                    bail!("checkpoint writer died with {} writes pending", self.pending)
+                }
+            }
+        }
+        out.sort_by_key(|(e, _)| *e);
+        Ok(out)
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        // closing the job channel ends the worker loop; join so the thread
+        // never outlives the trainer run that spawned it
+        self.tx.take();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lrta_ckpt_writer_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn some_params(seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut p = Params::new();
+        p.insert("w".into(), Tensor::randn(&[3, 4], 1.0, &mut rng));
+        p.insert("b".into(), Tensor::randn(&[4], 0.1, &mut rng));
+        p
+    }
+
+    #[test]
+    fn async_writes_match_inline_saves_byte_for_byte() {
+        let dir = tmp("match_inline");
+        let mut w = CheckpointWriter::spawn(dir.clone());
+        let snapshots = [some_params(1), some_params(2)];
+        for (e, p) in snapshots.iter().enumerate() {
+            w.submit(e, p.clone()).unwrap();
+        }
+        let written = w.drain().unwrap();
+        assert_eq!(written.len(), 2);
+        for (e, path) in &written {
+            assert_eq!(*path, dir.join(format!("epoch_{e:03}.bin")));
+            let inline = dir.join(format!("inline_{e}.bin"));
+            checkpoint::save(&inline, &snapshots[*e]).unwrap();
+            assert_eq!(
+                std::fs::read(path).unwrap(),
+                std::fs::read(&inline).unwrap(),
+                "epoch {e}: async checkpoint must be byte-identical to an inline save"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_with_nothing_pending_is_empty() {
+        let mut w = CheckpointWriter::spawn(tmp("empty"));
+        assert!(w.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn failed_write_surfaces_in_drain() {
+        // a directory path that is actually a file → save must fail
+        let dir = tmp("failing");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "file").unwrap();
+        let mut w = CheckpointWriter::spawn(blocker.join("sub"));
+        w.submit(0, some_params(3)).unwrap();
+        assert!(w.drain().is_err());
+    }
+}

@@ -7,8 +7,11 @@
 //! client and compiled infer executable (exactly the serving-engine
 //! pattern), and each epoch hands it a host **snapshot** of the resident
 //! parameters (`Params` is plain `Send` data). The snapshot download is the
-//! one synchronous cost on the engine thread; the eval itself — upload
-//! snapshot, stream test batches, count correct — overlaps with epoch N+1.
+//! one synchronous cost on the engine thread — and it is amortized: the
+//! trainer hands the *same* snapshot to the async checkpoint writer
+//! ([`crate::train::CheckpointWriter`]) when epoch checkpointing is on.
+//! The eval itself — upload snapshot, stream test batches, count correct —
+//! overlaps with epoch N+1.
 //!
 //! Determinism: the worker runs the same artifact on the same test batches
 //! in the same order as `Engine::evaluate`, so the reported accuracy is

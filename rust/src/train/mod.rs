@@ -43,17 +43,30 @@
 //! parameter snapshot on a side thread ([`EvalWorker`]) while the next
 //! epoch's steps proceed. All three overlaps preserve bit-identical
 //! parameters and metrics (pinned in `integration_train_resident`).
+//!
+//! Scaling past one device happens in [`replica`]: N engine replicas —
+//! each with its own PJRT client and [`ResidentState`] — step on disjoint
+//! batch shards ([`crate::data::Shard`]) and periodically average their
+//! trainable parameters at the buffer level, with freeze-pattern swaps
+//! synchronized across replicas at epoch boundaries. The per-epoch
+//! snapshot the eval worker consumes is shared with [`CheckpointWriter`],
+//! which persists epoch N's checkpoint on a side thread while epoch N+1
+//! trains. See `ARCHITECTURE.md` at the repo root for the full system map.
 
+pub mod ckpt;
 pub mod eval;
 pub mod prefetch;
+pub mod replica;
 pub mod resident;
 
+pub use ckpt::CheckpointWriter;
 pub use eval::EvalWorker;
 pub use prefetch::Prefetcher;
+pub use replica::{run_replicas, MomentumPolicy, ReplicaConfig, ReplicaReport, ReplicaRun};
 pub use resident::{MetricsAccumulator, ResidentParams, ResidentState};
 
 use crate::checkpoint::Params;
-use crate::data::Dataset;
+use crate::data::{Dataset, Shard};
 use crate::metrics::ThroughputMeter;
 use crate::runtime::{literal_to_tensor, ArtifactMeta, DoubleBuffered, Executable, Runtime};
 use crate::util::stats::count_correct;
@@ -67,7 +80,15 @@ pub struct EpochStats {
     pub loss: f64,
     /// Training accuracy over the epoch.
     pub train_acc: f64,
+    /// Raw f32 sum behind `loss` (accumulated in step order) — what the
+    /// data-parallel coordinator needs to weight shards without losing the
+    /// bit-exactness the parity tests pin.
+    pub loss_sum: f32,
+    /// Raw f32 sum behind `train_acc` (correct-count, step order).
+    pub correct_sum: f32,
+    /// Samples consumed (batches × batch size; partial batches are dropped).
     pub samples: usize,
+    /// Full batches executed this epoch.
     pub batches: usize,
     /// Per-step wall times (batch-upload + execute + scalar sync).
     pub meter: ThroughputMeter,
@@ -115,6 +136,13 @@ impl<'rt> Engine<'rt> {
 
     pub fn state(&self) -> &ResidentState {
         &self.state
+    }
+
+    /// Mutable access to the resident state — the replica averaging path
+    /// replaces trainable buffers in place via
+    /// [`ResidentParams::upload_rebind`] between steps.
+    pub fn state_mut(&mut self) -> &mut ResidentState {
+        &mut self.state
     }
 
     /// See [`ResidentState::param_uploads`].
@@ -182,8 +210,29 @@ impl<'rt> Engine<'rt> {
         epoch_seed: u64,
         lr: f32,
     ) -> Result<EpochStats> {
-        let expected_batches = data.len() / meta.batch;
-        let mut pf = Prefetcher::start(Arc::clone(data), meta.batch, epoch_seed);
+        self.run_epoch_sharded(exe, meta, data, epoch_seed, lr, Shard::full(), &mut |_, _| Ok(()))
+    }
+
+    /// [`Engine::run_epoch`] over one shard of the epoch's batch stream,
+    /// with `on_step` invoked after every step (receiving the runtime and
+    /// the resident state). The data-parallel replicas run their averaging
+    /// barrier through the hook ([`replica`]), so the replica step loop
+    /// *is* this loop — the f32 metric sums, batch order and early-exit
+    /// behavior pinned by the bit-for-bit parity tests cannot drift
+    /// between the single-engine and replica paths.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_epoch_sharded(
+        &mut self,
+        exe: &Executable,
+        meta: &ArtifactMeta,
+        data: &Arc<Dataset>,
+        epoch_seed: u64,
+        lr: f32,
+        shard: Shard,
+        on_step: &mut dyn FnMut(&Runtime, &mut ResidentState) -> Result<()>,
+    ) -> Result<EpochStats> {
+        let expected_batches = shard.num_batches(data.len() / meta.batch);
+        let mut pf = Prefetcher::start_sharded(Arc::clone(data), meta.batch, epoch_seed, shard);
         let mut meter = ThroughputMeter::new(meta.batch);
         // f32 accumulation, in step order — the exact arithmetic the
         // pipelined path's on-device accumulator performs, so the two
@@ -200,6 +249,7 @@ impl<'rt> Engine<'rt> {
             correct_sum += correct;
             samples += ys.len();
             batches += 1;
+            on_step(self.rt, &mut self.state)?;
         }
         if batches != expected_batches {
             bail!(
@@ -209,6 +259,8 @@ impl<'rt> Engine<'rt> {
         Ok(EpochStats {
             loss: loss_sum as f64 / batches.max(1) as f64,
             train_acc: correct_sum as f64 / samples.max(1) as f64,
+            loss_sum,
+            correct_sum,
             samples,
             batches,
             meter,
@@ -303,6 +355,8 @@ impl<'rt> Engine<'rt> {
         Ok(EpochStats {
             loss: loss_sum as f64 / batches.max(1) as f64,
             train_acc: correct_sum as f64 / samples.max(1) as f64,
+            loss_sum,
+            correct_sum,
             samples,
             batches,
             meter,

@@ -9,7 +9,7 @@
 //! same epoch seed: the channel is FIFO, so prefetched runs stay
 //! bit-identical to the literal baseline.
 
-use crate::data::{BatchIter, Dataset};
+use crate::data::{BatchIter, Dataset, Shard};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -29,8 +29,23 @@ impl Prefetcher {
     /// Start assembling the epoch's batches (shuffled by `epoch_seed`,
     /// partial final batch dropped — same contract as [`BatchIter`]).
     pub fn start(data: Arc<Dataset>, batch: usize, epoch_seed: u64) -> Prefetcher {
+        Self::start_sharded(data, batch, epoch_seed, Shard::full())
+    }
+
+    /// Like [`Prefetcher::start`], but assembling only `shard`'s round-robin
+    /// slice of the epoch ([`BatchIter::new_sharded`]) — the data-parallel
+    /// replicas each prefetch their own disjoint shard. The channel is FIFO
+    /// and the shuffle is keyed by `epoch_seed` alone, so a sharded
+    /// prefetched run is deterministic and batch-identical to iterating
+    /// `BatchIter::new_sharded` inline.
+    pub fn start_sharded(
+        data: Arc<Dataset>,
+        batch: usize,
+        epoch_seed: u64,
+        shard: Shard,
+    ) -> Prefetcher {
         Self::spawn_producer(move |tx| {
-            for b in BatchIter::new(&data, batch, epoch_seed) {
+            for b in BatchIter::new_sharded(&data, batch, epoch_seed, shard) {
                 // a dropped receiver (engine error mid-epoch) just ends
                 // the producer early
                 if tx.send(b).is_err() {
@@ -117,6 +132,26 @@ mod tests {
         for (g, d) in got.iter().zip(&direct) {
             assert_eq!(g.1, d.1);
             assert_eq!(g.0, d.0);
+        }
+    }
+
+    #[test]
+    fn sharded_prefetch_is_deterministic_and_matches_batch_iter() {
+        let data = Arc::new(Dataset::synthetic(96, 17));
+        for index in 0..3 {
+            let shard = Shard::of(index, 3);
+            let direct: Vec<(Vec<f32>, Vec<i32>)> =
+                BatchIter::new_sharded(&data, 16, 5, shard).collect();
+            for _ in 0..2 {
+                // two prefetched runs: both must reproduce the inline
+                // iteration batch-for-batch, in order
+                let mut pf = Prefetcher::start_sharded(Arc::clone(&data), 16, 5, shard);
+                let mut got = Vec::new();
+                while let Some(b) = pf.next_batch() {
+                    got.push(b);
+                }
+                assert_eq!(got, direct, "shard {index}");
+            }
         }
     }
 

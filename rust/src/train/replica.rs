@@ -1,0 +1,801 @@
+//! Multi-replica data-parallel training with buffer-level parameter
+//! averaging — the throughput multiplier on top of the device-resident
+//! engine.
+//!
+//! One [`Engine`] saturates one PJRT device. This module runs **N engine
+//! replicas**, each on its own worker thread with its own PJRT client and
+//! its own [`crate::train::ResidentState`] (parameters *and* momenta
+//! uploaded once per replica — exactly the serving-worker isolation
+//! pattern), stepping over **disjoint batch shards** of the same epoch
+//! ([`crate::data::Shard`]: all replicas shuffle with the epoch seed and
+//! deal the full batches round-robin, so shards are disjoint and
+//! equal-length by construction):
+//!
+//! ```text
+//!              ┌ replica 0: own PJRT client ── ResidentState ─ shard 0 ┐
+//!   dataset ───┼ replica 1: own PJRT client ── ResidentState ─ shard 1 ┼──┐
+//!              └ …                                                     ┘  │
+//!        every k steps (and at each epoch boundary):                      │
+//!   ┌──────────────────────────────────────────────────────────────────┐  │
+//!   │ each replica downloads its *trainable* leaf buffers (demuxed     │◀─┘
+//!   │ per-parameter — nothing is repacked), the coordinator averages   │
+//!   │ them element-wise in f32, and each replica re-uploads the mean   │
+//!   │ into its resident buffers (upload_rebind: counted transfers)     │
+//!   └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Averaging policy** (the documented decision): parameters average as
+//! `mean = (Σ replica values) / N`, summed in replica order in f32 — for
+//! N replicas holding identical values the mean is bit-identical to the
+//! input (the N=2 case is exact IEEE doubling + halving), which is what
+//! lets `integration_train_replicas` pin a 2-replica run on identical
+//! shards against the 1-replica trajectory bit-for-bit. Momenta follow
+//! [`MomentumPolicy`]: [`MomentumPolicy::Average`] (default) treats the
+//! momentum of every trainable slot exactly like the parameter itself, so
+//! the post-average SGD state is the mean trajectory's state;
+//! [`MomentumPolicy::Reset`] zeroes them instead (the conservative choice
+//! when shards are statistically very different — stale per-shard momenta
+//! can point away from the averaged iterate). Frozen factors are *not*
+//! exchanged: they start identical, are never stepped, and every epoch
+//! that thaws them under Algorithm 2 averages them while trainable — the
+//! boundary average is therefore mandatory, not an optimization.
+//!
+//! Averaging is **host-mediated** by design: each replica owns a separate
+//! PJRT client, and buffers of different clients cannot meet in one device
+//! computation — an XLA averaging computation (lowered like `metrics_acc`)
+//! could only average buffers *within* one client, which is the wrong
+//! topology here. The download → f32 mean → upload path costs exactly
+//! `2 · |trainable|` transfers per replica per event, every one of them
+//! counted ([`crate::train::ResidentParams::upload_rebind`]) so tests can
+//! assert nothing else crossed the boundary.
+//!
+//! **Freeze-pattern synchronization**: every replica runs the same
+//! [`FreezeScheduler`] over the same epoch indices, so Algorithm 2's a↔b
+//! swaps happen at the same boundary on every replica, each via the
+//! existing [`crate::freeze::train_slot_bindings`] rebinding — zero
+//! re-uploads per replica, asserted through the same upload accounting as
+//! the single-engine path.
+//!
+//! The coordinator (the caller's thread) is pure host logic: it collects
+//! per-event contributions, averages, broadcasts, folds per-replica epoch
+//! stats into one [`RunRecord`], and re-raises the first replica failure.
+//! Replica 0 additionally evaluates the (averaged) model each epoch on its
+//! resident buffers and reports the run's final parameters.
+
+use crate::checkpoint::Params;
+use crate::coordinator::{
+    effective_pattern_suffix, load_schedule_executables, zero_momenta, TrainConfig,
+};
+use crate::data::{Dataset, Shard};
+use crate::freeze::FreezeScheduler;
+use crate::metrics::{EpochRecord, RunRecord};
+use crate::runtime::{download_tensor, ArtifactMeta, Manifest, Runtime};
+use crate::tensor::Tensor;
+use crate::train::{Engine, ResidentState};
+use anyhow::{anyhow, bail, Result};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// How replica momenta combine at a parameter-averaging event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MomentumPolicy {
+    /// Average momenta exactly like parameters (default): the post-event
+    /// optimizer state is the mean trajectory's state, and N identical
+    /// replicas reproduce one replica bit-for-bit.
+    Average,
+    /// Zero momenta after every averaging event: discards per-shard
+    /// momentum that may point away from the averaged iterate, at the cost
+    /// of re-warming the optimizer after each event.
+    Reset,
+}
+
+impl MomentumPolicy {
+    /// Parse a CLI spelling (`avg`/`average` or `reset`).
+    pub fn parse(s: &str) -> Option<MomentumPolicy> {
+        match s {
+            "avg" | "average" => Some(MomentumPolicy::Average),
+            "reset" => Some(MomentumPolicy::Reset),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration of a data-parallel replica run (composes with the usual
+/// [`TrainConfig`] for everything schedule/data/variant related).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaConfig {
+    /// Number of engine replicas (own PJRT client + resident state each).
+    pub replicas: usize,
+    /// Average every `k` steps; `0` averages only at epoch boundaries. An
+    /// epoch boundary always averages whatever the cadence left un-synced,
+    /// so replicas agree on every frozen↔trainable role swap.
+    pub avg_every: usize,
+    /// What happens to momenta at an averaging event.
+    pub momenta: MomentumPolicy,
+    /// Give every replica the *full* batch stream instead of a disjoint
+    /// shard. Parity testing only: N identical replicas must reproduce the
+    /// single-engine trajectory bit-for-bit.
+    pub identical_shards: bool,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            replicas: 2,
+            avg_every: 0,
+            momenta: MomentumPolicy::Average,
+            identical_shards: false,
+        }
+    }
+}
+
+/// Per-replica transfer accounting, the multi-replica form of the
+/// single-engine "zero re-uploads" claim: across a whole run,
+/// `param_uploads == initial_param_uploads + avg_slot_uploads` — steps
+/// chain buffer-to-buffer and freeze-pattern swaps re-bind, so *only* the
+/// documented averaging traffic crosses the host boundary.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    /// Replica index (`0..replicas`).
+    pub replica: usize,
+    /// Parameter/momentum uploads at engine construction (the one full
+    /// state upload).
+    pub initial_param_uploads: usize,
+    /// Final value of the engine's parameter-upload counter.
+    pub param_uploads: usize,
+    /// Averaging barriers this replica participated in.
+    pub avg_events: usize,
+    /// Counted uploads attributable to averaging (`Σ` over events of
+    /// params + momenta re-uploaded).
+    pub avg_slot_uploads: usize,
+    /// Demux fallbacks on this replica's runtime (0 = fully
+    /// buffer-chained).
+    pub demux_fallbacks: usize,
+    /// Training batches this replica stepped through.
+    pub batches: usize,
+}
+
+impl ReplicaReport {
+    /// Parameter uploads *not* accounted for by the initial upload or the
+    /// averaging budget — must be 0 (steps and pattern swaps never
+    /// re-upload).
+    pub fn unaccounted_uploads(&self) -> usize {
+        self.param_uploads - self.initial_param_uploads - self.avg_slot_uploads
+    }
+}
+
+/// Result of a data-parallel run: the combined record (loss/accuracy
+/// weighted across shards, eval from the averaged model) plus the final
+/// averaged state and per-replica transfer accounting.
+pub struct ReplicaRun {
+    /// Combined per-epoch record; `test_acc` is replica 0's evaluation of
+    /// the post-boundary-average (i.e. global) model.
+    pub record: RunRecord,
+    /// Final parameters (replica 0's state after the last boundary
+    /// average — identical on every replica at that point).
+    pub params: Params,
+    /// Final momenta (same provenance as `params`).
+    pub momenta: Params,
+    /// One transfer-accounting report per replica.
+    pub reports: Vec<ReplicaReport>,
+}
+
+/// One replica's contribution to (or the broadcast result of) an
+/// averaging event: the current pattern's trainable parameters, plus their
+/// momenta under [`MomentumPolicy::Average`].
+#[derive(Clone)]
+struct AvgPayload {
+    params: Params,
+    momenta: Params,
+}
+
+/// Everything a replica reports back on completion.
+struct ReplicaOutcome {
+    report: ReplicaReport,
+    /// Final state — populated by replica 0 only (identical everywhere
+    /// after the final boundary average; shipping N copies is waste).
+    state: Option<(Params, Params)>,
+}
+
+/// Replica → coordinator protocol.
+enum ToCoord {
+    /// Contribution to averaging barrier `event` (a global ordinal; every
+    /// replica must be at the same one — anything else is a desync bug).
+    Avg { replica: usize, event: u64, payload: AvgPayload },
+    /// One epoch's local stats (sums, so the coordinator can weight them).
+    Epoch {
+        replica: usize,
+        epoch: usize,
+        loss_sum: f32,
+        correct_sum: f32,
+        samples: usize,
+        batches: usize,
+        median_step_secs: f64,
+    },
+    /// Replica 0's evaluation of the averaged model after `epoch`.
+    Eval { epoch: usize, acc: f64 },
+    /// Clean completion.
+    Done { replica: usize, outcome: Box<ReplicaOutcome> },
+    /// Failure; the coordinator aborts the whole run.
+    Failed { replica: usize, message: String },
+}
+
+/// Everything one replica thread needs to run (owned clones / shared
+/// `Arc`s — the thread outlives the caller's borrows).
+struct ReplicaJob {
+    idx: usize,
+    manifest: Manifest,
+    cfg: TrainConfig,
+    rcfg: ReplicaConfig,
+    params: Params,
+    momenta: Params,
+    /// Shared read-only corpus — generated once by the coordinator, not
+    /// once per replica.
+    train_data: Arc<Dataset>,
+    test_data: Arc<Dataset>,
+    to_coord: mpsc::Sender<ToCoord>,
+    from_coord: mpsc::Receiver<Arc<AvgPayload>>,
+}
+
+/// Run `cfg.epochs` of data-parallel training across `rcfg.replicas`
+/// engine replicas. `params` must already match the variant (decompose
+/// first, as with [`crate::coordinator::Trainer`]); momenta start at zero
+/// on every replica.
+///
+/// Each replica steps through the *serial* resident engine —
+/// `cfg.resident` / `cfg.pipelined` are ignored here: the averaging
+/// barrier is a synchronization point the overlapped epoch driver cannot
+/// currently cross (staged batches would straddle the barrier), and the
+/// serial loop is also what keeps the identical-shard parity argument
+/// exact. Overlapping the barrier itself is a ROADMAP follow-on.
+pub fn run_replicas(
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+    rcfg: &ReplicaConfig,
+    params: &Params,
+) -> Result<ReplicaRun> {
+    if rcfg.replicas == 0 {
+        bail!("replica count must be positive");
+    }
+    // every shard must receive at least one batch per epoch — otherwise
+    // the run would "succeed" with zero training and report the initial
+    // parameters' accuracy as if it had fine-tuned
+    if cfg.epochs > 0 {
+        let scheduler = FreezeScheduler::new(cfg.freeze);
+        let suffix0 = effective_pattern_suffix(&cfg.variant, scheduler.pattern(0));
+        let name = Manifest::name_of(&cfg.model, &cfg.variant, "train", suffix0);
+        let batch = manifest.artifact(&name)?.batch.max(1);
+        let total_batches = cfg.train_size / batch;
+        let shard_view = if rcfg.identical_shards {
+            Shard::full()
+        } else {
+            Shard::of(0, rcfg.replicas)
+        };
+        if shard_view.num_batches(total_batches) == 0 {
+            bail!(
+                "{} full batches of {batch} cannot feed {} replicas — every shard would \
+                 be empty; lower --replicas or raise the training-set size",
+                total_batches,
+                rcfg.replicas
+            );
+        }
+    }
+    let momenta = zero_momenta(params);
+    // the synthetic corpus is deterministic in the seed and read-only —
+    // generate it once and share it across every replica thread
+    let train_data = Arc::new(Dataset::synthetic(cfg.train_size, cfg.seed));
+    let test_data = Arc::new(Dataset::synthetic(cfg.test_size, cfg.seed ^ 0xDEAD_BEEF));
+    let (to_coord, from_replicas) = mpsc::channel::<ToCoord>();
+    let mut reply_txs = Vec::with_capacity(rcfg.replicas);
+    let mut joins = Vec::with_capacity(rcfg.replicas);
+    for idx in 0..rcfg.replicas {
+        let (reply_tx, reply_rx) = mpsc::channel::<Arc<AvgPayload>>();
+        reply_txs.push(reply_tx);
+        let job = ReplicaJob {
+            idx,
+            manifest: manifest.clone(),
+            cfg: cfg.clone(),
+            rcfg: *rcfg,
+            params: params.clone(),
+            momenta: momenta.clone(),
+            train_data: Arc::clone(&train_data),
+            test_data: Arc::clone(&test_data),
+            to_coord: to_coord.clone(),
+            from_coord: reply_rx,
+        };
+        joins.push(
+            thread::Builder::new()
+                .name(format!("lrta-replica-{idx}"))
+                .spawn(move || replica_main(job))
+                .expect("spawn replica thread"),
+        );
+    }
+    drop(to_coord); // coordinator's recv ends when every replica exits
+
+    let result = coordinate(cfg, rcfg, from_replicas, &reply_txs);
+    // on coordinator failure, dropping the reply senders unblocks any
+    // replica waiting inside an averaging barrier so the joins terminate
+    drop(reply_txs);
+    let mut panicked = false;
+    for join in joins {
+        panicked |= join.join().is_err();
+    }
+    let run = result?;
+    if panicked {
+        bail!("a replica thread panicked (run aborted)");
+    }
+    Ok(run)
+}
+
+/// The coordinator loop: collect averaging contributions, broadcast means,
+/// fold epoch stats, and assemble the combined record once every replica
+/// reported completion.
+fn coordinate(
+    cfg: &TrainConfig,
+    rcfg: &ReplicaConfig,
+    rx: mpsc::Receiver<ToCoord>,
+    reply_txs: &[mpsc::Sender<Arc<AvgPayload>>],
+) -> Result<ReplicaRun> {
+    let n = rcfg.replicas;
+
+    /// One shard's epoch stats: `(loss_sum, correct_sum, samples, batches,
+    /// median_step_secs)`.
+    type ShardStats = (f32, f32, usize, usize, f64);
+
+    #[derive(Clone)]
+    struct EpochAcc {
+        /// Per-replica stats, folded in replica-index order at assembly —
+        /// f32 sums are order-sensitive, and message-arrival order is not
+        /// deterministic across threads.
+        shards: Vec<Option<ShardStats>>,
+        test_acc: f64,
+    }
+    let blank = EpochAcc { shards: vec![None; n], test_acc: f64::NAN };
+    let mut epochs = vec![blank; cfg.epochs];
+    let mut pending: Vec<Option<AvgPayload>> = (0..n).map(|_| None).collect();
+    let mut pending_event: Option<u64> = None;
+    let mut outcomes: Vec<Option<ReplicaOutcome>> = (0..n).map(|_| None).collect();
+    let mut done = 0usize;
+
+    while done < n {
+        let msg = rx
+            .recv()
+            .map_err(|_| anyhow!("all replica threads exited before reporting completion"))?;
+        match msg {
+            ToCoord::Avg { replica, event, payload } => {
+                match pending_event {
+                    None => pending_event = Some(event),
+                    Some(e) if e == event => {}
+                    Some(e) => bail!(
+                        "replica desync: replica {replica} at averaging event {event}, \
+                         barrier open at {e}"
+                    ),
+                }
+                if pending[replica].replace(payload).is_some() {
+                    bail!("replica {replica} contributed twice to averaging event {event}");
+                }
+                if pending.iter().all(|p| p.is_some()) {
+                    let contributions: Vec<AvgPayload> =
+                        pending.iter_mut().map(|p| p.take().expect("all present")).collect();
+                    // one shared mean per barrier: receivers only read
+                    // it to re-upload, so an Arc avoids N deep clones of
+                    // the full trainable set on the coordinator thread
+                    let mean = Arc::new(average_payloads(contributions)?);
+                    for tx in reply_txs {
+                        tx.send(Arc::clone(&mean))
+                            .map_err(|_| anyhow!("replica exited mid-averaging-barrier"))?;
+                    }
+                    pending_event = None;
+                }
+            }
+            ToCoord::Epoch {
+                replica,
+                epoch,
+                loss_sum,
+                correct_sum,
+                samples,
+                batches,
+                median_step_secs,
+            } => {
+                let acc = epochs
+                    .get_mut(epoch)
+                    .ok_or_else(|| anyhow!("replica {replica} reported epoch {epoch}"))?;
+                let stats = (loss_sum, correct_sum, samples, batches, median_step_secs);
+                if acc.shards[replica].replace(stats).is_some() {
+                    bail!("replica {replica} reported epoch {epoch} twice");
+                }
+            }
+            ToCoord::Eval { epoch, acc } => {
+                epochs
+                    .get_mut(epoch)
+                    .ok_or_else(|| anyhow!("eval reported for epoch {epoch}"))?
+                    .test_acc = acc;
+            }
+            ToCoord::Done { replica, outcome } => {
+                outcomes[replica] = Some(*outcome);
+                done += 1;
+            }
+            ToCoord::Failed { replica, message } => {
+                bail!("replica {replica} failed: {message}");
+            }
+        }
+    }
+
+    // assemble the combined record
+    let scheduler = FreezeScheduler::new(cfg.freeze);
+    let mut record =
+        RunRecord::new(format!("{}_{}_{:?}_r{}", cfg.model, cfg.variant, cfg.freeze, n));
+    for (e, acc) in epochs.iter().enumerate() {
+        // fold the shards in replica-index order: deterministic f32 sums
+        // regardless of which thread reached the channel first
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        let mut samples = 0usize;
+        let mut batches = 0usize;
+        let mut max_median_step = 0.0f64;
+        for (r, shard) in acc.shards.iter().enumerate() {
+            let Some((l, c, s, b, m)) = *shard else {
+                bail!("epoch {e}: replica {r} never reported its stats");
+            };
+            loss_sum += l;
+            correct_sum += c;
+            samples += s;
+            batches += b;
+            // wall-clock is set by the slowest replica
+            max_median_step = max_median_step.max(m);
+        }
+        let rec = EpochRecord {
+            epoch: e,
+            // weighted means over all shards: scaling numerator and
+            // denominator by the replica count keeps the identical-shard
+            // case bit-identical to the single-engine division
+            loss: loss_sum as f64 / batches.max(1) as f64,
+            train_acc: correct_sum as f64 / samples.max(1) as f64,
+            test_acc: acc.test_acc,
+            step_secs: max_median_step,
+            freeze_pattern: effective_pattern_suffix(&cfg.variant, scheduler.pattern(e))
+                .to_string(),
+        };
+        if cfg.verbose {
+            println!(
+                "[{}] epoch {:>3} pattern={} loss={:.4} train_acc={:.3} test_acc={:.3} \
+                 step={:.1}ms ({} replicas)",
+                record.name,
+                e,
+                rec.freeze_pattern,
+                rec.loss,
+                rec.train_acc,
+                rec.test_acc,
+                rec.step_secs * 1e3,
+                n
+            );
+        }
+        record.epochs.push(rec);
+    }
+    let mut reports: Vec<ReplicaReport> = Vec::with_capacity(n);
+    let mut state = None;
+    for outcome in outcomes.into_iter() {
+        let outcome = outcome.expect("done == n implies every slot filled");
+        if let Some(s) = outcome.state {
+            state = Some(s);
+        }
+        reports.push(outcome.report);
+    }
+    let (params, momenta) = state.ok_or_else(|| anyhow!("replica 0 reported no final state"))?;
+    Ok(ReplicaRun { record, params, momenta, reports })
+}
+
+/// Element-wise f32 mean of the replicas' payloads, summed in replica
+/// order (deterministic, and exact for identical contributions).
+fn average_payloads(contributions: Vec<AvgPayload>) -> Result<AvgPayload> {
+    let n = contributions.len();
+    let mut iter = contributions.into_iter();
+    let first = iter.next().expect("at least one replica");
+    let (mut params, mut momenta) = (first.params, first.momenta);
+    for c in iter {
+        accumulate(&mut params, &c.params)?;
+        accumulate(&mut momenta, &c.momenta)?;
+    }
+    for t in params.values_mut().chain(momenta.values_mut()) {
+        for v in t.data_mut() {
+            *v /= n as f32;
+        }
+    }
+    Ok(AvgPayload { params, momenta })
+}
+
+/// `acc += other`, element-wise, demanding identical key sets and shapes.
+fn accumulate(acc: &mut Params, other: &Params) -> Result<()> {
+    if acc.len() != other.len() {
+        bail!(
+            "averaging contributions disagree on slot count ({} vs {})",
+            acc.len(),
+            other.len()
+        );
+    }
+    for (name, t) in acc.iter_mut() {
+        let o = other
+            .get(name)
+            .ok_or_else(|| anyhow!("averaging contribution missing slot '{name}'"))?;
+        if o.shape() != t.shape() {
+            bail!("averaging contribution shape mismatch for '{name}'");
+        }
+        for (a, b) in t.data_mut().iter_mut().zip(o.data()) {
+            *a += *b;
+        }
+    }
+    Ok(())
+}
+
+/// Thread entry: run the replica and report the outcome, whatever it is.
+///
+/// A *panic* must reach the coordinator just like an `Err` does —
+/// otherwise the surviving replicas block forever inside the averaging
+/// barrier while the coordinator waits for a contribution that will never
+/// arrive. So the run is wrapped in `catch_unwind` and the payload turned
+/// into a [`ToCoord::Failed`] (the replica-side analogue of the
+/// [`crate::train::Prefetcher`] panic re-raise).
+fn replica_main(job: ReplicaJob) {
+    let idx = job.idx;
+    let to_coord = job.to_coord.clone();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_replica(job)));
+    let message = match result {
+        Ok(Ok(outcome)) => {
+            let _ = to_coord.send(ToCoord::Done { replica: idx, outcome: Box::new(outcome) });
+            return;
+        }
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(payload) => payload
+            .downcast_ref::<&str>()
+            .map(|s| format!("panic: {s}"))
+            .or_else(|| payload.downcast_ref::<String>().map(|s| format!("panic: {s}")))
+            .unwrap_or_else(|| "replica thread panicked".into()),
+    };
+    let _ = to_coord.send(ToCoord::Failed { replica: idx, message });
+}
+
+/// One replica's whole run: own runtime, own executables, own resident
+/// state; barriers with the coordinator at every averaging event.
+fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
+    let ReplicaJob {
+        idx,
+        manifest,
+        cfg,
+        rcfg,
+        params,
+        momenta,
+        train_data,
+        test_data,
+        to_coord,
+        from_coord,
+    } = job;
+    let rt = Runtime::cpu()?;
+    let scheduler = FreezeScheduler::new(cfg.freeze);
+
+    // one executable per scheduled pattern, compiled on this replica's own
+    // client — the same schedule resolution the single-engine trainer uses
+    let train_exes = load_schedule_executables(&rt, &manifest, &cfg)?;
+    // replica 0 doubles as the evaluator of the averaged model
+    let infer = if idx == 0 {
+        let name = Manifest::name_of(&cfg.model, &cfg.variant, "infer", "none");
+        let meta = manifest.artifact(&name)?.clone();
+        let exe = rt.load_hlo(manifest.hlo_path(&meta))?;
+        Some((exe, meta))
+    } else {
+        None
+    };
+
+    let shard = if rcfg.identical_shards {
+        Shard::full()
+    } else {
+        Shard::of(idx, rcfg.replicas)
+    };
+
+    let mut engine = Engine::upload(&rt, &params, &momenta)?;
+    let initial_param_uploads = engine.param_uploads();
+    let mut barrier = AvgBarrier {
+        replica: idx,
+        policy: rcfg.momenta,
+        events: 0,
+        slot_uploads: 0,
+        to_coord: &to_coord,
+        from_coord: &from_coord,
+    };
+    let mut total_batches = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        let lr = cfg.lr.lr_at(epoch);
+        let suffix = effective_pattern_suffix(&cfg.variant, scheduler.pattern(epoch));
+        let (exe, meta) = train_exes
+            .get(suffix)
+            .ok_or_else(|| anyhow!("no train executable for pattern '{suffix}'"))?;
+        // epoch boundary: Algorithm 2 may swap a↔b — re-bind the resident
+        // buffers to the new slot layout (pure permutation, zero uploads);
+        // synchronized across replicas because every replica runs the same
+        // scheduler over the same epoch index
+        engine.state().rebind_for(meta)?;
+
+        // the shared single-engine epoch loop over this replica's shard;
+        // the averaging cadence rides the per-step hook (the step meter
+        // times the local step — barrier waits show up in wall-clock, not
+        // step latency, because averaging happens outside the timed step)
+        let epoch_seed = cfg.seed ^ epoch as u64;
+        let mut since_avg = 0usize;
+        let stats = engine.run_epoch_sharded(
+            exe,
+            meta,
+            &train_data,
+            epoch_seed,
+            lr,
+            shard,
+            &mut |rt, state| {
+                since_avg += 1;
+                if rcfg.avg_every > 0 && since_avg == rcfg.avg_every {
+                    barrier.average(rt, state, meta)?;
+                    since_avg = 0;
+                }
+                Ok(())
+            },
+        )?;
+        // mandatory boundary average (unless the cadence just did it):
+        // after this, frozen↔trainable role swaps are safe because every
+        // replica agrees on the whole parameter universe
+        if since_avg > 0 {
+            barrier.average(&rt, engine.state_mut(), meta)?;
+        }
+        total_batches += stats.batches;
+        to_coord
+            .send(ToCoord::Epoch {
+                replica: idx,
+                epoch,
+                loss_sum: stats.loss_sum,
+                correct_sum: stats.correct_sum,
+                samples: stats.samples,
+                batches: stats.batches,
+                median_step_secs: stats.meter.median_step(),
+            })
+            .map_err(|_| anyhow!("coordinator exited"))?;
+        if let Some((infer_exe, infer_meta)) = &infer {
+            let acc = engine.evaluate(infer_exe, infer_meta, &test_data)?;
+            to_coord
+                .send(ToCoord::Eval { epoch, acc })
+                .map_err(|_| anyhow!("coordinator exited"))?;
+        }
+    }
+
+    let report = ReplicaReport {
+        replica: idx,
+        initial_param_uploads,
+        param_uploads: engine.param_uploads(),
+        avg_events: barrier.events,
+        avg_slot_uploads: barrier.slot_uploads,
+        demux_fallbacks: rt.demux_fallbacks(),
+        batches: total_batches,
+    };
+    let state = if idx == 0 { Some(engine.sync()?) } else { None };
+    Ok(ReplicaOutcome { report, state })
+}
+
+/// The replica side of one averaging barrier, plus its accounting.
+struct AvgBarrier<'a> {
+    replica: usize,
+    policy: MomentumPolicy,
+    /// Barriers participated in so far (doubles as the global event tag).
+    events: usize,
+    /// Counted uploads performed by averaging (params + momenta).
+    slot_uploads: usize,
+    to_coord: &'a mpsc::Sender<ToCoord>,
+    from_coord: &'a mpsc::Receiver<Arc<AvgPayload>>,
+}
+
+impl AvgBarrier<'_> {
+    /// Download the current pattern's trainable leaves, contribute them,
+    /// block for the mean, and re-upload it into the resident buffers.
+    /// Runs inside [`Engine::run_epoch_sharded`]'s per-step hook (and once
+    /// more at the epoch boundary), so it sees the state between steps.
+    fn average(
+        &mut self,
+        rt: &Runtime,
+        state: &mut ResidentState,
+        meta: &ArtifactMeta,
+    ) -> Result<()> {
+        self.events += 1;
+        let mut payload = AvgPayload { params: Params::new(), momenta: Params::new() };
+        for slot in &meta.trainable {
+            let buf = state
+                .params
+                .get(&slot.name)
+                .ok_or_else(|| anyhow!("no resident buffer for '{}'", slot.name))?;
+            payload.params.insert(slot.name.clone(), download_tensor(buf)?);
+            if self.policy == MomentumPolicy::Average {
+                let mbuf = state
+                    .momenta
+                    .get(&slot.name)
+                    .ok_or_else(|| anyhow!("no resident momentum for '{}'", slot.name))?;
+                payload.momenta.insert(slot.name.clone(), download_tensor(mbuf)?);
+            }
+        }
+        self.to_coord
+            .send(ToCoord::Avg { replica: self.replica, event: self.events as u64, payload })
+            .map_err(|_| anyhow!("coordinator exited during averaging"))?;
+        let mean = self
+            .from_coord
+            .recv()
+            .map_err(|_| anyhow!("coordinator closed the averaging barrier"))?;
+        for (name, t) in &mean.params {
+            state.params.upload_rebind(rt, name, t)?;
+            self.slot_uploads += 1;
+        }
+        match self.policy {
+            MomentumPolicy::Average => {
+                for (name, t) in &mean.momenta {
+                    state.momenta.upload_rebind(rt, name, t)?;
+                    self.slot_uploads += 1;
+                }
+            }
+            MomentumPolicy::Reset => {
+                for slot in &meta.trainable {
+                    let zero = Tensor::zeros(&slot.shape);
+                    state.momenta.upload_rebind(rt, &slot.name, &zero)?;
+                    self.slot_uploads += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_policy_parses() {
+        assert_eq!(MomentumPolicy::parse("avg"), Some(MomentumPolicy::Average));
+        assert_eq!(MomentumPolicy::parse("average"), Some(MomentumPolicy::Average));
+        assert_eq!(MomentumPolicy::parse("reset"), Some(MomentumPolicy::Reset));
+        assert_eq!(MomentumPolicy::parse("x"), None);
+    }
+
+    fn payload(vals: &[f32]) -> AvgPayload {
+        let mut params = Params::new();
+        params.insert("w".into(), Tensor::new(&[vals.len()], vals.to_vec()));
+        AvgPayload { params, momenta: Params::new() }
+    }
+
+    #[test]
+    fn averaging_identical_contributions_is_bit_exact() {
+        // the parity argument of the 2-replica bit-for-bit test: a+a is an
+        // exact IEEE doubling and /2 an exact halving, so mean(a, a) == a
+        let vals = [1.0f32, -0.37, 3.5e-8, 1234.5678, f32::MIN_POSITIVE];
+        let mean = average_payloads(vec![payload(&vals), payload(&vals)]).unwrap();
+        let got = mean.params.get("w").unwrap().data();
+        for (g, v) in got.iter().zip(&vals) {
+            assert_eq!(g.to_bits(), v.to_bits(), "{g} vs {v}");
+        }
+    }
+
+    #[test]
+    fn averaging_is_the_elementwise_mean() {
+        let mean = average_payloads(vec![payload(&[1.0, 2.0]), payload(&[3.0, 6.0])]).unwrap();
+        assert_eq!(mean.params.get("w").unwrap().data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn mismatched_contributions_are_rejected() {
+        // different slot counts
+        let mut extra = payload(&[1.0]);
+        extra.params.insert("v".into(), Tensor::zeros(&[1]));
+        assert!(average_payloads(vec![payload(&[1.0]), extra]).is_err());
+        // same count, different names
+        let mut other = Params::new();
+        other.insert("u".into(), Tensor::zeros(&[1]));
+        let other = AvgPayload { params: other, momenta: Params::new() };
+        assert!(average_payloads(vec![payload(&[1.0]), other]).is_err());
+        // same name, different shape
+        let mut shaped = Params::new();
+        shaped.insert("w".into(), Tensor::zeros(&[2]));
+        let shaped = AvgPayload { params: shaped, momenta: Params::new() };
+        assert!(average_payloads(vec![payload(&[1.0]), shaped]).is_err());
+    }
+}

@@ -12,11 +12,15 @@
 //!
 //! Upload accounting is explicit: `uploads()` only ever counts host→device
 //! parameter transfers through this type; step outputs re-bind via
-//! [`ResidentParams::rebind`] (a pure ownership move). The proof that a run
-//! stayed buffer-to-buffer is this counter staying at the initial value
-//! *together with* [`crate::runtime::Runtime::demux_fallbacks`] staying 0
-//! (the fallback re-uploads step outputs outside this counter); both are
-//! asserted in `rust/tests/integration_train_resident.rs`.
+//! [`ResidentParams::rebind`] (a pure ownership move), and the data-parallel
+//! averaging path replaces buffers via [`ResidentParams::upload_rebind`]
+//! (counted). The proof that a run stayed buffer-to-buffer is this counter
+//! staying at the initial value — plus exactly the documented averaging
+//! budget on multi-replica runs — *together with*
+//! [`crate::runtime::Runtime::demux_fallbacks`] staying 0 (the fallback
+//! re-uploads step outputs outside this counter); both are asserted in
+//! `rust/tests/integration_train_resident.rs` and
+//! `rust/tests/integration_train_replicas.rs`.
 
 use crate::checkpoint::Params;
 use crate::freeze::{train_slot_bindings, SlotRole};
@@ -24,6 +28,7 @@ use crate::runtime::{
     builder, download_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, ParamSlot,
     Runtime,
 };
+use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
@@ -127,6 +132,19 @@ impl ResidentParams {
             }
             None => bail!("rebind of unknown resident buffer '{name}'"),
         }
+    }
+
+    /// Replace a resident buffer with a fresh host tensor: one **counted**
+    /// host→device parameter transfer followed by a rebind. This is the
+    /// buffer-level parameter-averaging path of [`crate::train::replica`] —
+    /// the one legitimate reason, after the initial upload, for a parameter
+    /// to cross the host boundary — and counting it here is what lets tests
+    /// pin that steps and freeze-pattern swaps contributed zero uploads on
+    /// top of the documented averaging budget.
+    pub fn upload_rebind(&mut self, rt: &Runtime, name: &str, t: &Tensor) -> Result<()> {
+        let buf = rt.upload(&tensor_to_literal(t)?)?;
+        self.uploads += 1;
+        self.rebind(name, buf)
     }
 
     /// Download the whole set back to host tensors (checkpointing / final

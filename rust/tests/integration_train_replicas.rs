@@ -1,0 +1,250 @@
+//! Integration: multi-replica data-parallel training against the
+//! single-engine resident baseline, over real artifacts.
+//!
+//! Claims pinned here:
+//! 1. **Parity** — 2 replicas on *identical* shards with per-step
+//!    averaging reproduce the 1-replica serial-resident trajectory
+//!    bit-for-bit (loss, train-acc, test-acc, final params, final
+//!    momenta): averaging N identical contributions is exact IEEE
+//!    arithmetic, and everything else (batch order, executables, update
+//!    math, eval) is shared with the single-engine path by construction.
+//! 2. **Transfer accounting** — per replica, the parameter-upload counter
+//!    moves past the initial state upload by *exactly* the documented
+//!    averaging budget (`events × 2·|trainable|` under the average-momenta
+//!    policy): freeze-pattern a↔b swaps and buffer-chained steps
+//!    contribute zero re-uploads, and the demux fallback counter stays 0.
+//! 3. **Disjoint sharding** — with real (round-robin) shards each replica
+//!    steps through exactly its equal-length slice, mid-epoch cadence plus
+//!    the mandatory boundary average fire the predicted number of
+//!    barriers, and the combined record stays well-formed.
+
+use lrta::checkpoint;
+use lrta::coordinator::{
+    decompose_checkpoint, effective_pattern_suffix, LrSchedule, TrainConfig, Trainer,
+};
+use lrta::freeze::{FreezeMode, FreezeScheduler};
+use lrta::runtime::{Manifest, Runtime};
+use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
+
+fn manifest() -> Option<Manifest> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: artifacts missing");
+        return None;
+    }
+    Some(Manifest::load(path).unwrap())
+}
+
+fn cfg(freeze: FreezeMode, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        model: "resnet_mini".into(),
+        variant: "lrd".into(),
+        freeze,
+        epochs,
+        lr: LrSchedule::Fixed(5e-3),
+        train_size: 128,
+        test_size: 128,
+        seed: 0,
+        verbose: false,
+        // the 1-replica reference is the *serial* resident engine — the
+        // replica step loop performs the same f32 metric sums in step order
+        resident: true,
+        pipelined: false,
+    }
+}
+
+fn lrd_params(m: &Manifest) -> lrta::checkpoint::Params {
+    let dense = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+    decompose_checkpoint(&dense, m.config("resnet_mini", "lrd").unwrap())
+        .unwrap()
+        .params
+}
+
+/// Trainable-slot count of the artifact a (variant, pattern) epoch runs.
+fn n_trainable(m: &Manifest, suffix: &str) -> usize {
+    m.artifact(&format!("resnet_mini_lrd_train_{suffix}"))
+        .unwrap()
+        .trainable
+        .len()
+}
+
+#[test]
+fn two_replicas_identical_shards_reproduce_single_engine_bit_for_bit() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    for (mode, epochs) in [(FreezeMode::Sequential, 3), (FreezeMode::None, 2)] {
+        let rt = Runtime::cpu().unwrap();
+        let mut base = Trainer::new(&rt, &m, cfg(mode, epochs), params.clone()).unwrap();
+        let base_rec = base.run().unwrap();
+
+        let rcfg = ReplicaConfig {
+            replicas: 2,
+            avg_every: 1,
+            momenta: MomentumPolicy::Average,
+            identical_shards: true,
+        };
+        let run = run_replicas(&m, &cfg(mode, epochs), &rcfg, &params).unwrap();
+
+        // trajectory: bit-for-bit against the single engine
+        assert_eq!(base_rec.epochs.len(), run.record.epochs.len());
+        for (b, r) in base_rec.epochs.iter().zip(&run.record.epochs) {
+            assert_eq!(b.freeze_pattern, r.freeze_pattern, "{mode:?} epoch {}", b.epoch);
+            assert_eq!(
+                b.loss.to_bits(),
+                r.loss.to_bits(),
+                "{mode:?} epoch {}: loss {} vs {}",
+                b.epoch,
+                b.loss,
+                r.loss
+            );
+            assert_eq!(
+                b.train_acc.to_bits(),
+                r.train_acc.to_bits(),
+                "{mode:?} epoch {}: train_acc {} vs {}",
+                b.epoch,
+                b.train_acc,
+                r.train_acc
+            );
+            assert_eq!(
+                b.test_acc.to_bits(),
+                r.test_acc.to_bits(),
+                "{mode:?} epoch {}: test_acc {} vs {} (replica 0 evaluates the \
+                 averaged model with the same artifact on the same batches)",
+                b.epoch,
+                b.test_acc,
+                r.test_acc
+            );
+        }
+        // final state: the averaged model is the single-engine model
+        assert_eq!(base.params.len(), run.params.len(), "{mode:?}");
+        for (name, t) in &base.params {
+            assert_eq!(t.shape(), run.params[name].shape(), "{mode:?}: shape of {name}");
+            assert_eq!(
+                t.data(),
+                run.params[name].data(),
+                "{mode:?}: param {name} diverged from the single-engine run"
+            );
+        }
+        for (name, t) in &base.momenta {
+            assert_eq!(
+                t.data(),
+                run.momenta[name].data(),
+                "{mode:?}: momentum {name} diverged from the single-engine run"
+            );
+        }
+
+        // transfer accounting: only the documented averaging traffic may
+        // move the parameter-upload counters — swaps and steps add zero
+        let scheduler = FreezeScheduler::new(mode);
+        let suffix0 = effective_pattern_suffix("lrd", scheduler.pattern(0));
+        let steps =
+            128 / m.artifact(&format!("resnet_mini_lrd_train_{suffix0}")).unwrap().batch;
+        assert!(steps >= 2, "need ≥2 steps/epoch to exercise the cadence");
+        let expected_events = epochs * steps; // avg_every=1, boundary folded in
+        let expected_slot_uploads: usize = (0..epochs)
+            .map(|e| {
+                let suffix = effective_pattern_suffix("lrd", scheduler.pattern(e));
+                steps * 2 * n_trainable(&m, suffix) // params + momenta per event
+            })
+            .sum();
+        assert_eq!(run.reports.len(), 2, "{mode:?}");
+        for r in &run.reports {
+            assert!(r.initial_param_uploads > 0, "{mode:?} replica {}", r.replica);
+            assert_eq!(
+                r.unaccounted_uploads(),
+                0,
+                "{mode:?} replica {}: steps/pattern swaps must never re-upload",
+                r.replica
+            );
+            assert_eq!(r.avg_events, expected_events, "{mode:?} replica {}", r.replica);
+            assert_eq!(
+                r.avg_slot_uploads, expected_slot_uploads,
+                "{mode:?} replica {}: averaging budget",
+                r.replica
+            );
+            assert_eq!(r.demux_fallbacks, 0, "{mode:?} replica {}", r.replica);
+            assert_eq!(r.batches, epochs * steps, "{mode:?} replica {}", r.replica);
+        }
+    }
+}
+
+#[test]
+fn disjoint_shards_average_on_cadence_and_stay_buffer_chained() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    let epochs = 2;
+    let rcfg = ReplicaConfig {
+        replicas: 2,
+        avg_every: 2,
+        momenta: MomentumPolicy::Average,
+        identical_shards: false,
+    };
+    let run = run_replicas(&m, &cfg(FreezeMode::Sequential, epochs), &rcfg, &params).unwrap();
+
+    let total_batches = 128 / m.artifact("resnet_mini_lrd_train_a").unwrap().batch;
+    let per_replica = total_batches / 2; // round-robin equal-length shards
+    assert!(per_replica >= 1, "need at least one batch per shard");
+    // cadence events mid-epoch plus the mandatory boundary average
+    let events_per_epoch = per_replica.div_ceil(2);
+    for r in &run.reports {
+        assert_eq!(r.batches, epochs * per_replica, "replica {}", r.replica);
+        assert_eq!(r.avg_events, epochs * events_per_epoch, "replica {}", r.replica);
+        assert_eq!(r.unaccounted_uploads(), 0, "replica {}", r.replica);
+        assert_eq!(r.demux_fallbacks, 0, "replica {}", r.replica);
+    }
+    // the combined record is well-formed: both shards contributed
+    assert_eq!(run.record.epochs.len(), epochs);
+    for e in &run.record.epochs {
+        assert!(e.loss.is_finite(), "epoch {}: loss {}", e.epoch, e.loss);
+        assert!(
+            (0.0..=1.0).contains(&e.train_acc),
+            "epoch {}: train_acc {}",
+            e.epoch,
+            e.train_acc
+        );
+        assert!(
+            (0.0..=1.0).contains(&e.test_acc),
+            "epoch {}: test_acc {}",
+            e.epoch,
+            e.test_acc
+        );
+    }
+    assert_eq!(run.record.epochs[0].freeze_pattern, "a");
+    assert_eq!(run.record.epochs[1].freeze_pattern, "b");
+    // the final state exists and matches the parameter universe
+    assert_eq!(run.params.len(), params.len());
+}
+
+#[test]
+fn momentum_reset_policy_zeroes_momenta_at_the_boundary() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    let rcfg = ReplicaConfig {
+        replicas: 2,
+        avg_every: 0, // boundary-only averaging
+        momenta: MomentumPolicy::Reset,
+        identical_shards: false,
+    };
+    let run = run_replicas(&m, &cfg(FreezeMode::None, 1), &rcfg, &params).unwrap();
+
+    let n_tr = n_trainable(&m, "none");
+    for r in &run.reports {
+        assert_eq!(r.avg_events, 1, "replica {}", r.replica);
+        // params + zeroed momenta, once
+        assert_eq!(r.avg_slot_uploads, 2 * n_tr, "replica {}", r.replica);
+        assert_eq!(r.unaccounted_uploads(), 0, "replica {}", r.replica);
+    }
+    // after the final (boundary) reset, every trainable momentum is zero
+    let meta = m.artifact("resnet_mini_lrd_train_none").unwrap();
+    for slot in &meta.trainable {
+        let mom = &run.momenta[&slot.name];
+        assert!(
+            mom.data().iter().all(|&v| v == 0.0),
+            "momentum {} must be zeroed by the reset policy",
+            slot.name
+        );
+    }
+}

@@ -264,6 +264,61 @@ fn pipelined_run_fetches_once_per_epoch_and_uploads_only_data() {
 }
 
 #[test]
+fn epoch_checkpoints_persist_async_and_match_serial_path() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let params = lrd_params(&m);
+
+    let base_dir = std::env::temp_dir().join("lrta_epoch_ckpt_test");
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let dir_pipe = base_dir.join("pipelined");
+    let dir_serial = base_dir.join("serial");
+
+    // overlapped: the eval snapshot doubles as the async checkpoint source;
+    // 3 sequential epochs cross an a→b→a pattern rebind
+    let epochs = 3;
+    let mut pipe =
+        Trainer::new(&rt, &m, cfg(FreezeMode::Sequential, epochs, true, true), params.clone())
+            .unwrap();
+    pipe.checkpoint_epochs_to(&dir_pipe);
+    pipe.run().unwrap();
+
+    // serial resident reference: same snapshots, written through the same
+    // writer but with no overlap to hide behind
+    let mut serial =
+        Trainer::new(&rt, &m, cfg(FreezeMode::Sequential, epochs, true, false), params).unwrap();
+    serial.checkpoint_epochs_to(&dir_serial);
+    serial.run().unwrap();
+
+    for e in 0..epochs {
+        let name = format!("epoch_{e:03}.bin");
+        let a = std::fs::read(dir_pipe.join(&name)).unwrap_or_else(|err| {
+            panic!("pipelined run must have written {name}: {err}")
+        });
+        let b = std::fs::read(dir_serial.join(&name)).unwrap_or_else(|err| {
+            panic!("serial run must have written {name}: {err}")
+        });
+        assert_eq!(
+            a, b,
+            "epoch {e}: async (pipelined) checkpoint must be byte-identical to the \
+             serial path's"
+        );
+    }
+
+    // the last epoch's checkpoint is exactly the run's final state
+    let last = checkpoint::load(dir_pipe.join(format!("epoch_{:03}.bin", epochs - 1))).unwrap();
+    assert_eq!(last.len(), pipe.params.len());
+    for (name, t) in &pipe.params {
+        assert_eq!(last[name].shape(), t.shape(), "shape of {name}");
+        assert_eq!(
+            last[name].data(),
+            t.data(),
+            "checkpoint of {name} must equal the synced final parameters"
+        );
+    }
+}
+
+#[test]
 fn infer_fps_runs_on_resident_params_for_both_paths() {
     let Some(m) = manifest() else { return };
     let rt = Runtime::cpu().unwrap();

@@ -15,9 +15,9 @@
 //!
 //! Run:  `cargo run --release --example serve_infer [-- --flags]`
 //! Args: --model M --requests N --concurrency C --max-wait-ms X
-//!       --spot-check N --reupload --burst --no-pipeline
+//!       --spot-check N --reupload --burst --no-pipeline --shards N
 //! Env fallbacks: LRTA_MODEL, LRTA_REQUESTS, LRTA_CONCURRENCY,
-//!       LRTA_REUPLOAD, LRTA_PIPELINED
+//!       LRTA_REUPLOAD, LRTA_PIPELINED, LRTA_SHARDS
 
 use anyhow::Result;
 use lrta::checkpoint;
@@ -35,7 +35,7 @@ fn env_or(key: &str, default: &str) -> String {
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "model", "requests", "concurrency", "max-wait-ms", "spot-check", "reupload", "burst",
-        "no-pipeline",
+        "no-pipeline", "shards",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     let model = args.str_or("model", &env_or("LRTA_MODEL", "resnet_mini"));
@@ -50,6 +50,9 @@ fn main() -> Result<()> {
     let reupload =
         args.bool_or("reupload", false) || env_or("LRTA_REUPLOAD", "0") == "1";
     let burst = args.bool_or("burst", false);
+    let shards = args
+        .usize_or("shards", env_or("LRTA_SHARDS", "1").parse().unwrap_or(1))
+        .max(1);
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
@@ -57,7 +60,8 @@ fn main() -> Result<()> {
     let variants = ["orig", "lrd", "rankopt"];
     let mut specs = Vec::new();
     for variant in variants {
-        specs.push(VariantSpec::from_dense(&manifest, &model, variant, &dense)?);
+        let spec = VariantSpec::from_dense(&manifest, &model, variant, &dense)?;
+        specs.push(spec.with_shards(shards));
     }
     let cfg = ServerConfig {
         max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
@@ -125,7 +129,8 @@ fn main() -> Result<()> {
     let mode = if reupload { "reupload-per-batch (baseline)" } else { "device-resident" };
     println!(
         "\n{model} inference serving ({requests} single-image requests per variant, \
-         {mode}, {}):\n{t}",
+         {mode}, {} shard(s), {}):\n{t}",
+        shards,
         if burst { "burst".to_string() } else { format!("concurrency {concurrency}") }
     );
     write_report(&format!("results/serve_infer_{model}.txt"), &t);

@@ -1,0 +1,111 @@
+//! Shard-scaling benchmark: serving throughput at 1 vs 2 shards per
+//! variant (the scale-out answer to the paper's Table-1 inference claim —
+//! a cheap `rankopt` variant is only as fast as the workers serving it).
+//!
+//! Each measurement starts a fresh [`Server`] with one variant scaled to
+//! `shards` workers (own PJRT client, resident parameter set, queue and
+//! stats each) and drives an open-loop burst through the router; the
+//! submit thread outpaces the engines, so the fanout — shallowest queue,
+//! round-robin ties — keeps every shard's batcher fed. Reported fps is the
+//! burst's observed goodput. Output: results/serve_shards.txt and a
+//! top-level JSON report results/BENCH_serve_shards.json (per-variant
+//! 1-shard / 2-shard fps, speedup, merged transfer counters), uploaded as
+//! a CI artifact by the train-smoke job.
+//!
+//! Env: LRTA_MODEL (default resnet_mini), LRTA_SERVE_BENCH_REQS
+//! (requests per measurement, default 8× compiled batch)
+
+use anyhow::Result;
+use lrta::checkpoint;
+use lrta::data::Dataset;
+use lrta::runtime::Manifest;
+use lrta::serve::{self, Server, ServerConfig, StatsSnapshot, VariantSpec};
+use lrta::util::bench::{fmt_delta_pct, table, write_json_section, write_report};
+use lrta::util::json::Json;
+use std::time::Duration;
+
+/// Burst throughput of one variant behind `shards` workers.
+fn sharded_fps(
+    manifest: &Manifest,
+    model: &str,
+    variant: &str,
+    params: lrta::checkpoint::Params,
+    shards: usize,
+    reqs: usize,
+) -> Result<(f64, StatsSnapshot)> {
+    let cfg = ServerConfig { max_wait: Duration::from_millis(5), ..Default::default() };
+    let spec = VariantSpec::new(model, variant, params).with_shards(shards);
+    let server = Server::start(manifest, vec![spec], &cfg)?;
+    let data = Dataset::synthetic(512, 99);
+    // warmup burst, then the measured burst
+    serve::burst_loop(&server, model, variant, &data, reqs / 4 + 1, Duration::from_secs(120));
+    let report =
+        serve::burst_loop(&server, model, variant, &data, reqs, Duration::from_secs(120));
+    let snap = server.stats(model, variant).expect("registered variant");
+    server.shutdown();
+    Ok((report.observed_fps(), snap))
+}
+
+fn main() -> Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+
+    let mut rows = vec![vec![
+        "Variant".to_string(),
+        "1-shard fps".to_string(),
+        "2-shard fps".to_string(),
+        "Δ 2 vs 1".to_string(),
+        "speedup".to_string(),
+        "uploads (1/2)".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    for variant in ["orig", "lrd", "rankopt"] {
+        let params = VariantSpec::from_dense(&manifest, &model, variant, &dense)?.params;
+        let batch = manifest.artifact(&Manifest::name_of(&model, variant, "infer", "none"))?.batch;
+        let reqs: usize = std::env::var("LRTA_SERVE_BENCH_REQS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(batch * 8);
+
+        let (fps1, snap1) =
+            sharded_fps(&manifest, &model, variant, params.clone(), 1, reqs)?;
+        let (fps2, snap2) = sharded_fps(&manifest, &model, variant, params, 2, reqs)?;
+        let speedup = if fps1 > 0.0 { fps2 / fps1 } else { 0.0 };
+        println!(
+            "{variant}: 1 shard {fps1:.0} fps | 2 shards {fps2:.0} fps | {speedup:.2}x \
+             | uploads {}/{}",
+            snap1.uploads, snap2.uploads
+        );
+        rows.push(vec![
+            variant.to_string(),
+            format!("{fps1:.0}"),
+            format!("{fps2:.0}"),
+            fmt_delta_pct(fps1, fps2),
+            format!("{speedup:.2}x"),
+            format!("{}/{}", snap1.uploads, snap2.uploads),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("requests", Json::int(reqs as i64)),
+            ("fps_1_shard", Json::num(fps1)),
+            ("fps_2_shards", Json::num(fps2)),
+            ("speedup", Json::num(speedup)),
+            ("served_1_shard", Json::int(snap1.served as i64)),
+            ("served_2_shards", Json::int(snap2.served as i64)),
+            ("uploads_1_shard", Json::int(snap1.uploads as i64)),
+            ("uploads_2_shards", Json::int(snap2.uploads as i64)),
+            ("demux_fallbacks", Json::int((snap1.demux_fallbacks + snap2.demux_fallbacks) as i64)),
+        ]));
+    }
+
+    let t = table(&rows);
+    println!("\n{model} shard scaling (burst load, device-resident, pipelined):\n{t}");
+    write_report("results/serve_shards.txt", &t);
+    write_json_section(
+        "results/BENCH_serve_shards.json",
+        "serve_shards",
+        Json::obj(vec![("model", Json::str(model.as_str())), ("rows", Json::arr(json_rows))]),
+    );
+    Ok(())
+}

@@ -49,7 +49,7 @@ SUBCOMMANDS
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
             [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
-            [--no-pipeline]
+            [--no-pipeline] [--shards N] [--slo-ms D]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -83,6 +83,15 @@ SERVE
   executes unless --no-pipeline), drives a synthetic closed-loop load
   through the router (--burst switches to an open-loop burst that keeps
   batches full), and prints per-variant fps + latency percentiles.
+
+SERVE SCALING
+  --shards N        scale each variant out across N shard workers (own
+                    PJRT client, resident params, queue and stats each);
+                    the router fans out to the shallowest queue with
+                    round-robin tie-break
+  --slo-ms D        per-request admission deadline: work still queued D ms
+                    after submission is shed at pop time (DeadlineExceeded)
+                    instead of occupying a batch slot (0 = never shed)
 ";
 
 fn main() {
@@ -98,7 +107,8 @@ fn run() -> Result<()> {
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
-        "no-pipeline", "replicas", "avg-every", "momenta", "epoch-ckpts",
+        "no-pipeline", "replicas", "avg-every", "momenta", "epoch-ckpts", "shards",
+        "slo-ms",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -327,6 +337,26 @@ fn serve(args: &Args) -> Result<()> {
     let concurrency = args.usize_or("concurrency", 32);
     let seed = args.u64_or("seed", 0);
     let burst = args.bool_or("burst", false);
+    // scale-out knobs: parse strictly — a typo'd shard count must not
+    // silently fall back to a single engine (same contract as --replicas)
+    let shards = match args.get("shards") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("--shards expects a positive integer, got '{v}'"))?,
+        None => 1,
+    };
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    let slo_ms = match args.get("slo-ms") {
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|ms| *ms >= 0.0)
+            .ok_or_else(|| anyhow!("--slo-ms expects a non-negative number, got '{v}'"))?,
+        None => 0.0,
+    };
+    let slo = if slo_ms > 0.0 { Some(Duration::from_secs_f64(slo_ms / 1e3)) } else { None };
 
     // checkpoint: --ckpt, or the manifest's init checkpoint (same default
     // as the benches — serving speed does not depend on training state)
@@ -339,7 +369,7 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut specs = Vec::new();
     for variant in &variants {
-        specs.push(VariantSpec::from_dense(&m, &model, variant, &dense)?);
+        specs.push(VariantSpec::from_dense(&m, &model, variant, &dense)?.with_shards(shards));
     }
 
     let cfg = ServerConfig {
@@ -348,10 +378,11 @@ fn serve(args: &Args) -> Result<()> {
         reupload: args.bool_or("reupload", false),
         pipelined: !args.bool_or("no-pipeline", false),
         spot_check: args.usize_or("spot-check", 128),
+        slo,
         ..Default::default()
     };
     println!(
-        "serving {model} [{}] params={} requests={requests} {} ...",
+        "serving {model} [{}] params={} shards={shards} slo={} requests={requests} {} ...",
         variants.join(", "),
         if cfg.reupload {
             "reupload-per-batch"
@@ -360,6 +391,7 @@ fn serve(args: &Args) -> Result<()> {
         } else {
             "device-resident"
         },
+        if slo_ms > 0.0 { format!("{slo_ms}ms") } else { "off".to_string() },
         if burst { "burst".to_string() } else { format!("concurrency={concurrency}") },
     );
     let server = Server::start(&m, specs, &cfg)?;
@@ -378,10 +410,11 @@ fn serve(args: &Args) -> Result<()> {
         };
         let snap = server.stats(&model, variant).expect("registered variant");
         println!(
-            "{variant}: {:.0} fps observed ({} ok, {} rejected retries, {} errors)",
+            "{variant}: {:.0} fps observed ({} ok, {} rejected retries, {} shed, {} errors)",
             report.observed_fps(),
             report.completed,
             report.rejected,
+            report.shed,
             report.errors
         );
         rows.push(snap.table_row());

@@ -8,9 +8,19 @@
 //! normalize per sample, so padded rows never perturb real rows — the demux
 //! in the engine returns each request exactly the logits row its image
 //! produced.
+//!
+//! **SLO-aware shedding** happens here, at pop time: a request whose
+//! admission deadline has already passed is answered
+//! [`ServeError::DeadlineExceeded`](super::ServeError::DeadlineExceeded)
+//! and counted ([`SharedStats::on_shed`]) instead of riding a batch — under
+//! backlog the engine spends its executable slots only on answers someone
+//! is still waiting for. Shedding at admission time would be wrong twice
+//! over: the queue wait *is* the latency being guarded, and rejecting early
+//! would shed work that might still make its deadline.
 
 use super::queue::{Bounded, Pop};
-use super::Request;
+use super::stats::SharedStats;
+use super::{Request, ServeError};
 use std::time::{Duration, Instant};
 
 /// Batching policy for one engine.
@@ -37,19 +47,45 @@ pub enum NextBatch {
     Closed,
 }
 
+/// Shed-at-pop filter: pass a live request through, or answer an expired
+/// one with `DeadlineExceeded` (counted) and return `None`.
+fn shed_if_expired(req: Request, stats: &SharedStats) -> Option<Request> {
+    if req.expired(Instant::now()) {
+        stats.on_shed();
+        req.respond(Err(ServeError::DeadlineExceeded));
+        None
+    } else {
+        Some(req)
+    }
+}
+
 /// Block for the next batch: wait (bounded) for a first request, then
-/// coalesce until the batch is full or `max_wait` expires.
-pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig) -> NextBatch {
-    let first = match queue.pop_timeout(cfg.idle_poll) {
-        Pop::Item(r) => r,
-        Pop::TimedOut => return NextBatch::Idle,
-        Pop::Closed => return NextBatch::Closed,
+/// coalesce until the batch is full or `max_wait` expires. Requests whose
+/// admission deadline has already passed are shed here — at pop time — and
+/// never occupy a batch slot.
+pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig, stats: &SharedStats) -> NextBatch {
+    let first = loop {
+        match queue.pop_timeout(cfg.idle_poll) {
+            Pop::Item(r) => match shed_if_expired(r, stats) {
+                Some(r) => break r,
+                // expired request shed; keep waiting for a live one (each
+                // shed restarts a bounded idle-poll window, so shutdown
+                // latency stays bounded)
+                None => continue,
+            },
+            Pop::TimedOut => return NextBatch::Idle,
+            Pop::Closed => return NextBatch::Closed,
+        }
     };
     let mut reqs = vec![first];
     let deadline = Instant::now() + cfg.max_wait;
     while reqs.len() < cfg.batch {
         match queue.pop_deadline(deadline) {
-            Pop::Item(r) => reqs.push(r),
+            Pop::Item(r) => {
+                if let Some(r) = shed_if_expired(r, stats) {
+                    reqs.push(r);
+                }
+            }
             // Closed still ships the in-hand partial batch; the *next*
             // next_batch call observes Closed and exits the worker.
             Pop::TimedOut | Pop::Closed => break,
@@ -91,8 +127,24 @@ mod tests {
 
     fn req(fill: f32) -> (Request, mpsc::Receiver<Result<Response, ServeError>>) {
         let (tx, rx) = mpsc::channel();
-        let r = Request { id: 0, x: vec![fill; ELEMS], enqueued: Instant::now(), tx };
+        let r = Request {
+            id: 0,
+            x: vec![fill; ELEMS],
+            enqueued: Instant::now(),
+            deadline: None,
+            tx,
+        };
         (r, rx)
+    }
+
+    fn expired_req(fill: f32) -> (Request, mpsc::Receiver<Result<Response, ServeError>>) {
+        let (mut r, rx) = req(fill);
+        r.deadline = Some(r.enqueued);
+        (r, rx)
+    }
+
+    fn stats() -> SharedStats {
+        SharedStats::new("m", "v", 4)
     }
 
     fn cfg(batch: usize, max_wait_ms: u64) -> BatcherConfig {
@@ -111,7 +163,7 @@ mod tests {
             q.try_push(req(i as f32).0).unwrap();
         }
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 5_000)) {
+        match next_batch(&q, &cfg(4, 5_000), &stats()) {
             NextBatch::Batch(reqs) => {
                 assert_eq!(reqs.len(), 4);
                 // FIFO order preserved
@@ -131,7 +183,7 @@ mod tests {
         q.try_push(req(1.0).0).unwrap();
         q.try_push(req(2.0).0).unwrap();
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 30)) {
+        match next_batch(&q, &cfg(4, 30), &stats()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
             _ => panic!("expected a partial batch"),
         }
@@ -143,9 +195,9 @@ mod tests {
     #[test]
     fn idle_then_closed() {
         let q: Bounded<Request> = Bounded::new(2);
-        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Idle));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Idle));
         q.close();
-        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Closed));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Closed));
     }
 
     #[test]
@@ -153,11 +205,55 @@ mod tests {
         let q = Bounded::new(4);
         q.try_push(req(3.0).0).unwrap();
         q.close();
-        match next_batch(&q, &cfg(4, 5_000)) {
+        match next_batch(&q, &cfg(4, 5_000), &stats()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 1),
             _ => panic!("expected drained partial batch"),
         }
-        assert!(matches!(next_batch(&q, &cfg(4, 1)), NextBatch::Closed));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Closed));
+    }
+
+    #[test]
+    fn expired_requests_shed_at_pop_not_batched() {
+        let q = Bounded::new(8);
+        let s = stats();
+        let (r1, rx1) = expired_req(1.0);
+        let (r2, rx2) = req(2.0);
+        let (r3, rx3) = expired_req(3.0);
+        q.try_push(r1).unwrap();
+        q.try_push(r2).unwrap();
+        q.try_push(r3).unwrap();
+        match next_batch(&q, &cfg(4, 20), &s) {
+            NextBatch::Batch(reqs) => {
+                // only the live request rides the batch
+                assert_eq!(reqs.len(), 1);
+                assert_eq!(reqs[0].x[0], 2.0);
+            }
+            _ => panic!("expected a batch"),
+        }
+        // shed requests got a terminal DeadlineExceeded, counted exactly
+        assert_eq!(rx1.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        assert_eq!(rx3.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        assert!(rx2.try_recv().is_err(), "live request must not be answered by the batcher");
+        assert_eq!(s.snapshot(0).shed, 2);
+    }
+
+    #[test]
+    fn all_expired_queue_drains_to_idle() {
+        let q = Bounded::new(8);
+        let s = stats();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = expired_req(i as f32);
+            q.try_push(r).unwrap();
+            rxs.push(rx);
+        }
+        // every queued request is expired: the batcher sheds them all and
+        // reports Idle instead of shipping an empty batch
+        assert!(matches!(next_batch(&q, &cfg(4, 20), &s), NextBatch::Idle));
+        for rx in &rxs {
+            assert_eq!(rx.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        }
+        assert_eq!(s.snapshot(0).shed, 3);
     }
 
     #[test]

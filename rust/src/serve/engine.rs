@@ -23,6 +23,13 @@
 //! through the host-literal path (`bench_serve_throughput` quantifies the
 //! gap per variant). `pipelined: false` keeps the serial resident loop as
 //! the second baseline (the PR-2 behavior).
+//!
+//! **Warm variant swap**: the worker owns a control channel beside its
+//! request queue. Between batches it applies any pending [`SwapMsg`]:
+//! the new checkpoint's buffers are uploaded *beside* the live set (the
+//! old buffers keep serving any in-flight batch), then the engine flips
+//! its resident pointer atomically — no request is dropped, no batch sees
+//! a half-swapped parameter set ([`Server::swap_variant`](super::Server)).
 
 use super::batcher::{self, BatcherConfig, NextBatch};
 use super::queue::Bounded;
@@ -47,6 +54,9 @@ use std::time::{Duration, Instant};
 pub struct EngineConfig {
     pub model: String,
     pub variant: String,
+    /// Which shard of the variant this engine serves (0-based; a
+    /// single-engine variant is shard 0 of 1).
+    pub shard: usize,
     /// Hold a partial batch open this long after its first request.
     pub max_wait: Duration,
     /// Idle shutdown-check interval for a trafficless worker.
@@ -63,37 +73,57 @@ pub struct EngineConfig {
     pub spot_check: usize,
 }
 
-/// Spawn the worker thread. `ready` receives `Ok(())` once the engine is
-/// compiled, resident and serving (or the startup error); the router blocks
-/// on it so `Server::start` fails fast.
+/// Warm-swap control message: a full replacement checkpoint for the
+/// engine's variant plus the ack channel [`Server::swap_variant`](super::Server)
+/// blocks on. The worker applies it between batches.
+pub struct SwapMsg {
+    pub params: Params,
+    pub ack: mpsc::Sender<Result<(), String>>,
+}
+
+/// Everything the router wires into one shard worker: its request queue,
+/// its stats sink, its warm-swap control channel, and the startup ack.
+pub struct ShardWiring {
+    pub queue: Arc<Bounded<Request>>,
+    pub stats: SharedStats,
+    pub swap: mpsc::Receiver<SwapMsg>,
+    pub ready: mpsc::Sender<Result<(), String>>,
+}
+
 /// Closes the queue when the worker exits for *any* reason — including a
-/// panic unwinding the thread. Without this, producers would keep getting
-/// `QueueFull` (never `Closed`) from a dead engine and retry forever.
+/// panic unwinding the thread — and then answers whatever requests were
+/// still queued with [`ServeError::Shutdown`]. Without the close, producers
+/// would keep getting `QueueFull` (never `Closed`) from a dead engine and
+/// retry forever; without the drain, callers already admitted would stay
+/// blocked on a `Pending` nobody will ever answer.
 struct CloseQueueOnExit(Arc<Bounded<Request>>);
 
 impl Drop for CloseQueueOnExit {
     fn drop(&mut self) {
         self.0.close();
+        super::drain_shutdown(&self.0);
     }
 }
 
+/// Spawn one shard's worker thread. `wiring.ready` receives `Ok(())` once
+/// the engine is compiled, resident and serving (or the startup error); the
+/// router blocks on it so `Server::start` fails fast.
 pub fn spawn(
     manifest: Manifest,
     meta: ArtifactMeta,
     params: Params,
     cfg: EngineConfig,
-    queue: Arc<Bounded<Request>>,
-    stats: SharedStats,
-    ready: mpsc::Sender<Result<(), String>>,
+    wiring: ShardWiring,
 ) -> thread::JoinHandle<()> {
     thread::Builder::new()
-        .name(format!("lrta-serve-{}-{}", cfg.model, cfg.variant))
+        .name(format!("lrta-serve-{}-{}-{}", cfg.model, cfg.variant, cfg.shard))
         .spawn(move || {
+            let ShardWiring { queue, stats, swap, ready } = wiring;
             let _guard = CloseQueueOnExit(Arc::clone(&queue));
             match Engine::init(&manifest, meta, params, &cfg, stats) {
-                Ok(engine) => {
+                Ok(mut engine) => {
                     let _ = ready.send(Ok(()));
-                    engine.run(&queue, &cfg);
+                    engine.run(&queue, &cfg, &swap);
                 }
                 Err(e) => {
                     let _ = ready.send(Err(format!("{e:#}")));
@@ -127,6 +157,9 @@ struct Engine {
     x_dims: Vec<i64>,
     item_elems: usize,
     stats: SharedStats,
+    /// Spot-check sample count from the config (0 = off); kept so a warm
+    /// swap can refresh the accuracy gauge for the new checkpoint.
+    spot_check: usize,
 }
 
 impl Engine {
@@ -150,19 +183,43 @@ impl Engine {
                 .with_context(|| format!("uploading resident params for {}", meta.name))?;
             Some(bufs)
         };
-        if cfg.spot_check > 0 {
-            // serving-side accuracy spot check through the same executable
-            let n = cfg.spot_check.max(meta.batch);
-            let eval = Dataset::synthetic(n, 0xACC);
-            let acc = evaluate_with(&exe, &meta, &params, &eval)?;
-            stats.set_spot_check(acc);
-        }
         let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
         let item_elems = meta.x_shape.iter().skip(1).product();
-        Ok(Engine { rt, exe, meta, params, resident, x_dims, item_elems, stats })
+        let engine = Engine {
+            rt,
+            exe,
+            meta,
+            params,
+            resident,
+            x_dims,
+            item_elems,
+            stats,
+            spot_check: cfg.spot_check,
+        };
+        engine.run_spot_check()?;
+        Ok(engine)
     }
 
-    fn run(&self, queue: &Bounded<Request>, cfg: &EngineConfig) {
+    /// Serving-side accuracy spot check through the engine's own
+    /// executable (no-op when disabled). Runs at startup and again after a
+    /// warm swap, so the stats gauge always describes the live checkpoint.
+    fn run_spot_check(&self) -> Result<()> {
+        if self.spot_check == 0 {
+            return Ok(());
+        }
+        let n = self.spot_check.max(self.meta.batch);
+        let eval = Dataset::synthetic(n, 0xACC);
+        let acc = evaluate_with(&self.exe, &self.meta, &self.params, &eval)?;
+        self.stats.set_spot_check(acc);
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        queue: &Bounded<Request>,
+        cfg: &EngineConfig,
+        swap_rx: &mpsc::Receiver<SwapMsg>,
+    ) {
         let bcfg = BatcherConfig {
             batch: self.meta.batch,
             item_elems: self.item_elems,
@@ -177,7 +234,18 @@ impl Engine {
         // is the batch being coalesced/uploaded in the batcher right now
         let mut inflight: Option<InFlightBatch> = None;
         loop {
-            match batcher::next_batch(queue, &bcfg) {
+            // warm swap: applied strictly *between* batches. The in-flight
+            // batch was dispatched against the old buffers, so fetch it
+            // first; the new set uploads beside the old one, then the
+            // resident pointer flips — no batch ever sees a mixed set.
+            while let Ok(msg) = swap_rx.try_recv() {
+                if let Some(p) = inflight.take() {
+                    self.finish_batch(p);
+                }
+                let outcome = self.apply_swap(msg.params);
+                let _ = msg.ack.send(outcome);
+            }
+            match batcher::next_batch(queue, &bcfg, &self.stats) {
                 NextBatch::Closed => {
                     if let Some(p) = inflight.take() {
                         self.finish_batch(p);
@@ -230,6 +298,44 @@ impl Engine {
                 }
             }
         }
+    }
+
+    /// Warm swap: validate the replacement checkpoint against the
+    /// artifact's slot signature, upload its buffers beside the live set,
+    /// then flip the resident pointer. On any error the old set keeps
+    /// serving untouched (the swap is all-or-nothing per shard).
+    fn apply_swap(&mut self, params: Params) -> Result<(), String> {
+        for slot in self.meta.trainable.iter().chain(self.meta.frozen.iter()) {
+            match params.get(&slot.name) {
+                None => return Err(format!("swap checkpoint missing param '{}'", slot.name)),
+                Some(t) if t.shape() != &slot.shape[..] => {
+                    return Err(format!(
+                        "swap checkpoint shape mismatch for '{}': artifact {:?}, got {:?}",
+                        slot.name,
+                        slot.shape,
+                        t.shape()
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        if self.resident.is_some() {
+            let slots = || self.meta.trainable.iter().chain(self.meta.frozen.iter());
+            // upload beside the live set — `self.resident` still holds the
+            // old buffers until the assignment below flips them
+            let bufs = ResidentParams::upload_for_slots(&self.rt, &params, slots())
+                .and_then(|r| r.into_ordered(slots()))
+                .map_err(|e| format!("uploading swap buffers: {e:#}"))?;
+            self.resident = Some(bufs);
+        }
+        self.params = params;
+        self.stats.set_transfers(self.rt.uploads() as u64, self.rt.demux_fallbacks() as u64);
+        self.stats.on_swap();
+        // refresh the accuracy gauge for the new checkpoint. Non-fatal:
+        // the flip already happened, so a failed re-check must not report
+        // the swap itself as failed (the previous gauge value persists).
+        let _ = self.run_spot_check();
+        Ok(())
     }
 
     /// Serial (lockstep) batch service — the reupload baseline and the

@@ -11,25 +11,42 @@
 //!  submit(model, variant, image)
 //!        │
 //!        ▼
-//!  [router]──(model, variant)──▶ [queue]  bounded, admission-controlled
-//!                                   │     (reject past depth = backpressure)
-//!                                   ▼
-//!                               [batcher]  coalesce ≤ compiled batch,
-//!                                   │      max-wait deadline, zero-pad
-//!                                   ▼
-//!                               [engine]   one worker thread per variant:
-//!                                   │      own PJRT client + executable,
-//!                                   │      parameters uploaded once and
-//!                                   │      kept resident as device buffers
-//!                                   ▼
-//!                               demux rows ──▶ per-request [`Response`]
+//!  [router]──(model, variant)──▶ shard pick: min queue depth,
+//!        │                       round-robin tie-break
+//!        ├────────────┬──────────────┐
+//!        ▼            ▼              ▼
+//!     [queue 0]    [queue 1]  …  [queue N-1]   bounded, admission-
+//!        │            │              │         controlled; per-request
+//!        ▼            ▼              ▼         SLO deadlines
+//!    [batcher]    [batcher]     [batcher]      coalesce ≤ compiled batch,
+//!        │            │              │         max-wait deadline, zero-pad,
+//!        ▼            ▼              ▼         shed expired work at pop
+//!    [engine 0]   [engine 1]    [engine N-1]   one worker thread per shard:
+//!        │            │              │         own PJRT client + executable,
+//!        ▼            ▼              ▼         own resident parameter set
+//!     demux rows ──────────────▶ per-request [`Response`]
 //! ```
 //!
 //! `orig`, `lrd` and `rankopt` checkpoints of the same model register as
 //! separate variants and serve side-by-side, so A/B throughput comparison
-//! is a routing decision, not a redeploy. Per-variant latency percentiles,
-//! queue-depth gauges, fps and host↔device transfer counters live in
-//! [`stats`].
+//! is a routing decision, not a redeploy. A variant scales out with
+//! [`VariantSpec::with_shards`]: N identical workers behind one routing
+//! key, requests fanned out to the shallowest queue (round-robin on ties),
+//! with per-request logits bit-identical to the single-engine path.
+//! Per-variant latency percentiles, queue-depth gauges, fps and
+//! host↔device transfer counters live in [`stats`]; with shards the
+//! variant-level snapshot merges the per-shard sinks.
+//!
+//! **SLO-aware shedding**: `ServerConfig::slo` stamps every admitted
+//! request with a deadline; the batcher sheds work whose deadline has
+//! passed *at pop time* (counted in stats, answered with
+//! [`ServeError::DeadlineExceeded`]) so a backlogged engine stops burning
+//! executable slots on answers nobody is waiting for.
+//!
+//! **Warm variant swap**: [`Server::swap_variant`] uploads a new
+//! checkpoint's buffers beside the live set on every shard and flips
+//! atomically between batches — a zero-downtime redeploy that loses no
+//! in-flight request.
 //!
 //! **Streaming admission** (default): resident engines split execution into
 //! dispatch/fetch halves ([`crate::runtime::pipeline`]) — while batch N
@@ -64,10 +81,16 @@ use std::time::{Duration, Instant};
 
 /// One enqueued inference request: a single sample (row-major `[32,32,3]`
 /// image) plus the response channel it is demuxed back onto.
+#[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub x: Vec<f32>,
     pub enqueued: Instant,
+    /// Admission deadline (`enqueued + slo`): work still queued past this
+    /// instant is shed at pop time with [`ServeError::DeadlineExceeded`]
+    /// instead of wasting an executable slot on an answer the client has
+    /// already given up on. `None` = no SLO, never shed.
+    pub deadline: Option<Instant>,
     pub tx: mpsc::Sender<Result<Response, ServeError>>,
 }
 
@@ -75,6 +98,23 @@ impl Request {
     /// Deliver the result; a hung-up client is not an error.
     pub(crate) fn respond(self, r: Result<Response, ServeError>) {
         let _ = self.tx.send(r);
+    }
+
+    /// Has this request's admission deadline passed?
+    pub(crate) fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Answer every request still sitting in a queue with
+/// [`ServeError::Shutdown`]. Callers blocked on a [`Pending`] must always
+/// receive a terminal response: the normal close path drains the queue
+/// through the batcher, but a worker that died mid-run (or never came up)
+/// leaves admitted requests behind — this is the backstop that unwedges
+/// their submitters.
+pub(crate) fn drain_shutdown(queue: &queue::Bounded<Request>) {
+    for req in queue.drain() {
+        req.respond(Err(ServeError::Shutdown));
     }
 }
 
@@ -106,6 +146,12 @@ pub enum ServeError {
     Closed,
     /// No response within the client's wait deadline.
     Timeout,
+    /// The request's admission deadline (`--slo-ms`) passed while it was
+    /// still queued; it was shed at pop time without executing.
+    DeadlineExceeded,
+    /// The server shut down before the request was served (terminal answer
+    /// for work drained out of a closed queue).
+    Shutdown,
     /// `(model, variant)` was never registered with the router.
     UnknownVariant(String),
     /// Payload length does not match the artifact's per-item element count.
@@ -120,6 +166,10 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueFull { depth } => write!(f, "queue full (depth {depth})"),
             ServeError::Closed => write!(f, "server closed"),
             ServeError::Timeout => write!(f, "timed out waiting for response"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "admission deadline exceeded while queued (shed at pop)")
+            }
+            ServeError::Shutdown => write!(f, "server shut down before the request was served"),
             ServeError::UnknownVariant(k) => write!(f, "unknown variant '{k}'"),
             ServeError::BadInput { expected, got } => {
                 write!(f, "bad input: expected {expected} elements, got {got}")
@@ -158,6 +208,9 @@ pub struct LoadReport {
     pub requests: usize,
     pub completed: usize,
     pub errors: usize,
+    /// Requests shed for missing their admission deadline
+    /// ([`ServeError::DeadlineExceeded`]) — SLO pressure, not failures.
+    pub shed: usize,
     /// Admission-control rejections observed (each was retried).
     pub rejected: u64,
     pub wall_secs: f64,
@@ -217,6 +270,7 @@ pub fn closed_loop(
     let next = AtomicUsize::new(0);
     let rejected = AtomicU64::new(0);
     let errors = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
     let t0 = Instant::now();
     std::thread::scope(|s| {
@@ -240,6 +294,9 @@ pub fn closed_loop(
                     Some(Ok(resp)) => {
                         latencies.lock().unwrap().push(resp.latency.as_secs_f64());
                     }
+                    Some(Err(ServeError::DeadlineExceeded)) => {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
                     _ => {
                         errors.fetch_add(1, Ordering::Relaxed);
                     }
@@ -251,6 +308,7 @@ pub fn closed_loop(
         requests,
         completed: 0,
         errors: errors.into_inner(),
+        shed: shed.into_inner(),
         rejected: rejected.into_inner(),
         wall_secs: 0.0,
         latencies: latencies.into_inner().unwrap(),
@@ -293,6 +351,7 @@ pub fn burst_loop(
     for p in &pendings {
         match p.wait(timeout) {
             Ok(resp) => report.latencies.push(resp.latency.as_secs_f64()),
+            Err(ServeError::DeadlineExceeded) => report.shed += 1,
             Err(_) => report.errors += 1,
         }
     }
@@ -318,6 +377,41 @@ mod tests {
         assert!(ServeError::QueueFull { depth: 8 }.to_string().contains("depth 8"));
         assert!(ServeError::BadInput { expected: 4, got: 2 }.to_string().contains("4"));
         assert!(ServeError::UnknownVariant("m/v".into()).to_string().contains("m/v"));
+        assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(ServeError::Shutdown.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn request_expiry_is_deadline_gated() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let mut r = Request { id: 0, x: vec![], enqueued: now, deadline: None, tx };
+        assert!(!r.expired(now), "no deadline: never expires");
+        r.deadline = Some(now + Duration::from_secs(60));
+        assert!(!r.expired(now));
+        r.deadline = Some(now);
+        assert!(r.expired(now), "deadline reached counts as expired");
+    }
+
+    #[test]
+    fn drain_shutdown_answers_blocked_submitters() {
+        // the shutdown-drain satellite: a worker that died leaves admitted
+        // requests in its queue; drain must give each a terminal answer so
+        // a caller blocked on `Pending::wait` unwedges immediately
+        let q: queue::Bounded<Request> = queue::Bounded::new(4);
+        let mut rxs = Vec::new();
+        for id in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            let req = Request { id, x: vec![], enqueued: Instant::now(), deadline: None, tx };
+            q.try_push(req).unwrap();
+            rxs.push(Pending { rx });
+        }
+        q.close();
+        drain_shutdown(&q);
+        assert!(q.is_empty());
+        for p in &rxs {
+            assert_eq!(p.wait(Duration::from_millis(50)), Err(ServeError::Shutdown));
+        }
     }
 
     #[test]
@@ -335,6 +429,7 @@ mod tests {
             requests: 3,
             completed: 3,
             errors: 0,
+            shed: 0,
             rejected: 1,
             wall_secs: 2.0,
             latencies: vec![0.001, 0.002, 0.010],

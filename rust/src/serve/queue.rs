@@ -101,11 +101,14 @@ impl<T> Bounded<T> {
             if g.closed {
                 return Pop::Closed;
             }
-            let now = Instant::now();
-            if now >= deadline {
+            // saturating: a deadline already in the past must time out, not
+            // panic on `Duration` underflow (callers pass per-request
+            // admission deadlines that are routinely expired by pop time)
+            let wait = deadline.saturating_duration_since(Instant::now());
+            if wait.is_zero() {
                 return Pop::TimedOut;
             }
-            let (g2, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _timeout) = self.not_empty.wait_timeout(g, wait).unwrap();
             g = g2;
         }
     }
@@ -118,6 +121,13 @@ impl<T> Bounded<T> {
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Take every queued item in FIFO order (one lock). Shutdown uses this
+    /// to answer requests a dead worker left behind instead of wedging the
+    /// callers blocked on them.
+    pub fn drain(&self) -> Vec<T> {
+        self.inner.lock().unwrap().items.drain(..).collect()
     }
 
     /// Close for shutdown: producers are rejected immediately, the consumer
@@ -164,6 +174,33 @@ mod tests {
         let t0 = Instant::now();
         assert!(matches!(q.pop_timeout(Duration::from_millis(20)), Pop::TimedOut));
         assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn expired_deadline_times_out_without_panicking() {
+        // regression: `pop_deadline` used raw `deadline - now`, which
+        // panicked ("overflow when subtracting durations") once the
+        // deadline was already in the past
+        let q: Bounded<u8> = Bounded::new(1);
+        let past = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_deadline(past), Pop::TimedOut));
+        assert!(t0.elapsed() < Duration::from_millis(100), "expired deadline must not wait");
+        // a queued item still beats an expired deadline
+        q.try_push(9).unwrap();
+        assert!(matches!(q.pop_deadline(past), Pop::Item(9)));
+    }
+
+    #[test]
+    fn drain_takes_everything_in_fifo_order() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert_eq!(q.drain(), vec![1, 2]);
+        assert!(q.is_empty());
+        assert!(q.drain().is_empty());
     }
 
     #[test]

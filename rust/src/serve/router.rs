@@ -1,29 +1,34 @@
-//! Variant registry and router: `(model, variant)` → engine.
+//! Variant registry and router: `(model, variant)` → shard set → engine.
 //!
 //! `orig`, `lrd` and `rankopt` checkpoints of the same model register as
-//! independent engines (own queue, own worker, own stats) and serve
-//! side-by-side, so A/B throughput comparison — the Table-1 experiment — is
-//! just two `submit` targets. The router is the only thread-shared entry
-//! point; it validates payloads, applies admission control via the bounded
-//! queue, and exposes per-variant stats snapshots.
+//! independent variants and serve side-by-side, so A/B throughput
+//! comparison — the Table-1 experiment — is just two `submit` targets. A
+//! variant additionally scales out across `shards` identical workers (each
+//! with its own PJRT client, resident parameter set, queue and stats); the
+//! router fans requests out to the shallowest queue, breaking ties
+//! round-robin so idle shards share trickle traffic evenly. The router is
+//! the only thread-shared entry point; it validates payloads, stamps
+//! admission deadlines (`ServerConfig::slo`), applies admission control via
+//! the bounded queues, brokers warm variant swaps, and exposes per-variant
+//! (shard-merged) stats snapshots.
 
-use super::engine::{self, EngineConfig};
+use super::engine::{self, EngineConfig, ShardWiring, SwapMsg};
 use super::queue::{Bounded, PushError};
 use super::stats::{SharedStats, StatsSnapshot};
-use super::{Pending, Request, ServeError};
+use super::{drain_shutdown, Pending, Request, ServeError};
 use crate::checkpoint::Params;
 use crate::runtime::Manifest;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Server-wide serving policy (applied to every registered variant).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Queue depth per variant; `0` means `4 × compiled batch`.
+    /// Queue depth per shard; `0` means `4 × compiled batch`.
     pub queue_depth: usize,
     /// Batcher max-wait: how long a partial batch stays open.
     pub max_wait: Duration,
@@ -39,6 +44,10 @@ pub struct ServerConfig {
     pub pipelined: bool,
     /// Startup accuracy spot-check sample count (0 = off).
     pub spot_check: usize,
+    /// Per-request admission deadline: a request still queued `slo` after
+    /// submission is shed at pop time with [`ServeError::DeadlineExceeded`]
+    /// instead of occupying a batch slot. `None` (default) never sheds.
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -50,6 +59,7 @@ impl Default for ServerConfig {
             reupload: false,
             pipelined: true,
             spot_check: 0,
+            slo: None,
         }
     }
 }
@@ -60,11 +70,21 @@ pub struct VariantSpec {
     pub model: String,
     pub variant: String,
     pub params: Params,
+    /// How many identical shard workers serve this variant (each with its
+    /// own PJRT client, resident parameter set, queue and stats). Must be
+    /// at least 1.
+    pub shards: usize,
 }
 
 impl VariantSpec {
     pub fn new(model: &str, variant: &str, params: Params) -> VariantSpec {
-        VariantSpec { model: model.to_string(), variant: variant.to_string(), params }
+        VariantSpec { model: model.to_string(), variant: variant.to_string(), params, shards: 1 }
+    }
+
+    /// Scale this variant out across `shards` workers.
+    pub fn with_shards(mut self, shards: usize) -> VariantSpec {
+        self.shards = shards;
+        self
     }
 
     /// Spec for `variant` derived from a dense checkpoint: identity for
@@ -86,13 +106,60 @@ impl VariantSpec {
     }
 }
 
-/// Live engine registration.
-struct EngineHandle {
+/// One live shard worker of a variant.
+struct ShardHandle {
     queue: Arc<Bounded<Request>>,
     stats: SharedStats,
+    /// Warm-swap control channel into the worker (Mutex only to keep
+    /// `Server: Sync`; swaps are a cold path).
+    swap: Mutex<mpsc::Sender<SwapMsg>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Live engine registration: the shard set behind one `(model, variant)`.
+struct EngineHandle {
+    shards: Vec<ShardHandle>,
+    /// Round-robin cursor for tie-breaking equal queue depths.
+    rr: AtomicUsize,
+    /// Serializes warm swaps for this variant: two racing `swap_variant`
+    /// calls must not interleave their per-shard fanouts, or shards could
+    /// apply the swaps in opposite orders and end up serving different
+    /// checkpoints.
+    swap_gate: Mutex<()>,
     item_elems: usize,
     batch: usize,
-    join: Option<JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Fanout decision: the shard with the shallowest queue, scanning from
+    /// a rotating start so exact ties are broken round-robin (idle shards
+    /// then share trickle traffic evenly instead of shard 0 taking it all).
+    fn pick_shard(&self) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let mut best = start;
+        let mut best_depth = self.shards[start].queue.len();
+        for off in 1..self.shards.len() {
+            let i = (start + off) % self.shards.len();
+            let depth = self.shards[i].queue.len();
+            // strictly-less keeps the rotating start on ties
+            if depth < best_depth {
+                best = i;
+                best_depth = depth;
+            }
+        }
+        best
+    }
+
+    /// Variant-level stats: the single shard's snapshot, or the merged view
+    /// over all shards.
+    fn snapshot(&self) -> StatsSnapshot {
+        let parts: Vec<(&SharedStats, usize)> =
+            self.shards.iter().map(|s| (&s.stats, s.queue.len())).collect();
+        SharedStats::merged(&parts)
+    }
 }
 
 /// `(model, variant)` → engine lookup table.
@@ -116,40 +183,68 @@ impl Router {
         self.engines.keys().cloned().collect()
     }
 
-    /// Close every queue and join every worker (idempotent).
+    /// Register a constructed engine handle. A duplicate `(model, variant)`
+    /// key is an error — a silent overwrite would leak the old handle's
+    /// shard workers and stats.
+    fn register(&mut self, key: String, handle: EngineHandle) -> Result<()> {
+        use std::collections::btree_map::Entry;
+        match self.engines.entry(key) {
+            Entry::Occupied(e) => Err(anyhow!("variant '{}' registered twice", e.key())),
+            Entry::Vacant(v) => {
+                v.insert(handle);
+                Ok(())
+            }
+        }
+    }
+
+    /// Close every queue, join every worker, then answer any requests a
+    /// dead worker left queued with [`ServeError::Shutdown`] (idempotent).
     fn close_and_join(&mut self) {
         for h in self.engines.values() {
-            h.queue.close();
+            for s in &h.shards {
+                s.queue.close();
+            }
         }
         for h in self.engines.values_mut() {
-            if let Some(join) = h.join.take() {
-                let _ = join.join();
+            for s in &mut h.shards {
+                if let Some(join) = s.join.take() {
+                    let _ = join.join();
+                }
+                // a healthy worker drained its queue through the batcher
+                // before exiting; this catches requests stranded by a
+                // worker that died (see `drain_shutdown`)
+                drain_shutdown(&s.queue);
             }
         }
     }
 }
 
-/// The serving subsystem's front door: a router over per-variant engines
+/// The serving subsystem's front door: a router over per-variant shard sets
 /// plus lifecycle management. `Sync` — share it by reference across client
 /// threads.
 pub struct Server {
     router: Router,
     next_id: AtomicU64,
+    slo: Option<Duration>,
 }
 
 impl Server {
-    /// Start one engine per spec — all in parallel, since each worker owns
-    /// an independent PJRT client — then block until every engine reports
-    /// compiled-and-resident. Fails fast (and tears the partial fleet down)
-    /// if any artifact is missing or won't load.
+    /// Start every shard worker of every spec — all in parallel, since each
+    /// worker owns an independent PJRT client — then block until every one
+    /// reports compiled-and-resident. Fails fast (and tears the partial
+    /// fleet down) if any artifact is missing or won't load.
     pub fn start(
         manifest: &Manifest,
         specs: Vec<VariantSpec>,
         cfg: &ServerConfig,
     ) -> Result<Server> {
         let mut router = Router::default();
-        let mut pending = Vec::with_capacity(specs.len());
+        let mut pending = Vec::new();
         for spec in specs {
+            if spec.shards == 0 {
+                router.close_and_join();
+                bail!("variant '{}/{}' needs at least 1 shard", spec.model, spec.variant);
+            }
             let name = Manifest::name_of(&spec.model, &spec.variant, "infer", "none");
             let meta = match manifest.artifact(&name) {
                 Ok(m) => m.clone(),
@@ -161,38 +256,61 @@ impl Server {
             let batch = meta.batch;
             let item_elems: usize = meta.x_shape.iter().skip(1).product();
             let depth = if cfg.queue_depth == 0 { batch * 4 } else { cfg.queue_depth };
-            let queue = Arc::new(Bounded::new(depth));
-            let stats = SharedStats::new(&spec.model, &spec.variant, batch);
-            let ecfg = EngineConfig {
-                model: spec.model.clone(),
-                variant: spec.variant.clone(),
-                max_wait: cfg.max_wait,
-                idle_poll: cfg.idle_poll,
-                reupload: cfg.reupload,
-                pipelined: cfg.pipelined,
-                spot_check: cfg.spot_check,
-            };
-            let (ready_tx, ready_rx) = mpsc::channel();
             let key = Router::key(&spec.model, &spec.variant);
+            // duplicate check *before* spawning: workers started for a
+            // doomed spec would outlive the error (register would catch
+            // the duplicate too, but only after the leak)
             if router.engines.contains_key(&key) {
-                // a silent overwrite would leak the first engine's worker
                 router.close_and_join();
-                return Err(anyhow!("variant '{key}' registered twice"));
+                bail!("variant '{key}' registered twice");
             }
-            let join = engine::spawn(
-                manifest.clone(),
-                meta,
-                spec.params,
-                ecfg,
-                Arc::clone(&queue),
-                stats.clone(),
-                ready_tx,
-            );
-            router.engines.insert(
-                key.clone(),
-                EngineHandle { queue, stats, item_elems, batch, join: Some(join) },
-            );
-            pending.push((key, ready_rx));
+            let mut shards = Vec::with_capacity(spec.shards);
+            for shard in 0..spec.shards {
+                let queue = Arc::new(Bounded::new(depth));
+                let stats = SharedStats::new(&spec.model, &spec.variant, batch);
+                let ecfg = EngineConfig {
+                    model: spec.model.clone(),
+                    variant: spec.variant.clone(),
+                    shard,
+                    max_wait: cfg.max_wait,
+                    idle_poll: cfg.idle_poll,
+                    reupload: cfg.reupload,
+                    pipelined: cfg.pipelined,
+                    // every shard serves the same checkpoint through the
+                    // same artifact: one spot check answers for all of them
+                    spot_check: if shard == 0 { cfg.spot_check } else { 0 },
+                };
+                let (ready_tx, ready_rx) = mpsc::channel();
+                let (swap_tx, swap_rx) = mpsc::channel();
+                let join = engine::spawn(
+                    manifest.clone(),
+                    meta.clone(),
+                    spec.params.clone(),
+                    ecfg,
+                    ShardWiring {
+                        queue: Arc::clone(&queue),
+                        stats: stats.clone(),
+                        swap: swap_rx,
+                        ready: ready_tx,
+                    },
+                );
+                let swap = Mutex::new(swap_tx);
+                shards.push(ShardHandle { queue, stats, swap, join: Some(join) });
+                pending.push((format!("{key}#{shard}"), ready_rx));
+            }
+            let handle = EngineHandle {
+                shards,
+                rr: AtomicUsize::new(0),
+                swap_gate: Mutex::new(()),
+                item_elems,
+                batch,
+            };
+            // vacancy is guaranteed by the pre-spawn duplicate check above;
+            // a panic here means that invariant broke (better loud than a
+            // silent leak of the just-spawned workers)
+            router
+                .register(key, handle)
+                .expect("duplicate registration must be caught before spawning");
         }
         // collect startup results; on any failure don't leak the engines
         // that did come up (threads + their resident device buffers)
@@ -207,11 +325,13 @@ impl Server {
                 return Err(e);
             }
         }
-        Ok(Server { router, next_id: AtomicU64::new(0) })
+        Ok(Server { router, next_id: AtomicU64::new(0), slo: cfg.slo })
     }
 
     /// Enqueue one sample for `(model, variant)`. Returns immediately with
-    /// a [`Pending`] handle, or an admission-control / routing error.
+    /// a [`Pending`] handle, or an admission-control / routing error. With
+    /// shards the request lands on the shallowest queue (round-robin on
+    /// ties); with an SLO configured it carries an admission deadline.
     pub fn submit(&self, model: &str, variant: &str, x: Vec<f32>) -> Result<Pending, ServeError> {
         let h = self
             .router
@@ -220,24 +340,69 @@ impl Server {
         if x.len() != h.item_elems {
             return Err(ServeError::BadInput { expected: h.item_elems, got: x.len() });
         }
+        let shard = &h.shards[h.pick_shard()];
         let (tx, rx) = mpsc::channel();
+        let enqueued = Instant::now();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             x,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: self.slo.map(|slo| enqueued + slo),
             tx,
         };
-        match h.queue.try_push(req) {
+        match shard.queue.try_push(req) {
             Ok(depth) => {
-                h.stats.on_enqueue(depth);
+                shard.stats.on_enqueue(depth);
                 Ok(Pending { rx })
             }
+            // the pick already steered to the shallowest queue: if that one
+            // is at capacity, every shard is — reject (backpressure)
             Err(PushError::Full(_)) => {
-                h.stats.on_reject();
-                Err(ServeError::QueueFull { depth: h.queue.capacity() })
+                shard.stats.on_reject();
+                Err(ServeError::QueueFull { depth: shard.queue.capacity() })
             }
             Err(PushError::Closed(_)) => Err(ServeError::Closed),
         }
+    }
+
+    /// Warm variant swap: replace `(model, variant)`'s checkpoint on every
+    /// shard with zero downtime. Each shard uploads the new buffers beside
+    /// its live set and flips atomically between batches; requests keep
+    /// flowing throughout and none is dropped. Blocks until every shard has
+    /// flipped (or reports the first failure — on error the fleet may be
+    /// mid-swap: healthy shards flipped, failed ones kept the old set).
+    pub fn swap_variant(
+        &self,
+        model: &str,
+        variant: &str,
+        params: &Params,
+    ) -> Result<(), ServeError> {
+        let h = self
+            .router
+            .get(model, variant)
+            .ok_or_else(|| ServeError::UnknownVariant(Router::key(model, variant)))?;
+        // one swap at a time per variant: racing fanouts could reach the
+        // shards in opposite orders and split the fleet across checkpoints
+        let _gate = h.swap_gate.lock().unwrap();
+        // fan the swap out to every shard first so uploads overlap …
+        let mut acks = Vec::with_capacity(h.shards.len());
+        for shard in &h.shards {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            let msg = SwapMsg { params: params.clone(), ack: ack_tx };
+            if shard.swap.lock().unwrap().send(msg).is_err() {
+                return Err(ServeError::Closed);
+            }
+            acks.push(ack_rx);
+        }
+        // … then collect every ack
+        for ack in acks {
+            match ack.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(ServeError::Engine(e)),
+                Err(_) => return Err(ServeError::Closed),
+            }
+        }
+        Ok(())
     }
 
     /// Compiled batch size of a registered variant.
@@ -245,24 +410,46 @@ impl Server {
         self.router.get(model, variant).map(|h| h.batch)
     }
 
+    /// Shard count of a registered variant.
+    pub fn shards_of(&self, model: &str, variant: &str) -> Option<usize> {
+        self.router.get(model, variant).map(|h| h.shards.len())
+    }
+
     /// Registered routing keys (`model/variant`).
     pub fn keys(&self) -> Vec<String> {
         self.router.keys()
     }
 
-    /// Stats snapshot for one variant (queue depth sampled live).
+    /// Stats snapshot for one variant (queue depths sampled live; shard
+    /// counters merged, percentiles exact over the union of samples).
     pub fn stats(&self, model: &str, variant: &str) -> Option<StatsSnapshot> {
-        self.router.get(model, variant).map(|h| h.stats.snapshot(h.queue.len()))
+        self.router.get(model, variant).map(|h| h.snapshot())
     }
 
-    /// Rendered latency histogram for one variant.
+    /// Per-shard stats snapshots for one variant, in shard order.
+    pub fn shard_stats(&self, model: &str, variant: &str) -> Option<Vec<StatsSnapshot>> {
+        let h = self.router.get(model, variant)?;
+        Some(h.shards.iter().map(|s| s.stats.snapshot(s.queue.len())).collect())
+    }
+
+    /// Rendered latency histogram for one variant (one section per shard
+    /// when scaled out).
     pub fn histogram(&self, model: &str, variant: &str, width: usize) -> Option<String> {
-        self.router.get(model, variant).map(|h| h.stats.histogram(width))
+        let h = self.router.get(model, variant)?;
+        if h.shards.len() == 1 {
+            return Some(h.shards[0].stats.histogram(width));
+        }
+        let mut out = String::new();
+        for (i, s) in h.shards.iter().enumerate() {
+            out.push_str(&format!("shard {i}:\n"));
+            out.push_str(&s.stats.histogram(width));
+        }
+        Some(out)
     }
 
     /// Snapshots for every variant, in key order.
     pub fn snapshots(&self) -> Vec<StatsSnapshot> {
-        self.router.engines.values().map(|h| h.stats.snapshot(h.queue.len())).collect()
+        self.router.engines.values().map(|h| h.snapshot()).collect()
     }
 
     /// Close every queue, drain in-flight work, join the workers.
@@ -304,5 +491,82 @@ mod tests {
         assert!(c.pipelined);
         assert_eq!(c.queue_depth, 0);
         assert!(c.max_wait >= Duration::from_millis(1));
+        assert!(c.slo.is_none(), "no SLO by default: nothing sheds");
+    }
+
+    #[test]
+    fn variant_spec_defaults_to_one_shard() {
+        let spec = VariantSpec::new("m", "lrd", Params::new());
+        assert_eq!(spec.shards, 1);
+        assert_eq!(spec.with_shards(4).shards, 4);
+    }
+
+    /// A worker-less engine handle for routing-logic tests (queues and
+    /// stats are real; the swap channel's receiver is simply dropped).
+    fn dummy_handle(shards: usize, depth: usize) -> EngineHandle {
+        let shards: Vec<ShardHandle> = (0..shards)
+            .map(|_| {
+                let (swap_tx, _swap_rx) = mpsc::channel();
+                ShardHandle {
+                    queue: Arc::new(Bounded::new(depth)),
+                    stats: SharedStats::new("m", "v", 4),
+                    swap: Mutex::new(swap_tx),
+                    join: None,
+                }
+            })
+            .collect();
+        EngineHandle {
+            shards,
+            rr: AtomicUsize::new(0),
+            swap_gate: Mutex::new(()),
+            item_elems: 4,
+            batch: 4,
+        }
+    }
+
+    fn push_dummy(h: &EngineHandle, shard: usize) {
+        let (tx, _rx) = mpsc::channel();
+        let req = Request { id: 0, x: vec![], enqueued: Instant::now(), deadline: None, tx };
+        h.shards[shard].queue.try_push(req).unwrap();
+        // _rx dropped: the engine side treats a hung-up client as non-fatal
+    }
+
+    #[test]
+    fn duplicate_registration_is_an_error() {
+        let mut r = Router::default();
+        r.register("m/lrd".into(), dummy_handle(1, 4)).expect("first registration");
+        let err = r.register("m/lrd".into(), dummy_handle(1, 4)).unwrap_err();
+        assert!(err.to_string().contains("registered twice"), "got: {err}");
+        // the original registration is untouched
+        assert_eq!(r.keys(), vec!["m/lrd".to_string()]);
+    }
+
+    #[test]
+    fn pick_shard_prefers_shallowest_queue() {
+        let h = dummy_handle(3, 8);
+        push_dummy(&h, 0);
+        push_dummy(&h, 0);
+        push_dummy(&h, 2);
+        // shard 1 is empty: every pick must land there regardless of the
+        // round-robin cursor position
+        for _ in 0..6 {
+            assert_eq!(h.pick_shard(), 1);
+        }
+    }
+
+    #[test]
+    fn pick_shard_round_robins_on_ties() {
+        let h = dummy_handle(3, 8);
+        // all queues empty → pure round-robin from the rotating cursor
+        let picks: Vec<usize> = (0..6).map(|_| h.pick_shard()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn single_shard_pick_is_free() {
+        let h = dummy_handle(1, 8);
+        assert_eq!(h.pick_shard(), 0);
+        // the round-robin cursor is untouched on the 1-shard fast path
+        assert_eq!(h.rr.load(Ordering::Relaxed), 0);
     }
 }

@@ -109,6 +109,10 @@ struct Inner {
     exec_secs_total: f64,
     requests_ok: u64,
     rejected: u64,
+    /// Requests shed at pop time for missing their admission deadline.
+    shed: u64,
+    /// Warm variant swaps applied by this engine worker.
+    swaps: u64,
     errors: u64,
     batches: u64,
     served: u64,
@@ -145,6 +149,8 @@ impl SharedStats {
                 exec_secs_total: 0.0,
                 requests_ok: 0,
                 rejected: 0,
+                shed: 0,
+                swaps: 0,
                 errors: 0,
                 batches: 0,
                 served: 0,
@@ -166,6 +172,16 @@ impl SharedStats {
 
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One request shed at pop time (admission deadline exceeded).
+    pub fn on_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// One warm variant swap applied between batches.
+    pub fn on_swap(&self) {
+        self.inner.lock().unwrap().swaps += 1;
     }
 
     pub fn on_error(&self, requests: usize) {
@@ -221,6 +237,8 @@ impl SharedStats {
             batch: self.batch,
             requests_ok: g.requests_ok,
             rejected: g.rejected,
+            shed: g.shed,
+            swaps: g.swaps,
             errors: g.errors,
             batches: g.batches,
             served: g.served,
@@ -243,6 +261,81 @@ impl SharedStats {
     pub fn histogram(&self, width: usize) -> String {
         self.inner.lock().unwrap().hist.render(width)
     }
+
+    /// Variant-level snapshot over a shard set: counters sum, queue depth
+    /// sums, max depth takes the max, throughputs add (shards run
+    /// concurrently on independent clients), and percentiles are exact over
+    /// the union of the shards' retained samples. Each `(stats, depth)`
+    /// pair is one shard's sink plus its live queue depth; a single-shard
+    /// set degenerates to the plain [`SharedStats::snapshot`].
+    pub fn merged(parts: &[(&SharedStats, usize)]) -> StatsSnapshot {
+        assert!(!parts.is_empty(), "merged snapshot needs at least one shard");
+        if parts.len() == 1 {
+            return parts[0].0.snapshot(parts[0].1);
+        }
+        let first = parts[0].0;
+        let mut snap = StatsSnapshot {
+            model: first.model.clone(),
+            variant: first.variant.clone(),
+            batch: first.batch,
+            requests_ok: 0,
+            rejected: 0,
+            shed: 0,
+            swaps: 0,
+            errors: 0,
+            batches: 0,
+            served: 0,
+            padded_slots: 0,
+            queue_depth: 0,
+            max_queue_depth: 0,
+            exec_fps: 0.0,
+            request_fps: 0.0,
+            mean_fill: 0.0,
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            spot_check_acc: None,
+            uploads: 0,
+            demux_fallbacks: 0,
+        };
+        let mut samples: Vec<f64> = Vec::new();
+        for (s, depth) in parts {
+            let g = s.inner.lock().unwrap();
+            snap.requests_ok += g.requests_ok;
+            snap.rejected += g.rejected;
+            snap.shed += g.shed;
+            snap.swaps += g.swaps;
+            snap.errors += g.errors;
+            snap.batches += g.batches;
+            snap.served += g.served;
+            snap.padded_slots += g.padded_slots;
+            snap.queue_depth += depth;
+            snap.max_queue_depth = snap.max_queue_depth.max(g.max_queue_depth);
+            snap.exec_fps += g.exec_meter.fps();
+            // goodput adds like exec_fps: shards execute concurrently, so
+            // per-shard served/exec-seconds rates sum (dividing the total
+            // served by the *summed* exec seconds would erase the scaling)
+            if g.exec_secs_total > 0.0 {
+                snap.request_fps += g.served as f64 / g.exec_secs_total;
+            }
+            snap.uploads += g.uploads;
+            snap.demux_fallbacks += g.demux_fallbacks;
+            if snap.spot_check_acc.is_none() {
+                snap.spot_check_acc = g.spot_check_acc;
+            }
+            samples.extend_from_slice(&g.hist.samples);
+        }
+        if snap.batches > 0 {
+            snap.mean_fill = snap.served as f64 / (snap.batches as f64 * snap.batch as f64);
+        }
+        if !samples.is_empty() {
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            snap.p50_ms = percentile_sorted(&samples, 50.0) * 1e3;
+            snap.p95_ms = percentile_sorted(&samples, 95.0) * 1e3;
+            snap.p99_ms = percentile_sorted(&samples, 99.0) * 1e3;
+        }
+        snap
+    }
 }
 
 /// Immutable stats snapshot for reporting.
@@ -253,6 +346,11 @@ pub struct StatsSnapshot {
     pub batch: usize,
     pub requests_ok: u64,
     pub rejected: u64,
+    /// Requests shed at pop time for missing their admission deadline
+    /// (`--slo-ms`); exactly the count answered `DeadlineExceeded`.
+    pub shed: u64,
+    /// Warm variant swaps applied (summed over shards when merged).
+    pub swaps: u64,
     pub errors: u64,
     pub batches: u64,
     pub served: u64,
@@ -279,8 +377,8 @@ pub struct StatsSnapshot {
 impl StatsSnapshot {
     pub fn table_header() -> Vec<String> {
         [
-            "variant", "served", "rej", "batches", "fill%", "exec fps", "p50 ms", "p95 ms",
-            "p99 ms", "acc", "uploads",
+            "variant", "served", "rej", "shed", "batches", "fill%", "exec fps", "p50 ms",
+            "p95 ms", "p99 ms", "acc", "uploads",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -292,6 +390,7 @@ impl StatsSnapshot {
             self.variant.clone(),
             self.served.to_string(),
             self.rejected.to_string(),
+            self.shed.to_string(),
             self.batches.to_string(),
             format!("{:.0}", self.mean_fill * 100.0),
             format!("{:.0}", self.exec_fps),
@@ -357,6 +456,57 @@ mod tests {
         assert!((snap.request_fps - 600.0).abs() < 1e-6); // 6 real / 10 ms
         assert_eq!(snap.spot_check_acc, Some(0.9));
         assert!(snap.p50_ms > 10.0 && snap.p99_ms < 17.0);
+    }
+
+    #[test]
+    fn shed_and_swap_counters() {
+        let s = SharedStats::new("m", "rankopt", 8);
+        s.on_shed();
+        s.on_shed();
+        s.on_swap();
+        let snap = s.snapshot(0);
+        assert_eq!(snap.shed, 2);
+        assert_eq!(snap.swaps, 1);
+        assert_eq!(snap.errors, 0, "shed work is SLO pressure, not an engine error");
+    }
+
+    #[test]
+    fn merged_snapshot_aggregates_shards() {
+        let a = SharedStats::new("m", "lrd", 4);
+        let b = SharedStats::new("m", "lrd", 4);
+        a.on_enqueue(2);
+        a.on_batch(4, 0, 0.010, &[0.001, 0.002, 0.003, 0.004]);
+        a.on_shed();
+        a.set_transfers(10, 0);
+        b.on_enqueue(5);
+        b.on_reject();
+        b.on_batch(2, 2, 0.010, &[0.005, 0.006]);
+        b.on_swap();
+        b.set_transfers(7, 1);
+        let merged = SharedStats::merged(&[(&a, 1), (&b, 3)]);
+        assert_eq!(merged.variant, "lrd");
+        assert_eq!(merged.requests_ok, 2);
+        assert_eq!(merged.rejected, 1);
+        assert_eq!(merged.shed, 1);
+        assert_eq!(merged.swaps, 1);
+        assert_eq!(merged.served, 6);
+        assert_eq!(merged.batches, 2);
+        assert_eq!(merged.padded_slots, 2);
+        assert_eq!(merged.queue_depth, 4);
+        assert_eq!(merged.max_queue_depth, 5);
+        assert_eq!(merged.uploads, 17);
+        assert_eq!(merged.demux_fallbacks, 1);
+        // goodput adds across concurrent shards: 4/10ms + 2/10ms
+        assert!((merged.request_fps - 600.0).abs() < 1e-6);
+        // fill: 6 / (2 batches · 4)
+        assert!((merged.mean_fill - 0.75).abs() < 1e-12);
+        // percentiles over the union of samples (1..6 ms)
+        assert!(merged.p50_ms > 3.0 && merged.p50_ms < 4.5);
+        assert!(merged.p99_ms > 5.5 && merged.p99_ms < 6.5);
+        // throughputs add across concurrently-running shards
+        let single = SharedStats::merged(&[(&a, 1)]);
+        assert!(merged.exec_fps > single.exec_fps);
+        assert_eq!(merged.table_row().len(), StatsSnapshot::table_header().len());
     }
 
     #[test]

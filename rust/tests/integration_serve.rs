@@ -249,6 +249,247 @@ fn resident_and_reupload_paths_agree() {
     assert_eq!(outputs[0], outputs[1], "resident buffers changed the math");
 }
 
+/// The tentpole pin: sharding is a pure scale-out. The same request stream
+/// submitted to a 1-shard and a 2-shard server must produce bit-identical
+/// per-request logits — batches coalesce differently across shards, but
+/// per-sample normalization means a request's row never depends on its
+/// batch-mates, and every shard serves the same resident checkpoint.
+#[test]
+fn two_shards_bit_identical_to_one_shard() {
+    let Some(m) = manifest() else { return };
+    let variant = "rankopt";
+    let params = variant_params(&m, variant);
+    let cfg = ServerConfig { max_wait: Duration::from_millis(50), ..Default::default() };
+    let mut per_shards: Vec<Vec<Vec<f32>>> = Vec::new();
+    for shards in [1usize, 2] {
+        let server = Server::start(
+            &m,
+            vec![VariantSpec::new(MODEL, variant, params.clone()).with_shards(shards)],
+            &cfg,
+        )
+        .expect("server starts");
+        assert_eq!(server.shards_of(MODEL, variant), Some(shards));
+        let batch = server.batch_of(MODEL, variant).unwrap();
+        let n = batch * 4;
+        let data = Dataset::synthetic(n, 33);
+        let pendings: Vec<_> = (0..n)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                server.submit(MODEL, variant, x).expect("admitted")
+            })
+            .collect();
+        let logits: Vec<Vec<f32>> = pendings
+            .iter()
+            .map(|p| p.wait(Duration::from_secs(120)).expect("served").logits)
+            .collect();
+        let snap = server.stats(MODEL, variant).unwrap();
+        assert_eq!(snap.served, n as u64);
+        assert_eq!(snap.errors, 0);
+        if shards > 1 {
+            // the fanout must actually engage: every shard served work
+            let per_shard = server.shard_stats(MODEL, variant).unwrap();
+            assert_eq!(per_shard.len(), shards);
+            for (i, s) in per_shard.iter().enumerate() {
+                assert!(s.served > 0, "shard {i} served nothing — fanout broken");
+            }
+            assert_eq!(per_shard.iter().map(|s| s.served).sum::<u64>(), n as u64);
+        }
+        server.shutdown();
+        per_shards.push(logits);
+    }
+    assert_eq!(
+        per_shards[0], per_shards[1],
+        "2-shard logits diverged from the single-engine path"
+    );
+}
+
+/// SLO satellite pin: requests whose admission deadline has passed are shed
+/// at pop time — answered `DeadlineExceeded`, never executed, never a panic
+/// from `pop_deadline` — and the shed counter matches the late submissions
+/// exactly.
+#[test]
+fn expired_deadline_requests_shed_at_pop() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let cfg = ServerConfig {
+        // a deadline that has always already passed by pop time
+        slo: Some(Duration::from_nanos(1)),
+        max_wait: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, variant, variant_params(&m, variant))],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    let n = batch * 2;
+    let data = Dataset::synthetic(n, 5);
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+            server.submit(MODEL, variant, x).expect("admitted")
+        })
+        .collect();
+    for p in &pendings {
+        assert_eq!(
+            p.wait(Duration::from_secs(120)),
+            Err(ServeError::DeadlineExceeded),
+            "expired request must be shed with a terminal DeadlineExceeded"
+        );
+    }
+    let snap = server.stats(MODEL, variant).unwrap();
+    assert_eq!(snap.shed, n as u64, "shed count must match late submissions exactly");
+    assert_eq!(snap.served, 0, "expired work must never execute");
+    assert_eq!(snap.errors, 0, "shedding is SLO pressure, not an engine error");
+    server.shutdown();
+}
+
+/// Warm-swap pin #1: after `swap_variant` returns, new requests serve the
+/// *new* checkpoint's logits (uploaded beside the live set, flipped between
+/// batches — the server never went down).
+#[test]
+fn swap_variant_flips_to_new_checkpoint() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let params = variant_params(&m, variant);
+    // a second checkpoint with visibly different math: every tensor scaled
+    let swapped: checkpoint::Params = params
+        .iter()
+        .map(|(k, t)| {
+            let data = t.data().iter().map(|&v| v * 1.25).collect::<Vec<f32>>();
+            (k.clone(), lrta::tensor::Tensor::new(t.shape(), data))
+        })
+        .collect();
+    let cfg = ServerConfig { max_wait: Duration::from_millis(50), ..Default::default() };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, variant, params.clone())],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    let data = Dataset::synthetic(batch, 17);
+    let (xs, _) = data.batch(0, batch);
+    let submit_all = || -> Vec<Vec<f32>> {
+        let pendings: Vec<_> = (0..batch)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                server.submit(MODEL, variant, x).expect("admitted")
+            })
+            .collect();
+        pendings
+            .iter()
+            .map(|p| p.wait(Duration::from_secs(120)).expect("served").logits)
+            .collect()
+    };
+    let before = submit_all();
+    server.swap_variant(MODEL, variant, &swapped).expect("swap applies");
+    let after = submit_all();
+
+    let ref_before = direct_logits(&m, variant, &params, &xs);
+    let ref_after = direct_logits(&m, variant, &swapped, &xs);
+    let classes = ref_before.shape()[1];
+    for (i, row) in before.iter().enumerate() {
+        assert_eq!(row, &ref_before.data()[i * classes..(i + 1) * classes].to_vec());
+    }
+    for (i, row) in after.iter().enumerate() {
+        assert_eq!(
+            row,
+            &ref_after.data()[i * classes..(i + 1) * classes].to_vec(),
+            "post-swap request {i} does not serve the new checkpoint"
+        );
+    }
+    assert_ne!(before, after, "swap had no observable effect");
+    let snap = server.stats(MODEL, variant).unwrap();
+    assert_eq!(snap.swaps, 1);
+    assert_eq!(snap.errors, 0);
+
+    // a swap that doesn't match the artifact is rejected shard-side and
+    // the live set keeps serving
+    let mut broken = swapped.clone();
+    let victim = broken.keys().next().unwrap().clone();
+    broken.remove(&victim);
+    match server.swap_variant(MODEL, variant, &broken) {
+        Err(ServeError::Engine(e)) => assert!(e.contains("missing param"), "got: {e}"),
+        other => panic!("expected Engine error for a broken swap, got {other:?}"),
+    }
+    let still = submit_all();
+    assert_eq!(still, after, "failed swap must leave the live checkpoint untouched");
+    server.shutdown();
+}
+
+/// Warm-swap pin #2: swapping mid-burst on a sharded variant loses zero
+/// requests — every submission gets exactly one successful answer and the
+/// per-shard swap counters confirm every shard flipped.
+#[test]
+fn swap_mid_burst_never_drops_requests() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let params = variant_params(&m, variant);
+    let cfg = ServerConfig { max_wait: Duration::from_millis(20), ..Default::default() };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, variant, params.clone()).with_shards(2)],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    let data = Dataset::synthetic(batch * 4, 29);
+    let submit_burst = |lo: usize, hi: usize| -> Vec<lrta::serve::Pending> {
+        (lo..hi)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                loop {
+                    match server.submit(MODEL, variant, x.clone()) {
+                        Ok(p) => break p,
+                        Err(ServeError::QueueFull { .. }) => {
+                            std::thread::sleep(Duration::from_micros(100));
+                        }
+                        Err(e) => panic!("unexpected submit error: {e:?}"),
+                    }
+                }
+            })
+            .collect()
+    };
+    // first half queues up, the swap lands between batches while the
+    // engines are busy, the second half rides the swapped set — same
+    // params, so every row stays comparable
+    let mut pendings = submit_burst(0, batch * 2);
+    server.swap_variant(MODEL, variant, &params).expect("swap under load applies");
+    pendings.extend(submit_burst(batch * 2, batch * 4));
+    for (i, p) in pendings.iter().enumerate() {
+        let r = p.wait(Duration::from_secs(120));
+        assert!(r.is_ok(), "request {i} lost across the swap: {r:?}");
+    }
+    let snap = server.stats(MODEL, variant).unwrap();
+    assert_eq!(snap.served, (batch * 4) as u64, "swap dropped requests");
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.swaps, 2, "every shard must apply the swap exactly once");
+    server.shutdown();
+}
+
+/// Registration satellite pin: a duplicate `(model, variant)` spec fails
+/// startup loudly instead of silently overwriting (and leaking) the first
+/// registration's workers.
+#[test]
+fn duplicate_registration_fails() {
+    let Some(m) = manifest() else { return };
+    let params = variant_params(&m, "orig");
+    let err = Server::start(
+        &m,
+        vec![
+            VariantSpec::new(MODEL, "orig", params.clone()),
+            VariantSpec::new(MODEL, "orig", params),
+        ],
+        &ServerConfig::default(),
+    )
+    .err()
+    .expect("duplicate registration must fail");
+    assert!(err.to_string().contains("registered twice"), "got: {err}");
+}
+
 #[test]
 fn router_rejects_unknown_variant_and_bad_input() {
     let Some(m) = manifest() else { return };

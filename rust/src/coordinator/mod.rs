@@ -30,6 +30,7 @@ use crate::checkpoint::Params;
 use crate::data::{BatchIter, Dataset};
 use crate::freeze::{FreezeMode, FreezeScheduler, Pattern};
 use crate::metrics::{EpochRecord, RunRecord, ThroughputMeter};
+use crate::obs::Tracer;
 use crate::runtime::{
     labels_to_literal, literal_to_tensor, scalar_literal, tensor_to_literal, ArtifactMeta,
     Executable, Manifest, Runtime,
@@ -170,6 +171,8 @@ pub struct Trainer<'rt> {
     /// `<dir>/epoch_NNN.bin` on a side thread
     /// ([`train::CheckpointWriter`]) while the next epoch trains.
     ckpt_dir: Option<PathBuf>,
+    /// Lifecycle span recorder (off by default); see [`Trainer::set_tracer`].
+    tracer: Tracer,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -212,7 +215,20 @@ impl<'rt> Trainer<'rt> {
             engine,
             last_run_fallbacks: 0,
             ckpt_dir: None,
+            tracer: Tracer::default(),
         })
+    }
+
+    /// Record lifecycle spans of subsequent [`Trainer::run`]s into `tracer`
+    /// (the `lrta train --trace-out` path): the engine's per-step
+    /// prefetch_wait → upload → dispatch → fetch spans, the epoch-boundary
+    /// `freeze_swap`, and the side-thread evaluator's `eval` spans. The
+    /// default [`Tracer::noop`] records nothing.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        if let Some(engine) = self.engine.as_mut() {
+            engine.set_tracer(tracer.clone());
+        }
+        self.tracer = tracer;
     }
 
     /// Persist every epoch's parameters as `<dir>/epoch_NNN.bin`. The write
@@ -248,6 +264,7 @@ impl<'rt> Trainer<'rt> {
                 self.manifest.hlo_path(&self.infer_meta),
                 self.infer_meta.clone(),
                 Arc::clone(&test),
+                self.tracer.clone(),
             ))
         } else {
             None
@@ -274,7 +291,9 @@ impl<'rt> Trainer<'rt> {
                 // epoch boundary: Algorithm 2 may have swapped pattern a↔b
                 // — re-bind the resident buffers to the new slot layout
                 // (pure permutation; uploads nothing)
+                let swap_span = self.tracer.start();
                 engine.state().rebind_for(meta)?;
+                self.tracer.end(swap_span, "train", "freeze_swap");
                 let stats = if pipelined {
                     engine.run_epoch_pipelined(exe, meta, &train_data, epoch_seed, lr)?
                 } else {

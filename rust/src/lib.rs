@@ -46,6 +46,15 @@
 //! current one executes — all bit-identical to the serial paths by
 //! construction, asserted in the integration suites.
 //!
+//! Cross-cutting both subsystems is the **observability layer** ([`obs`]):
+//! a `(subsystem, name, labels)` metrics registry whose atomic handles *are*
+//! the hand-rolled counters the tests pin (registered by identity, so
+//! registry snapshots match the legacy accessors bit-for-bit), plus
+//! lifecycle span tracing over the serve request path and the train step
+//! path with Chrome/Perfetto trace export (`--trace-out`) and Prometheus
+//! text exposition (`--metrics-out`). Telemetry is off by default and the
+//! no-op recorder costs one branch per span site.
+//!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
 //!
@@ -63,6 +72,7 @@ pub mod linalg;
 pub mod lrd;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod rankopt;
 pub mod runtime;
 pub mod serve;

@@ -23,11 +23,12 @@ use lrta::data::Dataset;
 use lrta::devmodel::DeviceProfile;
 use lrta::freeze::FreezeMode;
 use lrta::lrd::LayerShape;
+use lrta::obs::{Registry, Tracer};
 use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::{Manifest, Runtime};
 use lrta::serve as serve_load;
 use lrta::serve::{Server, ServerConfig, StatsSnapshot, VariantSpec};
-use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
+use lrta::train::{run_replicas_traced, MomentumPolicy, ReplicaConfig};
 use lrta::util::bench::table;
 use lrta::util::cli::Args;
 use std::time::Duration;
@@ -58,6 +59,15 @@ SUBCOMMANDS
 COMMON
   --manifest PATH   (default artifacts/manifest.json)
   --seed N          (default 0)
+  --trace-out F     (train, serve) write the run's lifecycle spans as
+                    Chrome/Perfetto trace-event JSON to F — serve records
+                    submit → queue_wait → coalesce → upload → dispatch →
+                    fetch → demux → reply, train records prefetch_wait →
+                    upload → dispatch → fetch → freeze_swap → eval (plus
+                    average_barrier with --replicas)
+  --metrics-out F   (train, serve) write a Prometheus text-format snapshot
+                    of the metrics registry (counters, gauges, latency
+                    histogram) to F at the end of the run
   --no-resident     train through the host-literal round-trip baseline
                     instead of the device-resident buffer-chained engine
   --no-pipeline     disable overlapped execution (double-buffered batch
@@ -108,7 +118,7 @@ fn run() -> Result<()> {
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
         "no-pipeline", "replicas", "avg-every", "momenta", "epoch-ckpts", "shards",
-        "slo-ms",
+        "slo-ms", "trace-out", "metrics-out",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -132,6 +142,42 @@ fn run() -> Result<()> {
 
 fn load_manifest(args: &Args) -> Result<Manifest> {
     Manifest::load(args.str_or("manifest", "artifacts/manifest.json"))
+}
+
+/// Telemetry outputs requested on the command line: a live tracer when
+/// `--trace-out` is present, a live registry when `--metrics-out` is, and
+/// the no-op/absent forms otherwise (the hot paths then skip all recording).
+struct ObsOutputs {
+    tracer: Tracer,
+    registry: Option<Registry>,
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
+}
+
+fn obs_outputs(args: &Args) -> ObsOutputs {
+    let trace_path = args.get("trace-out").map(str::to_string);
+    let metrics_path = args.get("metrics-out").map(str::to_string);
+    ObsOutputs {
+        tracer: if trace_path.is_some() { Tracer::enabled() } else { Tracer::default() },
+        registry: metrics_path.as_ref().map(|_| Registry::new()),
+        trace_path,
+        metrics_path,
+    }
+}
+
+impl ObsOutputs {
+    /// Export whatever was requested, at the end of the run.
+    fn write(&self) -> Result<()> {
+        if let Some(path) = &self.trace_path {
+            std::fs::write(path, self.tracer.chrome_trace_json().emit())?;
+            println!("wrote trace ({} spans) to {path}", self.tracer.len());
+        }
+        if let (Some(path), Some(reg)) = (&self.metrics_path, &self.registry) {
+            std::fs::write(path, reg.snapshot().prometheus_text())?;
+            println!("wrote metrics snapshot to {path}");
+        }
+        Ok(())
+    }
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -215,6 +261,7 @@ fn train(args: &Args) -> Result<()> {
     let ckpt = args.str_or("ckpt", &default_ckpt);
     let params = checkpoint::load(&ckpt)?;
     let out = args.str_or("out", "");
+    let obs = obs_outputs(args);
 
     // data-parallel path: each replica owns its PJRT client on its own
     // thread, so no main-thread runtime is created here. Parse strictly —
@@ -249,7 +296,7 @@ fn train(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown momentum policy '{momenta_arg}'"))?,
             identical_shards: false,
         };
-        let run = run_replicas(&m, &cfg, &rcfg, &params)?;
+        let run = run_replicas_traced(&m, &cfg, &rcfg, &params, obs.tracer.clone())?;
         println!(
             "final test acc {:.3}; median step {:.1} ms ({replicas} replicas, avg-every={})",
             run.record.final_test_acc(),
@@ -273,6 +320,7 @@ fn train(args: &Args) -> Result<()> {
             checkpoint::save(&out, &run.params)?;
             println!("saved {out}");
         }
+        obs.write()?;
         return Ok(());
     }
     // the mirror-image guard: replica-only flags must not silently no-op
@@ -282,7 +330,11 @@ fn train(args: &Args) -> Result<()> {
     }
 
     let rt = Runtime::cpu()?;
+    if let Some(reg) = &obs.registry {
+        rt.register_metrics(reg, &[])?;
+    }
     let mut trainer = Trainer::new(&rt, &m, cfg, params)?;
+    trainer.set_tracer(obs.tracer.clone());
     if let Some(dir) = args.get("epoch-ckpts") {
         trainer.checkpoint_epochs_to(dir);
     }
@@ -299,6 +351,7 @@ fn train(args: &Args) -> Result<()> {
         checkpoint::save(&out, &trainer.params)?;
         println!("saved {out}");
     }
+    obs.write()?;
     Ok(())
 }
 
@@ -372,6 +425,7 @@ fn serve(args: &Args) -> Result<()> {
         specs.push(VariantSpec::from_dense(&m, &model, variant, &dense)?.with_shards(shards));
     }
 
+    let obs = obs_outputs(args);
     let cfg = ServerConfig {
         queue_depth: args.usize_or("depth", 0),
         max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
@@ -379,6 +433,8 @@ fn serve(args: &Args) -> Result<()> {
         pipelined: !args.bool_or("no-pipeline", false),
         spot_check: args.usize_or("spot-check", 128),
         slo,
+        registry: obs.registry.clone(),
+        tracer: obs.tracer.clone(),
         ..Default::default()
     };
     println!(
@@ -431,6 +487,7 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
     server.shutdown();
+    obs.write()?;
     Ok(())
 }
 

@@ -1,0 +1,32 @@
+//! Unified observability: a metrics registry and lifecycle span tracing,
+//! shared by the serve, train, and runtime subsystems.
+//!
+//! Two halves, both dependency-free:
+//!
+//! - [`registry`] — typed atomic [`Counter`]/[`Gauge`]/[`Histogram`] handles
+//!   indexed by a `(subsystem, name, labels)` [`Registry`], with a
+//!   [`Snapshot`] API, Prometheus text exposition, and a JSON dump. The
+//!   existing hand-rolled counters (runtime transfer channels, serve shard
+//!   stats) *are* the registered handles — registering shares the atomic, so
+//!   registry values match the legacy accessors bit-for-bit.
+//! - [`trace`] — manual lifecycle spans ([`Tracer::start`] / [`Tracer::end`])
+//!   into a bounded ring, exported as Chrome/Perfetto trace-event JSON
+//!   (`lrta serve --trace-out FILE`, `lrta train --trace-out FILE`). The
+//!   serve request path records submit → queue_wait → coalesce → upload →
+//!   dispatch → fetch → demux → reply; the train step path records
+//!   prefetch_wait → upload → dispatch → fetch plus freeze_swap,
+//!   average_barrier, and eval.
+//!
+//! Everything defaults to *off*: [`Tracer::default`] is the no-op recorder
+//! (one branch per span site, no clock reads, no locks) and nothing
+//! registers into a registry unless a caller supplies one — there is no
+//! process-global state.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    parse_prometheus, Counter, Gauge, Histogram, MetricKey, Registry, SnapEntry, SnapValue,
+    Snapshot,
+};
+pub use trace::{SpanStart, TraceEvent, Tracer, TRACE_CAP};

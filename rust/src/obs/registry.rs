@@ -1,0 +1,527 @@
+//! Typed metrics behind a `(subsystem, name, labels)` registry with
+//! Prometheus-text and JSON exporters.
+//!
+//! Handles first, registry second: a [`Counter`] / [`Gauge`] / [`Histogram`]
+//! is a cheap cloneable atomic cell that lives wherever the hot path already
+//! keeps its counter (the runtime's transfer channels, a serve shard's stats
+//! sink). Registering a handle under a key makes the registry *index the
+//! same atomic* — a [`Snapshot`] therefore reads exactly the value the
+//! hand-rolled accessor reads, which is what lets the integration suites
+//! assert `registry == legacy counter` with no double bookkeeping.
+//!
+//! There is deliberately **no process-global registry**: tests run
+//! concurrently in one process, so a global would collide on keys and break
+//! exact-match assertions. Every consumer threads an explicit (Arc-shared,
+//! `Clone`) [`Registry`] instance instead.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing atomic counter handle. Cloning shares the
+/// underlying cell; `Send + Sync`, so one handle can live in a worker thread
+/// while the registry snapshots it from another.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins atomic gauge handle (queue depths, mirrored transfer
+/// counters). Same sharing semantics as [`Counter`].
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Buckets in a log₂ histogram: bucket `i` counts values whose bit width is
+/// `i` (i.e. `v == 0` → bucket 0, otherwise `2^(i-1) <= v < 2^i`), so the
+/// full `u64` range is covered with no configuration.
+pub const LOG2_BUCKETS: usize = 65;
+
+#[derive(Debug)]
+struct HistInner {
+    buckets: [AtomicU64; LOG2_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// A log₂ histogram handle over `u64` samples (latencies in µs, sizes in
+/// bytes). Lock-free recording; same sharing semantics as [`Counter`].
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index of `v`: its bit width (0 for 0).
+    pub fn bucket_of(v: u64) -> usize {
+        (u64::BITS - v.leading_zeros()) as usize
+    }
+
+    pub fn record(&self, v: u64) {
+        self.0.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts.
+    pub fn buckets(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// The identity of a registered metric.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetricKey {
+    pub subsystem: String,
+    pub name: String,
+    /// Sorted `(label, value)` pairs.
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    fn new(subsystem: &str, name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        MetricKey { subsystem: subsystem.to_string(), name: name.to_string(), labels }
+    }
+
+    /// The Prometheus metric (family) name: `lrta_<subsystem>_<name>`.
+    pub fn metric_name(&self) -> String {
+        format!("lrta_{}_{}", self.subsystem, self.name)
+    }
+
+    /// The `{k="v",…}` label suffix (empty string when unlabeled), with an
+    /// optional extra label appended (histogram `le` bounds).
+    fn label_str(&self, extra: Option<(&str, &str)>) -> String {
+        let mut pairs: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        if let Some((k, v)) = extra {
+            pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+        }
+        if pairs.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", pairs.join(","))
+        }
+    }
+
+    /// Stable registry/sort key: family name first so exposition groups
+    /// metric families, then labels.
+    fn id(&self) -> String {
+        format!("{}{}", self.metric_name(), self.label_str(None))
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// The metric index: `(subsystem, name, labels)` → shared handle. Cloning
+/// shares the index (one registry per server/trainer, threaded explicitly).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<String, (MetricKey, Metric)>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, key: MetricKey, metric: Metric) -> Result<()> {
+        let id = key.id();
+        let mut map = self.inner.lock().expect("registry lock");
+        if map.contains_key(&id) {
+            bail!("metric '{id}' registered twice");
+        }
+        map.insert(id, (key, metric));
+        Ok(())
+    }
+
+    /// Index `c` under the key; the registry reads the *same* atomic the
+    /// caller keeps incrementing. Duplicate keys are an error.
+    pub fn register_counter(
+        &self,
+        subsystem: &str,
+        name: &str,
+        labels: &[(&str, &str)],
+        c: &Counter,
+    ) -> Result<()> {
+        self.register(MetricKey::new(subsystem, name, labels), Metric::Counter(c.clone()))
+    }
+
+    pub fn register_gauge(
+        &self,
+        subsystem: &str,
+        name: &str,
+        labels: &[(&str, &str)],
+        g: &Gauge,
+    ) -> Result<()> {
+        self.register(MetricKey::new(subsystem, name, labels), Metric::Gauge(g.clone()))
+    }
+
+    pub fn register_histogram(
+        &self,
+        subsystem: &str,
+        name: &str,
+        labels: &[(&str, &str)],
+        h: &Histogram,
+    ) -> Result<()> {
+        self.register(MetricKey::new(subsystem, name, labels), Metric::Histogram(h.clone()))
+    }
+
+    /// Point-in-time read of every registered metric. Values are read
+    /// per-atomic (relaxed), so a snapshot taken while workers run is
+    /// per-metric consistent, not cross-metric atomic.
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.inner.lock().expect("registry lock");
+        let entries = map
+            .values()
+            .map(|(key, metric)| SnapEntry {
+                key: key.clone(),
+                value: match metric {
+                    Metric::Counter(c) => SnapValue::Counter(c.get()),
+                    Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Metric::Histogram(h) => SnapValue::Histogram {
+                        buckets: h.buckets(),
+                        count: h.count(),
+                        sum: h.sum(),
+                    },
+                },
+            })
+            .collect();
+        Snapshot { entries }
+    }
+}
+
+/// One metric's value at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram { buckets: Vec<u64>, count: u64, sum: u64 },
+}
+
+/// One `(key, value)` pair of a [`Snapshot`].
+#[derive(Clone, Debug)]
+pub struct SnapEntry {
+    pub key: MetricKey,
+    pub value: SnapValue,
+}
+
+/// A point-in-time view over a registry, exportable as Prometheus text or
+/// JSON.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub entries: Vec<SnapEntry>,
+}
+
+impl Snapshot {
+    /// Scalar value (counter or gauge) under the key, if present. `labels`
+    /// order-insensitive.
+    pub fn scalar(&self, subsystem: &str, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let key = MetricKey::new(subsystem, name, labels);
+        self.entries.iter().find(|e| e.key == key).and_then(|e| match e.value {
+            SnapValue::Counter(v) | SnapValue::Gauge(v) => Some(v),
+            SnapValue::Histogram { .. } => None,
+        })
+    }
+
+    /// Sum of every counter/gauge named `(subsystem, name)` across label
+    /// sets — the per-shard → per-variant rollup.
+    pub fn scalar_sum(&self, subsystem: &str, name: &str) -> u64 {
+        self.entries
+            .iter()
+            .filter(|e| e.key.subsystem == subsystem && e.key.name == name)
+            .filter_map(|e| match e.value {
+                SnapValue::Counter(v) | SnapValue::Gauge(v) => Some(v),
+                SnapValue::Histogram { .. } => None,
+            })
+            .sum()
+    }
+
+    /// Prometheus text exposition (one `# TYPE` line per metric family;
+    /// histograms emit cumulative `_bucket{le=…}` series plus `_sum` and
+    /// `_count`). Round-trips through [`parse_prometheus`].
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for e in &self.entries {
+            let family = e.key.metric_name();
+            match &e.value {
+                SnapValue::Counter(v) | SnapValue::Gauge(v) => {
+                    if family != last_family {
+                        let kind = if matches!(e.value, SnapValue::Counter(_)) {
+                            "counter"
+                        } else {
+                            "gauge"
+                        };
+                        let _ = writeln!(out, "# TYPE {family} {kind}");
+                        last_family = family.clone();
+                    }
+                    let _ = writeln!(out, "{family}{} {v}", e.key.label_str(None));
+                }
+                SnapValue::Histogram { buckets, count, sum } => {
+                    if family != last_family {
+                        let _ = writeln!(out, "# TYPE {family} histogram");
+                        last_family = family.clone();
+                    }
+                    let mut cum = 0u64;
+                    for (i, b) in buckets.iter().enumerate() {
+                        cum += b;
+                        // bucket i holds v < 2^i; skip interior zeros to keep
+                        // the 65-bucket range readable, but always emit a
+                        // first bound and +Inf
+                        if *b == 0 && i > 0 && i + 1 < buckets.len() {
+                            continue;
+                        }
+                        let le = if i + 1 == buckets.len() {
+                            "+Inf".to_string()
+                        } else {
+                            format!("{}", 1u128 << i)
+                        };
+                        let _ = writeln!(
+                            out,
+                            "{family}_bucket{} {cum}",
+                            e.key.label_str(Some(("le", &le)))
+                        );
+                    }
+                    let _ = writeln!(out, "{family}_sum{} {sum}", e.key.label_str(None));
+                    let _ = writeln!(out, "{family}_count{} {count}", e.key.label_str(None));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON dump: `{subsystem: {name{labels}: value | {count, sum}}}` via
+    /// the crate's own [`Json`] (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let mut subsystems: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+        for e in &self.entries {
+            let slot = format!("{}{}", e.key.name, e.key.label_str(None));
+            let value = match &e.value {
+                SnapValue::Counter(v) | SnapValue::Gauge(v) => Json::int(*v as i64),
+                SnapValue::Histogram { count, sum, .. } => Json::obj(vec![
+                    ("count", Json::int(*count as i64)),
+                    ("sum", Json::int(*sum as i64)),
+                ]),
+            };
+            subsystems.entry(e.key.subsystem.clone()).or_default().insert(slot, value);
+        }
+        Json::Obj(
+            subsystems
+                .into_iter()
+                .map(|(k, v)| (k, Json::Obj(v.into_iter().collect())))
+                .collect(),
+        )
+    }
+}
+
+/// Parse Prometheus text exposition back into `series → value` (series =
+/// `name{labels}` exactly as rendered). The inverse of
+/// [`Snapshot::prometheus_text`] for round-trip validation; `# `-comment
+/// and blank lines are skipped.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            bail!("line {}: no value separator in '{line}'", ln + 1);
+        };
+        let v: f64 = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            v => v.parse().map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", ln + 1))?,
+        };
+        if out.insert(series.to_string(), v).is_some() {
+            bail!("line {}: duplicate series '{series}'", ln + 1);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_reads_the_handles_it_registered() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        let g = Gauge::new();
+        reg.register_counter("serve", "served", &[("shard", "0")], &c).unwrap();
+        reg.register_gauge("serve", "queue_depth", &[("shard", "0")], &g).unwrap();
+        c.add(41);
+        c.inc();
+        g.set(7);
+        let snap = reg.snapshot();
+        // the snapshot is the handle's value — same atomic, no copies
+        assert_eq!(snap.scalar("serve", "served", &[("shard", "0")]), Some(42));
+        assert_eq!(snap.scalar("serve", "queue_depth", &[("shard", "0")]), Some(7));
+        assert_eq!(snap.scalar("serve", "served", &[]), None);
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_and_label_order_is_canonical() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        reg.register_counter("s", "n", &[("a", "1"), ("b", "2")], &c).unwrap();
+        // same key, labels in the other order: still a duplicate
+        let err = reg.register_counter("s", "n", &[("b", "2"), ("a", "1")], &c);
+        assert!(err.is_err(), "label order must not create distinct keys");
+        // different label value is a distinct series
+        reg.register_counter("s", "n", &[("a", "1"), ("b", "3")], &c).unwrap();
+    }
+
+    #[test]
+    fn scalar_sum_rolls_up_across_label_sets() {
+        let reg = Registry::new();
+        let (a, b) = (Counter::new(), Counter::new());
+        reg.register_counter("serve", "served", &[("shard", "0")], &a).unwrap();
+        reg.register_counter("serve", "served", &[("shard", "1")], &b).unwrap();
+        a.add(3);
+        b.add(4);
+        assert_eq!(reg.snapshot().scalar_sum("serve", "served"), 7);
+    }
+
+    #[test]
+    fn log2_bucket_boundaries() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4, u64::MAX] {
+            h.record(v);
+        }
+        let b = h.buckets();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[1], 1);
+        assert_eq!(b[2], 2);
+        assert_eq!(b[3], 1);
+        assert_eq!(b[64], 1);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 10u64.wrapping_add(u64::MAX));
+    }
+
+    #[test]
+    fn prometheus_text_round_trips() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        let g = Gauge::new();
+        let h = Histogram::new();
+        reg.register_counter("serve", "served", &[("variant", "lrd")], &c).unwrap();
+        reg.register_gauge("runtime", "uploads", &[], &g).unwrap();
+        reg.register_histogram("serve", "latency_us", &[("variant", "lrd")], &h).unwrap();
+        c.add(12);
+        g.set(99);
+        h.record(3);
+        h.record(1000);
+
+        let text = reg.snapshot().prometheus_text();
+        assert!(text.contains("# TYPE lrta_serve_served counter"), "{text}");
+        assert!(text.contains("# TYPE lrta_runtime_uploads gauge"), "{text}");
+        assert!(text.contains("# TYPE lrta_serve_latency_us histogram"), "{text}");
+
+        let parsed = parse_prometheus(&text).unwrap();
+        assert_eq!(parsed["lrta_serve_served{variant=\"lrd\"}"], 12.0);
+        assert_eq!(parsed["lrta_runtime_uploads"], 99.0);
+        assert_eq!(parsed["lrta_serve_latency_us_count{variant=\"lrd\"}"], 2.0);
+        assert_eq!(parsed["lrta_serve_latency_us_sum{variant=\"lrd\"}"], 1003.0);
+        // cumulative buckets: v=3 lands below 4, both land below +Inf
+        assert_eq!(parsed["lrta_serve_latency_us_bucket{variant=\"lrd\",le=\"4\"}"], 1.0);
+        assert_eq!(parsed["lrta_serve_latency_us_bucket{variant=\"lrd\",le=\"+Inf\"}"], 2.0);
+    }
+
+    #[test]
+    fn json_dump_parses_and_groups_by_subsystem() {
+        let reg = Registry::new();
+        let c = Counter::new();
+        let h = Histogram::new();
+        reg.register_counter("runtime", "uploads", &[], &c).unwrap();
+        reg.register_histogram("serve", "latency_us", &[], &h).unwrap();
+        c.add(5);
+        h.record(16);
+        let j = reg.snapshot().to_json();
+        let parsed = Json::parse(&j.emit()).unwrap();
+        assert_eq!(parsed.get("runtime").get("uploads").as_i64(), Some(5));
+        assert_eq!(parsed.get("serve").get("latency_us").get("count").as_i64(), Some(1));
+        assert_eq!(parsed.get("serve").get("latency_us").get("sum").as_i64(), Some(16));
+    }
+
+    #[test]
+    fn parse_prometheus_rejects_garbage() {
+        assert!(parse_prometheus("lonely_token").is_err());
+        assert!(parse_prometheus("a 1\na 2").is_err(), "duplicate series must fail");
+        assert!(parse_prometheus("a not_a_number").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Lifecycle span tracing: manual start/end spans into a bounded ring
+//! buffer, exported as Chrome/Perfetto trace-event JSON.
+//!
+//! No external deps and no macro magic — a span is two calls around the
+//! region of interest:
+//!
+//! ```
+//! use lrta::obs::Tracer;
+//! let tracer = Tracer::enabled();
+//! let t0 = tracer.start();
+//! // … the traced region …
+//! tracer.end(t0, "serve", "fetch");
+//! assert_eq!(tracer.len(), 1);
+//! ```
+//!
+//! A disabled tracer ([`Tracer::noop`], the `Default`) is a `None` behind
+//! the handle: `start` never reads the clock and `end` returns before
+//! touching any lock, so telemetry-off overhead is one branch per span site
+//! (pinned by the overhead-guard integration test). The handle is
+//! `Clone + Send + Sync`, so serve shards, train replicas, and side workers
+//! all record into the same ring; events carry a per-thread lane id.
+//!
+//! Export is the Chrome trace-event JSON array format (complete events,
+//! `"ph": "X"`, microsecond timestamps relative to the tracer's creation),
+//! loadable in `chrome://tracing` and [Perfetto](https://ui.perfetto.dev).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Ring capacity of [`Tracer::enabled`]: oldest spans evict first, so a
+/// long-running server keeps the most recent window instead of growing
+/// without bound (~65k spans ≈ a few MB).
+pub const TRACE_CAP: usize = 65_536;
+
+/// Process-wide lane ids: each thread gets one on its first recorded span.
+static NEXT_LANE: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static LANE: u64 = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Category — the subsystem ("serve", "train", …).
+    pub cat: &'static str,
+    /// Start, µs since the tracer was created.
+    pub ts_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Per-thread lane (Chrome `tid`).
+    pub tid: u64,
+}
+
+/// Token returned by [`Tracer::start`]; `None` when tracing is off, so the
+/// disabled path never reads the clock.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart(Option<Instant>);
+
+struct TraceInner {
+    epoch: Instant,
+    cap: usize,
+    events: Mutex<VecDeque<TraceEvent>>,
+}
+
+/// The span recorder handle. `Default` is the no-op recorder.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl Tracer {
+    /// An active tracer with the default ring capacity ([`TRACE_CAP`]).
+    pub fn enabled() -> Tracer {
+        Tracer::with_capacity(TRACE_CAP)
+    }
+
+    /// An active tracer keeping at most `cap` spans (oldest evicted).
+    pub fn with_capacity(cap: usize) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(TraceInner {
+                epoch: Instant::now(),
+                cap: cap.max(1),
+                events: Mutex::new(VecDeque::new()),
+            })),
+        }
+    }
+
+    /// The no-op recorder (same as `Default`): records nothing, costs one
+    /// branch per span site.
+    pub fn noop() -> Tracer {
+        Tracer::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span. Reads the clock only when tracing is on.
+    #[inline]
+    pub fn start(&self) -> SpanStart {
+        SpanStart(self.inner.as_ref().map(|_| Instant::now()))
+    }
+
+    /// Close a span opened by [`Tracer::start`] and record it under
+    /// `cat`/`name`. No-op (and lock-free) when tracing is off.
+    pub fn end(&self, start: SpanStart, cat: &'static str, name: &'static str) {
+        let Some(inner) = &self.inner else { return };
+        let Some(t0) = start.0 else { return };
+        let ev = TraceEvent {
+            name,
+            cat,
+            ts_us: t0.duration_since(inner.epoch).as_micros() as u64,
+            dur_us: t0.elapsed().as_micros() as u64,
+            tid: LANE.with(|l| *l),
+        };
+        let mut q = inner.events.lock().expect("trace ring lock");
+        if q.len() == inner.cap {
+            q.pop_front();
+        }
+        q.push_back(ev);
+    }
+
+    /// Spans currently held in the ring.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            Some(inner) => inner.events.lock().expect("trace ring lock").len(),
+            None => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the recorded spans, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => {
+                inner.events.lock().expect("trace ring lock").iter().cloned().collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Export as a Chrome trace-event JSON document
+    /// (`{"traceEvents": [{"ph": "X", …}, …]}`) — load in `chrome://tracing`
+    /// or Perfetto. An empty/disabled tracer exports an empty event list.
+    pub fn chrome_trace_json(&self) -> Json {
+        let events = self
+            .events()
+            .into_iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.name)),
+                    ("cat", Json::str(e.cat)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::int(e.ts_us as i64)),
+                    ("dur", Json::int(e.dur_us as i64)),
+                    ("pid", Json::int(1)),
+                    ("tid", Json::int(e.tid as i64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("traceEvents", Json::arr(events))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_records_nothing_and_never_reads_the_clock() {
+        let t = Tracer::noop();
+        assert!(!t.is_enabled());
+        let s = t.start();
+        assert!(s.0.is_none(), "disabled start must not sample the clock");
+        t.end(s, "serve", "fetch");
+        assert!(t.is_empty());
+        assert_eq!(t.chrome_trace_json().get("traceEvents").as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn spans_record_name_cat_and_ordering() {
+        let t = Tracer::enabled();
+        let a = t.start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.end(a, "train", "upload");
+        let b = t.start();
+        t.end(b, "train", "dispatch");
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!((ev[0].cat, ev[0].name), ("train", "upload"));
+        assert_eq!((ev[1].cat, ev[1].name), ("train", "dispatch"));
+        assert!(ev[0].dur_us >= 1_000, "2ms sleep must show up: {}", ev[0].dur_us);
+        assert!(ev[1].ts_us >= ev[0].ts_us, "ring is FIFO in start order per thread");
+    }
+
+    #[test]
+    fn ring_evicts_oldest_beyond_capacity() {
+        let t = Tracer::with_capacity(3);
+        for name in ["a", "b", "c", "d"] {
+            // distinct static names so eviction order is observable
+            let s = t.start();
+            match name {
+                "a" => t.end(s, "x", "a"),
+                "b" => t.end(s, "x", "b"),
+                "c" => t.end(s, "x", "c"),
+                _ => t.end(s, "x", "d"),
+            }
+        }
+        let names: Vec<&str> = t.events().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["b", "c", "d"]);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_complete_events() {
+        let t = Tracer::enabled();
+        let s = t.start();
+        t.end(s, "serve", "submit");
+        let doc = t.chrome_trace_json();
+        // the export must survive a parse round-trip and carry the complete-
+        // event contract Chrome/Perfetto require
+        let parsed = Json::parse(&doc.emit()).unwrap();
+        let ev = parsed.get("traceEvents").at(0);
+        assert_eq!(ev.get("ph").as_str(), Some("X"));
+        assert_eq!(ev.get("name").as_str(), Some("submit"));
+        assert_eq!(ev.get("cat").as_str(), Some("serve"));
+        assert!(ev.get("ts").as_i64().is_some());
+        assert!(ev.get("dur").as_i64().is_some());
+        assert!(ev.get("tid").as_i64().is_some());
+    }
+
+    #[test]
+    fn threads_record_into_one_ring_with_distinct_lanes() {
+        let t = Tracer::enabled();
+        let t2 = t.clone();
+        let s = t.start();
+        t.end(s, "serve", "submit");
+        std::thread::spawn(move || {
+            let s = t2.start();
+            t2.end(s, "serve", "fetch");
+        })
+        .join()
+        .unwrap();
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_ne!(ev[0].tid, ev[1].tid, "each thread gets its own lane");
+    }
+}

@@ -11,9 +11,10 @@ pub mod builder;
 pub mod manifest;
 pub mod pipeline;
 
+use crate::obs;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -33,19 +34,24 @@ pub struct Runtime {
     /// decompose + re-upload because the backend handed back a packed tuple
     /// buffer instead of per-leaf buffers. The buffer-chained training hot
     /// path is only zero-copy when this stays 0.
-    demux_fallbacks: Cell<usize>,
+    ///
+    /// The transfer counters are [`obs::Counter`] handles (shared atomics),
+    /// so [`Runtime::register_metrics`] can index the *same* cells into a
+    /// metrics registry — a registry snapshot reads exactly what the
+    /// accessors below read.
+    pub(crate) demux_fallbacks: obs::Counter,
     /// Total host→device transfers through [`Runtime::upload`] and friends
     /// — *every* upload flows through here, so tests can pin "only the
     /// per-step data crossed the boundary" exactly (see
     /// `integration_train_resident`).
-    uploads: Cell<usize>,
+    uploads: obs::Counter,
     /// Counted device→host syncs through [`Runtime::fetch_scalar`] /
     /// [`Runtime::fetch_f32s`] — the training hot path's semantically
     /// required host syncs route through these so tests can assert the
     /// pipelined engine really dropped from 2 scalar syncs per step to one
     /// metrics fetch per epoch. Syncs outside the step/metric path (eval
     /// logits, checkpoint downloads) intentionally do not count.
-    fetches: Cell<usize>,
+    fetches: obs::Counter,
 }
 
 impl Runtime {
@@ -57,10 +63,25 @@ impl Runtime {
         Ok(Runtime {
             client: Rc::new(client),
             upload_exes: RefCell::new(HashMap::new()),
-            demux_fallbacks: Cell::new(0),
-            uploads: Cell::new(0),
-            fetches: Cell::new(0),
+            demux_fallbacks: obs::Counter::new(),
+            uploads: obs::Counter::new(),
+            fetches: obs::Counter::new(),
         })
+    }
+
+    /// Index this runtime's transfer counters into `registry` under the
+    /// `runtime` subsystem. The registry shares the counter atomics, so its
+    /// snapshots equal [`Runtime::uploads`] / [`Runtime::fetches`] /
+    /// [`Runtime::demux_fallbacks`] exactly.
+    pub fn register_metrics(
+        &self,
+        registry: &obs::Registry,
+        labels: &[(&str, &str)],
+    ) -> Result<()> {
+        registry.register_counter("runtime", "uploads", labels, &self.uploads)?;
+        registry.register_counter("runtime", "fetches", labels, &self.fetches)?;
+        registry.register_counter("runtime", "demux_fallbacks", labels, &self.demux_fallbacks)?;
+        Ok(())
     }
 
     pub fn platform(&self) -> String {
@@ -138,39 +159,39 @@ impl Runtime {
         }
         let cache = self.upload_exes.borrow();
         let mut bufs = cache[&key].run_to_buffers(&[lit])?;
-        self.uploads.set(self.uploads.get() + 1);
+        self.uploads.inc();
         Ok(bufs.swap_remove(0))
     }
 
     /// How often [`Executable::run_buffers_demux`] fell back to a host
     /// round-trip — 0 means every demuxed execution stayed buffer-to-buffer.
     pub fn demux_fallbacks(&self) -> usize {
-        self.demux_fallbacks.get()
+        self.demux_fallbacks.get() as usize
     }
 
     /// Total host→device transfers so far (all dtypes, data and parameters
     /// alike).
     pub fn uploads(&self) -> usize {
-        self.uploads.get()
+        self.uploads.get() as usize
     }
 
     /// Counted device→host syncs on the step/metric path so far (see the
     /// field docs: eval/checkpoint downloads are deliberately outside this).
     pub fn fetches(&self) -> usize {
-        self.fetches.get()
+        self.fetches.get() as usize
     }
 
     /// Sync a scalar f32 buffer to host, counting the fetch — the per-step
     /// loss/correct syncs of the serial resident engine go through here.
     pub fn fetch_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
-        self.fetches.set(self.fetches.get() + 1);
+        self.fetches.inc();
         download_scalar(buf)
     }
 
     /// Sync a small f32 vector buffer to host, counting the fetch — the
     /// once-per-epoch metrics-accumulator download of the pipelined engine.
     pub fn fetch_f32s(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        self.fetches.set(self.fetches.get() + 1);
+        self.fetches.inc();
         let mut lits = Executable::buffer_to_literals(buf)?;
         if lits.len() != 1 {
             bail!("fetch_f32s expects a single-array buffer, got {} leaves", lits.len());

@@ -73,7 +73,7 @@ impl InFlight {
             return Ok(outs);
         }
         if outs.len() == 1 && expected > 1 {
-            rt.demux_fallbacks.set(rt.demux_fallbacks.get() + 1);
+            rt.demux_fallbacks.inc();
             let lits = Executable::buffer_to_literals(&outs[0])?;
             if lits.len() != expected {
                 bail!("'{exe_name}' returned {} outputs, expected {expected}", lits.len());

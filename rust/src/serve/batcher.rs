@@ -21,6 +21,7 @@
 use super::queue::{Bounded, Pop};
 use super::stats::SharedStats;
 use super::{Request, ServeError};
+use crate::obs::Tracer;
 use std::time::{Duration, Instant};
 
 /// Batching policy for one engine.
@@ -63,7 +64,18 @@ fn shed_if_expired(req: Request, stats: &SharedStats) -> Option<Request> {
 /// coalesce until the batch is full or `max_wait` expires. Requests whose
 /// admission deadline has already passed are shed here — at pop time — and
 /// never occupy a batch slot.
-pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig, stats: &SharedStats) -> NextBatch {
+///
+/// When tracing is on, each shipped batch records a `queue_wait` span (the
+/// idle wait for the batch's first live request; idle polls that time out
+/// record nothing) and a `coalesce` span (the hold-open window gathering
+/// the rest of the batch).
+pub fn next_batch(
+    queue: &Bounded<Request>,
+    cfg: &BatcherConfig,
+    stats: &SharedStats,
+    tracer: &Tracer,
+) -> NextBatch {
+    let wait_t0 = tracer.start();
     let first = loop {
         match queue.pop_timeout(cfg.idle_poll) {
             Pop::Item(r) => match shed_if_expired(r, stats) {
@@ -77,6 +89,8 @@ pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig, stats: &SharedS
             Pop::Closed => return NextBatch::Closed,
         }
     };
+    tracer.end(wait_t0, "serve", "queue_wait");
+    let coalesce_t0 = tracer.start();
     let mut reqs = vec![first];
     let deadline = Instant::now() + cfg.max_wait;
     while reqs.len() < cfg.batch {
@@ -91,6 +105,7 @@ pub fn next_batch(queue: &Bounded<Request>, cfg: &BatcherConfig, stats: &SharedS
             Pop::TimedOut | Pop::Closed => break,
         }
     }
+    tracer.end(coalesce_t0, "serve", "coalesce");
     NextBatch::Batch(reqs)
 }
 
@@ -163,7 +178,7 @@ mod tests {
             q.try_push(req(i as f32).0).unwrap();
         }
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 5_000), &stats()) {
+        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop()) {
             NextBatch::Batch(reqs) => {
                 assert_eq!(reqs.len(), 4);
                 // FIFO order preserved
@@ -183,7 +198,7 @@ mod tests {
         q.try_push(req(1.0).0).unwrap();
         q.try_push(req(2.0).0).unwrap();
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 30), &stats()) {
+        match next_batch(&q, &cfg(4, 30), &stats(), &Tracer::noop()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
             _ => panic!("expected a partial batch"),
         }
@@ -195,9 +210,9 @@ mod tests {
     #[test]
     fn idle_then_closed() {
         let q: Bounded<Request> = Bounded::new(2);
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Idle));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Idle));
         q.close();
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Closed));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Closed));
     }
 
     #[test]
@@ -205,11 +220,11 @@ mod tests {
         let q = Bounded::new(4);
         q.try_push(req(3.0).0).unwrap();
         q.close();
-        match next_batch(&q, &cfg(4, 5_000), &stats()) {
+        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 1),
             _ => panic!("expected drained partial batch"),
         }
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats()), NextBatch::Closed));
+        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Closed));
     }
 
     #[test]
@@ -222,7 +237,7 @@ mod tests {
         q.try_push(r1).unwrap();
         q.try_push(r2).unwrap();
         q.try_push(r3).unwrap();
-        match next_batch(&q, &cfg(4, 20), &s) {
+        match next_batch(&q, &cfg(4, 20), &s, &Tracer::noop()) {
             NextBatch::Batch(reqs) => {
                 // only the live request rides the batch
                 assert_eq!(reqs.len(), 1);
@@ -249,11 +264,29 @@ mod tests {
         }
         // every queued request is expired: the batcher sheds them all and
         // reports Idle instead of shipping an empty batch
-        assert!(matches!(next_batch(&q, &cfg(4, 20), &s), NextBatch::Idle));
+        assert!(matches!(next_batch(&q, &cfg(4, 20), &s, &Tracer::noop()), NextBatch::Idle));
         for rx in &rxs {
             assert_eq!(rx.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
         }
         assert_eq!(s.snapshot(0).shed, 3);
+    }
+
+    #[test]
+    fn shipped_batches_record_queue_wait_and_coalesce_spans() {
+        let q = Bounded::new(8);
+        q.try_push(req(1.0).0).unwrap();
+        q.try_push(req(2.0).0).unwrap();
+        let tracer = Tracer::enabled();
+        match next_batch(&q, &cfg(2, 50), &stats(), &tracer) {
+            NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
+            _ => panic!("expected a batch"),
+        }
+        let names: Vec<&str> = tracer.events().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["queue_wait", "coalesce"]);
+        // an idle poll records no spans — a quiet server doesn't fill the
+        // trace ring with waiting
+        assert!(matches!(next_batch(&q, &cfg(2, 1), &stats(), &tracer), NextBatch::Idle));
+        assert_eq!(tracer.len(), 2);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use super::{Request, Response, ServeError};
 use crate::checkpoint::Params;
 use crate::coordinator::evaluate_with;
 use crate::data::Dataset;
+use crate::obs::Tracer;
 use crate::runtime::{
     literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, InFlight, Manifest, Runtime,
 };
@@ -88,6 +89,9 @@ pub struct ShardWiring {
     pub stats: SharedStats,
     pub swap: mpsc::Receiver<SwapMsg>,
     pub ready: mpsc::Sender<Result<(), String>>,
+    /// Span recorder for the request lifecycle (the no-op tracer when the
+    /// server runs without `--trace-out`).
+    pub tracer: Tracer,
 }
 
 /// Closes the queue when the worker exits for *any* reason — including a
@@ -118,9 +122,9 @@ pub fn spawn(
     thread::Builder::new()
         .name(format!("lrta-serve-{}-{}-{}", cfg.model, cfg.variant, cfg.shard))
         .spawn(move || {
-            let ShardWiring { queue, stats, swap, ready } = wiring;
+            let ShardWiring { queue, stats, swap, ready, tracer } = wiring;
             let _guard = CloseQueueOnExit(Arc::clone(&queue));
-            match Engine::init(&manifest, meta, params, &cfg, stats) {
+            match Engine::init(&manifest, meta, params, &cfg, stats, tracer) {
                 Ok(mut engine) => {
                     let _ = ready.send(Ok(()));
                     engine.run(&queue, &cfg, &swap);
@@ -157,6 +161,7 @@ struct Engine {
     x_dims: Vec<i64>,
     item_elems: usize,
     stats: SharedStats,
+    tracer: Tracer,
     /// Spot-check sample count from the config (0 = off); kept so a warm
     /// swap can refresh the accuracy gauge for the new checkpoint.
     spot_check: usize,
@@ -169,6 +174,7 @@ impl Engine {
         params: Params,
         cfg: &EngineConfig,
         stats: SharedStats,
+        tracer: Tracer,
     ) -> Result<Engine> {
         let rt = Runtime::cpu()?;
         let exe = rt
@@ -194,6 +200,7 @@ impl Engine {
             x_dims,
             item_elems,
             stats,
+            tracer,
             spot_check: cfg.spot_check,
         };
         engine.run_spot_check()?;
@@ -245,7 +252,7 @@ impl Engine {
                 let outcome = self.apply_swap(msg.params);
                 let _ = msg.ack.send(outcome);
             }
-            match batcher::next_batch(queue, &bcfg, &self.stats) {
+            match batcher::next_batch(queue, &bcfg, &self.stats, &self.tracer) {
                 NextBatch::Closed => {
                     if let Some(p) = inflight.take() {
                         self.finish_batch(p);
@@ -292,7 +299,7 @@ impl Engine {
                             if let Some(p) = inflight.take() {
                                 self.finish_batch(p);
                             }
-                            self.respond_batch(reqs, padded, 0.0, Err(e));
+                            self.respond_batch(reqs, padded, 0.0, 0.0, Err(e));
                         }
                     }
                 }
@@ -339,52 +346,68 @@ impl Engine {
     }
 
     /// Serial (lockstep) batch service — the reupload baseline and the
-    /// `pipelined: false` resident baseline.
+    /// `pipelined: false` resident baseline. The whole run is one blocking
+    /// call, so its time all counts as dispatch in the split.
     fn serve_batch(&self, reqs: Vec<Request>) {
         let (xs, padded) = batcher::assemble(&reqs, self.meta.batch, self.item_elems);
         let t0 = Instant::now();
         let result = self.execute(&xs);
         let exec_secs = t0.elapsed().as_secs_f64();
-        self.respond_batch(reqs, padded, exec_secs, result);
+        self.respond_batch(reqs, padded, exec_secs, 0.0, result);
     }
 
     /// Dispatch one assembled batch against the resident buffers without
     /// blocking (upload `x`, enqueue the execution).
     fn dispatch(&self, xs: &[f32]) -> Result<InFlight> {
         let bufs = self.resident.as_ref().expect("dispatch requires resident buffers");
+        let up_t0 = self.tracer.start();
         let x_lit = xla::Literal::vec1(xs).reshape(&self.x_dims)?;
         let x_buf = self.rt.upload(&x_lit)?;
+        self.tracer.end(up_t0, "serve", "upload");
+        let d_t0 = self.tracer.start();
         let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
         refs.push(&x_buf);
-        self.exe.dispatch_buffers(&refs, 1)
+        let pending = self.exe.dispatch_buffers(&refs, 1);
+        self.tracer.end(d_t0, "serve", "dispatch");
+        pending
     }
 
     /// Fetch a dispatched batch's logits and respond to its requests.
     fn finish_batch(&self, b: InFlightBatch) {
         let InFlightBatch { reqs, padded, pending, dispatch_secs } = b;
         let t0 = Instant::now();
-        let result = pending
-            .fetch(&self.rt)
+        let fetch_t0 = self.tracer.start();
+        let fetched = pending.fetch(&self.rt);
+        self.tracer.end(fetch_t0, "serve", "fetch");
+        let demux_t0 = self.tracer.start();
+        let result = fetched
             .and_then(|outs| Executable::buffer_to_literals(&outs[0]))
             .and_then(|mut lits| literal_to_tensor(&lits.swap_remove(0)));
-        // host-side occupancy (dispatch + fetch); in overlapped mode the
-        // device time between the halves belongs to no single batch, so
-        // end-to-end throughput is the load report's number, not this one
-        let exec_secs = dispatch_secs + t0.elapsed().as_secs_f64();
-        self.respond_batch(reqs, padded, exec_secs, result);
+        self.tracer.end(demux_t0, "serve", "demux");
+        // host-side occupancy split into its halves: the non-blocking
+        // dispatch (assemble/upload/enqueue) vs the blocking fetch+demux.
+        // In overlapped mode the device time between the halves belongs to
+        // no single batch, so end-to-end throughput is the load report's
+        // number, not dispatch+fetch.
+        let fetch_secs = t0.elapsed().as_secs_f64();
+        self.respond_batch(reqs, padded, dispatch_secs, fetch_secs, result);
     }
 
     /// Demux per-request rows out of a batch result (or fail every request)
     /// and update the stats — shared tail of the serial and pipelined paths.
+    /// `dispatch_secs`/`fetch_secs` are the two halves of the executable
+    /// wall time (serial paths pass the whole run as dispatch).
     fn respond_batch(
         &self,
         reqs: Vec<Request>,
         padded: usize,
-        exec_secs: f64,
+        dispatch_secs: f64,
+        fetch_secs: f64,
         result: Result<Tensor>,
     ) {
         match result {
             Ok(logits) => {
+                let reply_t0 = self.tracer.start();
                 let classes = logits.shape()[1];
                 let fill = reqs.len();
                 let done = Instant::now();
@@ -395,7 +418,8 @@ impl Engine {
                     latencies.push(latency.as_secs_f64());
                     req.respond(Ok(Response { logits: row, latency, batch_fill: fill }));
                 }
-                self.stats.on_batch(fill, padded, exec_secs, &latencies);
+                self.tracer.end(reply_t0, "serve", "reply");
+                self.stats.on_batch_timed(fill, padded, dispatch_secs, fetch_secs, &latencies);
             }
             Err(e) => {
                 let msg = format!("{e:#}");

@@ -56,6 +56,14 @@
 //! low-traffic latency is unchanged (`ServerConfig::pipelined = false`
 //! restores the lockstep loop as a baseline).
 //!
+//! **Observability** ([`crate::obs`]): `ServerConfig::registry` exposes
+//! every shard's counters and queue-depth gauge through the metrics
+//! registry — the same atomics the snapshots read, labelled
+//! `model`/`variant`/`shard` — and `ServerConfig::tracer` records the
+//! request lifecycle (submit → queue_wait → coalesce → upload → dispatch →
+//! fetch → demux → reply) for `lrta serve --trace-out` Chrome/Perfetto
+//! traces. Both default to off and cost nothing when unset.
+//!
 //! The PJRT client is not `Send` (it holds an `Rc`), so each engine worker
 //! creates its *own* [`Runtime`](crate::runtime::Runtime) inside its thread;
 //! requests and responses cross threads as plain `Send` data (`Vec<f32>` +

@@ -11,6 +11,7 @@
 //! offline image offers, and one uncontended lock per request is noise next
 //! to a PJRT dispatch.
 
+use crate::obs;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -44,6 +45,10 @@ pub struct Bounded<T> {
     capacity: usize,
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
+    /// Live depth mirror, updated on every push/pop — registrable via
+    /// [`Bounded::depth_gauge`] so a metrics scrape never takes the queue
+    /// lock.
+    depth: obs::Gauge,
 }
 
 impl<T> Bounded<T> {
@@ -53,11 +58,18 @@ impl<T> Bounded<T> {
             capacity,
             inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
+            depth: obs::Gauge::new(),
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// The lock-free depth gauge (register it under a queue-depth metric;
+    /// the queue keeps it in sync with `len()`).
+    pub fn depth_gauge(&self) -> &obs::Gauge {
+        &self.depth
     }
 
     pub fn len(&self) -> usize {
@@ -84,6 +96,7 @@ impl<T> Bounded<T> {
         }
         g.items.push_back(item);
         let depth = g.items.len();
+        self.depth.set(depth as u64);
         drop(g);
         self.not_empty.notify_one();
         Ok(depth)
@@ -96,6 +109,7 @@ impl<T> Bounded<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
+                self.depth.set(g.items.len() as u64);
                 return Pop::Item(item);
             }
             if g.closed {
@@ -120,14 +134,22 @@ impl<T> Bounded<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().items.pop_front()
+        let mut g = self.inner.lock().unwrap();
+        let item = g.items.pop_front();
+        if item.is_some() {
+            self.depth.set(g.items.len() as u64);
+        }
+        item
     }
 
     /// Take every queued item in FIFO order (one lock). Shutdown uses this
     /// to answer requests a dead worker left behind instead of wedging the
     /// callers blocked on them.
     pub fn drain(&self) -> Vec<T> {
-        self.inner.lock().unwrap().items.drain(..).collect()
+        let mut g = self.inner.lock().unwrap();
+        let items = g.items.drain(..).collect();
+        self.depth.set(0);
+        items
     }
 
     /// Close for shutdown: producers are rejected immediately, the consumer
@@ -214,6 +236,23 @@ mod tests {
         let t0 = Instant::now();
         assert!(matches!(q.pop_timeout(Duration::from_secs(5)), Pop::Closed));
         assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn depth_gauge_mirrors_len() {
+        let q = Bounded::new(4);
+        assert_eq!(q.depth_gauge().get(), 0);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.depth_gauge().get(), 2);
+        assert!(matches!(q.try_pop(), Some(1)));
+        assert_eq!(q.depth_gauge().get(), 1);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Item(2)));
+        assert_eq!(q.depth_gauge().get(), 0);
+        q.try_push(3).unwrap();
+        q.close();
+        assert_eq!(q.drain(), vec![3]);
+        assert_eq!(q.depth_gauge().get(), 0);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use super::queue::{Bounded, PushError};
 use super::stats::{SharedStats, StatsSnapshot};
 use super::{drain_shutdown, Pending, Request, ServeError};
 use crate::checkpoint::Params;
+use crate::obs::{Registry, Tracer};
 use crate::runtime::Manifest;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -48,6 +49,13 @@ pub struct ServerConfig {
     /// submission is shed at pop time with [`ServeError::DeadlineExceeded`]
     /// instead of occupying a batch slot. `None` (default) never sheds.
     pub slo: Option<Duration>,
+    /// Metrics registry to expose every shard's counters through (the same
+    /// atomic handles the stats snapshots read, labelled
+    /// `model`/`variant`/`shard`). `None` (default) registers nothing.
+    pub registry: Option<Registry>,
+    /// Request-lifecycle span recorder, cloned into every shard worker and
+    /// the submit path. The default no-op tracer records nothing.
+    pub tracer: Tracer,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +68,8 @@ impl Default for ServerConfig {
             pipelined: true,
             spot_check: 0,
             slo: None,
+            registry: None,
+            tracer: Tracer::default(),
         }
     }
 }
@@ -226,6 +236,7 @@ pub struct Server {
     router: Router,
     next_id: AtomicU64,
     slo: Option<Duration>,
+    tracer: Tracer,
 }
 
 impl Server {
@@ -268,6 +279,24 @@ impl Server {
             for shard in 0..spec.shards {
                 let queue = Arc::new(Bounded::new(depth));
                 let stats = SharedStats::new(&spec.model, &spec.variant, batch);
+                if let Some(reg) = &cfg.registry {
+                    let shard_label = shard.to_string();
+                    let labels = [
+                        ("model", spec.model.as_str()),
+                        ("variant", spec.variant.as_str()),
+                        ("shard", shard_label.as_str()),
+                    ];
+                    // the registry gets the very atomics the stats/queue
+                    // mutate — a registration failure (duplicate labels)
+                    // is a config error, so fail startup loudly
+                    let registered = stats.register(reg, &labels).and_then(|()| {
+                        reg.register_gauge("serve", "queue_depth", &labels, queue.depth_gauge())
+                    });
+                    if let Err(e) = registered {
+                        router.close_and_join();
+                        return Err(e);
+                    }
+                }
                 let ecfg = EngineConfig {
                     model: spec.model.clone(),
                     variant: spec.variant.clone(),
@@ -292,6 +321,7 @@ impl Server {
                         stats: stats.clone(),
                         swap: swap_rx,
                         ready: ready_tx,
+                        tracer: cfg.tracer.clone(),
                     },
                 );
                 let swap = Mutex::new(swap_tx);
@@ -325,7 +355,12 @@ impl Server {
                 return Err(e);
             }
         }
-        Ok(Server { router, next_id: AtomicU64::new(0), slo: cfg.slo })
+        Ok(Server {
+            router,
+            next_id: AtomicU64::new(0),
+            slo: cfg.slo,
+            tracer: cfg.tracer.clone(),
+        })
     }
 
     /// Enqueue one sample for `(model, variant)`. Returns immediately with
@@ -333,6 +368,7 @@ impl Server {
     /// shards the request lands on the shallowest queue (round-robin on
     /// ties); with an SLO configured it carries an admission deadline.
     pub fn submit(&self, model: &str, variant: &str, x: Vec<f32>) -> Result<Pending, ServeError> {
+        let span_t0 = self.tracer.start();
         let h = self
             .router
             .get(model, variant)
@@ -350,7 +386,7 @@ impl Server {
             deadline: self.slo.map(|slo| enqueued + slo),
             tx,
         };
-        match shard.queue.try_push(req) {
+        let outcome = match shard.queue.try_push(req) {
             Ok(depth) => {
                 shard.stats.on_enqueue(depth);
                 Ok(Pending { rx })
@@ -362,7 +398,9 @@ impl Server {
                 Err(ServeError::QueueFull { depth: shard.queue.capacity() })
             }
             Err(PushError::Closed(_)) => Err(ServeError::Closed),
-        }
+        };
+        self.tracer.end(span_t0, "serve", "submit");
+        outcome
     }
 
     /// Warm variant swap: replace `(model, variant)`'s checkpoint on every
@@ -492,6 +530,8 @@ mod tests {
         assert_eq!(c.queue_depth, 0);
         assert!(c.max_wait >= Duration::from_millis(1));
         assert!(c.slo.is_none(), "no SLO by default: nothing sheds");
+        assert!(c.registry.is_none(), "no registry by default: nothing registers");
+        assert!(!c.tracer.is_enabled(), "tracing off by default");
     }
 
     #[test]

@@ -3,11 +3,20 @@
 //! [`ThroughputMeter`](crate::metrics::ThroughputMeter).
 //!
 //! One [`SharedStats`] is cloned into the router's submit path and the
-//! engine's worker thread; a single uncontended mutex guards the counters
-//! (one lock per batch / per submit — noise next to a PJRT dispatch).
+//! engine's worker thread. The monotonic counters (served, shed, swaps, …)
+//! are [`obs::Counter`]/[`obs::Gauge`] atomics living *outside* the mutex —
+//! [`SharedStats::register`] hands those same handles to an
+//! [`obs::Registry`], so registry snapshots match [`SharedStats::snapshot`]
+//! bit-for-bit by construction. The mutex only guards what genuinely needs
+//! it (the sample-retaining histogram, the throughput meter, and the
+//! dispatch/fetch time split), and snapshots clone the raw samples under
+//! the lock but sort them *outside* it, so percentile cost never serializes
+//! the submit path.
 
 use crate::metrics::ThroughputMeter;
+use crate::obs;
 use crate::util::stats::percentile_sorted;
+use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
 /// Number of doubling latency buckets, first edge at 0.25 ms — covers
@@ -62,9 +71,18 @@ impl LatencyHistogram {
         self.count
     }
 
+    /// The retained raw samples (at most `SAMPLE_CAP` of them), unsorted.
+    /// Snapshot paths clone this under the stats lock and sort the clone
+    /// outside it.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     /// Exact percentiles over the retained samples, one sort for all of
-    /// them (zeros when empty). This runs under the shared stats mutex, so
-    /// batching the sort matters for snapshot cost.
+    /// them (zeros when empty). Convenience for standalone histograms; the
+    /// [`SharedStats`] snapshot paths deliberately avoid calling this under
+    /// the shared mutex — they clone [`LatencyHistogram::samples`] under
+    /// the lock and sort outside instead.
     pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
             return vec![0.0; ps.len()];
@@ -99,7 +117,9 @@ impl LatencyHistogram {
     }
 }
 
-/// Counters behind the shared mutex.
+/// The parts that genuinely need the mutex: the sample-retaining histogram,
+/// the throughput meter, the executable-time accounting (split into its
+/// dispatch and fetch halves), and the two non-monotonic scalars.
 #[derive(Debug)]
 struct Inner {
     hist: LatencyHistogram,
@@ -107,33 +127,46 @@ struct Inner {
     /// `fps()` is the paper-style full-batch device throughput.
     exec_meter: ThroughputMeter,
     exec_secs_total: f64,
-    requests_ok: u64,
-    rejected: u64,
-    /// Requests shed at pop time for missing their admission deadline.
-    shed: u64,
-    /// Warm variant swaps applied by this engine worker.
-    swaps: u64,
-    errors: u64,
-    batches: u64,
-    served: u64,
-    padded_slots: u64,
+    /// Host time spent enqueueing executions (non-blocking half). On the
+    /// serial engine path the whole run counts as dispatch.
+    dispatch_secs_total: f64,
+    /// Host time spent waiting on / demuxing results (blocking half).
+    fetch_secs_total: f64,
     max_queue_depth: usize,
     spot_check_acc: Option<f64>,
-    /// Host→device transfers on the engine's runtime (gauge, set by the
-    /// worker after each batch) — upload regressions surface in every
-    /// report instead of hiding inside the worker thread.
-    uploads: u64,
-    /// Demux fallbacks on the engine's runtime (gauge; nonzero means the
-    /// backend packed tuple outputs and executions round-tripped the host).
-    demux_fallbacks: u64,
 }
 
 /// Thread-shared per-variant stats sink.
+///
+/// The monotonic counters are lock-free [`obs::Counter`]s (and the two
+/// transfer gauges are [`obs::Gauge`]s) so [`SharedStats::register`] can
+/// expose the *same* atomics through a registry — no double bookkeeping,
+/// no drift.
 #[derive(Clone)]
 pub struct SharedStats {
     model: String,
     variant: String,
     batch: usize,
+    requests_ok: obs::Counter,
+    rejected: obs::Counter,
+    /// Requests shed at pop time for missing their admission deadline.
+    shed: obs::Counter,
+    /// Warm variant swaps applied by this engine worker.
+    swaps: obs::Counter,
+    errors: obs::Counter,
+    batches: obs::Counter,
+    served: obs::Counter,
+    padded_slots: obs::Counter,
+    /// Host→device transfers on the engine's runtime (gauge, set by the
+    /// worker after each batch) — upload regressions surface in every
+    /// report instead of hiding inside the worker thread.
+    uploads: obs::Gauge,
+    /// Demux fallbacks on the engine's runtime (gauge; nonzero means the
+    /// backend packed tuple outputs and executions round-tripped the host).
+    demux_fallbacks: obs::Gauge,
+    /// Log₂ end-to-end latency histogram in µs for the registry/Prometheus
+    /// view (the exact-percentile sample histogram stays inside the mutex).
+    latency_us: obs::Histogram,
     inner: Arc<Mutex<Inner>>,
 }
 
@@ -143,60 +176,105 @@ impl SharedStats {
             model: model.to_string(),
             variant: variant.to_string(),
             batch,
+            requests_ok: obs::Counter::new(),
+            rejected: obs::Counter::new(),
+            shed: obs::Counter::new(),
+            swaps: obs::Counter::new(),
+            errors: obs::Counter::new(),
+            batches: obs::Counter::new(),
+            served: obs::Counter::new(),
+            padded_slots: obs::Counter::new(),
+            uploads: obs::Gauge::new(),
+            demux_fallbacks: obs::Gauge::new(),
+            latency_us: obs::Histogram::new(),
             inner: Arc::new(Mutex::new(Inner {
                 hist: LatencyHistogram::new(),
                 exec_meter: ThroughputMeter::new(batch),
                 exec_secs_total: 0.0,
-                requests_ok: 0,
-                rejected: 0,
-                shed: 0,
-                swaps: 0,
-                errors: 0,
-                batches: 0,
-                served: 0,
-                padded_slots: 0,
+                dispatch_secs_total: 0.0,
+                fetch_secs_total: 0.0,
                 max_queue_depth: 0,
                 spot_check_acc: None,
-                uploads: 0,
-                demux_fallbacks: 0,
             })),
         }
     }
 
+    /// Register this sink's counters/gauges/latency histogram under the
+    /// `serve` subsystem. The registry holds the *same* atomic handles this
+    /// struct increments, so a registry snapshot and a
+    /// [`SharedStats::snapshot`] taken at the same quiescent point agree
+    /// exactly.
+    pub fn register(&self, registry: &obs::Registry, labels: &[(&str, &str)]) -> Result<()> {
+        registry.register_counter("serve", "requests_ok", labels, &self.requests_ok)?;
+        registry.register_counter("serve", "rejected", labels, &self.rejected)?;
+        registry.register_counter("serve", "shed", labels, &self.shed)?;
+        registry.register_counter("serve", "swaps", labels, &self.swaps)?;
+        registry.register_counter("serve", "errors", labels, &self.errors)?;
+        registry.register_counter("serve", "batches", labels, &self.batches)?;
+        registry.register_counter("serve", "served", labels, &self.served)?;
+        registry.register_counter("serve", "padded_slots", labels, &self.padded_slots)?;
+        registry.register_gauge("serve", "uploads", labels, &self.uploads)?;
+        registry.register_gauge("serve", "demux_fallbacks", labels, &self.demux_fallbacks)?;
+        registry.register_histogram("serve", "latency_us", labels, &self.latency_us)?;
+        Ok(())
+    }
+
     /// Gauge sample from the submit path (`depth` = queue depth after push).
     pub fn on_enqueue(&self, depth: usize) {
+        self.requests_ok.inc();
         let mut g = self.inner.lock().unwrap();
-        g.requests_ok += 1;
         g.max_queue_depth = g.max_queue_depth.max(depth);
     }
 
     pub fn on_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.rejected.inc();
     }
 
     /// One request shed at pop time (admission deadline exceeded).
     pub fn on_shed(&self) {
-        self.inner.lock().unwrap().shed += 1;
+        self.shed.inc();
     }
 
     /// One warm variant swap applied between batches.
     pub fn on_swap(&self) {
-        self.inner.lock().unwrap().swaps += 1;
+        self.swaps.inc();
     }
 
     pub fn on_error(&self, requests: usize) {
-        self.inner.lock().unwrap().errors += requests as u64;
+        self.errors.add(requests as u64);
     }
 
     /// Record one executed batch: `fill` real requests, `padded` zero rows,
     /// the executable wall time, and per-request end-to-end latencies.
+    /// Paths that don't split their timing count the whole run as dispatch.
     pub fn on_batch(&self, fill: usize, padded: usize, exec_secs: f64, latencies: &[f64]) {
+        self.on_batch_timed(fill, padded, exec_secs, 0.0, latencies);
+    }
+
+    /// Like [`SharedStats::on_batch`] but with the executable wall time
+    /// split into its non-blocking dispatch half and its blocking
+    /// fetch/demux half (`exec = dispatch + fetch`) — the overlap-aware
+    /// device timing the pipelined engines report.
+    pub fn on_batch_timed(
+        &self,
+        fill: usize,
+        padded: usize,
+        dispatch_secs: f64,
+        fetch_secs: f64,
+        latencies: &[f64],
+    ) {
+        self.batches.inc();
+        self.served.add(fill as u64);
+        self.padded_slots.add(padded as u64);
+        for &l in latencies {
+            self.latency_us.record((l * 1e6) as u64);
+        }
+        let exec_secs = dispatch_secs + fetch_secs;
         let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.served += fill as u64;
-        g.padded_slots += padded as u64;
         g.exec_meter.record(exec_secs);
         g.exec_secs_total += exec_secs;
+        g.dispatch_secs_total += dispatch_secs;
+        g.fetch_secs_total += fetch_secs;
         for &l in latencies {
             g.hist.record(l);
         }
@@ -211,49 +289,79 @@ impl SharedStats {
     /// [`Runtime::demux_fallbacks`](crate::runtime::Runtime::demux_fallbacks)),
     /// set by the worker thread — the only thread that can see its runtime.
     pub fn set_transfers(&self, uploads: u64, demux_fallbacks: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.uploads = uploads;
-        g.demux_fallbacks = demux_fallbacks;
+        self.uploads.set(uploads);
+        self.demux_fallbacks.set(demux_fallbacks);
     }
 
     /// Point-in-time snapshot; `queue_depth` is sampled by the caller (the
-    /// router owns the queue handle).
+    /// router owns the queue handle). The (up to `SAMPLE_CAP`-element)
+    /// sample vector is cloned under the lock but sorted *outside* it, so a
+    /// snapshot never stalls `on_batch`/`on_enqueue` for the sort.
     pub fn snapshot(&self, queue_depth: usize) -> StatsSnapshot {
-        let g = self.inner.lock().unwrap();
-        let mean_fill = if g.batches > 0 {
-            g.served as f64 / (g.batches as f64 * self.batch as f64)
+        let (
+            exec_fps,
+            exec_secs_total,
+            dispatch_secs_total,
+            fetch_secs_total,
+            max_queue_depth,
+            spot_check_acc,
+            mut samples,
+        ) = {
+            let g = self.inner.lock().unwrap();
+            (
+                g.exec_meter.fps(),
+                g.exec_secs_total,
+                g.dispatch_secs_total,
+                g.fetch_secs_total,
+                g.max_queue_depth,
+                g.spot_check_acc,
+                g.hist.samples.clone(),
+            )
+        };
+        let batches = self.batches.get();
+        let served = self.served.get();
+        let mean_fill = if batches > 0 {
+            served as f64 / (batches as f64 * self.batch as f64)
         } else {
             0.0
         };
-        let request_fps = if g.exec_secs_total > 0.0 {
-            g.served as f64 / g.exec_secs_total
+        let request_fps =
+            if exec_secs_total > 0.0 { served as f64 / exec_secs_total } else { 0.0 };
+        let (p50, p95, p99) = if samples.is_empty() {
+            (0.0, 0.0, 0.0)
         } else {
-            0.0
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (
+                percentile_sorted(&samples, 50.0),
+                percentile_sorted(&samples, 95.0),
+                percentile_sorted(&samples, 99.0),
+            )
         };
-        let pcts = g.hist.percentiles(&[50.0, 95.0, 99.0]);
         StatsSnapshot {
             model: self.model.clone(),
             variant: self.variant.clone(),
             batch: self.batch,
-            requests_ok: g.requests_ok,
-            rejected: g.rejected,
-            shed: g.shed,
-            swaps: g.swaps,
-            errors: g.errors,
-            batches: g.batches,
-            served: g.served,
-            padded_slots: g.padded_slots,
+            requests_ok: self.requests_ok.get(),
+            rejected: self.rejected.get(),
+            shed: self.shed.get(),
+            swaps: self.swaps.get(),
+            errors: self.errors.get(),
+            batches,
+            served,
+            padded_slots: self.padded_slots.get(),
             queue_depth,
-            max_queue_depth: g.max_queue_depth,
-            exec_fps: g.exec_meter.fps(),
+            max_queue_depth,
+            exec_fps,
             request_fps,
             mean_fill,
-            p50_ms: pcts[0] * 1e3,
-            p95_ms: pcts[1] * 1e3,
-            p99_ms: pcts[2] * 1e3,
-            spot_check_acc: g.spot_check_acc,
-            uploads: g.uploads,
-            demux_fallbacks: g.demux_fallbacks,
+            dispatch_secs_total,
+            fetch_secs_total,
+            p50_ms: p50 * 1e3,
+            p95_ms: p95 * 1e3,
+            p99_ms: p99 * 1e3,
+            spot_check_acc,
+            uploads: self.uploads.get(),
+            demux_fallbacks: self.demux_fallbacks.get(),
         }
     }
 
@@ -265,9 +373,10 @@ impl SharedStats {
     /// Variant-level snapshot over a shard set: counters sum, queue depth
     /// sums, max depth takes the max, throughputs add (shards run
     /// concurrently on independent clients), and percentiles are exact over
-    /// the union of the shards' retained samples. Each `(stats, depth)`
-    /// pair is one shard's sink plus its live queue depth; a single-shard
-    /// set degenerates to the plain [`SharedStats::snapshot`].
+    /// the union of the shards' retained samples — gathered under each
+    /// shard's lock in turn, sorted once outside all of them. Each
+    /// `(stats, depth)` pair is one shard's sink plus its live queue depth;
+    /// a single-shard set degenerates to the plain [`SharedStats::snapshot`].
     pub fn merged(parts: &[(&SharedStats, usize)]) -> StatsSnapshot {
         assert!(!parts.is_empty(), "merged snapshot needs at least one shard");
         if parts.len() == 1 {
@@ -291,6 +400,8 @@ impl SharedStats {
             exec_fps: 0.0,
             request_fps: 0.0,
             mean_fill: 0.0,
+            dispatch_secs_total: 0.0,
+            fetch_secs_total: 0.0,
             p50_ms: 0.0,
             p95_ms: 0.0,
             p99_ms: 0.0,
@@ -300,26 +411,28 @@ impl SharedStats {
         };
         let mut samples: Vec<f64> = Vec::new();
         for (s, depth) in parts {
-            let g = s.inner.lock().unwrap();
-            snap.requests_ok += g.requests_ok;
-            snap.rejected += g.rejected;
-            snap.shed += g.shed;
-            snap.swaps += g.swaps;
-            snap.errors += g.errors;
-            snap.batches += g.batches;
-            snap.served += g.served;
-            snap.padded_slots += g.padded_slots;
+            snap.requests_ok += s.requests_ok.get();
+            snap.rejected += s.rejected.get();
+            snap.shed += s.shed.get();
+            snap.swaps += s.swaps.get();
+            snap.errors += s.errors.get();
+            snap.batches += s.batches.get();
+            snap.served += s.served.get();
+            snap.padded_slots += s.padded_slots.get();
             snap.queue_depth += depth;
+            snap.uploads += s.uploads.get();
+            snap.demux_fallbacks += s.demux_fallbacks.get();
+            let g = s.inner.lock().unwrap();
             snap.max_queue_depth = snap.max_queue_depth.max(g.max_queue_depth);
             snap.exec_fps += g.exec_meter.fps();
             // goodput adds like exec_fps: shards execute concurrently, so
             // per-shard served/exec-seconds rates sum (dividing the total
             // served by the *summed* exec seconds would erase the scaling)
             if g.exec_secs_total > 0.0 {
-                snap.request_fps += g.served as f64 / g.exec_secs_total;
+                snap.request_fps += s.served.get() as f64 / g.exec_secs_total;
             }
-            snap.uploads += g.uploads;
-            snap.demux_fallbacks += g.demux_fallbacks;
+            snap.dispatch_secs_total += g.dispatch_secs_total;
+            snap.fetch_secs_total += g.fetch_secs_total;
             if snap.spot_check_acc.is_none() {
                 snap.spot_check_acc = g.spot_check_acc;
             }
@@ -363,6 +476,13 @@ pub struct StatsSnapshot {
     pub request_fps: f64,
     /// served / (batches · batch) — how full batches ran on average.
     pub mean_fill: f64,
+    /// Host seconds enqueueing executions (the non-blocking dispatch half);
+    /// serial engine paths count whole runs here.
+    pub dispatch_secs_total: f64,
+    /// Host seconds blocked on results (the fetch/demux half). With the
+    /// pipeline on, fetch dominating dispatch means the host genuinely
+    /// overlapped its own work with device compute.
+    pub fetch_secs_total: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -422,6 +542,51 @@ mod tests {
     }
 
     #[test]
+    fn bucket_of_exact_edges_and_extremes() {
+        // anything below the first edge lands in bucket 0 — including 0 and
+        // the smallest positive double
+        assert_eq!(LatencyHistogram::bucket_of(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(f64::MIN_POSITIVE), 0);
+        assert_eq!(LatencyHistogram::bucket_of(0.24e-3), 0);
+        // bucket i holds secs < 0.25ms·2^i, so an *exact* edge value rolls
+        // into the next bucket (doubling an f64 is exact, so the edge
+        // sequence — and these comparisons — are too)
+        let mut edge = 0.25e-3;
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(LatencyHistogram::bucket_of(edge), i + 1, "at edge {i}");
+            assert_eq!(LatencyHistogram::bucket_of(edge * (1.0 - 1e-12)), i, "below edge {i}");
+            edge *= 2.0;
+        }
+        // the last bucket is open-ended: the final edge (0.25ms·2^15), huge
+        // values, and infinity all clamp to HIST_BUCKETS-1
+        assert_eq!(LatencyHistogram::bucket_of(edge), HIST_BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_of(1e9), HIST_BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_of(f64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_of(f64::INFINITY), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_freeze_after_sample_cap_but_count_does_not() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..SAMPLE_CAP {
+            h.record(1e-3);
+        }
+        assert_eq!(h.count(), SAMPLE_CAP as u64);
+        assert_eq!(h.samples().len(), SAMPLE_CAP);
+        let p99_before = h.percentile(99.0);
+        // a huge late tail: invisible to percentiles (the sample vec is
+        // full)…
+        for _ in 0..1000 {
+            h.record(100.0);
+        }
+        assert_eq!(h.percentile(99.0), p99_before);
+        assert_eq!(h.samples().len(), SAMPLE_CAP, "retained samples are capped");
+        // …but the total count and the bucket counters keep accumulating
+        assert_eq!(h.count(), SAMPLE_CAP as u64 + 1000);
+        assert!(h.render(10).contains("1000"));
+    }
+
+    #[test]
     fn histogram_percentiles_and_render() {
         let mut h = LatencyHistogram::new();
         assert_eq!(h.percentile(50.0), 0.0);
@@ -456,6 +621,60 @@ mod tests {
         assert!((snap.request_fps - 600.0).abs() < 1e-6); // 6 real / 10 ms
         assert_eq!(snap.spot_check_acc, Some(0.9));
         assert!(snap.p50_ms > 10.0 && snap.p99_ms < 17.0);
+        // un-split timing counts the whole run as dispatch
+        assert!((snap.dispatch_secs_total - 0.010).abs() < 1e-12);
+        assert_eq!(snap.fetch_secs_total, 0.0);
+    }
+
+    #[test]
+    fn timed_batches_split_dispatch_from_fetch() {
+        let s = SharedStats::new("m", "lrd", 4);
+        s.on_batch_timed(4, 0, 0.002, 0.008, &[0.011, 0.012, 0.013, 0.014]);
+        s.on_batch_timed(4, 0, 0.001, 0.009, &[0.011, 0.012, 0.013, 0.014]);
+        let snap = s.snapshot(0);
+        assert!((snap.dispatch_secs_total - 0.003).abs() < 1e-12);
+        assert!((snap.fetch_secs_total - 0.017).abs() < 1e-12);
+        // fps/goodput see the *combined* exec time, same as before the split
+        assert!((snap.exec_fps - 400.0).abs() < 1e-6); // 4 items / 10 ms
+        assert!((snap.request_fps - 400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_matches_snapshot_exactly() {
+        let s = SharedStats::new("m", "lrd", 8);
+        let reg = obs::Registry::new();
+        s.register(&reg, &[("variant", "lrd"), ("shard", "0")]).unwrap();
+        s.on_enqueue(2);
+        s.on_reject();
+        s.on_shed();
+        s.on_swap();
+        s.on_error(3);
+        s.on_batch(6, 2, 0.010, &[0.001, 0.002, 0.003, 0.004, 0.005, 0.006]);
+        s.set_transfers(42, 1);
+        let snap = s.snapshot(0);
+        let rs = reg.snapshot();
+        let labels = [("variant", "lrd"), ("shard", "0")];
+        // same atomics → exact agreement, not approximate
+        assert_eq!(rs.scalar("serve", "requests_ok", &labels), Some(snap.requests_ok));
+        assert_eq!(rs.scalar("serve", "rejected", &labels), Some(snap.rejected));
+        assert_eq!(rs.scalar("serve", "shed", &labels), Some(snap.shed));
+        assert_eq!(rs.scalar("serve", "swaps", &labels), Some(snap.swaps));
+        assert_eq!(rs.scalar("serve", "errors", &labels), Some(snap.errors));
+        assert_eq!(rs.scalar("serve", "batches", &labels), Some(snap.batches));
+        assert_eq!(rs.scalar("serve", "served", &labels), Some(snap.served));
+        assert_eq!(rs.scalar("serve", "padded_slots", &labels), Some(snap.padded_slots));
+        assert_eq!(rs.scalar("serve", "uploads", &labels), Some(snap.uploads));
+        assert_eq!(rs.scalar("serve", "demux_fallbacks", &labels), Some(snap.demux_fallbacks));
+        // the registry-side latency histogram saw every served request
+        let hist_count = rs
+            .entries
+            .iter()
+            .find_map(|e| match (e.key.name.as_str(), &e.value) {
+                ("latency_us", obs::SnapValue::Histogram { count, .. }) => Some(*count),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(hist_count, snap.served);
     }
 
     #[test]
@@ -480,7 +699,7 @@ mod tests {
         a.set_transfers(10, 0);
         b.on_enqueue(5);
         b.on_reject();
-        b.on_batch(2, 2, 0.010, &[0.005, 0.006]);
+        b.on_batch_timed(2, 2, 0.004, 0.006, &[0.005, 0.006]);
         b.on_swap();
         b.set_transfers(7, 1);
         let merged = SharedStats::merged(&[(&a, 1), (&b, 3)]);
@@ -496,6 +715,9 @@ mod tests {
         assert_eq!(merged.max_queue_depth, 5);
         assert_eq!(merged.uploads, 17);
         assert_eq!(merged.demux_fallbacks, 1);
+        // dispatch/fetch totals sum across shards: 10ms+4ms / 0ms+6ms
+        assert!((merged.dispatch_secs_total - 0.014).abs() < 1e-12);
+        assert!((merged.fetch_secs_total - 0.006).abs() < 1e-12);
         // goodput adds across concurrent shards: 4/10ms + 2/10ms
         assert!((merged.request_fps - 600.0).abs() < 1e-6);
         // fill: 6 / (2 batches · 4)
@@ -528,6 +750,8 @@ mod tests {
         assert_eq!(snap.request_fps, 0.0);
         assert_eq!(snap.mean_fill, 0.0);
         assert_eq!(snap.p99_ms, 0.0);
+        assert_eq!(snap.dispatch_secs_total, 0.0);
+        assert_eq!(snap.fetch_secs_total, 0.0);
         assert!(snap.table_row().len() == StatsSnapshot::table_header().len());
     }
 }

@@ -24,6 +24,7 @@
 
 use crate::checkpoint::Params;
 use crate::data::Dataset;
+use crate::obs::Tracer;
 use crate::runtime::{ArtifactMeta, Executable, Runtime};
 use crate::train::ResidentParams;
 use crate::util::stats::count_correct;
@@ -54,8 +55,15 @@ pub struct EvalWorker {
 impl EvalWorker {
     /// Spawn the worker: it creates its own PJRT client and compiles the
     /// infer artifact at `hlo_path` *on the side thread*, so even that
-    /// startup cost overlaps with the first epoch's steps.
-    pub fn spawn(hlo_path: PathBuf, meta: ArtifactMeta, test: Arc<Dataset>) -> EvalWorker {
+    /// startup cost overlaps with the first epoch's steps. Each evaluation
+    /// records an `eval` span on `tracer` (in the worker's own lane, which
+    /// is what shows the overlap in the exported trace).
+    pub fn spawn(
+        hlo_path: PathBuf,
+        meta: ArtifactMeta,
+        test: Arc<Dataset>,
+        tracer: Tracer,
+    ) -> EvalWorker {
         let (job_tx, job_rx) = mpsc::channel::<Job>();
         let (out_tx, out_rx) = mpsc::channel::<Outcome>();
         let join = thread::Builder::new()
@@ -69,8 +77,10 @@ impl EvalWorker {
                 match init {
                     Ok((rt, exe)) => {
                         while let Ok(job) = job_rx.recv() {
+                            let span = tracer.start();
                             let acc = evaluate_snapshot(&rt, &exe, &meta, &job.params, &test)
                                 .map_err(|e| format!("{e:#}"));
+                            tracer.end(span, "train", "eval");
                             if out_tx.send((job.epoch, acc)).is_err() {
                                 break; // trainer gone — nothing left to report to
                             }

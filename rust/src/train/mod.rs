@@ -62,12 +62,15 @@ pub mod resident;
 pub use ckpt::CheckpointWriter;
 pub use eval::EvalWorker;
 pub use prefetch::Prefetcher;
-pub use replica::{run_replicas, MomentumPolicy, ReplicaConfig, ReplicaReport, ReplicaRun};
+pub use replica::{
+    run_replicas, run_replicas_traced, MomentumPolicy, ReplicaConfig, ReplicaReport, ReplicaRun,
+};
 pub use resident::{MetricsAccumulator, ResidentParams, ResidentState};
 
 use crate::checkpoint::Params;
 use crate::data::{Dataset, Shard};
 use crate::metrics::ThroughputMeter;
+use crate::obs::Tracer;
 use crate::runtime::{literal_to_tensor, ArtifactMeta, DoubleBuffered, Executable, Runtime};
 use crate::util::stats::count_correct;
 use anyhow::{bail, Result};
@@ -114,6 +117,9 @@ pub struct Engine<'rt> {
     /// On-device epoch metrics (pipelined path only; lazily compiled from
     /// the builder unless a manifest-lowered artifact was attached).
     metrics: Option<MetricsAccumulator>,
+    /// Step-lifecycle span recorder (no-op unless [`Engine::set_tracer`]
+    /// installed an enabled one).
+    tracer: Tracer,
 }
 
 impl<'rt> Engine<'rt> {
@@ -124,7 +130,15 @@ impl<'rt> Engine<'rt> {
             state: ResidentState::upload(rt, params, momenta)?,
             lr_cache: None,
             metrics: None,
+            tracer: Tracer::default(),
         })
+    }
+
+    /// Install a span recorder: the pipelined epoch records
+    /// `prefetch_wait` / `upload` / `dispatch` / `fetch` spans per step
+    /// (`lrta train --trace-out`).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Attach a pre-built metrics accumulator (e.g. compiled from the
@@ -301,9 +315,14 @@ impl<'rt> Engine<'rt> {
         let mut meter = ThroughputMeter::new(meta.batch);
         let mut staged: DoubleBuffered<(xla::PjRtBuffer, xla::PjRtBuffer, usize)> =
             DoubleBuffered::new();
-        if let Some((xs, ys)) = pf.next_batch() {
+        let pw_t0 = self.tracer.start();
+        let first = pf.next_batch();
+        self.tracer.end(pw_t0, "train", "prefetch_wait");
+        if let Some((xs, ys)) = first {
             let n = ys.len();
+            let up_t0 = self.tracer.start();
             let (x, y) = self.upload_batch(meta, &xs, &ys)?;
+            self.tracer.end(up_t0, "train", "upload");
             staged.stage((x, y, n))?;
         }
         let n_tr = meta.trainable.len();
@@ -312,6 +331,7 @@ impl<'rt> Engine<'rt> {
         while let Some((x_buf, y_buf, n)) = staged.take() {
             let t0 = Instant::now();
             // dispatch step N (non-blocking: PJRT executes asynchronously)
+            let d_t0 = self.tracer.start();
             let inflight = {
                 let mut inputs = self.state.step_inputs(meta)?;
                 inputs.push(&x_buf);
@@ -319,15 +339,23 @@ impl<'rt> Engine<'rt> {
                 inputs.push(&self.lr_cache.as_ref().expect("refreshed above").1);
                 exe.dispatch_buffers(&inputs, 2 * n_tr + 2)?
             };
+            self.tracer.end(d_t0, "train", "dispatch");
             // overlap window: upload batch N+1 while step N executes
-            if let Some((xs, ys)) = pf.next_batch() {
+            let pw_t0 = self.tracer.start();
+            let next = pf.next_batch();
+            self.tracer.end(pw_t0, "train", "prefetch_wait");
+            if let Some((xs, ys)) = next {
                 let m = ys.len();
+                let up_t0 = self.tracer.start();
                 let (x, y) = self.upload_batch(meta, &xs, &ys)?;
+                self.tracer.end(up_t0, "train", "upload");
                 staged.stage((x, y, m))?;
             }
             // demux step N's outputs and re-bind the state; the scalars
             // stay on device and fold into the resident accumulator
+            let f_t0 = self.tracer.start();
             let outs = inflight.fetch(self.rt)?;
+            self.tracer.end(f_t0, "train", "fetch");
             let (loss_buf, correct_buf) = self.state.absorb_step_deferred(meta, outs)?;
             self.metrics
                 .as_mut()

@@ -69,6 +69,7 @@ use crate::coordinator::{
 use crate::data::{Dataset, Shard};
 use crate::freeze::FreezeScheduler;
 use crate::metrics::{EpochRecord, RunRecord};
+use crate::obs::Tracer;
 use crate::runtime::{download_tensor, ArtifactMeta, Manifest, Runtime};
 use crate::tensor::Tensor;
 use crate::train::{Engine, ResidentState};
@@ -235,6 +236,9 @@ struct ReplicaJob {
     test_data: Arc<Dataset>,
     to_coord: mpsc::Sender<ToCoord>,
     from_coord: mpsc::Receiver<Arc<AvgPayload>>,
+    /// Span recorder shared with the coordinator — each replica thread
+    /// records into its own lane of the same ring.
+    tracer: Tracer,
 }
 
 /// Run `cfg.epochs` of data-parallel training across `rcfg.replicas`
@@ -253,6 +257,20 @@ pub fn run_replicas(
     cfg: &TrainConfig,
     rcfg: &ReplicaConfig,
     params: &Params,
+) -> Result<ReplicaRun> {
+    run_replicas_traced(manifest, cfg, rcfg, params, Tracer::default())
+}
+
+/// [`run_replicas`] with lifecycle span tracing: every replica records its
+/// `average_barrier` spans (download → barrier wait → mean re-upload) into
+/// `tracer`, one lane per replica thread — the multi-replica half of
+/// `lrta train --trace-out`.
+pub fn run_replicas_traced(
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+    rcfg: &ReplicaConfig,
+    params: &Params,
+    tracer: Tracer,
 ) -> Result<ReplicaRun> {
     if rcfg.replicas == 0 {
         bail!("replica count must be positive");
@@ -302,6 +320,7 @@ pub fn run_replicas(
             test_data: Arc::clone(&test_data),
             to_coord: to_coord.clone(),
             from_coord: reply_rx,
+            tracer: tracer.clone(),
         };
         joins.push(
             thread::Builder::new()
@@ -568,6 +587,7 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         test_data,
         to_coord,
         from_coord,
+        tracer,
     } = job;
     let rt = Runtime::cpu()?;
     let scheduler = FreezeScheduler::new(cfg.freeze);
@@ -592,6 +612,7 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
     };
 
     let mut engine = Engine::upload(&rt, &params, &momenta)?;
+    engine.set_tracer(tracer.clone());
     let initial_param_uploads = engine.param_uploads();
     let mut barrier = AvgBarrier {
         replica: idx,
@@ -600,6 +621,7 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         slot_uploads: 0,
         to_coord: &to_coord,
         from_coord: &from_coord,
+        tracer: &tracer,
     };
     let mut total_batches = 0usize;
 
@@ -686,6 +708,7 @@ struct AvgBarrier<'a> {
     slot_uploads: usize,
     to_coord: &'a mpsc::Sender<ToCoord>,
     from_coord: &'a mpsc::Receiver<Arc<AvgPayload>>,
+    tracer: &'a Tracer,
 }
 
 impl AvgBarrier<'_> {
@@ -699,6 +722,7 @@ impl AvgBarrier<'_> {
         state: &mut ResidentState,
         meta: &ArtifactMeta,
     ) -> Result<()> {
+        let span = self.tracer.start();
         self.events += 1;
         let mut payload = AvgPayload { params: Params::new(), momenta: Params::new() };
         for slot in &meta.trainable {
@@ -741,6 +765,7 @@ impl AvgBarrier<'_> {
                 }
             }
         }
+        self.tracer.end(span, "train", "average_barrier");
         Ok(())
     }
 }

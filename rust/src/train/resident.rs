@@ -24,6 +24,7 @@
 
 use crate::checkpoint::Params;
 use crate::freeze::{train_slot_bindings, SlotRole};
+use crate::obs;
 use crate::runtime::{
     builder, download_tensor, tensor_to_literal, ArtifactMeta, Executable, Manifest, ParamSlot,
     Runtime,
@@ -35,7 +36,7 @@ use std::collections::BTreeMap;
 /// A named set of device-resident tensors (uploaded once).
 pub struct ResidentParams {
     bufs: BTreeMap<String, xla::PjRtBuffer>,
-    uploads: usize,
+    uploads: obs::Counter,
 }
 
 impl ResidentParams {
@@ -45,7 +46,8 @@ impl ResidentParams {
         for (name, t) in params {
             bufs.insert(name.clone(), rt.upload(&tensor_to_literal(t)?)?);
         }
-        let uploads = bufs.len();
+        let uploads = obs::Counter::new();
+        uploads.add(bufs.len() as u64);
         Ok(ResidentParams { bufs, uploads })
     }
 
@@ -66,7 +68,8 @@ impl ResidentParams {
                 .ok_or_else(|| anyhow!("missing param {}", slot.name))?;
             bufs.insert(slot.name.clone(), rt.upload(&tensor_to_literal(t)?)?);
         }
-        let uploads = bufs.len();
+        let uploads = obs::Counter::new();
+        uploads.add(bufs.len() as u64);
         Ok(ResidentParams { bufs, uploads })
     }
 
@@ -81,7 +84,14 @@ impl ResidentParams {
     /// Host→device parameter transfers performed so far. Re-binding step
     /// outputs never increments this.
     pub fn uploads(&self) -> usize {
-        self.uploads
+        self.uploads.get() as usize
+    }
+
+    /// The upload counter handle, for registration on an
+    /// [`obs::Registry`] — the registry then snapshots the *same* atomic
+    /// this type increments, so registry values match `uploads()` exactly.
+    pub fn upload_counter(&self) -> &obs::Counter {
+        &self.uploads
     }
 
     pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
@@ -143,7 +153,7 @@ impl ResidentParams {
     /// top of the documented averaging budget.
     pub fn upload_rebind(&mut self, rt: &Runtime, name: &str, t: &Tensor) -> Result<()> {
         let buf = rt.upload(&tensor_to_literal(t)?)?;
-        self.uploads += 1;
+        self.uploads.inc();
         self.rebind(name, buf)
     }
 

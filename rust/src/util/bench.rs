@@ -144,7 +144,36 @@ pub fn write_json_section(path: &str, key: &str, section: Json) -> bool {
         })
         .unwrap_or_default();
     root.insert(key.to_string(), section);
+    // every JSON report carries provenance under "meta" (re-stamped on each
+    // merge, so the timestamp/commit reflect the latest writer)
+    root.insert("meta".to_string(), report_meta());
     write_report(path, &Json::Obj(root).emit())
+}
+
+/// Provenance stamp attached (as the top-level `"meta"` key) to every JSON
+/// report written through [`write_json_section`]: a schema version for the
+/// report layout, the git commit the binary was built from, and the
+/// wall-clock write time — so a `results/BENCH_*.json` found on disk is
+/// attributable without external context.
+pub fn report_meta() -> Json {
+    let git_commit = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Json::obj(vec![
+        ("schema_version", Json::int(1)),
+        ("git_commit", Json::str(&git_commit)),
+        ("unix_time", Json::int(unix_time as i64)),
+    ])
 }
 
 /// The transfer counters every runtime-backed bench surfaces in its JSON
@@ -225,6 +254,23 @@ mod tests {
         let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
         assert_eq!(root.get("a").get("x").as_i64(), Some(3));
         assert_eq!(root.get("b").get("y").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn json_sections_are_stamped_with_provenance_meta() {
+        let path = "/tmp/lrta_test_reports/meta.json";
+        let _ = std::fs::remove_file(path);
+        assert!(write_json_section(path, "results", Json::int(42)));
+        let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(root.get("results").as_i64(), Some(42));
+        let meta = root.get("meta");
+        assert_eq!(meta.get("schema_version").as_i64(), Some(1));
+        // a real 40-hex sha in a git checkout, "unknown" otherwise — but
+        // always present and non-empty
+        let commit = meta.get("git_commit").as_str().unwrap();
+        assert!(!commit.is_empty());
+        assert!(commit == "unknown" || commit.len() == 40, "commit: {commit}");
+        assert!(meta.get("unix_time").as_i64().unwrap() > 1_500_000_000);
     }
 
     #[test]

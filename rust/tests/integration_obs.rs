@@ -1,0 +1,221 @@
+//! Integration: the observability layer's overhead guard and export
+//! contracts over real artifacts.
+//!
+//! Claims pinned here:
+//! 1. **Zero-cost off switch** — a serve run and a train run with telemetry
+//!    disabled (the default no-op tracer, no registry) produce bit-identical
+//!    logits / epoch metrics / final parameters to the same run with a live
+//!    registry and tracer attached. Telemetry is observation, never
+//!    participation: attaching it must not change a single bit of the math,
+//!    and disabling it must leave nothing behind (the no-op tracer records
+//!    zero spans and never samples the clock).
+//! 2. **Export validity end-to-end** — the Chrome trace document produced
+//!    by a real traced run survives a parse round-trip and every event
+//!    carries the complete-event contract (`"ph": "X"`, integer ts/dur/tid),
+//!    and the Prometheus exposition of a live registry parses back to the
+//!    same scalar values.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise, like the other
+//! integration suites).
+
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
+use lrta::data::{Dataset, IMAGE_ELEMS};
+use lrta::freeze::FreezeMode;
+use lrta::obs::{Registry, Tracer};
+use lrta::runtime::{Manifest, Runtime};
+use lrta::serve::{Server, ServerConfig, VariantSpec};
+use lrta::util::json::Json;
+use std::time::Duration;
+
+const MODEL: &str = "resnet_mini";
+
+fn manifest() -> Option<Manifest> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(path).expect("manifest parses"))
+}
+
+fn lrd_params(m: &Manifest) -> checkpoint::Params {
+    let dense = checkpoint::load(m.init_checkpoint(MODEL).unwrap()).unwrap();
+    decompose_checkpoint(&dense, m.config(MODEL, "lrd").unwrap()).unwrap().params
+}
+
+/// Run the same request burst through a server and return (per-request
+/// logits, final stats snapshot).
+fn serve_burst(
+    m: &Manifest,
+    cfg: &ServerConfig,
+    n_batches: usize,
+) -> (Vec<Vec<f32>>, lrta::serve::StatsSnapshot) {
+    let variant = "lrd";
+    let server = Server::start(
+        m,
+        vec![VariantSpec::new(MODEL, variant, lrd_params(m))],
+        cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    let n = batch * n_batches;
+    let data = Dataset::synthetic(n, 57);
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+            server.submit(MODEL, variant, x).expect("admitted")
+        })
+        .collect();
+    let logits: Vec<Vec<f32>> = pendings
+        .iter()
+        .map(|p| p.wait(Duration::from_secs(120)).expect("served").logits)
+        .collect();
+    let snap = server.stats(MODEL, variant).unwrap();
+    server.shutdown();
+    (logits, snap)
+}
+
+/// The overhead guard, serve side: telemetry off (the default no-op tracer,
+/// no registry — the pre-obs configuration) vs telemetry on (live registry
+/// + tracer) over the same request stream. Logits and the accounting stats
+/// must match bit for bit, and the off run must record nothing.
+#[test]
+fn serve_with_telemetry_is_bit_identical_to_without() {
+    let Some(m) = manifest() else { return };
+    // generous coalescing window: every batch fills completely in both
+    // runs, so the batch/padding accounting is deterministic and comparable
+    let off_tracer = Tracer::noop();
+    let off_cfg = ServerConfig {
+        max_wait: Duration::from_secs(2),
+        tracer: off_tracer.clone(),
+        ..Default::default()
+    };
+    let (off_logits, off_snap) = serve_burst(&m, &off_cfg, 3);
+
+    let reg = Registry::new();
+    let on_tracer = Tracer::enabled();
+    let on_cfg = ServerConfig {
+        max_wait: Duration::from_secs(2),
+        registry: Some(reg.clone()),
+        tracer: on_tracer.clone(),
+        ..Default::default()
+    };
+    let (on_logits, on_snap) = serve_burst(&m, &on_cfg, 3);
+
+    // observation, not participation: not a bit of the math may move
+    assert_eq!(off_logits, on_logits, "attaching telemetry changed served logits");
+    assert_eq!(off_snap.served, on_snap.served);
+    assert_eq!(off_snap.batches, on_snap.batches);
+    assert_eq!(off_snap.errors, on_snap.errors);
+    assert_eq!(off_snap.shed, on_snap.shed);
+    assert_eq!(off_snap.padded_slots, on_snap.padded_slots);
+
+    // the disabled recorder left no trace of itself
+    assert!(!off_tracer.is_enabled());
+    assert!(off_tracer.is_empty(), "no-op tracer must record zero spans");
+
+    // the enabled run actually recorded the lifecycle and snapshots cleanly
+    assert!(!on_tracer.is_empty(), "traced run must record spans");
+    assert_eq!(reg.snapshot().scalar_sum("serve", "served"), on_snap.served);
+}
+
+/// Export validity end-to-end: the Chrome trace JSON from a real serve run
+/// parses, every event is a complete event with integer timestamps, and the
+/// Prometheus exposition round-trips to the registry's scalar values.
+#[test]
+fn trace_and_metrics_exports_are_valid_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let reg = Registry::new();
+    let tracer = Tracer::enabled();
+    let cfg = ServerConfig {
+        max_wait: Duration::from_secs(2),
+        registry: Some(reg.clone()),
+        tracer: tracer.clone(),
+        ..Default::default()
+    };
+    let (_, snap) = serve_burst(&m, &cfg, 2);
+    assert!(snap.served > 0);
+
+    // the exact document `--trace-out` writes: parse it back and hold every
+    // event to the Chrome/Perfetto complete-event contract
+    let doc = tracer.chrome_trace_json().emit();
+    let parsed = Json::parse(&doc).expect("trace export must be valid JSON");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(events.len(), tracer.len(), "export must carry every recorded span");
+    assert!(!events.is_empty());
+    for ev in events {
+        assert_eq!(ev.get("ph").as_str(), Some("X"), "complete events only: {ev:?}");
+        assert!(ev.get("name").as_str().is_some_and(|s| !s.is_empty()));
+        assert_eq!(ev.get("cat").as_str(), Some("serve"));
+        assert!(ev.get("ts").as_i64().is_some_and(|t| t >= 0));
+        assert!(ev.get("dur").as_i64().is_some_and(|d| d >= 0));
+        assert!(ev.get("pid").as_i64().is_some());
+        assert!(ev.get("tid").as_i64().is_some());
+    }
+
+    // the exact text `--metrics-out` writes: parse it back and check the
+    // series values against the snapshot they were rendered from
+    let rs = reg.snapshot();
+    let parsed = lrta::obs::parse_prometheus(&rs.prometheus_text()).unwrap();
+    let served: f64 = parsed
+        .iter()
+        .filter(|(k, _)| k.starts_with("lrta_serve_served"))
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(served, snap.served as f64, "exposition diverged from snapshot");
+}
+
+/// The overhead guard, train side: a pipelined resident run with a live
+/// tracer attached must reproduce the untraced run bit for bit — epoch
+/// metrics and final parameters/momenta alike.
+#[test]
+fn train_with_tracer_is_bit_identical_to_without() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let params = lrd_params(&m);
+    let cfg = || TrainConfig {
+        model: MODEL.into(),
+        variant: "lrd".into(),
+        freeze: FreezeMode::Sequential,
+        epochs: 2,
+        lr: LrSchedule::Fixed(5e-3),
+        train_size: 128,
+        test_size: 128,
+        seed: 0,
+        verbose: false,
+        resident: true,
+        pipelined: true,
+    };
+
+    let mut plain = Trainer::new(&rt, &m, cfg(), params.clone()).unwrap();
+    let plain_rec = plain.run().unwrap();
+
+    let mut traced = Trainer::new(&rt, &m, cfg(), params).unwrap();
+    let tracer = Tracer::enabled();
+    traced.set_tracer(tracer.clone());
+    let traced_rec = traced.run().unwrap();
+
+    assert!(!tracer.is_empty(), "traced run must record train spans");
+    assert_eq!(plain_rec.epochs.len(), traced_rec.epochs.len());
+    for (a, b) in plain_rec.epochs.iter().zip(&traced_rec.epochs) {
+        assert_eq!(a.freeze_pattern, b.freeze_pattern);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {}: loss moved", a.epoch);
+        assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "epoch {}", a.epoch);
+    }
+    for (name, t) in &plain.params {
+        assert_eq!(
+            t.data(),
+            traced.params[name].data(),
+            "param {name} diverged under tracing"
+        );
+    }
+    for (name, t) in &plain.momenta {
+        assert_eq!(
+            t.data(),
+            traced.momenta[name].data(),
+            "momentum {name} diverged under tracing"
+        );
+    }
+}

@@ -470,6 +470,90 @@ fn swap_mid_burst_never_drops_requests() {
     server.shutdown();
 }
 
+/// Observability pin: a registry attached via `ServerConfig::registry`
+/// indexes the same atomics the stats sink increments, so its snapshot
+/// matches the hand-rolled `server.stats` values exactly — per shard and in
+/// rollup — and the attached tracer covers the full request lifecycle.
+#[test]
+fn registry_and_trace_match_serving_stats_exactly() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let reg = lrta::obs::Registry::new();
+    let tracer = lrta::obs::Tracer::enabled();
+    let cfg = ServerConfig {
+        max_wait: Duration::from_millis(50),
+        registry: Some(reg.clone()),
+        tracer: tracer.clone(),
+        ..Default::default()
+    };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new(MODEL, variant, variant_params(&m, variant)).with_shards(2)],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, variant).unwrap();
+    let n = batch * 4;
+    let data = Dataset::synthetic(n, 13);
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+            server.submit(MODEL, variant, x).expect("admitted")
+        })
+        .collect();
+    for p in &pendings {
+        p.wait(Duration::from_secs(120)).expect("served");
+    }
+
+    // exact match against the hand-rolled counters: same atomics, so the
+    // rollup across both shard label sets equals the merged snapshot
+    let snap = server.stats(MODEL, variant).unwrap();
+    let rs = reg.snapshot();
+    assert_eq!(rs.scalar_sum("serve", "served"), snap.served);
+    assert_eq!(rs.scalar_sum("serve", "batches"), snap.batches);
+    assert_eq!(rs.scalar_sum("serve", "errors"), snap.errors);
+    assert_eq!(rs.scalar_sum("serve", "shed"), snap.shed);
+    assert_eq!(rs.scalar_sum("serve", "padded_slots"), snap.padded_slots);
+    // per-shard series carry model/variant/shard labels
+    let shard0 = rs.scalar(
+        "serve",
+        "served",
+        &[("model", MODEL), ("variant", variant), ("shard", "0")],
+    );
+    let shard1 = rs.scalar(
+        "serve",
+        "served",
+        &[("model", MODEL), ("variant", variant), ("shard", "1")],
+    );
+    assert_eq!(shard0.unwrap() + shard1.unwrap(), snap.served);
+    // the latency histogram recorded one sample per served request
+    let hist_count: u64 = rs
+        .entries
+        .iter()
+        .filter_map(|e| match (&e.key.name[..], &e.value) {
+            ("latency_us", lrta::obs::SnapValue::Histogram { count, .. }) => Some(*count),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(hist_count, snap.served);
+    // idle server: the queue-depth gauges have drained to zero
+    assert_eq!(rs.scalar_sum("serve", "queue_depth"), 0);
+    // the exposition round-trips
+    let parsed = lrta::obs::parse_prometheus(&rs.prometheus_text()).unwrap();
+    assert!(parsed.keys().any(|k| k.starts_with("lrta_serve_served")), "{parsed:?}");
+
+    // the trace covers the whole request lifecycle, submit → reply
+    let names: std::collections::BTreeSet<&str> =
+        tracer.events().iter().map(|e| e.name).collect();
+    for expected in
+        ["submit", "queue_wait", "coalesce", "upload", "dispatch", "fetch", "demux", "reply"]
+    {
+        assert!(names.contains(expected), "missing serve span '{expected}' in {names:?}");
+    }
+    assert!(tracer.events().iter().all(|e| e.cat == "serve"));
+    server.shutdown();
+}
+
 /// Registration satellite pin: a duplicate `(model, variant)` spec fails
 /// startup loudly instead of silently overwriting (and leaking) the first
 /// registration's workers.

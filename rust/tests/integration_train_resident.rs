@@ -319,6 +319,46 @@ fn epoch_checkpoints_persist_async_and_match_serial_path() {
 }
 
 #[test]
+fn registry_snapshot_matches_runtime_counters_exactly() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let reg = lrta::obs::Registry::new();
+    rt.register_metrics(&reg, &[]).unwrap();
+    let params = lrd_params(&m);
+
+    let mut tr =
+        Trainer::new(&rt, &m, cfg(FreezeMode::Sequential, 2, true, true), params).unwrap();
+    let tracer = lrta::obs::Tracer::enabled();
+    tr.set_tracer(tracer.clone());
+    tr.run().unwrap();
+
+    // the registry indexes the SAME atomics the runtime increments, so the
+    // snapshot must equal the hand-rolled accessors bit-for-bit — no
+    // tolerance, no double bookkeeping
+    let snap = reg.snapshot();
+    assert_eq!(snap.scalar("runtime", "uploads", &[]), Some(rt.uploads() as u64));
+    assert_eq!(snap.scalar("runtime", "fetches", &[]), Some(rt.fetches() as u64));
+    assert_eq!(
+        snap.scalar("runtime", "demux_fallbacks", &[]),
+        Some(rt.demux_fallbacks() as u64)
+    );
+    // and identically through the Prometheus text round-trip
+    let parsed = lrta::obs::parse_prometheus(&snap.prometheus_text()).unwrap();
+    assert_eq!(parsed["lrta_runtime_uploads"], rt.uploads() as f64);
+    assert_eq!(parsed["lrta_runtime_fetches"], rt.fetches() as f64);
+
+    // the trace covers the pipelined train lifecycle: prefetch_wait →
+    // upload → dispatch → fetch per step, freeze_swap at epoch boundaries,
+    // eval on the side worker
+    let names: std::collections::BTreeSet<&str> =
+        tracer.events().iter().map(|e| e.name).collect();
+    for expected in ["prefetch_wait", "upload", "dispatch", "fetch", "freeze_swap", "eval"] {
+        assert!(names.contains(expected), "missing train span '{expected}' in {names:?}");
+    }
+    assert!(tracer.events().iter().all(|e| e.cat == "train"));
+}
+
+#[test]
 fn infer_fps_runs_on_resident_params_for_both_paths() {
     let Some(m) = manifest() else { return };
     let rt = Runtime::cpu().unwrap();

@@ -22,11 +22,17 @@
 //! engine replicas — one PJRT client and resident state each — step on
 //! disjoint batch shards and average their trainable parameters at the
 //! buffer level every `LRTA_AVG_EVERY` steps (0 = epoch boundaries only).
+//! Replicas honor `LRTA_PIPELINED` the same way the single-engine run
+//! does (each replica drives the overlapped epoch loop with the barrier
+//! hooked in per step), and `LRTA_SYNC_COMPRESS` picks the barrier wire
+//! codec: `exact` (default, lossless XOR deltas) or `q8` (int8-quantized
+//! deltas, lossy).
 //!
 //! Run: `cargo run --release --example train_cifar_seqfreeze`
 //! Env:  LRTA_EPOCHS (default 10), LRTA_TRAIN (default 1024),
 //!       LRTA_RESIDENT (default 1), LRTA_PIPELINED (default 1),
-//!       LRTA_REPLICAS (default 1), LRTA_AVG_EVERY (default 0)
+//!       LRTA_REPLICAS (default 1), LRTA_AVG_EVERY (default 0),
+//!       LRTA_SYNC_COMPRESS (default exact)
 
 use anyhow::Result;
 use lrta::coordinator::{
@@ -35,7 +41,7 @@ use lrta::coordinator::{
 use lrta::freeze::FreezeMode;
 use lrta::metrics::RunRecord;
 use lrta::runtime::{Manifest, Runtime};
-use lrta::train::{run_replicas, ReplicaConfig};
+use lrta::train::{run_replicas, ReplicaConfig, SyncCompress};
 use lrta::util::bench::write_report;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -54,6 +60,9 @@ fn main() -> Result<()> {
     let pipelined = env_on("LRTA_PIPELINED");
     let replicas = env_usize("LRTA_REPLICAS", 1);
     let avg_every = env_usize("LRTA_AVG_EVERY", 0);
+    let compress = std::env::var("LRTA_SYNC_COMPRESS")
+        .map(|v| SyncCompress::parse(&v).expect("LRTA_SYNC_COMPRESS must be exact|f32|q8|int8"))
+        .unwrap_or_default();
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let rt = Runtime::cpu()?;
@@ -100,17 +109,27 @@ fn main() -> Result<()> {
             pipelined,
         };
         let record = if replicas > 1 {
-            let rcfg = ReplicaConfig { replicas, avg_every, ..Default::default() };
+            let rcfg = ReplicaConfig { replicas, avg_every, compress, ..Default::default() };
             let run = run_replicas(&manifest, &cfg, &rcfg, &decomposed.params)?;
             for r in &run.reports {
                 println!(
-                    "   replica {}: {} initial uploads + {} averaging uploads \
+                    "   replica {} ({} driver): {} initial uploads + {} averaging uploads \
                      ({} unaccounted), {} demux fallbacks",
                     r.replica,
+                    r.driver(),
                     r.initial_param_uploads,
                     r.avg_slot_uploads,
                     r.unaccounted_uploads(),
                     r.demux_fallbacks
+                );
+                println!(
+                    "      barrier [{}]: {} B exchanged of {} B full ({} B frozen-skipped, \
+                     {} B saved by delta)",
+                    compress.label(),
+                    r.avg_bytes_exchanged,
+                    r.avg_bytes_full,
+                    r.avg_bytes_skipped,
+                    r.avg_bytes_saved_by_delta()
                 );
             }
             run.record

@@ -21,6 +21,16 @@
 //! `replicas` section in results/BENCH_replicas.json (CI `train-smoke`
 //! uploads it as an artifact).
 //!
+//! A second matrix prices the averaging barrier itself under Sequential
+//! freezing: epoch driver (serial vs pipelined) crossed with the wire
+//! codec (`exact` XOR-delta vs lossy `q8`). Each row reports wall-clock
+//! fps next to the summed barrier bytes — exchanged vs the naive
+//! every-leaf-raw reference, the frozen-leaf bytes skipped outright, and
+//! what the delta encoding saved on top — plus the final test accuracy,
+//! with the q8 row checked against the exact row (bounded divergence, not
+//! a bit-pin: `Q8_ACC_BOUND`). Output: a `replica_sync` section in
+//! results/BENCH_replica_sync.json (also a CI artifact).
+//!
 //! Env: LRTA_MODEL (default resnet_mini), LRTA_REPLICAS (default 2),
 //! LRTA_AVG_EVERY (default 0), LRTA_REPLICA_TRAIN (dataset size, default
 //! 512), LRTA_REPLICA_EPOCHS (default 2)
@@ -29,7 +39,7 @@ use lrta::checkpoint;
 use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
 use lrta::freeze::FreezeMode;
 use lrta::runtime::{Manifest, Runtime};
-use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
+use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig, SyncCompress};
 use lrta::util::bench::{fmt_delta_pct, table, write_json_section, write_report};
 use lrta::util::json::Json;
 use std::time::Instant;
@@ -94,6 +104,7 @@ fn main() -> anyhow::Result<()> {
             replicas,
             avg_every,
             momenta: MomentumPolicy::Average,
+            compress: SyncCompress::Exact,
             identical_shards: false,
         };
         let t0 = Instant::now();
@@ -158,6 +169,124 @@ fn main() -> anyhow::Result<()> {
         ("residency_clean", Json::Bool(residency_clean)),
     ]);
     write_json_section("results/BENCH_replicas.json", "replicas", section);
+
+    // --- sync matrix: epoch driver x wire codec (Sequential freezing) -----
+    // the bandwidth story of the averaging barrier: how much the
+    // frozen-aware sync plan and the delta/q8 codecs take off the wire,
+    // and whether the pipelined driver holds its throughput edge with the
+    // per-step barrier hooked in
+    let sync_cfg = |pipelined: bool| TrainConfig {
+        model: model.clone(),
+        variant: "lrd".into(),
+        freeze: FreezeMode::Sequential,
+        epochs,
+        lr: LrSchedule::Fixed(1e-3),
+        train_size,
+        test_size: 128,
+        seed: 0,
+        verbose: false,
+        resident: true,
+        pipelined,
+    };
+    let batch = manifest.artifact(&format!("{model}_lrd_train_a"))?.batch;
+    // |q8 final acc - exact final acc| tolerated before the bench flags
+    // drift. Loose on purpose: tiny fine-tunes are noisy and q8 is lossy
+    // by design — the exactness guarantees live in the unit/integration
+    // tests, this bound only catches the quantizer going off the rails.
+    const Q8_ACC_BOUND: f64 = 0.15;
+    let mut sync_rows = vec![vec![
+        "driver+codec".to_string(),
+        "fps".to_string(),
+        "bytes exchanged".to_string(),
+        "of full".to_string(),
+        "skipped (frozen)".to_string(),
+        "saved by delta".to_string(),
+        "final acc".to_string(),
+    ]];
+    let mut sync_json = Vec::new();
+    let mut exact_acc = f64::NAN;
+    let mut q8_within_bound = true;
+    for (label, pipelined, compress) in [
+        ("serial+exact", false, SyncCompress::Exact),
+        ("pipelined+exact", true, SyncCompress::Exact),
+        ("pipelined+q8", true, SyncCompress::Q8),
+    ] {
+        let rcfg = ReplicaConfig {
+            replicas,
+            avg_every,
+            momenta: MomentumPolicy::Average,
+            compress,
+            identical_shards: false,
+        };
+        let t0 = Instant::now();
+        let run = run_replicas(&manifest, &sync_cfg(pipelined), &rcfg, &params)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let samples = run.reports.iter().map(|r| r.batches).sum::<usize>() * batch;
+        let fps = samples as f64 / secs;
+        let exchanged: u64 = run.reports.iter().map(|r| r.avg_bytes_exchanged).sum();
+        let full: u64 = run.reports.iter().map(|r| r.avg_bytes_full).sum();
+        let skipped: u64 = run.reports.iter().map(|r| r.avg_bytes_skipped).sum();
+        let saved: u64 = run.reports.iter().map(|r| r.avg_bytes_saved_by_delta()).sum();
+        let reduction = 1.0 - exchanged as f64 / full.max(1) as f64;
+        let acc = run.record.final_test_acc();
+        if pipelined && compress == SyncCompress::Exact {
+            exact_acc = acc;
+        }
+        let acc_delta = if compress == SyncCompress::Q8 { (acc - exact_acc).abs() } else { 0.0 };
+        if compress == SyncCompress::Q8 && acc_delta > Q8_ACC_BOUND {
+            q8_within_bound = false;
+            println!(
+                "WARNING: q8 final acc drifted {acc_delta:.3} from exact (bound {Q8_ACC_BOUND})"
+            );
+        }
+        println!(
+            "{label}: {fps:.1} fps | {exchanged} B exchanged of {full} B full | \
+             {skipped} B frozen-skipped | {saved} B saved by delta | acc {acc:.3}"
+        );
+        sync_rows.push(vec![
+            label.to_string(),
+            format!("{fps:.1}"),
+            format!("{exchanged}"),
+            format!("{:.1}%", 100.0 * (1.0 - reduction)),
+            format!("{skipped}"),
+            format!("{saved}"),
+            format!("{acc:.3}"),
+        ]);
+        sync_json.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("pipelined", Json::Bool(pipelined)),
+            ("codec", Json::str(compress.label())),
+            ("fps", Json::num(fps)),
+            ("bytes_exchanged", Json::int(exchanged as i64)),
+            ("bytes_full", Json::int(full as i64)),
+            ("bytes_skipped_frozen", Json::int(skipped as i64)),
+            ("bytes_saved_by_delta", Json::int(saved as i64)),
+            ("wire_reduction_frac", Json::num(reduction)),
+            ("final_test_acc", Json::num(acc)),
+            ("acc_delta_vs_exact", Json::num(acc_delta)),
+        ]));
+    }
+
+    let st = table(&sync_rows);
+    println!(
+        "\n{model} replica sync matrix (Sequential, {replicas} replicas, \
+         avg-every={avg_every}):\n{st}"
+    );
+    println!(
+        "q8 final acc within {Q8_ACC_BOUND} of exact: {}",
+        if q8_within_bound { "YES" } else { "NO" }
+    );
+    let sync_section = Json::obj(vec![
+        ("model", Json::str(model.as_str())),
+        ("replicas", Json::int(replicas as i64)),
+        ("avg_every", Json::int(avg_every as i64)),
+        ("train_size", Json::int(train_size as i64)),
+        ("epochs", Json::int(epochs as i64)),
+        ("q8_acc_bound", Json::num(Q8_ACC_BOUND)),
+        ("q8_within_bound", Json::Bool(q8_within_bound)),
+        ("rows", Json::arr(sync_json)),
+    ]);
+    write_json_section("results/BENCH_replica_sync.json", "replica_sync", sync_section);
     println!("train_replicas bench OK");
     Ok(())
 }

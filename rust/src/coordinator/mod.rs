@@ -21,6 +21,10 @@
 //! disjoint shards with periodic buffer-level parameter averaging), which
 //! reuses this module's schedule resolution ([`effective_pattern_suffix`])
 //! so freeze swaps stay synchronized with the single-engine semantics.
+//! The replica path honors `TrainConfig::pipelined` exactly like this
+//! module: each replica drives the overlapped epoch loop with the
+//! averaging barrier hooked in per step, or the serial loop under
+//! `--no-pipeline`.
 //! [`Trainer::checkpoint_epochs_to`] additionally persists each epoch's
 //! snapshot asynchronously ([`train::CheckpointWriter`]).
 

@@ -135,6 +135,39 @@ pub fn train_slot_bindings(meta: &crate::runtime::ArtifactMeta) -> Vec<SlotBindi
     out
 }
 
+/// Partition a train artifact's parameter slots by whether a data-parallel
+/// averaging barrier must exchange them: **trainable** slots diverge across
+/// replicas every step and must move; **frozen** slots are bit-identical on
+/// every replica by construction (identical initial upload, never stepped
+/// while frozen, and averaged while trainable before any thaw) and never
+/// move. Momentum bindings are deliberately not returned — they mirror the
+/// trainable list one-for-one and ride the caller's momentum policy.
+///
+/// Derived from [`train_slot_bindings`] (not from `meta.trainable` /
+/// `meta.frozen` directly) so the sync plan and the executable input
+/// contract can never disagree about a slot's role.
+pub fn sync_slot_partition(
+    meta: &crate::runtime::ArtifactMeta,
+) -> (Vec<&crate::runtime::ParamSlot>, Vec<&crate::runtime::ParamSlot>) {
+    let by_name: std::collections::BTreeMap<&str, &crate::runtime::ParamSlot> = meta
+        .trainable
+        .iter()
+        .chain(meta.frozen.iter())
+        .map(|s| (s.name.as_str(), s))
+        .collect();
+    let mut exchanged = Vec::with_capacity(meta.trainable.len());
+    let mut skipped = Vec::with_capacity(meta.frozen.len());
+    for b in train_slot_bindings(meta) {
+        let slot = by_name.get(b.name).copied();
+        match b.role {
+            SlotRole::Trainable => exchanged.extend(slot),
+            SlotRole::Frozen => skipped.extend(slot),
+            SlotRole::Momentum => {}
+        }
+    }
+    (exchanged, skipped)
+}
+
 /// Names a pattern swap `from → to` would have to upload fresh — i.e. slots
 /// of `to` whose parameters are not covered by `from`. Patterns of the same
 /// variant partition the same parameter universe, so this is empty and the
@@ -289,6 +322,23 @@ mod tests {
                 ("fc.w", SlotRole::Momentum),
             ]
         );
+    }
+
+    #[test]
+    fn sync_partition_mirrors_slot_bindings() {
+        let meta = meta_of(&["l.b", "fc.w"], &["l.a"]);
+        let (exchanged, skipped) = sync_slot_partition(&meta);
+        let names = |v: &[&crate::runtime::ParamSlot]| -> Vec<String> {
+            v.iter().map(|s| s.name.clone()).collect()
+        };
+        assert_eq!(names(&exchanged), vec!["l.b".to_string(), "fc.w".to_string()]);
+        assert_eq!(names(&skipped), vec!["l.a".to_string()]);
+        // slots keep their shapes, so byte planning can trust the partition
+        assert!(exchanged.iter().chain(&skipped).all(|s| s.shape == [2, 2]));
+        // an all-trainable artifact (freeze none) skips nothing
+        let (ex, sk) = sync_slot_partition(&meta_of(&["l.a", "l.b"], &[]));
+        assert_eq!(ex.len(), 2);
+        assert!(sk.is_empty());
     }
 
     #[test]

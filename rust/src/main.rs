@@ -28,7 +28,7 @@ use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::{Manifest, Runtime};
 use lrta::serve as serve_load;
 use lrta::serve::{Server, ServerConfig, StatsSnapshot, VariantSpec};
-use lrta::train::{run_replicas_traced, MomentumPolicy, ReplicaConfig};
+use lrta::train::{run_replicas_traced, MomentumPolicy, ReplicaConfig, SyncCompress};
 use lrta::util::bench::table;
 use lrta::util::cli::Args;
 use std::time::Duration;
@@ -45,7 +45,8 @@ SUBCOMMANDS
   train     --model M --variant V --freeze {none|regular|sequential}
             --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
             [--no-pipeline] [--replicas N] [--avg-every K]
-            [--momenta {avg|reset}] [--epoch-ckpts DIR]
+            [--momenta {avg|reset}] [--sync-compress {exact|q8}]
+            [--epoch-ckpts DIR]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
@@ -78,10 +79,18 @@ COMMON
 TRAIN SCALING
   --replicas N      data-parallel training: N engine replicas (one PJRT
                     client + resident state each) step on disjoint batch
-                    shards with buffer-level parameter averaging
+                    shards with buffer-level parameter averaging; the
+                    barrier follows the freeze-derived sync plan (frozen
+                    leaves never move, trainable leaves ship as deltas
+                    against the last broadcast mean) and rides the
+                    pipelined epoch driver unless --no-pipeline
   --avg-every K     average every K steps (0 = only at epoch boundaries;
                     boundaries always sync so freeze swaps stay aligned)
   --momenta P       momenta at an averaging event: avg (default) | reset
+  --sync-compress C barrier delta codec: exact (default; lossless XOR
+                    bit-deltas, bit-identical to full-tensor exchange) |
+                    q8 (int8-quantized deltas with per-leaf scales; ~4x
+                    smaller frames, lossy — bounded-divergence benched)
   --epoch-ckpts DIR persist every epoch's parameters as DIR/epoch_NNN.bin
                     on a side thread while the next epoch trains
                     (single-replica trainer only)
@@ -117,8 +126,8 @@ fn run() -> Result<()> {
         "seed", "reps", "c", "s", "k", "m", "alpha", "backend", "train-size", "test-size",
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
-        "no-pipeline", "replicas", "avg-every", "momenta", "epoch-ckpts", "shards",
-        "slo-ms", "trace-out", "metrics-out",
+        "no-pipeline", "replicas", "avg-every", "momenta", "sync-compress", "epoch-ckpts",
+        "shards", "slo-ms", "trace-out", "metrics-out",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -277,43 +286,67 @@ fn train(args: &Args) -> Result<()> {
     }
     if replicas > 1 {
         // fail loudly on flags the replica path would otherwise silently
-        // ignore: replicas always step the serial resident engine, and
-        // epoch checkpointing is single-engine only
+        // ignore: replicas always step the resident engine (the literal
+        // baseline has no buffers to average), and epoch checkpointing is
+        // single-engine only. --no-pipeline is honored: replicas select
+        // the same epoch driver as single-engine runs.
         if args.has("epoch-ckpts") {
             bail!("--epoch-ckpts is not supported with --replicas > 1 (single-engine trainer only)");
         }
-        if args.bool_or("no-resident", false) || args.bool_or("no-pipeline", false) {
+        if args.bool_or("no-resident", false) {
             bail!(
-                "--no-resident / --no-pipeline do not apply with --replicas > 1: \
-                 replicas always step the serial resident engine"
+                "--no-resident does not apply with --replicas > 1: \
+                 replicas always step the resident engine"
             );
         }
         let momenta_arg = args.str_or("momenta", "avg");
+        let compress_arg = args.str_or("sync-compress", "exact");
         let rcfg = ReplicaConfig {
             replicas,
             avg_every: args.usize_or("avg-every", 0),
             momenta: MomentumPolicy::parse(&momenta_arg)
                 .ok_or_else(|| anyhow!("unknown momentum policy '{momenta_arg}'"))?,
+            compress: SyncCompress::parse(&compress_arg)
+                .ok_or_else(|| anyhow!("unknown sync compression '{compress_arg}'"))?,
             identical_shards: false,
         };
-        let run = run_replicas_traced(&m, &cfg, &rcfg, &params, obs.tracer.clone())?;
+        let run = run_replicas_traced(
+            &m,
+            &cfg,
+            &rcfg,
+            &params,
+            obs.tracer.clone(),
+            obs.registry.clone(),
+        )?;
         println!(
-            "final test acc {:.3}; median step {:.1} ms ({replicas} replicas, avg-every={})",
+            "final test acc {:.3}; median step {:.1} ms ({replicas} replicas, avg-every={}, \
+             sync={})",
             run.record.final_test_acc(),
             run.record.median_step_secs() * 1e3,
-            rcfg.avg_every
+            rcfg.avg_every,
+            rcfg.compress.label()
         );
         for r in &run.reports {
             println!(
-                "replica {}: {} initial uploads + {} averaging uploads over {} events \
+                "replica {} [{}]: {} initial uploads + {} averaging uploads over {} events \
                  ({} unaccounted), {} demux fallbacks, {} batches",
                 r.replica,
+                r.driver(),
                 r.initial_param_uploads,
                 r.avg_slot_uploads,
                 r.avg_events,
                 r.unaccounted_uploads(),
                 r.demux_fallbacks,
                 r.batches
+            );
+            println!(
+                "replica {} barrier bytes: {} exchanged of {} full ({} skipped frozen, \
+                 {} saved by delta)",
+                r.replica,
+                r.avg_bytes_exchanged,
+                r.avg_bytes_full,
+                r.avg_bytes_skipped,
+                r.avg_bytes_saved_by_delta()
             );
         }
         if !out.is_empty() {
@@ -325,8 +358,8 @@ fn train(args: &Args) -> Result<()> {
     }
     // the mirror-image guard: replica-only flags must not silently no-op
     // on the single-engine path
-    if args.has("avg-every") || args.has("momenta") {
-        bail!("--avg-every / --momenta require --replicas > 1");
+    if args.has("avg-every") || args.has("momenta") || args.has("sync-compress") {
+        bail!("--avg-every / --momenta / --sync-compress require --replicas > 1");
     }
 
     let rt = Runtime::cpu()?;

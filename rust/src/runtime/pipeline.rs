@@ -24,6 +24,14 @@
 //! step on the device side while the host goes back to waiting on results.
 //! (The host-side batch *assembly* does run on a real worker thread — see
 //! [`crate::train::Prefetcher`] — because plain `Vec<f32>`s are `Send`.)
+//!
+//! Barriers compose with this overlap at step boundaries: the pipelined
+//! train loop runs its per-step hook (the replica averaging barrier) only
+//! after the in-flight step's outputs are fetched and absorbed, at which
+//! point the [`DoubleBuffered`] slots hold nothing but host-prepared batch
+//! uploads — no parameter state — so a hook may download, replace and
+//! rebind resident parameters without draining or invalidating the staging
+//! queue.
 
 use super::{Executable, Runtime};
 use anyhow::{bail, Result};

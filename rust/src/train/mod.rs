@@ -48,7 +48,12 @@
 //! each with its own PJRT client and [`ResidentState`] — step on disjoint
 //! batch shards ([`crate::data::Shard`]) and periodically average their
 //! trainable parameters at the buffer level, with freeze-pattern swaps
-//! synchronized across replicas at epoch boundaries. The per-epoch
+//! synchronized across replicas at epoch boundaries. The averaging
+//! barrier rides the [`sync`] plan — frozen leaves never cross the
+//! channel, trainable leaves ship as deltas against the last broadcast
+//! mean (`--sync-compress q8` quantizes them) — and composes with either
+//! epoch driver: replicas honor `TrainConfig::pipelined` through
+//! [`Engine::run_epoch_pipelined_sharded`]. The per-epoch
 //! snapshot the eval worker consumes is shared with [`CheckpointWriter`],
 //! which persists epoch N's checkpoint on a side thread while epoch N+1
 //! trains. See `ARCHITECTURE.md` at the repo root for the full system map.
@@ -58,6 +63,7 @@ pub mod eval;
 pub mod prefetch;
 pub mod replica;
 pub mod resident;
+pub mod sync;
 
 pub use ckpt::CheckpointWriter;
 pub use eval::EvalWorker;
@@ -66,6 +72,7 @@ pub use replica::{
     run_replicas, run_replicas_traced, MomentumPolicy, ReplicaConfig, ReplicaReport, ReplicaRun,
 };
 pub use resident::{MetricsAccumulator, ResidentParams, ResidentState};
+pub use sync::{SyncCompress, SyncFrame, SyncPlan};
 
 use crate::checkpoint::Params;
 use crate::data::{Dataset, Shard};
@@ -302,7 +309,47 @@ impl<'rt> Engine<'rt> {
         epoch_seed: u64,
         lr: f32,
     ) -> Result<EpochStats> {
-        let expected_batches = data.len() / meta.batch;
+        self.run_epoch_pipelined_sharded(
+            exe,
+            meta,
+            data,
+            epoch_seed,
+            lr,
+            Shard::full(),
+            &mut |_, _| Ok(()),
+        )
+    }
+
+    /// [`Engine::run_epoch_pipelined`] over one shard of the epoch's batch
+    /// stream, with `on_step` invoked after every absorbed step — the
+    /// pipelined twin of [`Engine::run_epoch_sharded`], and what lets the
+    /// data-parallel replicas keep the overlapped driver instead of
+    /// falling back to the serial loop.
+    ///
+    /// The hook's composition with the pipeline is safe by construction:
+    /// it runs after step N's outputs are demuxed and re-bound
+    /// ([`ResidentState::absorb_step_deferred`]) and after the loss/correct
+    /// pair folded into the accumulator, so no parameter-carrying work is
+    /// in flight — the [`DoubleBuffered`] pair holds at most batch N+1's
+    /// `x`/`y`, which is pure data and parameter-independent (the staged
+    /// pair is "drained" of parameter dependencies at every step boundary
+    /// without discarding the staged batch). A barrier running inside the
+    /// hook therefore sees exactly the post-step-N state the serial driver
+    /// would hand it, while its leaf downloads overlap the tail of step
+    /// N's still-asynchronous device execution; the next dispatch reads
+    /// whatever buffers the hook re-bound.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_epoch_pipelined_sharded(
+        &mut self,
+        exe: &Executable,
+        meta: &ArtifactMeta,
+        data: &Arc<Dataset>,
+        epoch_seed: u64,
+        lr: f32,
+        shard: Shard,
+        on_step: &mut dyn FnMut(&Runtime, &mut ResidentState) -> Result<()>,
+    ) -> Result<EpochStats> {
+        let expected_batches = shard.num_batches(data.len() / meta.batch);
         if self.metrics.is_none() {
             self.metrics = Some(MetricsAccumulator::create(self.rt, None)?);
         }
@@ -311,7 +358,7 @@ impl<'rt> Engine<'rt> {
             let metrics = self.metrics.as_mut().expect("just created");
             metrics.reset(self.rt)?;
         }
-        let mut pf = Prefetcher::start(Arc::clone(data), meta.batch, epoch_seed);
+        let mut pf = Prefetcher::start_sharded(Arc::clone(data), meta.batch, epoch_seed, shard);
         let mut meter = ThroughputMeter::new(meta.batch);
         let mut staged: DoubleBuffered<(xla::PjRtBuffer, xla::PjRtBuffer, usize)> =
             DoubleBuffered::new();
@@ -364,6 +411,9 @@ impl<'rt> Engine<'rt> {
             meter.record(t0.elapsed().as_secs_f64());
             samples += n;
             batches += 1;
+            // step boundary: state is fully re-bound, staged pair holds
+            // only data — safe point for the replica averaging barrier
+            on_step(self.rt, &mut self.state)?;
         }
         if batches != expected_batches {
             bail!(

@@ -1,6 +1,6 @@
-//! Multi-replica data-parallel training with buffer-level parameter
-//! averaging — the throughput multiplier on top of the device-resident
-//! engine.
+//! Multi-replica data-parallel training with bandwidth-lean buffer-level
+//! parameter averaging — the throughput multiplier on top of the
+//! device-resident engine.
 //!
 //! One [`Engine`] saturates one PJRT device. This module runs **N engine
 //! replicas**, each on its own worker thread with its own PJRT client and
@@ -17,10 +17,14 @@
 //!              └ …                                                     ┘  │
 //!        every k steps (and at each epoch boundary):                      │
 //!   ┌──────────────────────────────────────────────────────────────────┐  │
-//!   │ each replica downloads its *trainable* leaf buffers (demuxed     │◀─┘
-//!   │ per-parameter — nothing is repacked), the coordinator averages   │
-//!   │ them element-wise in f32, and each replica re-uploads the mean   │
-//!   │ into its resident buffers (upload_rebind: counted transfers)     │
+//!   │ sync plan (freeze::sync_slot_partition): frozen leaves never     │◀─┘
+//!   │ move; each replica downloads only the *trainable* leaf buffers,  │
+//!   │ encodes them as deltas vs the last broadcast mean (exact XOR     │
+//!   │ bit-deltas, or int8-quantized under --sync-compress q8), the     │
+//!   │ coordinator folds the frames into a reusable accumulator, means  │
+//!   │ in f32, and broadcasts the mean back as one shared delta frame;  │
+//!   │ replicas decode it into their baseline and re-upload in place    │
+//!   │ (upload_rebind: counted transfers; every wire byte is metered)   │
 //!   └──────────────────────────────────────────────────────────────────┘
 //! ```
 //!
@@ -29,25 +33,43 @@
 //! N replicas holding identical values the mean is bit-identical to the
 //! input (the N=2 case is exact IEEE doubling + halving), which is what
 //! lets `integration_train_replicas` pin a 2-replica run on identical
-//! shards against the 1-replica trajectory bit-for-bit. Momenta follow
-//! [`MomentumPolicy`]: [`MomentumPolicy::Average`] (default) treats the
-//! momentum of every trainable slot exactly like the parameter itself, so
-//! the post-average SGD state is the mean trajectory's state;
-//! [`MomentumPolicy::Reset`] zeroes them instead (the conservative choice
-//! when shards are statistically very different — stale per-shard momenta
-//! can point away from the averaged iterate). Frozen factors are *not*
-//! exchanged: they start identical, are never stepped, and every epoch
-//! that thaws them under Algorithm 2 averages them while trainable — the
-//! boundary average is therefore mandatory, not an optimization.
+//! shards against the 1-replica trajectory bit-for-bit. The delta wire
+//! format preserves that argument because the exact codec is a *bit*
+//! delta (XOR), losslessly invertible — see [`super::sync`] for the
+//! codec, the `last` baseline lockstep, and why an arithmetic f32 delta
+//! would break the pin. Momenta follow [`MomentumPolicy`]:
+//! [`MomentumPolicy::Average`] (default) treats the momentum of every
+//! trainable slot exactly like the parameter itself, so the post-average
+//! SGD state is the mean trajectory's state; [`MomentumPolicy::Reset`]
+//! zeroes them instead (the conservative choice when shards are
+//! statistically very different — stale per-shard momenta can point away
+//! from the averaged iterate). Frozen factors are *never* exchanged:
+//! they start identical, are never stepped, and every epoch that thaws
+//! them under Algorithm 2 averages them while trainable — the boundary
+//! average is therefore mandatory, not an optimization, and it is also
+//! what keeps every replica's (and the coordinator's) delta baselines in
+//! lockstep across freeze-pattern swaps.
 //!
 //! Averaging is **host-mediated** by design: each replica owns a separate
 //! PJRT client, and buffers of different clients cannot meet in one device
 //! computation — an XLA averaging computation (lowered like `metrics_acc`)
 //! could only average buffers *within* one client, which is the wrong
-//! topology here. The download → f32 mean → upload path costs exactly
-//! `2 · |trainable|` transfers per replica per event, every one of them
-//! counted ([`crate::train::ResidentParams::upload_rebind`]) so tests can
-//! assert nothing else crossed the boundary.
+//! topology here. The download → delta-encode → f32 mean → decode → upload
+//! path costs exactly `2 · |trainable|` transfers per replica per event,
+//! every one of them counted
+//! ([`crate::train::ResidentParams::upload_rebind`]), and its wire bytes
+//! are metered per replica (`lrta_train_barrier_bytes_{exchanged,skipped,
+//! full}` under a `{replica}` label) so tests can assert nothing else
+//! crossed the boundary — including that frozen leaves contribute zero
+//! bytes.
+//!
+//! **Epoch driver**: replicas honor `TrainConfig::pipelined` like the
+//! single-engine trainer — the averaging cadence rides the per-step hook
+//! of [`Engine::run_epoch_pipelined_sharded`] (or
+//! [`Engine::run_epoch_sharded`] under `--no-pipeline`), so barrier leaf
+//! downloads overlap the tail of the last dispatched step instead of
+//! forcing the whole run onto the serial loop. Each replica's report says
+//! which driver it used.
 //!
 //! **Freeze-pattern synchronization**: every replica runs the same
 //! [`FreezeScheduler`] over the same epoch indices, so Algorithm 2's a↔b
@@ -57,10 +79,12 @@
 //! the single-engine path.
 //!
 //! The coordinator (the caller's thread) is pure host logic: it collects
-//! per-event contributions, averages, broadcasts, folds per-replica epoch
-//! stats into one [`RunRecord`], and re-raises the first replica failure.
-//! Replica 0 additionally evaluates the (averaged) model each epoch on its
-//! resident buffers and reports the run's final parameters.
+//! per-event contribution frames, folds them through the persistent
+//! [`MeanState`] accumulator (allocated once, reused every barrier),
+//! broadcasts the mean frame, folds per-replica epoch stats into one
+//! [`RunRecord`], and re-raises the first replica failure. Replica 0
+//! additionally evaluates the (averaged) model each epoch on its resident
+//! buffers and reports the run's final parameters.
 
 use crate::checkpoint::Params;
 use crate::coordinator::{
@@ -69,10 +93,11 @@ use crate::coordinator::{
 use crate::data::{Dataset, Shard};
 use crate::freeze::FreezeScheduler;
 use crate::metrics::{EpochRecord, RunRecord};
-use crate::obs::Tracer;
+use crate::obs::{Counter, Registry, Tracer};
 use crate::runtime::{download_tensor, ArtifactMeta, Manifest, Runtime};
 use crate::tensor::Tensor;
-use crate::train::{Engine, ResidentState};
+use crate::train::sync::{MeanState, ReplicaSyncState, SyncFrame, SyncPlan};
+use crate::train::{Engine, MetricsAccumulator, ResidentState, SyncCompress};
 use anyhow::{anyhow, bail, Result};
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -86,7 +111,8 @@ pub enum MomentumPolicy {
     Average,
     /// Zero momenta after every averaging event: discards per-shard
     /// momentum that may point away from the averaged iterate, at the cost
-    /// of re-warming the optimizer after each event.
+    /// of re-warming the optimizer after each event. Ships zero momentum
+    /// bytes in either direction (the zeros are synthesized locally).
     Reset,
 }
 
@@ -113,6 +139,10 @@ pub struct ReplicaConfig {
     pub avg_every: usize,
     /// What happens to momenta at an averaging event.
     pub momenta: MomentumPolicy,
+    /// Wire codec for the barrier's delta exchange
+    /// ([`SyncCompress::Exact`] keeps the bit-for-bit parity pin;
+    /// `--sync-compress q8` trades it for ~4× smaller frames).
+    pub compress: SyncCompress,
     /// Give every replica the *full* batch stream instead of a disjoint
     /// shard. Parity testing only: N identical replicas must reproduce the
     /// single-engine trajectory bit-for-bit.
@@ -125,6 +155,7 @@ impl Default for ReplicaConfig {
             replicas: 2,
             avg_every: 0,
             momenta: MomentumPolicy::Average,
+            compress: SyncCompress::Exact,
             identical_shards: false,
         }
     }
@@ -134,7 +165,11 @@ impl Default for ReplicaConfig {
 /// single-engine "zero re-uploads" claim: across a whole run,
 /// `param_uploads == initial_param_uploads + avg_slot_uploads` — steps
 /// chain buffer-to-buffer and freeze-pattern swaps re-bind, so *only* the
-/// documented averaging traffic crosses the host boundary.
+/// documented averaging traffic crosses the host boundary. The byte
+/// fields price that traffic: `avg_bytes_full` is the naive
+/// every-leaf-raw-f32 reference, `avg_bytes_skipped` what the frozen-leaf
+/// skip avoided, `avg_bytes_exchanged` the encoded bytes that actually
+/// moved (both directions).
 #[derive(Clone, Debug)]
 pub struct ReplicaReport {
     /// Replica index (`0..replicas`).
@@ -149,6 +184,17 @@ pub struct ReplicaReport {
     /// Counted uploads attributable to averaging (`Σ` over events of
     /// params + momenta re-uploaded).
     pub avg_slot_uploads: usize,
+    /// Encoded barrier bytes this replica actually exchanged, both
+    /// directions (contribution frames sent + broadcast frames received).
+    pub avg_bytes_exchanged: u64,
+    /// Bytes the frozen-leaf skip kept off the wire (raw-f32 priced,
+    /// both directions, summed over events).
+    pub avg_bytes_skipped: u64,
+    /// Bytes a naive full-universe raw-f32 exchange would have moved
+    /// (all param leaves — frozen included — plus averaged momenta).
+    pub avg_bytes_full: u64,
+    /// Which epoch driver stepped this replica (`TrainConfig::pipelined`).
+    pub pipelined: bool,
     /// Demux fallbacks on this replica's runtime (0 = fully
     /// buffer-chained).
     pub demux_fallbacks: usize,
@@ -162,6 +208,22 @@ impl ReplicaReport {
     /// re-upload).
     pub fn unaccounted_uploads(&self) -> usize {
         self.param_uploads - self.initial_param_uploads - self.avg_slot_uploads
+    }
+
+    /// Bytes the delta/quantize encoding saved on top of the frozen-leaf
+    /// skip. Non-negative by construction: every codec falls back to raw
+    /// f32 per leaf whenever encoding would not win.
+    pub fn avg_bytes_saved_by_delta(&self) -> u64 {
+        (self.avg_bytes_full - self.avg_bytes_skipped).saturating_sub(self.avg_bytes_exchanged)
+    }
+
+    /// Human label of the epoch driver this replica ran.
+    pub fn driver(&self) -> &'static str {
+        if self.pipelined {
+            "pipelined"
+        } else {
+            "serial"
+        }
     }
 }
 
@@ -181,15 +243,6 @@ pub struct ReplicaRun {
     pub reports: Vec<ReplicaReport>,
 }
 
-/// One replica's contribution to (or the broadcast result of) an
-/// averaging event: the current pattern's trainable parameters, plus their
-/// momenta under [`MomentumPolicy::Average`].
-#[derive(Clone)]
-struct AvgPayload {
-    params: Params,
-    momenta: Params,
-}
-
 /// Everything a replica reports back on completion.
 struct ReplicaOutcome {
     report: ReplicaReport,
@@ -202,7 +255,8 @@ struct ReplicaOutcome {
 enum ToCoord {
     /// Contribution to averaging barrier `event` (a global ordinal; every
     /// replica must be at the same one — anything else is a desync bug).
-    Avg { replica: usize, event: u64, payload: AvgPayload },
+    /// The frame holds delta-encoded trainable leaves per the sync plan.
+    Avg { replica: usize, event: u64, frame: SyncFrame },
     /// One epoch's local stats (sums, so the coordinator can weight them).
     Epoch {
         replica: usize,
@@ -235,10 +289,14 @@ struct ReplicaJob {
     train_data: Arc<Dataset>,
     test_data: Arc<Dataset>,
     to_coord: mpsc::Sender<ToCoord>,
-    from_coord: mpsc::Receiver<Arc<AvgPayload>>,
+    from_coord: mpsc::Receiver<Arc<SyncFrame>>,
     /// Span recorder shared with the coordinator — each replica thread
     /// records into its own lane of the same ring.
     tracer: Tracer,
+    /// Metrics registry (`--metrics-out`): each replica registers its
+    /// barrier byte counters and runtime transfer counters under a
+    /// `{replica}` label.
+    registry: Option<Registry>,
 }
 
 /// Run `cfg.epochs` of data-parallel training across `rcfg.replicas`
@@ -246,31 +304,33 @@ struct ReplicaJob {
 /// first, as with [`crate::coordinator::Trainer`]); momenta start at zero
 /// on every replica.
 ///
-/// Each replica steps through the *serial* resident engine —
-/// `cfg.resident` / `cfg.pipelined` are ignored here: the averaging
-/// barrier is a synchronization point the overlapped epoch driver cannot
-/// currently cross (staged batches would straddle the barrier), and the
-/// serial loop is also what keeps the identical-shard parity argument
-/// exact. Overlapping the barrier itself is a ROADMAP follow-on.
+/// Replicas honor `cfg.pipelined` (the same flag single-engine runs use):
+/// the averaging barrier composes with the overlapped driver through the
+/// per-step hook of [`Engine::run_epoch_pipelined_sharded`]. `cfg.resident`
+/// is ignored — replicas always step the resident engine (the literal
+/// baseline has no buffers to average).
 pub fn run_replicas(
     manifest: &Manifest,
     cfg: &TrainConfig,
     rcfg: &ReplicaConfig,
     params: &Params,
 ) -> Result<ReplicaRun> {
-    run_replicas_traced(manifest, cfg, rcfg, params, Tracer::default())
+    run_replicas_traced(manifest, cfg, rcfg, params, Tracer::default(), None)
 }
 
-/// [`run_replicas`] with lifecycle span tracing: every replica records its
-/// `average_barrier` spans (download → barrier wait → mean re-upload) into
-/// `tracer`, one lane per replica thread — the multi-replica half of
-/// `lrta train --trace-out`.
+/// [`run_replicas`] with observability wired in: every replica records its
+/// `average_barrier` spans — split into `barrier_download` /
+/// `barrier_wait` / `barrier_upload` children — into `tracer`, one lane
+/// per replica thread, and registers its barrier byte counters (and its
+/// runtime's transfer counters) in `registry` under a `{replica}` label.
+/// The multi-replica half of `lrta train --trace-out / --metrics-out`.
 pub fn run_replicas_traced(
     manifest: &Manifest,
     cfg: &TrainConfig,
     rcfg: &ReplicaConfig,
     params: &Params,
     tracer: Tracer,
+    registry: Option<Registry>,
 ) -> Result<ReplicaRun> {
     if rcfg.replicas == 0 {
         bail!("replica count must be positive");
@@ -307,7 +367,7 @@ pub fn run_replicas_traced(
     let mut reply_txs = Vec::with_capacity(rcfg.replicas);
     let mut joins = Vec::with_capacity(rcfg.replicas);
     for idx in 0..rcfg.replicas {
-        let (reply_tx, reply_rx) = mpsc::channel::<Arc<AvgPayload>>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Arc<SyncFrame>>();
         reply_txs.push(reply_tx);
         let job = ReplicaJob {
             idx,
@@ -321,6 +381,7 @@ pub fn run_replicas_traced(
             to_coord: to_coord.clone(),
             from_coord: reply_rx,
             tracer: tracer.clone(),
+            registry: registry.clone(),
         };
         joins.push(
             thread::Builder::new()
@@ -331,7 +392,7 @@ pub fn run_replicas_traced(
     }
     drop(to_coord); // coordinator's recv ends when every replica exits
 
-    let result = coordinate(cfg, rcfg, from_replicas, &reply_txs);
+    let result = coordinate(cfg, rcfg, params, &momenta, from_replicas, &reply_txs);
     // on coordinator failure, dropping the reply senders unblocks any
     // replica waiting inside an averaging barrier so the joins terminate
     drop(reply_txs);
@@ -348,12 +409,16 @@ pub fn run_replicas_traced(
 
 /// The coordinator loop: collect averaging contributions, broadcast means,
 /// fold epoch stats, and assemble the combined record once every replica
-/// reported completion.
+/// reported completion. `params`/`momenta` seed the delta baselines —
+/// the same initial state every replica uploads, so both sides of the
+/// channel decode against identical references from the first barrier on.
 fn coordinate(
     cfg: &TrainConfig,
     rcfg: &ReplicaConfig,
+    params: &Params,
+    momenta: &Params,
     rx: mpsc::Receiver<ToCoord>,
-    reply_txs: &[mpsc::Sender<Arc<AvgPayload>>],
+    reply_txs: &[mpsc::Sender<Arc<SyncFrame>>],
 ) -> Result<ReplicaRun> {
     let n = rcfg.replicas;
 
@@ -371,7 +436,10 @@ fn coordinate(
     }
     let blank = EpochAcc { shards: vec![None; n], test_acc: f64::NAN };
     let mut epochs = vec![blank; cfg.epochs];
-    let mut pending: Vec<Option<AvgPayload>> = (0..n).map(|_| None).collect();
+    // persistent fold state: `last` baselines plus the reusable mean
+    // accumulator (allocated at the first barrier, reused ever after)
+    let mut mean_state = MeanState::new(params, momenta, rcfg.compress);
+    let mut pending: Vec<Option<SyncFrame>> = (0..n).map(|_| None).collect();
     let mut pending_event: Option<u64> = None;
     let mut outcomes: Vec<Option<ReplicaOutcome>> = (0..n).map(|_| None).collect();
     let mut done = 0usize;
@@ -381,7 +449,7 @@ fn coordinate(
             .recv()
             .map_err(|_| anyhow!("all replica threads exited before reporting completion"))?;
         match msg {
-            ToCoord::Avg { replica, event, payload } => {
+            ToCoord::Avg { replica, event, frame } => {
                 match pending_event {
                     None => pending_event = Some(event),
                     Some(e) if e == event => {}
@@ -390,16 +458,17 @@ fn coordinate(
                          barrier open at {e}"
                     ),
                 }
-                if pending[replica].replace(payload).is_some() {
+                if pending[replica].replace(frame).is_some() {
                     bail!("replica {replica} contributed twice to averaging event {event}");
                 }
                 if pending.iter().all(|p| p.is_some()) {
-                    let contributions: Vec<AvgPayload> =
+                    let contributions: Vec<SyncFrame> =
                         pending.iter_mut().map(|p| p.take().expect("all present")).collect();
-                    // one shared mean per barrier: receivers only read
-                    // it to re-upload, so an Arc avoids N deep clones of
-                    // the full trainable set on the coordinator thread
-                    let mean = Arc::new(average_payloads(contributions)?);
+                    // fold in replica-index order into the persistent
+                    // accumulator; one shared broadcast frame per barrier
+                    // (receivers only decode it, so an Arc avoids N deep
+                    // clones on the coordinator thread)
+                    let mean = Arc::new(mean_state.average(&contributions)?);
                     for tx in reply_txs {
                         tx.send(Arc::clone(&mean))
                             .map_err(|_| anyhow!("replica exited mid-averaging-barrier"))?;
@@ -504,48 +573,6 @@ fn coordinate(
     Ok(ReplicaRun { record, params, momenta, reports })
 }
 
-/// Element-wise f32 mean of the replicas' payloads, summed in replica
-/// order (deterministic, and exact for identical contributions).
-fn average_payloads(contributions: Vec<AvgPayload>) -> Result<AvgPayload> {
-    let n = contributions.len();
-    let mut iter = contributions.into_iter();
-    let first = iter.next().expect("at least one replica");
-    let (mut params, mut momenta) = (first.params, first.momenta);
-    for c in iter {
-        accumulate(&mut params, &c.params)?;
-        accumulate(&mut momenta, &c.momenta)?;
-    }
-    for t in params.values_mut().chain(momenta.values_mut()) {
-        for v in t.data_mut() {
-            *v /= n as f32;
-        }
-    }
-    Ok(AvgPayload { params, momenta })
-}
-
-/// `acc += other`, element-wise, demanding identical key sets and shapes.
-fn accumulate(acc: &mut Params, other: &Params) -> Result<()> {
-    if acc.len() != other.len() {
-        bail!(
-            "averaging contributions disagree on slot count ({} vs {})",
-            acc.len(),
-            other.len()
-        );
-    }
-    for (name, t) in acc.iter_mut() {
-        let o = other
-            .get(name)
-            .ok_or_else(|| anyhow!("averaging contribution missing slot '{name}'"))?;
-        if o.shape() != t.shape() {
-            bail!("averaging contribution shape mismatch for '{name}'");
-        }
-        for (a, b) in t.data_mut().iter_mut().zip(o.data()) {
-            *a += *b;
-        }
-    }
-    Ok(())
-}
-
 /// Thread entry: run the replica and report the outcome, whatever it is.
 ///
 /// A *panic* must reach the coordinator just like an `Err` does —
@@ -588,9 +615,24 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         to_coord,
         from_coord,
         tracer,
+        registry,
     } = job;
     let rt = Runtime::cpu()?;
     let scheduler = FreezeScheduler::new(cfg.freeze);
+
+    // barrier byte meters — registered under this replica's label so the
+    // Prometheus exposition carries per-replica wire accounting
+    let bytes_exchanged = Counter::new();
+    let bytes_skipped = Counter::new();
+    let bytes_full = Counter::new();
+    if let Some(reg) = &registry {
+        let label = idx.to_string();
+        let labels: [(&str, &str); 1] = [("replica", &label)];
+        reg.register_counter("train", "barrier_bytes_exchanged", &labels, &bytes_exchanged)?;
+        reg.register_counter("train", "barrier_bytes_skipped", &labels, &bytes_skipped)?;
+        reg.register_counter("train", "barrier_bytes_full", &labels, &bytes_full)?;
+        rt.register_metrics(reg, &labels)?;
+    }
 
     // one executable per scheduled pattern, compiled on this replica's own
     // client — the same schedule resolution the single-engine trainer uses
@@ -613,12 +655,25 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
 
     let mut engine = Engine::upload(&rt, &params, &momenta)?;
     engine.set_tracer(tracer.clone());
+    if cfg.pipelined {
+        // the overlapped driver folds loss/correct on device; use the
+        // manifest-lowered accumulator like the single-engine trainer
+        engine.attach_metrics(MetricsAccumulator::create(&rt, Some(&manifest))?);
+    }
+    if cfg.verbose {
+        let driver = if cfg.pipelined { "pipelined" } else { "serial" };
+        println!("[replica {idx}] epoch driver: {driver}");
+    }
     let initial_param_uploads = engine.param_uploads();
     let mut barrier = AvgBarrier {
         replica: idx,
         policy: rcfg.momenta,
         events: 0,
         slot_uploads: 0,
+        sync: ReplicaSyncState::new(&params, &momenta, rcfg.compress),
+        bytes_exchanged,
+        bytes_skipped,
+        bytes_full,
         to_coord: &to_coord,
         from_coord: &from_coord,
         tracer: &tracer,
@@ -636,34 +691,45 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         // synchronized across replicas because every replica runs the same
         // scheduler over the same epoch index
         engine.state().rebind_for(meta)?;
+        // what this epoch's barriers exchange and skip, priced in bytes —
+        // recomputed per epoch because a↔b swaps change the partition
+        let plan = SyncPlan::of(meta, rcfg.momenta == MomentumPolicy::Average);
 
-        // the shared single-engine epoch loop over this replica's shard;
-        // the averaging cadence rides the per-step hook (the step meter
-        // times the local step — barrier waits show up in wall-clock, not
-        // step latency, because averaging happens outside the timed step)
+        // the shared epoch loop over this replica's shard — pipelined or
+        // serial per cfg.pipelined, averaging cadence riding the per-step
+        // hook either way (the step meter times the local step — barrier
+        // waits show up in wall-clock, not step latency, because averaging
+        // happens outside the timed step)
         let epoch_seed = cfg.seed ^ epoch as u64;
         let mut since_avg = 0usize;
-        let stats = engine.run_epoch_sharded(
-            exe,
-            meta,
-            &train_data,
-            epoch_seed,
-            lr,
-            shard,
-            &mut |rt, state| {
-                since_avg += 1;
-                if rcfg.avg_every > 0 && since_avg == rcfg.avg_every {
-                    barrier.average(rt, state, meta)?;
-                    since_avg = 0;
-                }
-                Ok(())
-            },
-        )?;
+        let mut hook = |rt: &Runtime, state: &mut ResidentState| {
+            since_avg += 1;
+            if rcfg.avg_every > 0 && since_avg == rcfg.avg_every {
+                barrier.average(rt, state, meta, &plan)?;
+                since_avg = 0;
+            }
+            Ok(())
+        };
+        let stats = if cfg.pipelined {
+            engine.run_epoch_pipelined_sharded(
+                exe,
+                meta,
+                &train_data,
+                epoch_seed,
+                lr,
+                shard,
+                &mut hook,
+            )?
+        } else {
+            engine.run_epoch_sharded(exe, meta, &train_data, epoch_seed, lr, shard, &mut hook)?
+        };
         // mandatory boundary average (unless the cadence just did it):
         // after this, frozen↔trainable role swaps are safe because every
-        // replica agrees on the whole parameter universe
+        // replica agrees on the whole parameter universe — and the delta
+        // baselines stay valid for leaves that freeze next epoch (a frozen
+        // leaf's resident value *is* its last broadcast value)
         if since_avg > 0 {
-            barrier.average(&rt, engine.state_mut(), meta)?;
+            barrier.average(&rt, engine.state_mut(), meta, &plan)?;
         }
         total_batches += stats.batches;
         to_coord
@@ -691,6 +757,10 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         param_uploads: engine.param_uploads(),
         avg_events: barrier.events,
         avg_slot_uploads: barrier.slot_uploads,
+        avg_bytes_exchanged: barrier.bytes_exchanged.get(),
+        avg_bytes_skipped: barrier.bytes_skipped.get(),
+        avg_bytes_full: barrier.bytes_full.get(),
+        pipelined: cfg.pipelined,
         demux_fallbacks: rt.demux_fallbacks(),
         batches: total_batches,
     };
@@ -706,58 +776,92 @@ struct AvgBarrier<'a> {
     events: usize,
     /// Counted uploads performed by averaging (params + momenta).
     slot_uploads: usize,
+    /// Delta baselines (`last` broadcast mean per leaf) — mutated only by
+    /// decoding broadcast frames, in lockstep with the coordinator.
+    sync: ReplicaSyncState,
+    /// Encoded wire bytes actually exchanged (send + receive).
+    bytes_exchanged: Counter,
+    /// Raw-f32 bytes the frozen-leaf skip avoided.
+    bytes_skipped: Counter,
+    /// Raw-f32 bytes of the naive full-universe exchange (reference).
+    bytes_full: Counter,
     to_coord: &'a mpsc::Sender<ToCoord>,
-    from_coord: &'a mpsc::Receiver<Arc<AvgPayload>>,
+    from_coord: &'a mpsc::Receiver<Arc<SyncFrame>>,
     tracer: &'a Tracer,
 }
 
 impl AvgBarrier<'_> {
-    /// Download the current pattern's trainable leaves, contribute them,
-    /// block for the mean, and re-upload it into the resident buffers.
-    /// Runs inside [`Engine::run_epoch_sharded`]'s per-step hook (and once
-    /// more at the epoch boundary), so it sees the state between steps.
+    /// One barrier: download the sync plan's exchanged leaves, contribute
+    /// their deltas, block for the mean frame, decode it into the baseline
+    /// and re-upload in place. Runs inside the epoch driver's per-step
+    /// hook (and once more at the epoch boundary), so it sees the state
+    /// between steps; under the pipelined driver the leaf downloads here
+    /// are what overlaps the tail of the last dispatched step.
     fn average(
         &mut self,
         rt: &Runtime,
         state: &mut ResidentState,
         meta: &ArtifactMeta,
+        plan: &SyncPlan,
     ) -> Result<()> {
         let span = self.tracer.start();
         self.events += 1;
-        let mut payload = AvgPayload { params: Params::new(), momenta: Params::new() };
-        for slot in &meta.trainable {
+
+        // download + delta-encode the exchanged leaves (frozen leaves are
+        // not in the plan: zero downloads, zero bytes)
+        let d_t0 = self.tracer.start();
+        let mut leaf_params: Vec<(String, Tensor)> = Vec::with_capacity(plan.exchanged.len());
+        let mut leaf_momenta: Vec<(String, Tensor)> = Vec::new();
+        for (name, _) in &plan.exchanged {
             let buf = state
                 .params
-                .get(&slot.name)
-                .ok_or_else(|| anyhow!("no resident buffer for '{}'", slot.name))?;
-            payload.params.insert(slot.name.clone(), download_tensor(buf)?);
+                .get(name)
+                .ok_or_else(|| anyhow!("no resident buffer for '{name}'"))?;
+            leaf_params.push((name.clone(), download_tensor(buf)?));
             if self.policy == MomentumPolicy::Average {
                 let mbuf = state
                     .momenta
-                    .get(&slot.name)
-                    .ok_or_else(|| anyhow!("no resident momentum for '{}'", slot.name))?;
-                payload.momenta.insert(slot.name.clone(), download_tensor(mbuf)?);
+                    .get(name)
+                    .ok_or_else(|| anyhow!("no resident momentum for '{name}'"))?;
+                leaf_momenta.push((name.clone(), download_tensor(mbuf)?));
             }
         }
+        let frame = self.sync.encode_contribution(&leaf_params, &leaf_momenta)?;
+        self.tracer.end(d_t0, "train", "barrier_download");
+        let sent_bytes = frame.wire_bytes();
+
         self.to_coord
-            .send(ToCoord::Avg { replica: self.replica, event: self.events as u64, payload })
+            .send(ToCoord::Avg { replica: self.replica, event: self.events as u64, frame })
             .map_err(|_| anyhow!("coordinator exited during averaging"))?;
+        let w_t0 = self.tracer.start();
         let mean = self
             .from_coord
             .recv()
             .map_err(|_| anyhow!("coordinator closed the averaging barrier"))?;
-        for (name, t) in &mean.params {
+        self.tracer.end(w_t0, "train", "barrier_wait");
+
+        // decode into the baseline (it then *is* the next barrier's
+        // reference) and re-upload the mean into the resident buffers
+        let u_t0 = self.tracer.start();
+        self.sync.apply_broadcast(&mean)?;
+        for (name, _) in &mean.params {
+            let t = self.sync.last_param(name).ok_or_else(|| anyhow!("no baseline for '{name}'"))?;
             state.params.upload_rebind(rt, name, t)?;
             self.slot_uploads += 1;
         }
         match self.policy {
             MomentumPolicy::Average => {
-                for (name, t) in &mean.momenta {
+                for (name, _) in &mean.momenta {
+                    let t = self
+                        .sync
+                        .last_momentum(name)
+                        .ok_or_else(|| anyhow!("no momentum baseline for '{name}'"))?;
                     state.momenta.upload_rebind(rt, name, t)?;
                     self.slot_uploads += 1;
                 }
             }
             MomentumPolicy::Reset => {
+                // synthesized locally: zero wire bytes in either direction
                 for slot in &meta.trainable {
                     let zero = Tensor::zeros(&slot.shape);
                     state.momenta.upload_rebind(rt, &slot.name, &zero)?;
@@ -765,6 +869,11 @@ impl AvgBarrier<'_> {
                 }
             }
         }
+        self.tracer.end(u_t0, "train", "barrier_upload");
+
+        self.bytes_exchanged.add(sent_bytes + mean.wire_bytes());
+        self.bytes_skipped.add(plan.skipped_bytes());
+        self.bytes_full.add(plan.full_bytes());
         self.tracer.end(span, "train", "average_barrier");
         Ok(())
     }
@@ -782,45 +891,24 @@ mod tests {
         assert_eq!(MomentumPolicy::parse("x"), None);
     }
 
-    fn payload(vals: &[f32]) -> AvgPayload {
-        let mut params = Params::new();
-        params.insert("w".into(), Tensor::new(&[vals.len()], vals.to_vec()));
-        AvgPayload { params, momenta: Params::new() }
-    }
-
     #[test]
-    fn averaging_identical_contributions_is_bit_exact() {
-        // the parity argument of the 2-replica bit-for-bit test: a+a is an
-        // exact IEEE doubling and /2 an exact halving, so mean(a, a) == a
-        let vals = [1.0f32, -0.37, 3.5e-8, 1234.5678, f32::MIN_POSITIVE];
-        let mean = average_payloads(vec![payload(&vals), payload(&vals)]).unwrap();
-        let got = mean.params.get("w").unwrap().data();
-        for (g, v) in got.iter().zip(&vals) {
-            assert_eq!(g.to_bits(), v.to_bits(), "{g} vs {v}");
-        }
-    }
-
-    #[test]
-    fn averaging_is_the_elementwise_mean() {
-        let mean = average_payloads(vec![payload(&[1.0, 2.0]), payload(&[3.0, 6.0])]).unwrap();
-        assert_eq!(mean.params.get("w").unwrap().data(), &[2.0, 4.0]);
-    }
-
-    #[test]
-    fn mismatched_contributions_are_rejected() {
-        // different slot counts
-        let mut extra = payload(&[1.0]);
-        extra.params.insert("v".into(), Tensor::zeros(&[1]));
-        assert!(average_payloads(vec![payload(&[1.0]), extra]).is_err());
-        // same count, different names
-        let mut other = Params::new();
-        other.insert("u".into(), Tensor::zeros(&[1]));
-        let other = AvgPayload { params: other, momenta: Params::new() };
-        assert!(average_payloads(vec![payload(&[1.0]), other]).is_err());
-        // same name, different shape
-        let mut shaped = Params::new();
-        shaped.insert("w".into(), Tensor::zeros(&[2]));
-        let shaped = AvgPayload { params: shaped, momenta: Params::new() };
-        assert!(average_payloads(vec![payload(&[1.0]), shaped]).is_err());
+    fn report_accounting_is_exact() {
+        let report = ReplicaReport {
+            replica: 0,
+            initial_param_uploads: 10,
+            param_uploads: 26,
+            avg_events: 2,
+            avg_slot_uploads: 16,
+            avg_bytes_exchanged: 300,
+            avg_bytes_skipped: 200,
+            avg_bytes_full: 1000,
+            pipelined: true,
+            demux_fallbacks: 0,
+            batches: 8,
+        };
+        assert_eq!(report.unaccounted_uploads(), 0);
+        // saved-by-delta = (full − skipped) − exchanged
+        assert_eq!(report.avg_bytes_saved_by_delta(), 500);
+        assert_eq!(report.driver(), "pipelined");
     }
 }

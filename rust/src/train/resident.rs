@@ -150,7 +150,10 @@ impl ResidentParams {
     /// the one legitimate reason, after the initial upload, for a parameter
     /// to cross the host boundary — and counting it here is what lets tests
     /// pin that steps and freeze-pattern swaps contributed zero uploads on
-    /// top of the documented averaging budget.
+    /// top of the documented averaging budget. The averaging barrier only
+    /// calls this for the sync plan's exchanged leaves (the decoded
+    /// broadcast mean from [`crate::train::sync`]); frozen leaves never
+    /// reach it.
     pub fn upload_rebind(&mut self, rt: &Runtime, name: &str, t: &Tensor) -> Result<()> {
         let buf = rt.upload(&tensor_to_literal(t)?)?;
         self.uploads.inc();

@@ -1,0 +1,744 @@
+//! Bandwidth-lean replica synchronization: the sync plan, delta codecs,
+//! and the coordinator's reusable mean accumulator.
+//!
+//! The averaging barrier in [`super::replica`] used to ship every
+//! parameter leaf as full-width f32 in both directions. This module is
+//! the "exchange less" layer that replaces that wire format:
+//!
+//! 1. **Sync plan** ([`SyncPlan`]) — computed per epoch from
+//!    [`crate::freeze::sync_slot_partition`] (itself derived from
+//!    `train_slot_bindings`, the executable input contract). Frozen
+//!    leaves are bit-identical on every replica by construction — same
+//!    initial upload, never stepped while frozen, averaged while
+//!    trainable before any thaw — so they are never downloaded from the
+//!    device and never cross the channel. The plan also prices the
+//!    exchange (full-universe / skipped / raw-trainable bytes) so the
+//!    barrier's byte counters are exact, not estimated.
+//!
+//! 2. **Delta codecs** ([`LeafDelta`]) — trainable leaves exchange as
+//!    *deltas against the last broadcast mean* rather than raw tensors.
+//!    Both sides of the channel keep a `last` baseline map updated only
+//!    by the deterministic broadcast decode, so encoder and decoder can
+//!    never disagree about the reference point.
+//!
+//!    The default **exact** codec is a *bit* delta: `xor = x.bits ^
+//!    base.bits`, stored as 2-bit-tagged little-endian bytes (nearby
+//!    floats share sign/exponent bits, so high XOR bytes are mostly
+//!    zero). XOR is losslessly invertible, which is what keeps the
+//!    2-replica trajectory bit-identical to the 1-replica run — an
+//!    arithmetic f32 delta would not round-trip (`base + (x - base) ≠ x`
+//!    in IEEE arithmetic). A per-leaf [`LeafDelta::Raw`] escape ships
+//!    plain f32 bytes whenever the XOR encoding would not win, so a
+//!    leaf's wire size never exceeds its raw size and the
+//!    "saved-by-delta" counter stays non-negative.
+//!
+//!    The opt-in **q8** codec (`--sync-compress q8`) quantizes the
+//!    *arithmetic* delta to int8 with one f32 scale per leaf (`scale =
+//!    max|d| / 127`): ~4× smaller and lossy, so it gets a
+//!    bounded-divergence bench (`bench_train_replicas`) instead of a
+//!    bit-pin.
+//!
+//! 3. **Mean accumulator** ([`MeanState`]) — the coordinator folds
+//!    contributions into a persistent accumulator allocated at the first
+//!    barrier and reused for every later one (alloc-free steady state),
+//!    sums in replica-index order (deterministic IEEE fold), divides
+//!    once, and re-encodes the mean as a broadcast delta. The
+//!    coordinator's own `last` is updated by *decoding that broadcast*,
+//!    not by copying the mean — under q8 the parties agree on the
+//!    dequantized mean, bit for bit, because they run the same decode.
+//!
+//! Wire-byte accounting counts encoded payload bytes only (tags +
+//! payload for XOR, `4 + n` for q8, `4n` for raw); slot names and
+//! channel framing are host-side bookkeeping, identical across codecs,
+//! and deliberately excluded so the counters compare codecs honestly.
+
+use crate::checkpoint::Params;
+use crate::freeze::sync_slot_partition;
+use crate::runtime::ArtifactMeta;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+
+/// Wire codec for the trainable-leaf deltas a barrier exchanges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SyncCompress {
+    /// Lossless XOR bit-deltas (with a raw-f32 escape per leaf). The
+    /// default: averaging stays bit-identical to full-tensor exchange.
+    #[default]
+    Exact,
+    /// Int8-quantized arithmetic deltas, one f32 scale per leaf. Lossy;
+    /// covered by a bounded-divergence bench, not a bit-pin.
+    Q8,
+}
+
+impl SyncCompress {
+    /// Parse a CLI spelling. Accepts `exact`/`f32` and `q8`/`int8`.
+    pub fn parse(s: &str) -> Option<SyncCompress> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "f32" => Some(SyncCompress::Exact),
+            "q8" | "int8" => Some(SyncCompress::Q8),
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports and bench tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            SyncCompress::Exact => "exact",
+            SyncCompress::Q8 => "q8",
+        }
+    }
+}
+
+/// One leaf's encoded delta against the shared `last` baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LeafDelta {
+    /// Raw little-endian f32 bytes — the baseline-free escape hatch used
+    /// whenever an encoding would not beat `4n` bytes.
+    Raw(Vec<u8>),
+    /// Tag-packed XOR bit-delta: `ceil(n/4)` tag bytes (2 bits per
+    /// element selecting 0/1/2/4 significant low-order bytes) followed
+    /// by the significant bytes of each `x.bits ^ base.bits` word.
+    Xor(Vec<u8>),
+    /// Int8-quantized arithmetic delta: `value = base + scale * q[i]`.
+    Q8 { scale: f32, q: Vec<i8> },
+}
+
+impl LeafDelta {
+    /// Encoded payload size in bytes (what the byte counters meter).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            LeafDelta::Raw(b) | LeafDelta::Xor(b) => b.len() as u64,
+            LeafDelta::Q8 { q, .. } => 4 + q.len() as u64,
+        }
+    }
+}
+
+/// Significant low-order byte count for each 2-bit XOR tag value.
+const XOR_TAG_BYTES: [usize; 4] = [0, 1, 2, 4];
+
+fn xor_tag(d: u32) -> u8 {
+    if d == 0 {
+        0
+    } else if d < 1 << 8 {
+        1
+    } else if d < 1 << 16 {
+        2
+    } else {
+        3
+    }
+}
+
+fn xor_encode(x: &[f32], base: &[f32]) -> Vec<u8> {
+    let n = x.len();
+    let tag_len = n.div_ceil(4);
+    let mut out = vec![0u8; tag_len];
+    for (i, (&xv, &bv)) in x.iter().zip(base).enumerate() {
+        let d = xv.to_bits() ^ bv.to_bits();
+        let tag = xor_tag(d);
+        out[i / 4] |= tag << ((i % 4) * 2);
+        out.extend_from_slice(&d.to_le_bytes()[..XOR_TAG_BYTES[tag as usize]]);
+    }
+    out
+}
+
+/// Walk an XOR encoding, handing each element's index and XOR word to
+/// `f`. Validates the payload is exactly consumed.
+fn xor_decode_with(enc: &[u8], n: usize, mut f: impl FnMut(usize, u32)) -> Result<()> {
+    let tag_len = n.div_ceil(4);
+    ensure!(enc.len() >= tag_len, "xor delta truncated: {} < {tag_len} tag bytes", enc.len());
+    let (tags, payload) = enc.split_at(tag_len);
+    let mut pos = 0usize;
+    for i in 0..n {
+        let tag = (tags[i / 4] >> ((i % 4) * 2)) & 3;
+        let nbytes = XOR_TAG_BYTES[tag as usize];
+        let Some(src) = payload.get(pos..pos + nbytes) else {
+            bail!("xor delta truncated at element {i}");
+        };
+        let mut b = [0u8; 4];
+        b[..nbytes].copy_from_slice(src);
+        pos += nbytes;
+        f(i, u32::from_le_bytes(b));
+    }
+    ensure!(pos == payload.len(), "xor delta has {} trailing bytes", payload.len() - pos);
+    Ok(())
+}
+
+fn raw_encode(x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(x.len() * 4);
+    for &v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode one leaf's value `x` as a delta against `base` under `mode`.
+///
+/// Every path is capped at the raw size: if the chosen codec would not
+/// beat `4n` bytes for this leaf it ships [`LeafDelta::Raw`] instead, so
+/// `wire_bytes() <= 4 * x.len()` always holds and "bytes saved by delta"
+/// can never go negative.
+pub fn encode_leaf(x: &[f32], base: &[f32], mode: SyncCompress) -> LeafDelta {
+    debug_assert_eq!(x.len(), base.len());
+    let raw_bytes = x.len() * 4;
+    match mode {
+        SyncCompress::Exact => {
+            let enc = xor_encode(x, base);
+            if enc.len() < raw_bytes {
+                LeafDelta::Xor(enc)
+            } else {
+                LeafDelta::Raw(raw_encode(x))
+            }
+        }
+        SyncCompress::Q8 => {
+            // scalar-ish leaves: 4 (scale) + n quantized bytes must beat 4n
+            if 4 + x.len() >= raw_bytes {
+                return LeafDelta::Raw(raw_encode(x));
+            }
+            let mut max = 0f32;
+            for (&xv, &bv) in x.iter().zip(base) {
+                max = max.max((xv - bv).abs());
+            }
+            let scale = if max == 0.0 { 0.0 } else { max / 127.0 };
+            let q = if scale == 0.0 {
+                vec![0i8; x.len()]
+            } else {
+                x.iter()
+                    .zip(base)
+                    .map(|(&xv, &bv)| ((xv - bv) / scale).round().clamp(-127.0, 127.0) as i8)
+                    .collect()
+            };
+            LeafDelta::Q8 { scale, q }
+        }
+    }
+}
+
+/// Decode `delta` against the baseline held in `out`, in place: on entry
+/// `out` is the `last` baseline, on exit it is the reconstructed value.
+pub fn decode_leaf_apply(delta: &LeafDelta, out: &mut [f32]) -> Result<()> {
+    match delta {
+        LeafDelta::Raw(b) => {
+            ensure!(
+                b.len() == out.len() * 4,
+                "raw delta: {} bytes for {} elems",
+                b.len(),
+                out.len()
+            );
+            for (v, c) in out.iter_mut().zip(b.chunks_exact(4)) {
+                *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            Ok(())
+        }
+        LeafDelta::Xor(enc) => xor_decode_with(enc, out.len(), |i, d| {
+            out[i] = f32::from_bits(out[i].to_bits() ^ d);
+        }),
+        LeafDelta::Q8 { scale, q } => {
+            ensure!(q.len() == out.len(), "q8 delta: {} quants for {} elems", q.len(), out.len());
+            for (v, &qi) in out.iter_mut().zip(q) {
+                *v += scale * qi as f32;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Decode `delta` against `base` and *add* the reconstructed value into
+/// `acc` — the coordinator's fold step, which never materializes the
+/// contribution as a separate vector.
+fn decode_leaf_add(delta: &LeafDelta, base: &[f32], acc: &mut [f32]) -> Result<()> {
+    ensure!(base.len() == acc.len(), "baseline/accumulator length mismatch");
+    match delta {
+        LeafDelta::Raw(b) => {
+            ensure!(
+                b.len() == acc.len() * 4,
+                "raw delta: {} bytes for {} elems",
+                b.len(),
+                acc.len()
+            );
+            for (a, c) in acc.iter_mut().zip(b.chunks_exact(4)) {
+                *a += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            Ok(())
+        }
+        LeafDelta::Xor(enc) => xor_decode_with(enc, acc.len(), |i, d| {
+            acc[i] += f32::from_bits(base[i].to_bits() ^ d);
+        }),
+        LeafDelta::Q8 { scale, q } => {
+            ensure!(q.len() == acc.len(), "q8 delta: {} quants for {} elems", q.len(), acc.len());
+            for (i, &qi) in q.iter().enumerate() {
+                acc[i] += base[i] + scale * qi as f32;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// One direction of barrier traffic: encoded deltas for the exchanged
+/// parameter leaves, plus their momenta when the momentum policy
+/// averages them. Leaf order is the sync plan's order on both sides.
+#[derive(Clone, Debug, Default)]
+pub struct SyncFrame {
+    pub params: Vec<(String, LeafDelta)>,
+    pub momenta: Vec<(String, LeafDelta)>,
+}
+
+impl SyncFrame {
+    /// Total encoded payload bytes in this frame.
+    pub fn wire_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .chain(&self.momenta)
+            .map(|(_, d)| d.wire_bytes())
+            .sum()
+    }
+}
+
+/// What one epoch's barriers exchange and what they skip, priced in
+/// bytes. Computed from the freeze partition of the epoch's train
+/// artifact, so the plan tracks pattern swaps (a↔b) automatically.
+#[derive(Clone, Debug)]
+pub struct SyncPlan {
+    /// Trainable param leaves that must cross the channel: `(name, elems)`.
+    pub exchanged: Vec<(String, usize)>,
+    /// Frozen param leaves that never cross the channel: `(name, elems)`.
+    pub skipped: Vec<(String, usize)>,
+    /// Whether momenta of the exchanged leaves ride along
+    /// (MomentumPolicy::Average).
+    pub momenta: bool,
+}
+
+impl SyncPlan {
+    /// Build the plan for `meta`'s slot layout. `momenta` says whether
+    /// the barrier also averages momentum buffers.
+    pub fn of(meta: &ArtifactMeta, momenta: bool) -> SyncPlan {
+        let (exchanged, skipped) = sync_slot_partition(meta);
+        let count = |slots: Vec<&crate::runtime::ParamSlot>| {
+            slots
+                .into_iter()
+                .map(|s| (s.name.clone(), s.shape.iter().product()))
+                .collect()
+        };
+        SyncPlan { exchanged: count(exchanged), skipped: count(skipped), momenta }
+    }
+
+    fn exchanged_elems(&self) -> u64 {
+        let params: u64 = self.exchanged.iter().map(|(_, n)| *n as u64).sum();
+        if self.momenta {
+            params * 2
+        } else {
+            params
+        }
+    }
+
+    fn skipped_elems(&self) -> u64 {
+        self.skipped.iter().map(|(_, n)| *n as u64).sum()
+    }
+
+    /// Bytes one barrier event would move if *every* parameter leaf —
+    /// frozen included — shipped as raw f32 in both directions: the
+    /// naive full-exchange reference the savings counters compare
+    /// against.
+    pub fn full_bytes(&self) -> u64 {
+        (self.exchanged_elems() + self.skipped_elems()) * 4 * 2
+    }
+
+    /// Bytes one barrier event avoids by never moving frozen leaves
+    /// (both directions).
+    pub fn skipped_bytes(&self) -> u64 {
+        self.skipped_elems() * 4 * 2
+    }
+
+    /// Bytes one barrier event would move shipping the exchanged leaves
+    /// as raw f32 (both directions) — the delta codec's break-even
+    /// ceiling, guaranteed by the per-leaf raw escape.
+    pub fn raw_exchanged_bytes(&self) -> u64 {
+        self.exchanged_elems() * 4 * 2
+    }
+}
+
+/// A replica's side of the delta channel: the `last` baseline maps.
+///
+/// `last` starts as the initial params (and zero momenta — exactly what
+/// the engine uploaded) and is mutated *only* by decoding broadcast
+/// frames, the same deterministic step the coordinator applies to its
+/// own copy. After [`apply_broadcast`](Self::apply_broadcast) the
+/// decoded leaf value lives in `last` itself, ready both for the device
+/// re-upload and as the next barrier's baseline — no scratch buffers.
+pub struct ReplicaSyncState {
+    last_params: Params,
+    last_momenta: Params,
+    compress: SyncCompress,
+}
+
+impl ReplicaSyncState {
+    pub fn new(params: &Params, momenta: &Params, compress: SyncCompress) -> ReplicaSyncState {
+        ReplicaSyncState {
+            last_params: params.clone(),
+            last_momenta: momenta.clone(),
+            compress,
+        }
+    }
+
+    /// Encode downloaded leaf values as deltas against `last`.
+    pub fn encode_contribution(
+        &self,
+        params: &[(String, Tensor)],
+        momenta: &[(String, Tensor)],
+    ) -> Result<SyncFrame> {
+        fn encode(
+            leaves: &[(String, Tensor)],
+            last: &Params,
+            mode: SyncCompress,
+        ) -> Result<Vec<(String, LeafDelta)>> {
+            leaves
+                .iter()
+                .map(|(name, t)| {
+                    let Some(base) = last.get(name) else {
+                        bail!("sync baseline missing leaf {name}");
+                    };
+                    ensure!(
+                        base.data().len() == t.data().len(),
+                        "sync baseline for {name}: {} elems, downloaded {}",
+                        base.data().len(),
+                        t.data().len()
+                    );
+                    Ok((name.clone(), encode_leaf(t.data(), base.data(), mode)))
+                })
+                .collect()
+        }
+        Ok(SyncFrame {
+            params: encode(params, &self.last_params, self.compress)?,
+            momenta: encode(momenta, &self.last_momenta, self.compress)?,
+        })
+    }
+
+    /// Decode a broadcast frame into the baselines, in place. Afterwards
+    /// `last_param` / `last_momentum` hold the broadcast mean.
+    pub fn apply_broadcast(&mut self, frame: &SyncFrame) -> Result<()> {
+        apply_frame(frame, &mut self.last_params, &mut self.last_momenta)
+    }
+
+    pub fn last_param(&self, name: &str) -> Option<&Tensor> {
+        self.last_params.get(name)
+    }
+
+    pub fn last_momentum(&self, name: &str) -> Option<&Tensor> {
+        self.last_momenta.get(name)
+    }
+}
+
+/// Decode every leaf of `frame` into its baseline tensor, in place.
+fn apply_frame(frame: &SyncFrame, params: &mut Params, momenta: &mut Params) -> Result<()> {
+    for (leaves, last) in [(&frame.params, params), (&frame.momenta, momenta)] {
+        for (name, delta) in leaves {
+            let Some(t) = last.get_mut(name) else {
+                bail!("broadcast names unknown leaf {name}");
+            };
+            decode_leaf_apply(delta, t.data_mut())?;
+        }
+    }
+    Ok(())
+}
+
+/// The coordinator's side: fold contribution frames into a reusable
+/// accumulator, divide once, and re-encode the mean for broadcast.
+///
+/// The accumulator tensors are allocated at the first barrier that
+/// touches each leaf and reused verbatim for every later barrier —
+/// steady-state averaging allocates nothing but the outgoing frame.
+pub struct MeanState {
+    last_params: Params,
+    last_momenta: Params,
+    acc_params: Params,
+    acc_momenta: Params,
+    compress: SyncCompress,
+}
+
+impl MeanState {
+    pub fn new(params: &Params, momenta: &Params, compress: SyncCompress) -> MeanState {
+        MeanState {
+            last_params: params.clone(),
+            last_momenta: momenta.clone(),
+            acc_params: Params::new(),
+            acc_momenta: Params::new(),
+            compress,
+        }
+    }
+
+    /// Average one barrier's contributions (in replica-index order — the
+    /// fold order is part of the determinism contract) and return the
+    /// broadcast frame. Also applies the broadcast to the coordinator's
+    /// own `last`, so both sides keep decoding against identical
+    /// baselines — under q8 the baseline is the *dequantized* mean, the
+    /// value the replicas will actually hold.
+    pub fn average(&mut self, frames: &[SyncFrame]) -> Result<SyncFrame> {
+        ensure!(!frames.is_empty(), "averaging zero contributions");
+        fn names(v: &[(String, LeafDelta)]) -> Vec<&String> {
+            v.iter().map(|(n, _)| n).collect()
+        }
+        let first = &frames[0];
+        for f in &frames[1..] {
+            ensure!(
+                names(&f.params) == names(&first.params),
+                "contributions disagree on the exchanged leaf set"
+            );
+            ensure!(
+                names(&f.momenta) == names(&first.momenta),
+                "contributions disagree on the exchanged momentum set"
+            );
+        }
+        let mut out = SyncFrame::default();
+        fold_group(
+            frames,
+            |f| &f.params,
+            &self.last_params,
+            &mut self.acc_params,
+            self.compress,
+            &mut out.params,
+        )?;
+        fold_group(
+            frames,
+            |f| &f.momenta,
+            &self.last_momenta,
+            &mut self.acc_momenta,
+            self.compress,
+            &mut out.momenta,
+        )?;
+        apply_frame(&out, &mut self.last_params, &mut self.last_momenta)?;
+        Ok(out)
+    }
+
+    #[cfg(test)]
+    fn acc_param_ptr(&self, name: &str) -> Option<*const f32> {
+        self.acc_params.get(name).map(|t| t.data().as_ptr())
+    }
+}
+
+/// Fold one leaf group (params or momenta) of every contribution into
+/// the persistent accumulator and emit the mean's broadcast encoding.
+fn fold_group(
+    frames: &[SyncFrame],
+    pick: fn(&SyncFrame) -> &[(String, LeafDelta)],
+    last: &Params,
+    acc: &mut Params,
+    compress: SyncCompress,
+    dst: &mut Vec<(String, LeafDelta)>,
+) -> Result<()> {
+    let n = frames.len() as f32;
+    for (li, (name, _)) in pick(&frames[0]).iter().enumerate() {
+        let Some(base) = last.get(name) else {
+            bail!("coordinator baseline missing leaf {name}");
+        };
+        let acc_t = acc.entry(name.clone()).or_insert_with(|| Tensor::zeros(base.shape()));
+        ensure!(
+            acc_t.data().len() == base.data().len(),
+            "accumulator/baseline length mismatch for {name}"
+        );
+        acc_t.data_mut().fill(0.0);
+        for f in frames {
+            let (fname, delta) = &pick(f)[li];
+            ensure!(fname == name, "contribution leaf order diverged at {name}");
+            decode_leaf_add(delta, base.data(), acc_t.data_mut())?;
+        }
+        for v in acc_t.data_mut() {
+            *v /= n;
+        }
+        dst.push((name.clone(), encode_leaf(acc_t.data(), base.data(), compress)));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(data: &[f32]) -> Tensor {
+        Tensor::new(&[data.len()], data.to_vec())
+    }
+
+    #[test]
+    fn compress_parses() {
+        assert_eq!(SyncCompress::parse("exact"), Some(SyncCompress::Exact));
+        assert_eq!(SyncCompress::parse("f32"), Some(SyncCompress::Exact));
+        assert_eq!(SyncCompress::parse("Q8"), Some(SyncCompress::Q8));
+        assert_eq!(SyncCompress::parse("int8"), Some(SyncCompress::Q8));
+        assert_eq!(SyncCompress::parse("zstd"), None);
+    }
+
+    #[test]
+    fn xor_delta_roundtrips_bit_exactly() {
+        // nearby values (small XOR), identical values (zero XOR), wild
+        // values (full-width XOR) and specials all must survive
+        let base = vec![1.0f32, -2.5, 0.0, 3.25e-3, f32::MAX, 7.0, -0.0];
+        let x = vec![1.0000001f32, -2.5, 1.0e9, 3.26e-3, f32::MIN_POSITIVE, 7.0, 0.0];
+        let d = encode_leaf(&x, &base, SyncCompress::Exact);
+        let mut out = base.clone();
+        decode_leaf_apply(&d, &mut out).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out), bits(&x));
+        // identical leaves compress to tags only
+        let same = encode_leaf(&base, &base, SyncCompress::Exact);
+        assert_eq!(same.wire_bytes(), base.len().div_ceil(4) as u64);
+    }
+
+    #[test]
+    fn exact_encoding_never_exceeds_raw_size() {
+        // adversarial: every element's XOR needs all 4 bytes, so the
+        // XOR form (tags + 4n) loses and the Raw escape must kick in
+        let base = vec![1.0f32; 9];
+        let x = vec![-3.7e8f32; 9];
+        let d = encode_leaf(&x, &base, SyncCompress::Exact);
+        assert!(matches!(d, LeafDelta::Raw(_)));
+        assert_eq!(d.wire_bytes(), 9 * 4);
+        let mut out = base.clone();
+        decode_leaf_apply(&d, &mut out).unwrap();
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn q8_delta_error_is_bounded_by_half_scale() {
+        let base: Vec<f32> = (0..64).map(|i| (i as f32) * 0.1).collect();
+        let x: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + ((i * 37 % 19) as f32 - 9.0) * 1e-3)
+            .collect();
+        let d = encode_leaf(&x, &base, SyncCompress::Q8);
+        let LeafDelta::Q8 { scale, .. } = &d else { panic!("expected q8") };
+        assert_eq!(d.wire_bytes(), 4 + 64);
+        let mut out = base.clone();
+        decode_leaf_apply(&d, &mut out).unwrap();
+        for (o, xv) in out.iter().zip(&x) {
+            assert!((o - xv).abs() <= scale / 2.0 + f32::EPSILON, "{o} vs {xv}");
+        }
+        // zero delta encodes with zero scale and decodes to the baseline
+        let z = encode_leaf(&base, &base, SyncCompress::Q8);
+        let mut out = base.clone();
+        decode_leaf_apply(&z, &mut out).unwrap();
+        assert_eq!(out, base);
+        // scalar-ish leaves fall back to raw (4 + n would not beat 4n)
+        assert!(matches!(encode_leaf(&[2.0], &[1.0], SyncCompress::Q8), LeafDelta::Raw(_)));
+    }
+
+    fn frame_of(vals: &Params, last: &ReplicaSyncState) -> SyncFrame {
+        let leaves: Vec<(String, Tensor)> =
+            vals.iter().map(|(n, t)| (n.clone(), t.clone())).collect();
+        last.encode_contribution(&leaves, &[]).unwrap()
+    }
+
+    #[test]
+    fn identical_contributions_average_bit_exactly_through_the_codec() {
+        // the parity pin's algebraic core: encode → fold → mean → encode
+        // → decode of identical contributions must reproduce them bit
+        // for bit on every party
+        let init: Params = [("w".to_string(), tensor(&[0.5, -1.25, 3.0e-7, 42.0]))].into();
+        let momenta = Params::new();
+        let mut coord = MeanState::new(&init, &momenta, SyncCompress::Exact);
+        let mut rep = ReplicaSyncState::new(&init, &momenta, SyncCompress::Exact);
+
+        let stepped: Params = [("w".to_string(), tensor(&[0.4999, -1.2501, 2.9e-7, 41.0]))].into();
+        let f = frame_of(&stepped, &rep);
+        let bcast = coord.average(&[f.clone(), f]).unwrap();
+        rep.apply_broadcast(&bcast).unwrap();
+        let got = rep.last_param("w").unwrap().data();
+        let want = stepped["w"].data();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // and the coordinator's own baseline agrees with the replica's
+        assert_eq!(coord.last_params["w"].data(), got);
+    }
+
+    #[test]
+    fn mean_is_elementwise_and_accumulator_is_reused() {
+        let init: Params = [("w".to_string(), tensor(&[0.0, 0.0]))].into();
+        let momenta = Params::new();
+        let mut coord = MeanState::new(&init, &momenta, SyncCompress::Exact);
+        let rep = ReplicaSyncState::new(&init, &momenta, SyncCompress::Exact);
+
+        let a: Params = [("w".to_string(), tensor(&[1.0, 10.0]))].into();
+        let b: Params = [("w".to_string(), tensor(&[3.0, 20.0]))].into();
+        let bcast = coord.average(&[frame_of(&a, &rep), frame_of(&b, &rep)]).unwrap();
+        let mut out = vec![0.0f32; 2];
+        decode_leaf_apply(&bcast.params[0].1, &mut out).unwrap();
+        assert_eq!(out, vec![2.0, 15.0]);
+
+        // satellite: the second barrier folds into the same allocation —
+        // steady-state averaging is alloc-free
+        let p0 = coord.acc_param_ptr("w").unwrap();
+        let mut rep2 = ReplicaSyncState::new(&init, &momenta, SyncCompress::Exact);
+        rep2.apply_broadcast(&bcast).unwrap();
+        let c: Params = [("w".to_string(), tensor(&[5.0, 5.0]))].into();
+        let f2 = frame_of(&c, &rep2);
+        coord.average(&[f2.clone(), f2]).unwrap();
+        assert_eq!(p0, coord.acc_param_ptr("w").unwrap(), "accumulator reallocated");
+    }
+
+    #[test]
+    fn mismatched_contributions_are_rejected() {
+        let init: Params = [("w".to_string(), tensor(&[0.0]))].into();
+        let momenta = Params::new();
+        let mut coord = MeanState::new(&init, &momenta, SyncCompress::Exact);
+        let rep = ReplicaSyncState::new(&init, &momenta, SyncCompress::Exact);
+        let good = frame_of(&[("w".to_string(), tensor(&[1.0]))].into(), &rep);
+        let renamed = SyncFrame {
+            params: vec![("v".to_string(), good.params[0].1.clone())],
+            momenta: vec![],
+        };
+        assert!(coord.average(&[good.clone(), renamed]).is_err());
+        // unknown leaf in an otherwise well-formed frame
+        let unknown = SyncFrame {
+            params: vec![("v".to_string(), good.params[0].1.clone())],
+            momenta: vec![],
+        };
+        assert!(coord.average(&[unknown.clone(), unknown]).is_err());
+    }
+
+    #[test]
+    fn q8_parties_agree_on_the_dequantized_mean() {
+        // lossy path: replicas and coordinator must still hold identical
+        // baselines after a barrier, or later deltas desync
+        let params_of = |data: &[f32]| -> Params { [("w".to_string(), tensor(data))].into() };
+        let init = params_of(&[1.0, -1.0, 0.5, 2.0, -0.25, 0.0, 8.0, 1.5]);
+        let momenta = Params::new();
+        let mut coord = MeanState::new(&init, &momenta, SyncCompress::Q8);
+        let mut r0 = ReplicaSyncState::new(&init, &momenta, SyncCompress::Q8);
+        let mut r1 = ReplicaSyncState::new(&init, &momenta, SyncCompress::Q8);
+
+        let s0 = params_of(&[1.1, -0.9, 0.6, 1.9, -0.3, 0.1, 7.9, 1.4]);
+        let s1 = params_of(&[0.9, -1.1, 0.4, 2.1, -0.2, -0.1, 8.1, 1.6]);
+        let bcast = coord.average(&[frame_of(&s0, &r0), frame_of(&s1, &r1)]).unwrap();
+        r0.apply_broadcast(&bcast).unwrap();
+        r1.apply_broadcast(&bcast).unwrap();
+        let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(r0.last_param("w").unwrap()), bits(r1.last_param("w").unwrap()));
+        assert_eq!(bits(r0.last_param("w").unwrap()), bits(&coord.last_params["w"]));
+        // and the dequantized mean tracks the exact mean within the
+        // stacked quantization error: half a step per contribution plus
+        // half a step for the broadcast. Deltas here are <= 0.2, so each
+        // scale is <= 0.2/127 and the stack is well under 3e-3.
+        for (i, v) in r0.last_param("w").unwrap().data().iter().enumerate() {
+            let exact = (s0["w"].data()[i] + s1["w"].data()[i]) / 2.0;
+            assert!((v - exact).abs() <= 3e-3, "elem {i}: {v} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn truncated_encodings_are_rejected() {
+        let base = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let x = vec![1.5f32, 2.5, 3.5, 4.5, 5.5];
+        let LeafDelta::Xor(enc) = encode_leaf(&x, &base, SyncCompress::Exact) else {
+            panic!("expected xor")
+        };
+        let mut out = base.clone();
+        let cut = LeafDelta::Xor(enc[..enc.len() - 1].to_vec());
+        assert!(decode_leaf_apply(&cut, &mut out).is_err());
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_leaf_apply(&LeafDelta::Xor(padded), &mut out).is_err());
+        let raw = LeafDelta::Raw(vec![0u8; 7]);
+        assert!(decode_leaf_apply(&raw, &mut out).is_err());
+        let q8 = LeafDelta::Q8 { scale: 1.0, q: vec![0; 3] };
+        assert!(decode_leaf_apply(&q8, &mut out).is_err());
+    }
+}

@@ -17,14 +17,28 @@
 //!    steps through exactly its equal-length slice, mid-epoch cadence plus
 //!    the mandatory boundary average fire the predicted number of
 //!    barriers, and the combined record stays well-formed.
+//! 4. **Frozen leaves ship zero bytes** — under all three freeze modes the
+//!    barrier's byte counters match the sync plan priced from the manifest
+//!    exactly: the full-exchange reference, the frozen-leaf savings, and
+//!    the raw ceiling on the encoded exchange — and the same numbers are
+//!    exported through the metrics registry under `{replica}` labels.
+//! 5. **Pipelined + delta parity** — 2 replicas on the *overlapped* epoch
+//!    driver exchanging XOR bit-deltas still reproduce the serial
+//!    single-engine trajectory bit-for-bit (overlap is pure scheduling;
+//!    the exact codec is losslessly invertible).
+//! 6. **q8 smoke** — the lossy codec trains to finite metrics and lands
+//!    strictly under the raw trainable byte ceiling.
 
 use lrta::checkpoint;
 use lrta::coordinator::{
     decompose_checkpoint, effective_pattern_suffix, LrSchedule, TrainConfig, Trainer,
 };
 use lrta::freeze::{FreezeMode, FreezeScheduler};
-use lrta::runtime::{Manifest, Runtime};
-use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig};
+use lrta::obs::{Registry, Tracer};
+use lrta::runtime::{Manifest, ParamSlot, Runtime};
+use lrta::train::{
+    run_replicas, run_replicas_traced, MomentumPolicy, ReplicaConfig, SyncCompress,
+};
 
 fn manifest() -> Option<Manifest> {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
@@ -68,6 +82,11 @@ fn n_trainable(m: &Manifest, suffix: &str) -> usize {
         .len()
 }
 
+/// Total f32 elements across a slot list — the unit the byte plans price.
+fn elems(slots: &[ParamSlot]) -> u64 {
+    slots.iter().map(|s| s.shape.iter().product::<usize>() as u64).sum()
+}
+
 #[test]
 fn two_replicas_identical_shards_reproduce_single_engine_bit_for_bit() {
     let Some(m) = manifest() else { return };
@@ -82,6 +101,7 @@ fn two_replicas_identical_shards_reproduce_single_engine_bit_for_bit() {
             replicas: 2,
             avg_every: 1,
             momenta: MomentumPolicy::Average,
+            compress: SyncCompress::Exact,
             identical_shards: true,
         };
         let run = run_replicas(&m, &cfg(mode, epochs), &rcfg, &params).unwrap();
@@ -179,6 +199,7 @@ fn disjoint_shards_average_on_cadence_and_stay_buffer_chained() {
         replicas: 2,
         avg_every: 2,
         momenta: MomentumPolicy::Average,
+        compress: SyncCompress::Exact,
         identical_shards: false,
     };
     let run = run_replicas(&m, &cfg(FreezeMode::Sequential, epochs), &rcfg, &params).unwrap();
@@ -226,6 +247,7 @@ fn momentum_reset_policy_zeroes_momenta_at_the_boundary() {
         replicas: 2,
         avg_every: 0, // boundary-only averaging
         momenta: MomentumPolicy::Reset,
+        compress: SyncCompress::Exact,
         identical_shards: false,
     };
     let run = run_replicas(&m, &cfg(FreezeMode::None, 1), &rcfg, &params).unwrap();
@@ -246,5 +268,168 @@ fn momentum_reset_policy_zeroes_momenta_at_the_boundary() {
             "momentum {} must be zeroed by the reset policy",
             slot.name
         );
+    }
+}
+
+#[test]
+fn frozen_leaves_contribute_zero_barrier_bytes_in_every_freeze_mode() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    for mode in [FreezeMode::None, FreezeMode::Regular, FreezeMode::Sequential] {
+        let epochs = 2;
+        let rcfg = ReplicaConfig {
+            replicas: 2,
+            avg_every: 0, // boundary-only: exactly one barrier per epoch
+            momenta: MomentumPolicy::Average,
+            compress: SyncCompress::Exact,
+            identical_shards: false,
+        };
+        let reg = Registry::new();
+        let run = run_replicas_traced(
+            &m,
+            &cfg(mode, epochs),
+            &rcfg,
+            &params,
+            Tracer::default(),
+            Some(reg.clone()),
+        )
+        .unwrap();
+
+        // price the run straight from the manifest: per barrier, the naive
+        // exchange moves every parameter leaf plus the trainable momenta
+        // (raw f32, both directions); the sync plan keeps frozen leaves
+        // off the wire entirely, so "skipped" is exactly their raw size
+        let scheduler = FreezeScheduler::new(mode);
+        let mut expected_full = 0u64;
+        let mut expected_skipped = 0u64;
+        for e in 0..epochs {
+            let suffix = effective_pattern_suffix("lrd", scheduler.pattern(e));
+            let meta = m.artifact(&format!("resnet_mini_lrd_train_{suffix}")).unwrap();
+            expected_full += (2 * elems(&meta.trainable) + elems(&meta.frozen)) * 4 * 2;
+            expected_skipped += elems(&meta.frozen) * 4 * 2;
+        }
+        if mode == FreezeMode::None {
+            assert_eq!(expected_skipped, 0, "freeze-none artifacts freeze nothing");
+        } else {
+            assert!(expected_skipped > 0, "{mode:?}: the LRD artifacts must freeze factors");
+        }
+        for r in &run.reports {
+            assert_eq!(r.avg_events, epochs, "{mode:?} replica {}", r.replica);
+            assert_eq!(r.avg_bytes_full, expected_full, "{mode:?} replica {}", r.replica);
+            assert_eq!(
+                r.avg_bytes_skipped, expected_skipped,
+                "{mode:?} replica {}: frozen leaves must contribute zero wire bytes",
+                r.replica
+            );
+            // the per-leaf raw escape caps the encoded exchange at the
+            // trainable universe's raw size — and something must move
+            assert!(r.avg_bytes_exchanged > 0, "{mode:?} replica {}", r.replica);
+            assert!(
+                r.avg_bytes_exchanged <= expected_full - expected_skipped,
+                "{mode:?} replica {}: {} exchanged over the {} raw trainable ceiling",
+                r.replica,
+                r.avg_bytes_exchanged,
+                expected_full - expected_skipped
+            );
+        }
+        // the same accounting is exported through the metrics registry,
+        // one label set per replica
+        let text = reg.snapshot().prometheus_text();
+        for r in &run.reports {
+            for (name, v) in [
+                ("exchanged", r.avg_bytes_exchanged),
+                ("skipped", r.avg_bytes_skipped),
+                ("full", r.avg_bytes_full),
+            ] {
+                let line =
+                    format!("lrta_train_barrier_bytes_{name}{{replica=\"{}\"}} {v}", r.replica);
+                assert!(text.contains(&line), "{mode:?}: missing '{line}' in:\n{text}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_delta_replicas_reproduce_the_serial_single_engine_run() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    let epochs = 3;
+    let rt = Runtime::cpu().unwrap();
+    let mut base =
+        Trainer::new(&rt, &m, cfg(FreezeMode::Sequential, epochs), params.clone()).unwrap();
+    let base_rec = base.run().unwrap();
+
+    // replicas on the *overlapped* driver, exchanging XOR bit-deltas: the
+    // overlap is pure scheduling and the codec is losslessly invertible,
+    // so the serial full-tensor trajectory must survive bit for bit
+    let mut pcfg = cfg(FreezeMode::Sequential, epochs);
+    pcfg.pipelined = true;
+    let rcfg = ReplicaConfig {
+        replicas: 2,
+        avg_every: 1,
+        momenta: MomentumPolicy::Average,
+        compress: SyncCompress::Exact,
+        identical_shards: true,
+    };
+    let run = run_replicas(&m, &pcfg, &rcfg, &params).unwrap();
+
+    assert_eq!(base_rec.epochs.len(), run.record.epochs.len());
+    for (b, r) in base_rec.epochs.iter().zip(&run.record.epochs) {
+        assert_eq!(b.freeze_pattern, r.freeze_pattern, "epoch {}", b.epoch);
+        assert_eq!(
+            b.loss.to_bits(),
+            r.loss.to_bits(),
+            "epoch {}: loss {} vs {}",
+            b.epoch,
+            b.loss,
+            r.loss
+        );
+        assert_eq!(b.train_acc.to_bits(), r.train_acc.to_bits(), "epoch {}", b.epoch);
+        assert_eq!(b.test_acc.to_bits(), r.test_acc.to_bits(), "epoch {}", b.epoch);
+    }
+    for (name, t) in &base.params {
+        assert_eq!(t.data(), run.params[name].data(), "param {name} diverged");
+    }
+    for (name, t) in &base.momenta {
+        assert_eq!(t.data(), run.momenta[name].data(), "momentum {name} diverged");
+    }
+    for r in &run.reports {
+        assert_eq!(r.driver(), "pipelined", "replica {}", r.replica);
+        assert_eq!(r.unaccounted_uploads(), 0, "replica {}", r.replica);
+        assert_eq!(r.demux_fallbacks, 0, "replica {}", r.replica);
+    }
+}
+
+#[test]
+fn q8_compression_trains_to_finite_metrics_and_saves_bytes() {
+    let Some(m) = manifest() else { return };
+    let params = lrd_params(&m);
+
+    let epochs = 2;
+    let mut pcfg = cfg(FreezeMode::Sequential, epochs);
+    pcfg.pipelined = true;
+    let rcfg = ReplicaConfig {
+        replicas: 2,
+        avg_every: 2,
+        momenta: MomentumPolicy::Average,
+        compress: SyncCompress::Q8,
+        identical_shards: false,
+    };
+    let run = run_replicas(&m, &pcfg, &rcfg, &params).unwrap();
+
+    assert_eq!(run.record.epochs.len(), epochs);
+    for e in &run.record.epochs {
+        assert!(e.loss.is_finite(), "epoch {}: loss {}", e.epoch, e.loss);
+        assert!((0.0..=1.0).contains(&e.train_acc), "epoch {}: train_acc {}", e.epoch, e.train_acc);
+        assert!((0.0..=1.0).contains(&e.test_acc), "epoch {}: test_acc {}", e.epoch, e.test_acc);
+    }
+    for r in &run.reports {
+        // every multi-element trainable leaf quantizes to 4 + n bytes
+        // against 4n raw, so q8 lands strictly under the raw ceiling
+        assert!(r.avg_bytes_exchanged > 0, "replica {}", r.replica);
+        assert!(r.avg_bytes_saved_by_delta() > 0, "replica {}: q8 saved nothing", r.replica);
+        assert_eq!(r.unaccounted_uploads(), 0, "replica {}", r.replica);
     }
 }

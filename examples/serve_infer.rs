@@ -22,6 +22,7 @@
 use anyhow::Result;
 use lrta::checkpoint;
 use lrta::data::Dataset;
+use lrta::faults;
 use lrta::runtime::Manifest;
 use lrta::serve::{self, Server, ServerConfig, VariantSpec};
 use lrta::util::bench::{fmt_delta_pct, table, write_report};
@@ -53,6 +54,12 @@ fn main() -> Result<()> {
     let shards = args
         .usize_or("shards", env_or("LRTA_SHARDS", "1").parse().unwrap_or(1))
         .max(1);
+
+    // chaos harness: LRTA_FAULTS installs a deterministic fault plan (the
+    // CI chaos smoke kills/stalls shards through this)
+    if faults::install_from_env()? {
+        println!("fault plan installed from LRTA_FAULTS");
+    }
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
@@ -119,11 +126,19 @@ fn main() -> Result<()> {
             snap.spot_check_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
         ]);
         println!(
-            "{variant}: {fps:.0} fps ({} ok / {} rejected retries / {} errors)",
-            report.completed, report.rejected, report.errors
+            "{variant}: {fps:.0} fps ({} ok / {} rejected retries / {} errors, \
+             {} worker death(s), {} respawn(s))",
+            report.completed,
+            report.rejected,
+            report.errors,
+            snap.worker_deaths,
+            snap.respawns
         );
     }
     server.shutdown();
+    if faults::armed() {
+        println!("faults: {} injected", faults::fired());
+    }
 
     let t = table(&rows);
     let mode = if reupload { "reupload-per-batch (baseline)" } else { "device-resident" };

@@ -38,6 +38,7 @@ use anyhow::Result;
 use lrta::coordinator::{
     decompose_checkpoint, ensure_pretrained, LrSchedule, TrainConfig, Trainer,
 };
+use lrta::faults;
 use lrta::freeze::FreezeMode;
 use lrta::metrics::RunRecord;
 use lrta::runtime::{Manifest, Runtime};
@@ -63,6 +64,12 @@ fn main() -> Result<()> {
     let compress = std::env::var("LRTA_SYNC_COMPRESS")
         .map(|v| SyncCompress::parse(&v).expect("LRTA_SYNC_COMPRESS must be exact|f32|q8|int8"))
         .unwrap_or_default();
+
+    // chaos harness: LRTA_FAULTS installs a deterministic fault plan (the
+    // CI chaos smoke drives replica eviction through this)
+    if faults::install_from_env()? {
+        println!("fault plan installed from LRTA_FAULTS");
+    }
 
     let manifest = Manifest::load("artifacts/manifest.json")?;
     let rt = Runtime::cpu()?;
@@ -132,6 +139,14 @@ fn main() -> Result<()> {
                     r.avg_bytes_saved_by_delta()
                 );
             }
+            if run.record.degraded() {
+                for ev in &run.record.evictions {
+                    println!(
+                        "   evicted replica {} at event {} ({} survived): {}",
+                        ev.replica, ev.event, ev.survivors, ev.reason
+                    );
+                }
+            }
             run.record
         } else {
             let mut trainer = Trainer::new(&rt, &manifest, cfg, decomposed.params.clone())?;
@@ -175,6 +190,9 @@ fn main() -> Result<()> {
         }
         (Some(_), None) => println!("\nregular never reaches the target — sequential wins"),
         _ => println!("\n(convergence order varies at this tiny scale — see results/fig3_curves)"),
+    }
+    if faults::armed() {
+        println!("faults: {} injected", faults::fired());
     }
     Ok(())
 }

@@ -1,0 +1,184 @@
+//! Chaos-plane benchmark: what fault injection and supervised recovery
+//! actually cost.
+//!
+//! Three measurements:
+//!
+//!   - **seam overhead** — ns per [`lrta::faults::hit`] call with no plan
+//!     installed (the zero-cost-off contract: one relaxed atomic load and
+//!     a branch) and with an armed-but-non-matching plan (the slow path a
+//!     chaos run pays at every *other* seam);
+//!   - **eviction recovery** — wall clock of a 2-replica fine-tune that
+//!     loses replica 1 to an injected mid-epoch panic vs the same run
+//!     healthy: the degraded run must finish, and the gap prices the
+//!     survivor-only barrier machinery;
+//!   - **respawn latency** — a serve shard killed by an injected dispatch
+//!     panic: time from the first stranded submission until a respawned
+//!     worker answers, plus the supervision counters.
+//!
+//! Output: results/faults.txt and a `faults` section in
+//! results/BENCH_faults.json (uploaded as a CI artifact by the chaos
+//! smoke job).
+//!
+//! Env: LRTA_MODEL (default resnet_mini), LRTA_FAULT_TRAIN (dataset size,
+//! default 256), LRTA_FAULT_EPOCHS (default 2)
+
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig};
+use lrta::data::{Dataset, IMAGE_ELEMS};
+use lrta::faults::{self, Plan, Seam};
+use lrta::freeze::FreezeMode;
+use lrta::runtime::Manifest;
+use lrta::serve::{Server, ServerConfig, ServeError, VariantSpec};
+use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig, SyncCompress};
+use lrta::util::bench::{table, write_json_section, write_report};
+use lrta::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// ns per `hit` call over a tight loop (the caller picks the plan state).
+fn seam_ns_per_hit(iters: u64) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = std::hint::black_box(faults::hit(
+            std::hint::black_box(Seam::Dispatch),
+            std::hint::black_box("bench"),
+        ));
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let train_size = env_usize("LRTA_FAULT_TRAIN", 256);
+    let epochs = env_usize("LRTA_FAULT_EPOCHS", 2);
+    let manifest = Manifest::load("artifacts/manifest.json").expect("run `make artifacts`");
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+    let params = decompose_checkpoint(&dense, manifest.config(&model, "lrd")?)?.params;
+
+    // --- 1. seam overhead -------------------------------------------------
+    let iters = 20_000_000u64;
+    faults::clear();
+    let disarmed_ns = seam_ns_per_hit(iters);
+    // armed, but every directive targets a seam this loop never hits
+    faults::install(Plan::parse("swap_ack@nowhere:error@step999999999")?);
+    let armed_miss_ns = seam_ns_per_hit(iters);
+    faults::clear();
+    println!(
+        "seam hit: disarmed {disarmed_ns:.2} ns | armed non-matching {armed_miss_ns:.2} ns \
+         ({iters} iters)"
+    );
+
+    // --- 2. train eviction recovery ---------------------------------------
+    let cfg = TrainConfig {
+        model: model.clone(),
+        variant: "lrd".into(),
+        freeze: FreezeMode::Sequential,
+        epochs,
+        lr: LrSchedule::Fixed(1e-3),
+        train_size,
+        test_size: 128,
+        seed: 0,
+        verbose: false,
+        resident: true,
+        pipelined: false,
+    };
+    let rcfg = ReplicaConfig {
+        replicas: 2,
+        avg_every: 1,
+        momenta: MomentumPolicy::Average,
+        compress: SyncCompress::Exact,
+        identical_shards: false,
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let healthy = run_replicas(&manifest, &cfg, &rcfg, &params)?;
+    let healthy_secs = t0.elapsed().as_secs_f64();
+    assert!(!healthy.record.degraded(), "healthy run must not evict");
+
+    faults::install(Plan::parse("barrier_send@replica1:panic@step2")?);
+    let t0 = Instant::now();
+    let faulted = run_replicas(&manifest, &cfg, &rcfg, &params)?;
+    let faulted_secs = t0.elapsed().as_secs_f64();
+    let injected = faults::fired();
+    faults::clear();
+    assert!(faulted.record.degraded(), "the injected panic must evict");
+    let survivors = faulted.record.evictions.last().map(|e| e.survivors).unwrap_or(0);
+    println!(
+        "eviction recovery: healthy {healthy_secs:.2}s | 1-death degraded {faulted_secs:.2}s \
+         | {} eviction(s), {survivors} survivor(s), {injected} injected",
+        faulted.record.evictions.len()
+    );
+
+    // --- 3. serve respawn latency -----------------------------------------
+    let scfg = ServerConfig {
+        max_wait: Duration::from_millis(20),
+        spot_check: 0,
+        ..Default::default()
+    };
+    let server =
+        Server::start(&manifest, vec![VariantSpec::new(&model, "lrd", params.clone())], &scfg)?;
+    let data = Dataset::synthetic(4, 99);
+    let x = data.images[..IMAGE_ELEMS].to_vec();
+    // warm the worker (first batch), then kill it on the next dispatch
+    server.submit(&model, "lrd", x.clone())?.wait(Duration::from_secs(120))?;
+    faults::install(Plan::parse("dispatch@shard0:panic@step1")?);
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "respawn never answered");
+        match server.submit(&model, "lrd", x.clone()) {
+            Ok(p) => match p.wait(Duration::from_secs(120)) {
+                Ok(_) => break,
+                Err(ServeError::Shutdown) | Err(ServeError::Closed) => {}
+                Err(e) => anyhow::bail!("unexpected terminal answer: {e:?}"),
+            },
+            Err(ServeError::ShardDown) | Err(ServeError::QueueFull { .. }) => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => anyhow::bail!("unexpected submit error: {e:?}"),
+        }
+    }
+    let respawn_secs = t0.elapsed().as_secs_f64();
+    faults::clear();
+    let snap = server.stats(&model, "lrd").expect("registered variant");
+    server.shutdown();
+    println!(
+        "serve respawn: {respawn_secs:.3}s death→served | {} death(s), {} respawn(s)",
+        snap.worker_deaths, snap.respawns
+    );
+
+    // --- report ------------------------------------------------------------
+    let rows = vec![
+        vec!["measurement".to_string(), "value".to_string()],
+        vec!["seam hit, disarmed".to_string(), format!("{disarmed_ns:.2} ns")],
+        vec!["seam hit, armed non-matching".to_string(), format!("{armed_miss_ns:.2} ns")],
+        vec!["2-replica healthy run".to_string(), format!("{healthy_secs:.2} s")],
+        vec!["2-replica run, 1 death".to_string(), format!("{faulted_secs:.2} s")],
+        vec!["serve death → respawned answer".to_string(), format!("{respawn_secs:.3} s")],
+    ];
+    let t = table(&rows);
+    println!("\n{model} fault-injection + supervision costs:\n{t}");
+    write_report("results/faults.txt", &t);
+    let section = Json::obj(vec![
+        ("model", Json::str(model.as_str())),
+        ("train_size", Json::int(train_size as i64)),
+        ("epochs", Json::int(epochs as i64)),
+        ("seam_hit_disarmed_ns", Json::num(disarmed_ns)),
+        ("seam_hit_armed_nonmatching_ns", Json::num(armed_miss_ns)),
+        ("healthy_run_secs", Json::num(healthy_secs)),
+        ("degraded_run_secs", Json::num(faulted_secs)),
+        ("evictions", Json::int(faulted.record.evictions.len() as i64)),
+        ("survivors", Json::int(survivors as i64)),
+        ("train_faults_injected", Json::int(injected as i64)),
+        ("serve_respawn_secs", Json::num(respawn_secs)),
+        ("serve_worker_deaths", Json::int(snap.worker_deaths as i64)),
+        ("serve_respawns", Json::int(snap.respawns as i64)),
+    ]);
+    write_json_section("results/BENCH_faults.json", "faults", section);
+    println!("faults bench OK");
+    Ok(())
+}

@@ -106,6 +106,7 @@ fn main() -> anyhow::Result<()> {
             momenta: MomentumPolicy::Average,
             compress: SyncCompress::Exact,
             identical_shards: false,
+            ..Default::default()
         };
         let t0 = Instant::now();
         let run = run_replicas(&manifest, &cfg, &rcfg, &params)?;
@@ -217,6 +218,7 @@ fn main() -> anyhow::Result<()> {
             momenta: MomentumPolicy::Average,
             compress,
             identical_shards: false,
+            ..Default::default()
         };
         let t0 = Instant::now();
         let run = run_replicas(&manifest, &sync_cfg(pipelined), &rcfg, &params)?;

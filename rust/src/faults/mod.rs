@@ -1,0 +1,483 @@
+//! Deterministic fault injection: named seams at the system's chokepoints,
+//! armed by a globally-installed [`Plan`], compiled down to a single atomic
+//! load + branch per seam when disarmed (the same zero-cost-off contract as
+//! [`crate::obs::Tracer`] — pinned by the chaos integration suite: with no
+//! plan installed every existing bit-for-bit parity pin is byte-identical).
+//!
+//! A plan is parsed from a spec string (CLI `--faults` or the `LRTA_FAULTS`
+//! environment variable):
+//!
+//! ```text
+//!   directive[,directive...]
+//!   directive := seam[@scope]:action[@stepN]
+//!   seam      := batch_upload | dispatch | fetch | prefetch
+//!              | barrier_send | barrier_recv | swap_ack
+//!   scope     := site label, e.g. replica1 (train) or shard0 (serve);
+//!                omitted = match any scope
+//!   action    := panic | error | stall(DURATION)   e.g. stall(200ms)
+//!   stepN     := fire on the N-th matching hit (1-based; default 1)
+//! ```
+//!
+//! Examples: `barrier_send@replica1:panic@step7` kills replica 1 the 7th
+//! time it reaches the barrier send; `dispatch:stall(200ms)` stalls the
+//! first dispatch anywhere for 200 ms.
+//!
+//! **Determinism**: every seam site counts its matching hits through the
+//! directive's own atomic ordinal, so a directive fires at exactly the
+//! N-th matching hit of its seam+scope and fires **exactly once** — no
+//! clocks, no RNG, reproducible across runs (module-level, not per-thread:
+//! a wildcard-scope directive counts hits across all matching threads in
+//! arrival order, so pin the scope when the fleet races). Injections are
+//! counted ([`fired`]) and span-recorded (`faults/fault_injected` via
+//! [`set_tracer`]) so chaos tests and traces can assert exactly which
+//! faults fired.
+//!
+//! Seam sites call [`hit`], which returns `Err` for an `error` action,
+//! sleeps for `stall`, and panics for `panic` — exercising, respectively,
+//! the error-propagation, straggler/timeout, and unwind/supervision paths
+//! of the surrounding machinery.
+
+use crate::obs::{Counter, Tracer};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// A named injection point. Each variant corresponds to one chokepoint in
+/// the train or serve hot path (see the module docs for the seam ↔ code
+/// map, and ARCHITECTURE.md §failure-modes for the full picture).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Seam {
+    /// Training-batch host→device upload ([`crate::train::Engine`]).
+    BatchUpload,
+    /// Executable dispatch (train step or serve batch).
+    Dispatch,
+    /// Result fetch/demux (train step or serve batch).
+    Fetch,
+    /// Prefetcher worker producing a staged batch.
+    Prefetch,
+    /// Replica about to send its averaging contribution.
+    BarrierSend,
+    /// Replica about to block on the broadcast mean.
+    BarrierRecv,
+    /// Serve worker about to acknowledge a warm swap.
+    SwapAck,
+}
+
+impl Seam {
+    /// Parse the spec spelling of a seam name.
+    pub fn parse(s: &str) -> Option<Seam> {
+        match s {
+            "batch_upload" => Some(Seam::BatchUpload),
+            "dispatch" => Some(Seam::Dispatch),
+            "fetch" => Some(Seam::Fetch),
+            "prefetch" => Some(Seam::Prefetch),
+            "barrier_send" => Some(Seam::BarrierSend),
+            "barrier_recv" => Some(Seam::BarrierRecv),
+            "swap_ack" => Some(Seam::SwapAck),
+            _ => None,
+        }
+    }
+
+    /// The spec spelling (inverse of [`Seam::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Seam::BatchUpload => "batch_upload",
+            Seam::Dispatch => "dispatch",
+            Seam::Fetch => "fetch",
+            Seam::Prefetch => "prefetch",
+            Seam::BarrierSend => "barrier_send",
+            Seam::BarrierRecv => "barrier_recv",
+            Seam::SwapAck => "swap_ack",
+        }
+    }
+}
+
+/// What an armed directive does at its seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// `panic!` at the seam — exercises unwind paths (replica
+    /// `catch_unwind`, serve drop-guard drain, supervisor respawn).
+    Panic,
+    /// Return an `anyhow` error from the seam — exercises `Result`
+    /// propagation without unwinding.
+    Error,
+    /// Sleep at the seam — exercises straggler/timeout paths (barrier
+    /// eviction deadlines, swap-ack timeouts).
+    Stall(Duration),
+}
+
+/// One parsed `seam[@scope]:action[@stepN]` directive plus its firing
+/// state. Fires exactly once, at the `at`-th matching hit.
+#[derive(Debug)]
+struct Directive {
+    seam: Seam,
+    /// `None` matches any scope; `Some(s)` matches exactly.
+    scope: Option<String>,
+    action: Action,
+    /// 1-based matching-hit ordinal at which to fire.
+    at: u64,
+    hits: AtomicU64,
+    fired: AtomicBool,
+}
+
+impl Directive {
+    fn matches(&self, seam: Seam, scope: &str) -> bool {
+        self.seam == seam
+            && match &self.scope {
+                None => true,
+                Some(s) => s == scope,
+            }
+    }
+}
+
+/// A set of fault directives. Parse once, [`install`] globally; seams
+/// consult the installed plan through [`hit`].
+#[derive(Debug, Default)]
+pub struct Plan {
+    directives: Vec<Directive>,
+}
+
+/// Parse a `stall(...)` duration: `200ms`, `2s`, `500us`, or a bare
+/// number (milliseconds).
+fn parse_duration(s: &str) -> Result<Duration> {
+    let (num, mul_us) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000u64)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000u64)
+    } else {
+        (s, 1_000u64)
+    };
+    let v: u64 = num.trim().parse().map_err(|_| anyhow!("bad stall duration '{s}'"))?;
+    Ok(Duration::from_micros(v.saturating_mul(mul_us)))
+}
+
+impl Plan {
+    /// Parse a spec string (see the module docs for the grammar). An empty
+    /// or whitespace-only spec is an empty plan (valid, injects nothing).
+    pub fn parse(spec: &str) -> Result<Plan> {
+        let mut directives = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site, act) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault directive '{part}': expected seam[@scope]:action"))?;
+            let (seam_s, scope) = match site.split_once('@') {
+                Some((s, sc)) => {
+                    let sc = sc.trim();
+                    if sc.is_empty() {
+                        bail!("fault directive '{part}': empty scope after '@'");
+                    }
+                    (s.trim(), Some(sc.to_string()))
+                }
+                None => (site.trim(), None),
+            };
+            let seam = Seam::parse(seam_s).ok_or_else(|| {
+                anyhow!(
+                    "fault directive '{part}': unknown seam '{seam_s}' (expected one of \
+                     batch_upload, dispatch, fetch, prefetch, barrier_send, barrier_recv, \
+                     swap_ack)"
+                )
+            })?;
+            let (action_s, at_s) = match act.split_once('@') {
+                Some((a, n)) => (a.trim(), Some(n.trim())),
+                None => (act.trim(), None),
+            };
+            let action = if action_s == "panic" {
+                Action::Panic
+            } else if action_s == "error" {
+                Action::Error
+            } else if let Some(rest) = action_s.strip_prefix("stall(") {
+                let inner = rest.strip_suffix(')').ok_or_else(|| {
+                    anyhow!("fault directive '{part}': unclosed stall(… duration")
+                })?;
+                Action::Stall(parse_duration(inner)?)
+            } else {
+                bail!(
+                    "fault directive '{part}': unknown action '{action_s}' (expected panic, \
+                     error, or stall(duration))"
+                );
+            };
+            let at = match at_s {
+                None => 1,
+                Some(n) => {
+                    let digits = n.strip_prefix("step").unwrap_or(n);
+                    let v: u64 = digits
+                        .parse()
+                        .map_err(|_| anyhow!("fault directive '{part}': bad hit ordinal '{n}'"))?;
+                    if v == 0 {
+                        bail!("fault directive '{part}': hit ordinals are 1-based");
+                    }
+                    v
+                }
+            };
+            directives.push(Directive {
+                seam,
+                scope,
+                action,
+                at,
+                hits: AtomicU64::new(0),
+                fired: AtomicBool::new(false),
+            });
+        }
+        Ok(Plan { directives })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.directives.len()
+    }
+
+    /// Record one hit of `seam`+`scope` against this plan and return the
+    /// action to take, if any directive just reached its firing ordinal.
+    /// Each directive fires at most once over the plan's lifetime.
+    fn check(&self, seam: Seam, scope: &str) -> Option<(Action, String)> {
+        for d in &self.directives {
+            if !d.matches(seam, scope) {
+                continue;
+            }
+            let hit = d.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            if hit == d.at && !d.fired.swap(true, Ordering::Relaxed) {
+                let where_ = if scope.is_empty() {
+                    seam.label().to_string()
+                } else {
+                    format!("{}@{}", seam.label(), scope)
+                };
+                return Some((d.action, format!("{where_} (hit {hit})")));
+            }
+        }
+        None
+    }
+}
+
+/// Installed-plan state behind the global handle.
+struct Armed {
+    plan: Plan,
+    injected: Counter,
+}
+
+/// Fast-path arm flag: [`hit`] is one relaxed load + branch when this is
+/// false — the whole injection plane compiled down to nothing.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn global() -> &'static RwLock<Option<Arc<Armed>>> {
+    static GLOBAL: std::sync::OnceLock<RwLock<Option<Arc<Armed>>>> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| RwLock::new(None))
+}
+
+/// Optional span recorder for fired injections, settable independently of
+/// the plan (main wires it when both `--faults` and `--trace-out` are on).
+fn global_tracer() -> &'static RwLock<Tracer> {
+    static TRACER: std::sync::OnceLock<RwLock<Tracer>> = std::sync::OnceLock::new();
+    TRACER.get_or_init(|| RwLock::new(Tracer::default()))
+}
+
+/// Install `plan` process-globally (replacing any previous plan and
+/// resetting the fired-injection counter). An empty plan disarms the
+/// seams entirely.
+pub fn install(plan: Plan) {
+    let mut g = global().write().expect("faults plan lock");
+    if plan.is_empty() {
+        ARMED.store(false, Ordering::Relaxed);
+        *g = None;
+    } else {
+        *g = Some(Arc::new(Armed { plan, injected: Counter::new() }));
+        ARMED.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Remove any installed plan; every seam returns to the disarmed
+/// single-branch path.
+pub fn clear() {
+    let mut g = global().write().expect("faults plan lock");
+    ARMED.store(false, Ordering::Relaxed);
+    *g = None;
+}
+
+/// Install a plan parsed from the `LRTA_FAULTS` environment variable.
+/// Returns `Ok(true)` if a non-empty plan was installed, `Ok(false)` when
+/// the variable is unset/empty, `Err` on a malformed spec.
+pub fn install_from_env() -> Result<bool> {
+    match std::env::var("LRTA_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let plan = Plan::parse(&spec)?;
+            let n = plan.len();
+            install(plan);
+            Ok(n > 0)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Whether a non-empty plan is installed (the fast-path flag seams read).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Attach a span recorder: every injection that fires records a
+/// `faults/fault_injected` span (covering the stall duration for
+/// [`Action::Stall`]). Independent of plan installation order.
+pub fn set_tracer(tracer: Tracer) {
+    *global_tracer().write().expect("faults tracer lock") = tracer;
+}
+
+/// Number of injections fired since the current plan was installed.
+pub fn fired() -> u64 {
+    global()
+        .read()
+        .expect("faults plan lock")
+        .as_ref()
+        .map(|a| a.injected.get())
+        .unwrap_or(0)
+}
+
+/// Register the fired-injection counter under `faults/injected` so metric
+/// exports carry the chaos accounting. No-op without an installed plan.
+pub fn register_metrics(registry: &crate::obs::Registry) -> Result<()> {
+    let g = global().read().expect("faults plan lock");
+    if let Some(armed) = g.as_ref() {
+        registry.register_counter("faults", "injected", &[], &armed.injected)?;
+    }
+    Ok(())
+}
+
+/// One seam hit: the single call sites thread through their chokepoints.
+/// Disarmed cost is one relaxed atomic load and a branch. When a matching
+/// directive reaches its ordinal this returns `Err` (action `error`),
+/// sleeps (action `stall`), or panics (action `panic`).
+#[inline]
+pub fn hit(seam: Seam, scope: &str) -> Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    hit_armed(seam, scope)
+}
+
+#[cold]
+fn hit_armed(seam: Seam, scope: &str) -> Result<()> {
+    let armed = {
+        let g = global().read().expect("faults plan lock");
+        match g.as_ref() {
+            Some(a) => Arc::clone(a),
+            None => return Ok(()),
+        }
+    };
+    let Some((action, site)) = armed.plan.check(seam, scope) else {
+        return Ok(());
+    };
+    armed.injected.inc();
+    let tracer = global_tracer().read().expect("faults tracer lock").clone();
+    let span = tracer.start();
+    match action {
+        Action::Stall(d) => {
+            std::thread::sleep(d);
+            tracer.end(span, "faults", "fault_injected");
+            Ok(())
+        }
+        Action::Error => {
+            tracer.end(span, "faults", "fault_injected");
+            bail!("injected fault: error at {site}")
+        }
+        Action::Panic => {
+            tracer.end(span, "faults", "fault_injected");
+            panic!("injected fault: panic at {site}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = Plan::parse("barrier_send@replica1:panic@step7,dispatch:stall(200ms)").unwrap();
+        assert_eq!(p.len(), 2);
+        let d = &p.directives[0];
+        assert_eq!(d.seam, Seam::BarrierSend);
+        assert_eq!(d.scope.as_deref(), Some("replica1"));
+        assert_eq!(d.action, Action::Panic);
+        assert_eq!(d.at, 7);
+        let d = &p.directives[1];
+        assert_eq!(d.seam, Seam::Dispatch);
+        assert_eq!(d.scope, None);
+        assert_eq!(d.action, Action::Stall(Duration::from_millis(200)));
+        assert_eq!(d.at, 1);
+    }
+
+    #[test]
+    fn parse_durations_and_ordinals() {
+        let p = Plan::parse("fetch:stall(2s)@3, prefetch:stall(500us), swap_ack:stall(50)")
+            .unwrap();
+        assert_eq!(p.directives[0].action, Action::Stall(Duration::from_secs(2)));
+        assert_eq!(p.directives[0].at, 3);
+        assert_eq!(p.directives[1].action, Action::Stall(Duration::from_micros(500)));
+        assert_eq!(p.directives[2].action, Action::Stall(Duration::from_millis(50)));
+        // bare ordinal without the "step" prefix
+        assert_eq!(Plan::parse("dispatch:error@4").unwrap().directives[0].at, 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "dispatch",               // no action
+            "nope:panic",             // unknown seam
+            "dispatch:explode",       // unknown action
+            "dispatch:stall(10ms",    // unclosed paren
+            "dispatch:stall(x)",      // bad duration
+            "dispatch:panic@step0",   // 0 ordinal (1-based)
+            "dispatch:panic@stepx",   // bad ordinal
+            "dispatch@:panic",        // empty scope
+        ] {
+            assert!(Plan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        assert!(Plan::parse("").unwrap().is_empty());
+        assert!(Plan::parse(" , ,").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seam_labels_round_trip() {
+        for seam in [
+            Seam::BatchUpload,
+            Seam::Dispatch,
+            Seam::Fetch,
+            Seam::Prefetch,
+            Seam::BarrierSend,
+            Seam::BarrierRecv,
+            Seam::SwapAck,
+        ] {
+            assert_eq!(Seam::parse(seam.label()), Some(seam));
+        }
+    }
+
+    #[test]
+    fn directive_fires_once_at_its_ordinal_with_scope_match() {
+        let p = Plan::parse("dispatch@replica1:error@3").unwrap();
+        // wrong scope never matches, and does not advance the ordinal
+        for _ in 0..5 {
+            assert!(p.check(Seam::Dispatch, "replica0").is_none());
+        }
+        assert!(p.check(Seam::Dispatch, "replica1").is_none()); // hit 1
+        assert!(p.check(Seam::Fetch, "replica1").is_none()); // different seam
+        assert!(p.check(Seam::Dispatch, "replica1").is_none()); // hit 2
+        let (action, site) = p.check(Seam::Dispatch, "replica1").unwrap(); // hit 3
+        assert_eq!(action, Action::Error);
+        assert!(site.contains("dispatch@replica1"), "{site}");
+        // exactly once: later hits never re-fire
+        for _ in 0..5 {
+            assert!(p.check(Seam::Dispatch, "replica1").is_none());
+        }
+    }
+
+    #[test]
+    fn wildcard_scope_matches_any() {
+        let p = Plan::parse("prefetch:error@2").unwrap();
+        assert!(p.check(Seam::Prefetch, "replica0").is_none());
+        assert!(p.check(Seam::Prefetch, "replica1").is_some(), "2nd hit across scopes fires");
+    }
+}

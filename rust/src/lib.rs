@@ -55,6 +55,15 @@
 //! text exposition (`--metrics-out`). Telemetry is off by default and the
 //! no-op recorder costs one branch per span site.
 //!
+//! Robustness is its own layer ([`faults`] + the supervision machinery in
+//! [`train::replica`] and [`serve`]): a deterministic fault-injection
+//! plane with named seams at every chokepoint (armed via `--faults` /
+//! `LRTA_FAULTS`, a single branch per seam when off), train-side barrier
+//! timeouts that *evict* dead or straggling replicas and keep averaging
+//! over the survivors, and serve-side shard supervisors that drain,
+//! respawn, and re-register crashed workers — so long multi-epoch runs and
+//! live serving survive worker death instead of deadlocking.
+//!
 //! Python never runs on the training/inference path: `make artifacts`
 //! lowers everything once, and the `lrta` binary is self-contained.
 //!
@@ -67,6 +76,7 @@ pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
 pub mod devmodel;
+pub mod faults;
 pub mod freeze;
 pub mod linalg;
 pub mod lrd;

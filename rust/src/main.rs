@@ -21,6 +21,7 @@ use lrta::checkpoint;
 use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
 use lrta::data::Dataset;
 use lrta::devmodel::DeviceProfile;
+use lrta::faults;
 use lrta::freeze::FreezeMode;
 use lrta::lrd::LayerShape;
 use lrta::obs::{Registry, Tracer};
@@ -46,12 +47,12 @@ SUBCOMMANDS
             --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
             [--no-pipeline] [--replicas N] [--avg-every K]
             [--momenta {avg|reset}] [--sync-compress {exact|q8}]
-            [--epoch-ckpts DIR]
+            [--epoch-ckpts DIR] [--no-evict] [--barrier-timeout-ms D]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
             [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
-            [--no-pipeline] [--shards N] [--slo-ms D]
+            [--no-pipeline] [--shards N] [--slo-ms D] [--no-supervise]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -69,6 +70,13 @@ COMMON
   --metrics-out F   (train, serve) write a Prometheus text-format snapshot
                     of the metrics registry (counters, gauges, latency
                     histogram) to F at the end of the run
+  --faults SPEC     deterministic fault injection: comma list of
+                    seam[@scope]:action[@stepN] directives, e.g.
+                    \"barrier_send@replica1:panic@step7,dispatch:stall(200ms)\"
+                    — seams: batch_upload dispatch fetch prefetch
+                    barrier_send barrier_recv swap_ack; actions: panic,
+                    error, stall(DUR). Falls back to the LRTA_FAULTS env
+                    var; unset means zero-cost disarmed seams
   --no-resident     train through the host-literal round-trip baseline
                     instead of the device-resident buffer-chained engine
   --no-pipeline     disable overlapped execution (double-buffered batch
@@ -94,6 +102,11 @@ TRAIN SCALING
   --epoch-ckpts DIR persist every epoch's parameters as DIR/epoch_NNN.bin
                     on a side thread while the next epoch trains
                     (single-replica trainer only)
+  --barrier-timeout-ms D  averaging-barrier deadline per event (default
+                    30000): a replica that misses it is evicted and the
+                    barrier closes over the survivors with a rescaled mean
+  --no-evict        fail the whole run when a replica dies or misses the
+                    barrier deadline instead of evicting it
 
 SERVE
   Starts one engine per variant (parameters uploaded once and kept
@@ -111,6 +124,9 @@ SERVE SCALING
   --slo-ms D        per-request admission deadline: work still queued D ms
                     after submission is shed at pop time (DeadlineExceeded)
                     instead of occupying a batch slot (0 = never shed)
+  --no-supervise    disable per-shard supervision (a worker death then
+                    leaves its shard down instead of draining, respawning
+                    warm and rejoining the fanout)
 ";
 
 fn main() {
@@ -127,7 +143,8 @@ fn run() -> Result<()> {
         "pretrain-epochs", "verbose", "stride", "variants", "requests", "concurrency",
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
         "no-pipeline", "replicas", "avg-every", "momenta", "sync-compress", "epoch-ckpts",
-        "shards", "slo-ms", "trace-out", "metrics-out",
+        "shards", "slo-ms", "trace-out", "metrics-out", "faults", "no-evict",
+        "barrier-timeout-ms", "no-supervise",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -135,6 +152,15 @@ fn run() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+
+    // arm the process-global fault plan before any engine thread exists:
+    // --faults wins, LRTA_FAULTS is the fallback, neither leaves every seam
+    // a single relaxed atomic load
+    if let Some(spec) = args.get("faults") {
+        faults::install(faults::Plan::parse(spec)?);
+    } else {
+        faults::install_from_env()?;
+    }
 
     match cmd.as_str() {
         "info" => info(&args),
@@ -271,6 +297,10 @@ fn train(args: &Args) -> Result<()> {
     let params = checkpoint::load(&ckpt)?;
     let out = args.str_or("out", "");
     let obs = obs_outputs(args);
+    faults::set_tracer(obs.tracer.clone());
+    if let Some(reg) = &obs.registry {
+        faults::register_metrics(reg)?;
+    }
 
     // data-parallel path: each replica owns its PJRT client on its own
     // thread, so no main-thread runtime is created here. Parse strictly —
@@ -309,6 +339,10 @@ fn train(args: &Args) -> Result<()> {
             compress: SyncCompress::parse(&compress_arg)
                 .ok_or_else(|| anyhow!("unknown sync compression '{compress_arg}'"))?,
             identical_shards: false,
+            evict: !args.bool_or("no-evict", false),
+            barrier_timeout: Duration::from_secs_f64(
+                args.f64_or("barrier-timeout-ms", 30_000.0) / 1e3,
+            ),
         };
         let run = run_replicas_traced(
             &m,
@@ -348,6 +382,21 @@ fn train(args: &Args) -> Result<()> {
                 r.avg_bytes_skipped,
                 r.avg_bytes_saved_by_delta()
             );
+        }
+        if run.record.degraded() {
+            println!(
+                "DEGRADED run: finished on {} of {replicas} replicas",
+                replicas - run.record.evictions.len()
+            );
+            for ev in &run.record.evictions {
+                println!(
+                    "  evicted replica {} at event {} (last heartbeat epoch {} step {}): {}",
+                    ev.replica, ev.event, ev.last_epoch, ev.last_step, ev.reason
+                );
+            }
+        }
+        if faults::armed() {
+            println!("faults: {} injected", faults::fired());
         }
         if !out.is_empty() {
             checkpoint::save(&out, &run.params)?;
@@ -459,6 +508,10 @@ fn serve(args: &Args) -> Result<()> {
     }
 
     let obs = obs_outputs(args);
+    faults::set_tracer(obs.tracer.clone());
+    if let Some(reg) = &obs.registry {
+        faults::register_metrics(reg)?;
+    }
     let cfg = ServerConfig {
         queue_depth: args.usize_or("depth", 0),
         max_wait: Duration::from_secs_f64(args.f64_or("max-wait-ms", 2.0) / 1e3),
@@ -468,6 +521,7 @@ fn serve(args: &Args) -> Result<()> {
         slo,
         registry: obs.registry.clone(),
         tracer: obs.tracer.clone(),
+        supervise: !args.bool_or("no-supervise", false),
         ..Default::default()
     };
     println!(
@@ -518,6 +572,22 @@ fn serve(args: &Args) -> Result<()> {
             report.latency_ms(95.0),
             report.latency_ms(99.0)
         );
+    }
+    let deaths: u64 = variants
+        .iter()
+        .filter_map(|v| server.stats(&model, v))
+        .map(|s| s.worker_deaths)
+        .sum();
+    let respawned: u64 = variants
+        .iter()
+        .filter_map(|v| server.stats(&model, v))
+        .map(|s| s.respawns)
+        .sum();
+    if deaths > 0 {
+        println!("supervision: {deaths} worker deaths, {respawned} respawns");
+    }
+    if faults::armed() {
+        println!("faults: {} injected", faults::fired());
     }
     server.shutdown();
     obs.write()?;

@@ -94,16 +94,47 @@ pub struct EpochRecord {
     pub freeze_pattern: String,
 }
 
+/// One replica eviction performed by the data-parallel coordinator — the
+/// exact degraded-membership accounting a [`RunRecord`] carries when a
+/// run finished on fewer replicas than it started with.
+#[derive(Clone, Debug)]
+pub struct EvictionRecord {
+    /// Evicted replica index — also its shard index: that shard's
+    /// remaining batches are lost for the rest of the run.
+    pub replica: usize,
+    /// Global averaging-event ordinal the fleet was blocked on when the
+    /// eviction happened (0 = outside any open barrier).
+    pub event: u64,
+    /// Last liveness beacon received: the epoch the replica had
+    /// definitely reached.
+    pub last_epoch: usize,
+    /// Step within `last_epoch` of that last beacon.
+    pub last_step: usize,
+    /// Why the coordinator evicted: the replica's own death report, or
+    /// the barrier-deadline diagnosis for a straggler.
+    pub reason: String,
+    /// Live replicas remaining after this eviction.
+    pub survivors: usize,
+}
+
 /// A full training run record (powers Fig. 3 / Tables 3-4 rows).
 #[derive(Clone, Debug, Default)]
 pub struct RunRecord {
     pub name: String,
     pub epochs: Vec<EpochRecord>,
+    /// Replica evictions, in order — empty for a healthy run. Epoch rows
+    /// after an eviction fold survivor shards only.
+    pub evictions: Vec<EvictionRecord>,
 }
 
 impl RunRecord {
     pub fn new(name: impl Into<String>) -> Self {
-        RunRecord { name: name.into(), epochs: Vec::new() }
+        RunRecord { name: name.into(), epochs: Vec::new(), evictions: Vec::new() }
+    }
+
+    /// Whether the run finished on degraded membership.
+    pub fn degraded(&self) -> bool {
+        !self.evictions.is_empty()
     }
 
     pub fn final_test_acc(&self) -> f64 {

@@ -38,6 +38,7 @@ use super::{Request, Response, ServeError};
 use crate::checkpoint::Params;
 use crate::coordinator::evaluate_with;
 use crate::data::Dataset;
+use crate::faults::{self, Seam};
 use crate::obs::Tracer;
 use crate::runtime::{
     literal_to_tensor, tensor_to_literal, ArtifactMeta, Executable, InFlight, Manifest, Runtime,
@@ -165,6 +166,9 @@ struct Engine {
     /// Spot-check sample count from the config (0 = off); kept so a warm
     /// swap can refresh the accuracy gauge for the new checkpoint.
     spot_check: usize,
+    /// Fault-seam scope label (`shard{N}`) so a `--faults` directive can
+    /// target one shard of a fanout ([`crate::faults`]).
+    fault_scope: String,
 }
 
 impl Engine {
@@ -202,6 +206,7 @@ impl Engine {
             stats,
             tracer,
             spot_check: cfg.spot_check,
+            fault_scope: format!("shard{}", cfg.shard),
         };
         engine.run_spot_check()?;
         Ok(engine)
@@ -250,6 +255,13 @@ impl Engine {
                     self.finish_batch(p);
                 }
                 let outcome = self.apply_swap(msg.params);
+                // fault seam: a panic/stall here models a worker dying or
+                // hanging before acknowledging — the router's bounded ack
+                // wait must surface it instead of blocking forever
+                if let Err(e) = faults::hit(Seam::SwapAck, &self.fault_scope) {
+                    let _ = msg.ack.send(Err(format!("{e:#}")));
+                    continue;
+                }
                 let _ = msg.ack.send(outcome);
             }
             match batcher::next_batch(queue, &bcfg, &self.stats, &self.tracer) {
@@ -360,10 +372,12 @@ impl Engine {
     /// blocking (upload `x`, enqueue the execution).
     fn dispatch(&self, xs: &[f32]) -> Result<InFlight> {
         let bufs = self.resident.as_ref().expect("dispatch requires resident buffers");
+        faults::hit(Seam::BatchUpload, &self.fault_scope)?;
         let up_t0 = self.tracer.start();
         let x_lit = xla::Literal::vec1(xs).reshape(&self.x_dims)?;
         let x_buf = self.rt.upload(&x_lit)?;
         self.tracer.end(up_t0, "serve", "upload");
+        faults::hit(Seam::Dispatch, &self.fault_scope)?;
         let d_t0 = self.tracer.start();
         let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
         refs.push(&x_buf);
@@ -377,7 +391,8 @@ impl Engine {
         let InFlightBatch { reqs, padded, pending, dispatch_secs } = b;
         let t0 = Instant::now();
         let fetch_t0 = self.tracer.start();
-        let fetched = pending.fetch(&self.rt);
+        let fetched =
+            faults::hit(Seam::Fetch, &self.fault_scope).and_then(|()| pending.fetch(&self.rt));
         self.tracer.end(fetch_t0, "serve", "fetch");
         let demux_t0 = self.tracer.start();
         let result = fetched
@@ -438,13 +453,16 @@ impl Engine {
             // hot path: the same dispatch→fetch sequence the streaming
             // loop uses, just with the two halves back to back — the
             // serial baseline can never diverge from the pipelined path
-            let outs = self.dispatch(xs)?.fetch(&self.rt)?;
+            let pending = self.dispatch(xs)?;
+            faults::hit(Seam::Fetch, &self.fault_scope)?;
+            let outs = pending.fetch(&self.rt)?;
             let mut lits = Executable::buffer_to_literals(&outs[0])?;
             lits.swap_remove(0)
         } else {
             // measured baseline: host→device upload of every parameter,
             // every batch (what examples/serve_infer.rs used to do
             // per request)
+            faults::hit(Seam::BatchUpload, &self.fault_scope)?;
             let n = self.meta.trainable.len() + self.meta.frozen.len();
             let mut inputs = Vec::with_capacity(n + 1);
             for slot in self.meta.trainable.iter().chain(self.meta.frozen.iter()) {

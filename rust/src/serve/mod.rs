@@ -160,6 +160,10 @@ pub enum ServeError {
     /// The server shut down before the request was served (terminal answer
     /// for work drained out of a closed queue).
     Shutdown,
+    /// Every shard of the target variant is down (worker died; the
+    /// supervisor is respawning it or has exhausted its respawn budget).
+    /// Transient when supervision is on — retry after a short backoff.
+    ShardDown,
     /// `(model, variant)` was never registered with the router.
     UnknownVariant(String),
     /// Payload length does not match the artifact's per-item element count.
@@ -178,6 +182,9 @@ impl std::fmt::Display for ServeError {
                 write!(f, "admission deadline exceeded while queued (shed at pop)")
             }
             ServeError::Shutdown => write!(f, "server shut down before the request was served"),
+            ServeError::ShardDown => {
+                write!(f, "shard down (worker died; respawn pending or exhausted)")
+            }
             ServeError::UnknownVariant(k) => write!(f, "unknown variant '{k}'"),
             ServeError::BadInput { expected, got } => {
                 write!(f, "bad input: expected {expected} elements, got {got}")
@@ -387,6 +394,7 @@ mod tests {
         assert!(ServeError::UnknownVariant("m/v".into()).to_string().contains("m/v"));
         assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
         assert!(ServeError::Shutdown.to_string().contains("shut down"));
+        assert!(ServeError::ShardDown.to_string().contains("worker died"));
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub enum Pop<T> {
 struct Inner<T> {
     items: VecDeque<T>,
     closed: bool,
+    /// Terminal close (server shutdown): [`Bounded::reopen`] refuses to
+    /// clear it, so a supervised respawn racing shutdown cannot resurrect
+    /// the queue after the drain backstop already ran.
+    finished: bool,
 }
 
 /// Bounded multi-producer single-consumer queue.
@@ -56,7 +60,7 @@ impl<T> Bounded<T> {
         assert!(capacity > 0, "queue capacity must be positive");
         Bounded {
             capacity,
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, finished: false }),
             not_empty: Condvar::new(),
             depth: obs::Gauge::new(),
         }
@@ -158,6 +162,31 @@ impl<T> Bounded<T> {
         self.inner.lock().unwrap().closed = true;
         self.not_empty.notify_all();
     }
+
+    /// Terminal close: like [`Bounded::close`], but a later
+    /// [`Bounded::reopen`] is refused. Server shutdown uses this so a
+    /// supervised worker respawn that races the shutdown cannot reopen a
+    /// queue nobody will ever consume again.
+    pub fn close_final(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        g.finished = true;
+        drop(g);
+        self.not_empty.notify_all();
+    }
+
+    /// Reopen a closed queue for a supervised worker respawn — the shard
+    /// keeps its queue handle (and depth gauge registration) across worker
+    /// generations, so admission just resumes. Returns `false` without
+    /// reopening if the queue was closed terminally ([`Bounded::close_final`]).
+    pub fn reopen(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.finished {
+            return false;
+        }
+        g.closed = false;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +282,26 @@ mod tests {
         q.close();
         assert_eq!(q.drain(), vec![3]);
         assert_eq!(q.depth_gauge().get(), 0);
+    }
+
+    #[test]
+    fn reopen_resumes_admission_but_not_after_final_close() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(2), Err(PushError::Closed(2))));
+        // a supervised respawn reopens: the queue keeps working in place
+        assert!(q.reopen());
+        assert!(!q.is_closed());
+        assert_eq!(q.try_push(2).unwrap(), 2);
+        assert!(matches!(q.try_pop(), Some(1)));
+        // terminal close wins any race with a reopen
+        q.close_final();
+        assert!(!q.reopen(), "reopen must refuse a finalized queue");
+        assert!(q.is_closed());
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        // drain still delivers what was admitted before the final close
+        assert_eq!(q.drain(), vec![2]);
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //! admission deadlines (`ServerConfig::slo`), applies admission control via
 //! the bounded queues, brokers warm variant swaps, and exposes per-variant
 //! (shard-merged) stats snapshots.
+//!
+//! **Supervision** (`ServerConfig::supervise`, default on): each shard
+//! worker runs under a supervisor thread that joins it, and — if the worker
+//! died rather than shut down — answers its stranded requests, respawns a
+//! fresh worker warm from the shard's last-applied checkpoint, re-installs
+//! its swap channel and reopens its queue. The respawn budget is
+//! `max_respawns` per shard; past it the shard stays down and `submit`
+//! (after a bounded [`ServeError::ShardDown`] retry window) steers traffic
+//! to surviving shards.
 
 use super::engine::{self, EngineConfig, ShardWiring, SwapMsg};
 use super::queue::{Bounded, PushError};
@@ -18,10 +27,10 @@ use super::stats::{SharedStats, StatsSnapshot};
 use super::{drain_shutdown, Pending, Request, ServeError};
 use crate::checkpoint::Params;
 use crate::obs::{Registry, Tracer};
-use crate::runtime::Manifest;
+use crate::runtime::{ArtifactMeta, Manifest};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -56,6 +65,19 @@ pub struct ServerConfig {
     /// Request-lifecycle span recorder, cloned into every shard worker and
     /// the submit path. The default no-op tracer records nothing.
     pub tracer: Tracer,
+    /// Run each shard worker under a supervisor thread that respawns it
+    /// (warm, from the shard's last-applied checkpoint) if it dies.
+    pub supervise: bool,
+    /// Respawn budget per shard: after this many respawns the shard stays
+    /// down and traffic steers to the survivors.
+    pub max_respawns: usize,
+    /// Upper bound on waiting for a shard's warm-swap ack — a wedged worker
+    /// must not hang [`Server::swap_variant`] forever.
+    pub swap_timeout: Duration,
+    /// How long `submit` retries a shard whose queue is closed by a worker
+    /// death (the respawn usually lands within this window) before
+    /// answering [`ServeError::ShardDown`].
+    pub shard_down_retry: Duration,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +92,10 @@ impl Default for ServerConfig {
             slo: None,
             registry: None,
             tracer: Tracer::default(),
+            supervise: true,
+            max_respawns: 2,
+            swap_timeout: Duration::from_secs(10),
+            shard_down_retry: Duration::from_millis(500),
         }
     }
 }
@@ -120,9 +146,16 @@ impl VariantSpec {
 struct ShardHandle {
     queue: Arc<Bounded<Request>>,
     stats: SharedStats,
-    /// Warm-swap control channel into the worker (Mutex only to keep
-    /// `Server: Sync`; swaps are a cold path).
-    swap: Mutex<mpsc::Sender<SwapMsg>>,
+    /// Warm-swap control channel into the worker. Shared with the shard's
+    /// supervisor, which installs a fresh sender on respawn (the Mutex also
+    /// keeps `Server: Sync`; swaps are a cold path).
+    swap: Arc<Mutex<mpsc::Sender<SwapMsg>>>,
+    /// The checkpoint this shard last successfully applied (its start
+    /// params, replaced on every acked swap) — the warm state a supervised
+    /// respawn re-uploads.
+    checkpoint: Arc<Mutex<Params>>,
+    /// The shard's supervisor thread when supervision is on, otherwise the
+    /// worker thread itself.
     join: Option<JoinHandle<()>>,
 }
 
@@ -141,6 +174,17 @@ struct EngineHandle {
 }
 
 impl EngineHandle {
+    /// Effective routing depth of one shard: a closed queue (dead worker
+    /// awaiting respawn, or respawn budget exhausted) must lose every
+    /// comparison so traffic steers to live shards.
+    fn route_depth(s: &ShardHandle) -> usize {
+        if s.queue.is_closed() {
+            usize::MAX
+        } else {
+            s.queue.len()
+        }
+    }
+
     /// Fanout decision: the shard with the shallowest queue, scanning from
     /// a rotating start so exact ties are broken round-robin (idle shards
     /// then share trickle traffic evenly instead of shard 0 taking it all).
@@ -150,10 +194,10 @@ impl EngineHandle {
         }
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let mut best = start;
-        let mut best_depth = self.shards[start].queue.len();
+        let mut best_depth = Self::route_depth(&self.shards[start]);
         for off in 1..self.shards.len() {
             let i = (start + off) % self.shards.len();
-            let depth = self.shards[i].queue.len();
+            let depth = Self::route_depth(&self.shards[i]);
             // strictly-less keeps the rotating start on ties
             if depth < best_depth {
                 best = i;
@@ -207,12 +251,15 @@ impl Router {
         }
     }
 
-    /// Close every queue, join every worker, then answer any requests a
-    /// dead worker left queued with [`ServeError::Shutdown`] (idempotent).
+    /// Close every queue, join every worker (or its supervisor), then
+    /// answer any requests a dead worker left queued with
+    /// [`ServeError::Shutdown`] (idempotent). The close is terminal
+    /// ([`Bounded::close_final`]) so a supervised respawn racing this
+    /// shutdown cannot reopen a queue nobody will consume again.
     fn close_and_join(&mut self) {
         for h in self.engines.values() {
             for s in &h.shards {
-                s.queue.close();
+                s.queue.close_final();
             }
         }
         for h in self.engines.values_mut() {
@@ -229,6 +276,93 @@ impl Router {
     }
 }
 
+/// Everything a shard supervisor needs to resurrect its worker: spawn
+/// inputs (manifest / artifact / engine config), the shard's shared wiring
+/// (queue, stats, swap slot, checkpoint), and the server-wide shutdown
+/// flag.
+struct SupervisorCtx {
+    manifest: Manifest,
+    meta: ArtifactMeta,
+    ecfg: EngineConfig,
+    queue: Arc<Bounded<Request>>,
+    stats: SharedStats,
+    swap: Arc<Mutex<mpsc::Sender<SwapMsg>>>,
+    checkpoint: Arc<Mutex<Params>>,
+    tracer: Tracer,
+    closing: Arc<AtomicBool>,
+    max_respawns: usize,
+}
+
+/// Shard supervisor loop: join the worker; if it died (rather than shut
+/// down), answer its stranded requests, respawn it warm from the shard's
+/// last-applied checkpoint, re-install the swap channel and reopen the
+/// queue — up to `max_respawns` times. Returns when the server is closing,
+/// the budget is exhausted, or a shutdown finalizes the queue mid-respawn.
+fn supervise_shard(ctx: SupervisorCtx, mut worker: JoinHandle<()>) {
+    let mut respawns = 0;
+    loop {
+        // a worker exit is either orderly shutdown (queue closed by the
+        // server) or a death (panic / init failure); `closing` is set
+        // *before* the shutdown close, so checking it after the join
+        // distinguishes the two without a race
+        let _ = worker.join();
+        if ctx.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        ctx.stats.on_worker_death();
+        // the dying worker's queue guard already closed the queue; drain
+        // again here so requests admitted between its drain and the close
+        // still get a terminal answer before the respawn reopens admission
+        drain_shutdown(&ctx.queue);
+        if respawns >= ctx.max_respawns {
+            eprintln!(
+                "[serve] shard {}/{}#{} died; respawn budget ({}) exhausted, shard stays down",
+                ctx.ecfg.model, ctx.ecfg.variant, ctx.ecfg.shard, ctx.max_respawns
+            );
+            return;
+        }
+        respawns += 1;
+        eprintln!(
+            "[serve] shard {}/{}#{} died; respawning warm ({respawns}/{})",
+            ctx.ecfg.model, ctx.ecfg.variant, ctx.ecfg.shard, ctx.max_respawns
+        );
+        let params = ctx.checkpoint.lock().unwrap().clone();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let (swap_tx, swap_rx) = mpsc::channel();
+        let next = engine::spawn(
+            ctx.manifest.clone(),
+            ctx.meta.clone(),
+            params,
+            ctx.ecfg.clone(),
+            ShardWiring {
+                queue: Arc::clone(&ctx.queue),
+                stats: ctx.stats.clone(),
+                swap: swap_rx,
+                ready: ready_tx,
+                tracer: ctx.tracer.clone(),
+            },
+        );
+        match ready_rx.recv() {
+            Ok(Ok(())) => {
+                *ctx.swap.lock().unwrap() = swap_tx;
+                if ctx.queue.reopen() {
+                    ctx.stats.on_respawn();
+                    worker = next;
+                } else {
+                    // shutdown finalized the queue mid-respawn: the fresh
+                    // worker sees it closed and exits; join it and stand down
+                    let _ = next.join();
+                    return;
+                }
+            }
+            // the respawn failed to come up (compile/upload error or a
+            // startup panic): loop back so the join counts it as another
+            // death against the budget
+            Ok(Err(_)) | Err(_) => worker = next,
+        }
+    }
+}
+
 /// The serving subsystem's front door: a router over per-variant shard sets
 /// plus lifecycle management. `Sync` — share it by reference across client
 /// threads.
@@ -236,6 +370,13 @@ pub struct Server {
     router: Router,
     next_id: AtomicU64,
     slo: Option<Duration>,
+    /// Warm-swap ack deadline (see [`ServerConfig::swap_timeout`]).
+    swap_timeout: Duration,
+    /// `submit` retry window for a dead shard's closed queue.
+    shard_down_retry: Duration,
+    /// Set (before the queues close) on shutdown, so supervisors stand down
+    /// and `submit` answers [`ServeError::Closed`] instead of retrying.
+    closing: Arc<AtomicBool>,
     tracer: Tracer,
 }
 
@@ -251,6 +392,11 @@ impl Server {
     ) -> Result<Server> {
         let mut router = Router::default();
         let mut pending = Vec::new();
+        let closing = Arc::new(AtomicBool::new(false));
+        // supervisor contexts staged per shard; the threads only spawn
+        // after every shard reports ready (startup failures keep the
+        // simple fail-fast teardown of the unsupervised path)
+        let mut supervisors: Vec<(String, usize, SupervisorCtx)> = Vec::new();
         for spec in specs {
             if spec.shards == 0 {
                 router.close_and_join();
@@ -315,7 +461,7 @@ impl Server {
                     manifest.clone(),
                     meta.clone(),
                     spec.params.clone(),
-                    ecfg,
+                    ecfg.clone(),
                     ShardWiring {
                         queue: Arc::clone(&queue),
                         stats: stats.clone(),
@@ -324,8 +470,29 @@ impl Server {
                         tracer: cfg.tracer.clone(),
                     },
                 );
-                let swap = Mutex::new(swap_tx);
-                shards.push(ShardHandle { queue, stats, swap, join: Some(join) });
+                let swap = Arc::new(Mutex::new(swap_tx));
+                let checkpoint = Arc::new(Mutex::new(spec.params.clone()));
+                if cfg.supervise {
+                    supervisors.push((
+                        key.clone(),
+                        shard,
+                        SupervisorCtx {
+                            manifest: manifest.clone(),
+                            meta: meta.clone(),
+                            // the startup spot-check already answered for
+                            // this checkpoint; a respawn skips it
+                            ecfg: EngineConfig { spot_check: 0, ..ecfg },
+                            queue: Arc::clone(&queue),
+                            stats: stats.clone(),
+                            swap: Arc::clone(&swap),
+                            checkpoint: Arc::clone(&checkpoint),
+                            tracer: cfg.tracer.clone(),
+                            closing: Arc::clone(&closing),
+                            max_respawns: cfg.max_respawns,
+                        },
+                    ));
+                }
+                shards.push(ShardHandle { queue, stats, swap, checkpoint, join: Some(join) });
                 pending.push((format!("{key}#{shard}"), ready_rx));
             }
             let handle = EngineHandle {
@@ -355,10 +522,27 @@ impl Server {
                 return Err(e);
             }
         }
+        // every shard is compiled-and-resident: hand each worker handle to
+        // its supervisor (the shard's `join` becomes the supervisor's, so
+        // `close_and_join` waits for the whole supervision loop to stand
+        // down, never just the current worker generation)
+        for (key, shard, ctx) in supervisors {
+            let h = router.engines.get_mut(&key).expect("supervised shard was registered above");
+            let worker = h.shards[shard].join.take().expect("worker handle present at startup");
+            let name = format!("lrta-serve-sup-{}-{shard}", key.replace('/', "-"));
+            let sup = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || supervise_shard(ctx, worker))
+                .expect("failed to spawn shard supervisor thread");
+            h.shards[shard].join = Some(sup);
+        }
         Ok(Server {
             router,
             next_id: AtomicU64::new(0),
             slo: cfg.slo,
+            swap_timeout: cfg.swap_timeout,
+            shard_down_retry: cfg.shard_down_retry,
+            closing,
             tracer: cfg.tracer.clone(),
         })
     }
@@ -366,7 +550,11 @@ impl Server {
     /// Enqueue one sample for `(model, variant)`. Returns immediately with
     /// a [`Pending`] handle, or an admission-control / routing error. With
     /// shards the request lands on the shallowest queue (round-robin on
-    /// ties); with an SLO configured it carries an admission deadline.
+    /// ties, closed queues lose to any live shard); with an SLO configured
+    /// it carries an admission deadline. A queue closed by a worker death
+    /// (not shutdown) is retried with a short backoff for up to
+    /// `shard_down_retry` — the supervised respawn usually lands inside the
+    /// window — before answering [`ServeError::ShardDown`].
     pub fn submit(&self, model: &str, variant: &str, x: Vec<f32>) -> Result<Pending, ServeError> {
         let span_t0 = self.tracer.start();
         let h = self
@@ -376,28 +564,43 @@ impl Server {
         if x.len() != h.item_elems {
             return Err(ServeError::BadInput { expected: h.item_elems, got: x.len() });
         }
-        let shard = &h.shards[h.pick_shard()];
         let (tx, rx) = mpsc::channel();
         let enqueued = Instant::now();
-        let req = Request {
+        let retry_until = enqueued + self.shard_down_retry;
+        let mut req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             x,
             enqueued,
             deadline: self.slo.map(|slo| enqueued + slo),
             tx,
         };
-        let outcome = match shard.queue.try_push(req) {
-            Ok(depth) => {
-                shard.stats.on_enqueue(depth);
-                Ok(Pending { rx })
+        let outcome = loop {
+            let shard = &h.shards[h.pick_shard()];
+            match shard.queue.try_push(req) {
+                Ok(depth) => {
+                    shard.stats.on_enqueue(depth);
+                    break Ok(Pending { rx });
+                }
+                // the pick already steered to the shallowest queue: if that
+                // one is at capacity, every shard is — reject (backpressure)
+                Err(PushError::Full(_)) => {
+                    shard.stats.on_reject();
+                    break Err(ServeError::QueueFull { depth: shard.queue.capacity() });
+                }
+                Err(PushError::Closed(r)) => {
+                    if self.closing.load(Ordering::SeqCst) {
+                        break Err(ServeError::Closed);
+                    }
+                    if Instant::now() >= retry_until {
+                        break Err(ServeError::ShardDown);
+                    }
+                    // every live shard outranks a closed queue in the pick,
+                    // so landing here means the whole shard set is down —
+                    // wait out the respawn
+                    req = r;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
             }
-            // the pick already steered to the shallowest queue: if that one
-            // is at capacity, every shard is — reject (backpressure)
-            Err(PushError::Full(_)) => {
-                shard.stats.on_reject();
-                Err(ServeError::QueueFull { depth: shard.queue.capacity() })
-            }
-            Err(PushError::Closed(_)) => Err(ServeError::Closed),
         };
         self.tracer.end(span_t0, "serve", "submit");
         outcome
@@ -409,6 +612,8 @@ impl Server {
     /// flowing throughout and none is dropped. Blocks until every shard has
     /// flipped (or reports the first failure — on error the fleet may be
     /// mid-swap: healthy shards flipped, failed ones kept the old set).
+    /// Each ack wait is bounded by `swap_timeout`, so a wedged worker
+    /// surfaces as an error instead of hanging the caller forever.
     pub fn swap_variant(
         &self,
         model: &str,
@@ -424,23 +629,44 @@ impl Server {
         let _gate = h.swap_gate.lock().unwrap();
         // fan the swap out to every shard first so uploads overlap …
         let mut acks = Vec::with_capacity(h.shards.len());
-        for shard in &h.shards {
+        for (i, shard) in h.shards.iter().enumerate() {
             let (ack_tx, ack_rx) = mpsc::channel();
             let msg = SwapMsg { params: params.clone(), ack: ack_tx };
             if shard.swap.lock().unwrap().send(msg).is_err() {
-                return Err(ServeError::Closed);
+                return Err(self.down_error());
             }
-            acks.push(ack_rx);
+            acks.push((i, ack_rx));
         }
-        // … then collect every ack
-        for ack in acks {
-            match ack.recv() {
-                Ok(Ok(())) => {}
+        // … then collect every ack, each wait deadline-bounded
+        for (i, ack) in acks {
+            match ack.recv_timeout(self.swap_timeout) {
+                Ok(Ok(())) => {
+                    // remember the applied checkpoint so a supervised
+                    // respawn of this shard comes back warm with it
+                    *h.shards[i].checkpoint.lock().unwrap() = params.clone();
+                }
                 Ok(Err(e)) => return Err(ServeError::Engine(e)),
-                Err(_) => return Err(ServeError::Closed),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    return Err(ServeError::Engine(format!(
+                        "shard {i} swap ack timed out after {:?}",
+                        self.swap_timeout
+                    )))
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Err(self.down_error()),
             }
         }
         Ok(())
+    }
+
+    /// A shard's control channel went away: [`ServeError::Closed`] when the
+    /// server is shutting down, [`ServeError::ShardDown`] when its worker
+    /// died.
+    fn down_error(&self) -> ServeError {
+        if self.closing.load(Ordering::SeqCst) {
+            ServeError::Closed
+        } else {
+            ServeError::ShardDown
+        }
     }
 
     /// Compiled batch size of a registered variant.
@@ -496,6 +722,10 @@ impl Server {
     }
 
     fn shutdown_inner(&mut self) {
+        // order matters: supervisors (and `submit` retries) check `closing`
+        // after a queue closes, so the flag must already read true when the
+        // terminal close lands
+        self.closing.store(true, Ordering::SeqCst);
         self.router.close_and_join();
     }
 }
@@ -532,6 +762,10 @@ mod tests {
         assert!(c.slo.is_none(), "no SLO by default: nothing sheds");
         assert!(c.registry.is_none(), "no registry by default: nothing registers");
         assert!(!c.tracer.is_enabled(), "tracing off by default");
+        assert!(c.supervise, "supervised respawn on by default");
+        assert_eq!(c.max_respawns, 2);
+        assert!(c.swap_timeout >= Duration::from_secs(1), "swap ack wait is generous but finite");
+        assert!(c.shard_down_retry >= Duration::from_millis(100));
     }
 
     #[test]
@@ -550,7 +784,8 @@ mod tests {
                 ShardHandle {
                     queue: Arc::new(Bounded::new(depth)),
                     stats: SharedStats::new("m", "v", 4),
-                    swap: Mutex::new(swap_tx),
+                    swap: Arc::new(Mutex::new(swap_tx)),
+                    checkpoint: Arc::new(Mutex::new(Params::new())),
                     join: None,
                 }
             })
@@ -600,6 +835,19 @@ mod tests {
         // all queues empty → pure round-robin from the rotating cursor
         let picks: Vec<usize> = (0..6).map(|_| h.pick_shard()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn pick_shard_steers_around_closed_queues() {
+        let h = dummy_handle(3, 8);
+        // shard 1 is the *deepest* live queue, but 0 and 2 are closed (dead
+        // workers awaiting respawn): every pick must still land on 1
+        push_dummy(&h, 1);
+        h.shards[0].queue.close();
+        h.shards[2].queue.close();
+        for _ in 0..6 {
+            assert_eq!(h.pick_shard(), 1, "closed queues must lose to any live shard");
+        }
     }
 
     #[test]

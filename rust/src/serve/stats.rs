@@ -153,6 +153,11 @@ pub struct SharedStats {
     shed: obs::Counter,
     /// Warm variant swaps applied by this engine worker.
     swaps: obs::Counter,
+    /// Unexpected worker-thread exits (panic or death) the shard
+    /// supervisor observed.
+    worker_deaths: obs::Counter,
+    /// Supervised worker respawns that came back up serving.
+    respawns: obs::Counter,
     errors: obs::Counter,
     batches: obs::Counter,
     served: obs::Counter,
@@ -180,6 +185,8 @@ impl SharedStats {
             rejected: obs::Counter::new(),
             shed: obs::Counter::new(),
             swaps: obs::Counter::new(),
+            worker_deaths: obs::Counter::new(),
+            respawns: obs::Counter::new(),
             errors: obs::Counter::new(),
             batches: obs::Counter::new(),
             served: obs::Counter::new(),
@@ -209,6 +216,8 @@ impl SharedStats {
         registry.register_counter("serve", "rejected", labels, &self.rejected)?;
         registry.register_counter("serve", "shed", labels, &self.shed)?;
         registry.register_counter("serve", "swaps", labels, &self.swaps)?;
+        registry.register_counter("serve", "worker_deaths", labels, &self.worker_deaths)?;
+        registry.register_counter("serve", "respawns", labels, &self.respawns)?;
         registry.register_counter("serve", "errors", labels, &self.errors)?;
         registry.register_counter("serve", "batches", labels, &self.batches)?;
         registry.register_counter("serve", "served", labels, &self.served)?;
@@ -238,6 +247,16 @@ impl SharedStats {
     /// One warm variant swap applied between batches.
     pub fn on_swap(&self) {
         self.swaps.inc();
+    }
+
+    /// One unexpected worker-thread exit observed by the shard supervisor.
+    pub fn on_worker_death(&self) {
+        self.worker_deaths.inc();
+    }
+
+    /// One supervised respawn that came back up serving.
+    pub fn on_respawn(&self) {
+        self.respawns.inc();
     }
 
     pub fn on_error(&self, requests: usize) {
@@ -345,6 +364,8 @@ impl SharedStats {
             rejected: self.rejected.get(),
             shed: self.shed.get(),
             swaps: self.swaps.get(),
+            worker_deaths: self.worker_deaths.get(),
+            respawns: self.respawns.get(),
             errors: self.errors.get(),
             batches,
             served,
@@ -391,6 +412,8 @@ impl SharedStats {
             rejected: 0,
             shed: 0,
             swaps: 0,
+            worker_deaths: 0,
+            respawns: 0,
             errors: 0,
             batches: 0,
             served: 0,
@@ -415,6 +438,8 @@ impl SharedStats {
             snap.rejected += s.rejected.get();
             snap.shed += s.shed.get();
             snap.swaps += s.swaps.get();
+            snap.worker_deaths += s.worker_deaths.get();
+            snap.respawns += s.respawns.get();
             snap.errors += s.errors.get();
             snap.batches += s.batches.get();
             snap.served += s.served.get();
@@ -464,6 +489,11 @@ pub struct StatsSnapshot {
     pub shed: u64,
     /// Warm variant swaps applied (summed over shards when merged).
     pub swaps: u64,
+    /// Worker-thread deaths the shard supervisor observed (summed over
+    /// shards when merged).
+    pub worker_deaths: u64,
+    /// Supervised respawns that came back up serving.
+    pub respawns: u64,
     pub errors: u64,
     pub batches: u64,
     pub served: u64,
@@ -687,6 +717,29 @@ mod tests {
         assert_eq!(snap.shed, 2);
         assert_eq!(snap.swaps, 1);
         assert_eq!(snap.errors, 0, "shed work is SLO pressure, not an engine error");
+    }
+
+    #[test]
+    fn supervision_counters_count_and_merge() {
+        let a = SharedStats::new("m", "lrd", 4);
+        let b = SharedStats::new("m", "lrd", 4);
+        a.on_worker_death();
+        a.on_respawn();
+        a.on_worker_death();
+        b.on_worker_death();
+        b.on_respawn();
+        let snap = a.snapshot(0);
+        assert_eq!(snap.worker_deaths, 2);
+        assert_eq!(snap.respawns, 1, "a death without a comeback is not a respawn");
+        let merged = SharedStats::merged(&[(&a, 0), (&b, 0)]);
+        assert_eq!(merged.worker_deaths, 3);
+        assert_eq!(merged.respawns, 2);
+        // registered under the same atomics as everything else
+        let reg = obs::Registry::new();
+        a.register(&reg, &[("shard", "0")]).unwrap();
+        let rs = reg.snapshot();
+        assert_eq!(rs.scalar("serve", "worker_deaths", &[("shard", "0")]), Some(2));
+        assert_eq!(rs.scalar("serve", "respawns", &[("shard", "0")]), Some(1));
     }
 
     #[test]

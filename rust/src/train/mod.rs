@@ -76,6 +76,7 @@ pub use sync::{SyncCompress, SyncFrame, SyncPlan};
 
 use crate::checkpoint::Params;
 use crate::data::{Dataset, Shard};
+use crate::faults::{self, Seam};
 use crate::metrics::ThroughputMeter;
 use crate::obs::Tracer;
 use crate::runtime::{literal_to_tensor, ArtifactMeta, DoubleBuffered, Executable, Runtime};
@@ -127,6 +128,9 @@ pub struct Engine<'rt> {
     /// Step-lifecycle span recorder (no-op unless [`Engine::set_tracer`]
     /// installed an enabled one).
     tracer: Tracer,
+    /// Scope label for the fault-injection seams ([`crate::faults`]):
+    /// empty for single-engine runs, `replica{i}` inside a replica fleet.
+    fault_scope: String,
 }
 
 impl<'rt> Engine<'rt> {
@@ -138,6 +142,7 @@ impl<'rt> Engine<'rt> {
             lr_cache: None,
             metrics: None,
             tracer: Tracer::default(),
+            fault_scope: String::new(),
         })
     }
 
@@ -146,6 +151,12 @@ impl<'rt> Engine<'rt> {
     /// (`lrta train --trace-out`).
     pub fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = tracer;
+    }
+
+    /// Label this engine's fault-injection seams (e.g. `replica1`) so a
+    /// scoped `--faults` directive can target one member of a fleet.
+    pub fn set_fault_scope(&mut self, scope: impl Into<String>) {
+        self.fault_scope = scope.into();
     }
 
     /// Attach a pre-built metrics accumulator (e.g. compiled from the
@@ -190,6 +201,7 @@ impl<'rt> Engine<'rt> {
         inputs.push(&x_buf);
         inputs.push(&y_buf);
         inputs.push(&self.lr_cache.as_ref().expect("just refreshed").1);
+        faults::hit(Seam::Dispatch, &self.fault_scope)?;
         let outs = exe.run_buffers_demux(self.rt, &inputs, 2 * n_tr + 2)?;
         drop(inputs);
         self.state.absorb_step(self.rt, meta, outs)
@@ -202,6 +214,7 @@ impl<'rt> Engine<'rt> {
         xs: &[f32],
         ys: &[i32],
     ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        faults::hit(Seam::BatchUpload, &self.fault_scope)?;
         let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
         let x_buf = self.rt.upload(&xla::Literal::vec1(xs).reshape(&x_dims)?)?;
         let y_buf = self.rt.upload_labels(ys)?;
@@ -378,6 +391,7 @@ impl<'rt> Engine<'rt> {
         while let Some((x_buf, y_buf, n)) = staged.take() {
             let t0 = Instant::now();
             // dispatch step N (non-blocking: PJRT executes asynchronously)
+            faults::hit(Seam::Dispatch, &self.fault_scope)?;
             let d_t0 = self.tracer.start();
             let inflight = {
                 let mut inputs = self.state.step_inputs(meta)?;
@@ -400,6 +414,7 @@ impl<'rt> Engine<'rt> {
             }
             // demux step N's outputs and re-bind the state; the scalars
             // stay on device and fold into the resident accumulator
+            faults::hit(Seam::Fetch, &self.fault_scope)?;
             let f_t0 = self.tracer.start();
             let outs = inflight.fetch(self.rt)?;
             self.tracer.end(f_t0, "train", "fetch");

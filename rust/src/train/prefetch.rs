@@ -46,6 +46,12 @@ impl Prefetcher {
     ) -> Prefetcher {
         Self::spawn_producer(move |tx| {
             for b in BatchIter::new_sharded(&data, batch, epoch_seed, shard) {
+                // fault seam: the worker has no error channel, so an
+                // `error` directive escalates to a worker panic, which
+                // `next_batch` re-raises on the engine thread
+                if let Err(e) = crate::faults::hit(crate::faults::Seam::Prefetch, "") {
+                    panic!("{e}");
+                }
                 // a dropped receiver (engine error mid-epoch) just ends
                 // the producer early
                 if tx.send(b).is_err() {

@@ -91,8 +91,9 @@ use crate::coordinator::{
     effective_pattern_suffix, load_schedule_executables, zero_momenta, TrainConfig,
 };
 use crate::data::{Dataset, Shard};
+use crate::faults::{self, Seam};
 use crate::freeze::FreezeScheduler;
-use crate::metrics::{EpochRecord, RunRecord};
+use crate::metrics::{EpochRecord, EvictionRecord, RunRecord};
 use crate::obs::{Counter, Registry, Tracer};
 use crate::runtime::{download_tensor, ArtifactMeta, Manifest, Runtime};
 use crate::tensor::Tensor;
@@ -101,6 +102,7 @@ use crate::train::{Engine, MetricsAccumulator, ResidentState, SyncCompress};
 use anyhow::{anyhow, bail, Result};
 use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::{Duration, Instant};
 
 /// How replica momenta combine at a parameter-averaging event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -147,6 +149,17 @@ pub struct ReplicaConfig {
     /// shard. Parity testing only: N identical replicas must reproduce the
     /// single-engine trajectory bit-for-bit.
     pub identical_shards: bool,
+    /// Supervise the fleet (default): a replica that dies (panic or
+    /// error) or misses the barrier deadline is *evicted* — the run
+    /// degrades to the survivors instead of aborting, and the
+    /// [`RunRecord`] carries one [`EvictionRecord`] per eviction. Off
+    /// (`--no-evict`): any replica death aborts the whole run with that
+    /// replica's own message.
+    pub evict: bool,
+    /// How long the coordinator lets an averaging barrier stay open
+    /// before evicting the replicas it is still waiting on. Only
+    /// consulted while a barrier is open and `evict` is set.
+    pub barrier_timeout: Duration,
 }
 
 impl Default for ReplicaConfig {
@@ -157,6 +170,8 @@ impl Default for ReplicaConfig {
             momenta: MomentumPolicy::Average,
             compress: SyncCompress::Exact,
             identical_shards: false,
+            evict: true,
+            barrier_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -269,9 +284,15 @@ enum ToCoord {
     },
     /// Replica 0's evaluation of the averaged model after `epoch`.
     Eval { epoch: usize, acc: f64 },
+    /// Per-step liveness beacon (sent only under supervision): the last
+    /// one received is the eviction record's "how far did it get".
+    Heartbeat { replica: usize, epoch: usize, step: usize },
     /// Clean completion.
     Done { replica: usize, outcome: Box<ReplicaOutcome> },
-    /// Failure; the coordinator aborts the whole run.
+    /// The replica thread panicked; sent from its `catch_unwind` so the
+    /// fleet can never deadlock on a contribution that will not arrive.
+    Died { replica: usize, message: String },
+    /// The replica's run returned an error.
     Failed { replica: usize, message: String },
 }
 
@@ -392,19 +413,70 @@ pub fn run_replicas_traced(
     }
     drop(to_coord); // coordinator's recv ends when every replica exits
 
-    let result = coordinate(cfg, rcfg, params, &momenta, from_replicas, &reply_txs);
-    // on coordinator failure, dropping the reply senders unblocks any
-    // replica waiting inside an averaging barrier so the joins terminate
-    drop(reply_txs);
-    let mut panicked = false;
-    for join in joins {
-        panicked |= join.join().is_err();
+    // the coordinator owns the reply senders: evicting a replica drops
+    // exactly its sender (so a live straggler errors out of its barrier
+    // recv instead of blocking forever), and returning from `coordinate`
+    // — success or failure — drops the rest so every join terminates
+    let reply_txs: Vec<Option<mpsc::Sender<Arc<SyncFrame>>>> =
+        reply_txs.into_iter().map(Some).collect();
+    let result =
+        coordinate(cfg, rcfg, params, &momenta, from_replicas, reply_txs, registry.as_ref());
+    let mut panics = Vec::new();
+    for (idx, join) in joins.into_iter().enumerate() {
+        if join.join().is_err() {
+            panics.push(idx);
+        }
     }
     let run = result?;
-    if panicked {
-        bail!("a replica thread panicked (run aborted)");
+    // an evicted replica is allowed to have died unwinding; any other
+    // panic means the run's accounting cannot be trusted
+    if let Some(&idx) =
+        panics.iter().find(|&&i| !run.record.evictions.iter().any(|ev| ev.replica == i))
+    {
+        bail!("replica {idx} thread panicked (run aborted)");
     }
     Ok(run)
+}
+
+/// The coordinator's supervision state: who is still live, who was
+/// evicted and why, and the reply senders whose drop doubles as the
+/// eviction signal to a still-running straggler.
+struct Supervisor {
+    evicted: Vec<bool>,
+    evictions: Vec<EvictionRecord>,
+    reply_txs: Vec<Option<mpsc::Sender<Arc<SyncFrame>>>>,
+    /// Last heartbeat per replica: `(epoch, step-within-epoch)`.
+    last_seen: Vec<(usize, usize)>,
+    counter: Counter,
+    verbose: bool,
+}
+
+impl Supervisor {
+    fn live(&self) -> usize {
+        self.evicted.iter().filter(|e| !**e).count()
+    }
+
+    /// Evict `r`: drop its reply sender, record the accounting. The
+    /// caller re-checks the open barrier afterwards — losing a member is
+    /// exactly what lets a barrier close over the survivors.
+    fn evict(&mut self, r: usize, event: u64, reason: String) {
+        self.evicted[r] = true;
+        self.reply_txs[r] = None;
+        let (last_epoch, last_step) = self.last_seen[r];
+        let survivors = self.live();
+        if self.verbose {
+            eprintln!("[coordinator] evicting replica {r} ({reason}); {survivors} survive");
+        }
+        self.counter.inc();
+        self.evictions.push(EvictionRecord {
+            replica: r,
+            event,
+            last_epoch,
+            last_step,
+            reason,
+            survivors,
+        });
+    }
 }
 
 /// The coordinator loop: collect averaging contributions, broadcast means,
@@ -412,15 +484,38 @@ pub fn run_replicas_traced(
 /// reported completion. `params`/`momenta` seed the delta baselines —
 /// the same initial state every replica uploads, so both sides of the
 /// channel decode against identical references from the first barrier on.
+///
+/// Under supervision (`rcfg.evict`, the default) the loop also plays
+/// fleet supervisor: a replica that reports death ([`ToCoord::Died`] /
+/// [`ToCoord::Failed`]) or misses an open barrier's deadline is evicted,
+/// the barrier re-examined and — if every *remaining* member has
+/// contributed — closed over the survivors only. [`MeanState::average`]
+/// divides by the number of frames it is handed, so the survivor-only
+/// mean needs no rescaling beyond passing fewer frames; the broadcast's
+/// [`SyncFrame::membership`] bump is how replicas observe the change.
+/// The liveness deadline is armed only while a barrier is open: that is
+/// the one place a dead peer stalls the *fleet* rather than just itself.
 fn coordinate(
     cfg: &TrainConfig,
     rcfg: &ReplicaConfig,
     params: &Params,
     momenta: &Params,
     rx: mpsc::Receiver<ToCoord>,
-    reply_txs: &[mpsc::Sender<Arc<SyncFrame>>],
+    reply_txs: Vec<Option<mpsc::Sender<Arc<SyncFrame>>>>,
+    registry: Option<&Registry>,
 ) -> Result<ReplicaRun> {
     let n = rcfg.replicas;
+    let mut sup = Supervisor {
+        evicted: vec![false; n],
+        evictions: Vec::new(),
+        reply_txs,
+        last_seen: vec![(0, 0); n],
+        counter: Counter::new(),
+        verbose: cfg.verbose,
+    };
+    if let Some(reg) = registry {
+        reg.register_counter("train", "evictions", &[], &sup.counter)?;
+    }
 
     /// One shard's epoch stats: `(loss_sum, correct_sum, samples, batches,
     /// median_step_secs)`.
@@ -441,17 +536,65 @@ fn coordinate(
     let mut mean_state = MeanState::new(params, momenta, rcfg.compress);
     let mut pending: Vec<Option<SyncFrame>> = (0..n).map(|_| None).collect();
     let mut pending_event: Option<u64> = None;
+    let mut barrier_deadline: Option<Instant> = None;
     let mut outcomes: Vec<Option<ReplicaOutcome>> = (0..n).map(|_| None).collect();
     let mut done = 0usize;
 
-    while done < n {
-        let msg = rx
-            .recv()
-            .map_err(|_| anyhow!("all replica threads exited before reporting completion"))?;
+    while done < sup.live() {
+        // arm the liveness deadline only while a barrier is open — that is
+        // the one state where a dead peer blocks the whole fleet
+        let msg = match barrier_deadline {
+            Some(deadline) => {
+                match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!("all replica threads exited before reporting completion")
+                    }
+                }
+            }
+            None => Some(rx.recv().map_err(|_| {
+                anyhow!("all replica threads exited before reporting completion")
+            })?),
+        };
         match msg {
-            ToCoord::Avg { replica, event, frame } => {
+            None => {
+                // barrier deadline expired: every member the open barrier
+                // is still waiting on is diagnosed as a straggler
+                let event = pending_event.unwrap_or(0);
+                let ms = rcfg.barrier_timeout.as_millis();
+                for r in 0..n {
+                    if !sup.evicted[r] && pending[r].is_none() && outcomes[r].is_none() {
+                        sup.evict(
+                            r,
+                            event,
+                            format!(
+                                "missed the averaging-barrier deadline ({ms}ms) at event {event}"
+                            ),
+                        );
+                    }
+                }
+                if sup.live() == 0 {
+                    bail!("every replica was evicted; no survivors to finish the run");
+                }
+            }
+            Some(ToCoord::Heartbeat { replica, epoch, step }) => {
+                if !sup.evicted[replica] {
+                    sup.last_seen[replica] = (epoch, step);
+                }
+                continue;
+            }
+            Some(ToCoord::Avg { replica, event, frame }) => {
+                if sup.evicted[replica] {
+                    continue; // stale contribution from a zombie straggler
+                }
                 match pending_event {
-                    None => pending_event = Some(event),
+                    None => {
+                        pending_event = Some(event);
+                        if rcfg.evict {
+                            barrier_deadline = Some(Instant::now() + rcfg.barrier_timeout);
+                        }
+                    }
                     Some(e) if e == event => {}
                     Some(e) => bail!(
                         "replica desync: replica {replica} at averaging event {event}, \
@@ -461,22 +604,8 @@ fn coordinate(
                 if pending[replica].replace(frame).is_some() {
                     bail!("replica {replica} contributed twice to averaging event {event}");
                 }
-                if pending.iter().all(|p| p.is_some()) {
-                    let contributions: Vec<SyncFrame> =
-                        pending.iter_mut().map(|p| p.take().expect("all present")).collect();
-                    // fold in replica-index order into the persistent
-                    // accumulator; one shared broadcast frame per barrier
-                    // (receivers only decode it, so an Arc avoids N deep
-                    // clones on the coordinator thread)
-                    let mean = Arc::new(mean_state.average(&contributions)?);
-                    for tx in reply_txs {
-                        tx.send(Arc::clone(&mean))
-                            .map_err(|_| anyhow!("replica exited mid-averaging-barrier"))?;
-                    }
-                    pending_event = None;
-                }
             }
-            ToCoord::Epoch {
+            Some(ToCoord::Epoch {
                 replica,
                 epoch,
                 loss_sum,
@@ -484,7 +613,10 @@ fn coordinate(
                 samples,
                 batches,
                 median_step_secs,
-            } => {
+            }) => {
+                if sup.evicted[replica] {
+                    continue;
+                }
                 let acc = epochs
                     .get_mut(epoch)
                     .ok_or_else(|| anyhow!("replica {replica} reported epoch {epoch}"))?;
@@ -492,20 +624,64 @@ fn coordinate(
                 if acc.shards[replica].replace(stats).is_some() {
                     bail!("replica {replica} reported epoch {epoch} twice");
                 }
+                continue;
             }
-            ToCoord::Eval { epoch, acc } => {
+            Some(ToCoord::Eval { epoch, acc }) => {
                 epochs
                     .get_mut(epoch)
                     .ok_or_else(|| anyhow!("eval reported for epoch {epoch}"))?
                     .test_acc = acc;
+                continue;
             }
-            ToCoord::Done { replica, outcome } => {
-                outcomes[replica] = Some(*outcome);
-                done += 1;
+            Some(ToCoord::Done { replica, outcome }) => {
+                if !sup.evicted[replica] {
+                    outcomes[replica] = Some(*outcome);
+                    done += 1;
+                }
+                continue;
             }
-            ToCoord::Failed { replica, message } => {
-                bail!("replica {replica} failed: {message}");
+            Some(ToCoord::Died { replica, message })
+            | Some(ToCoord::Failed { replica, message }) => {
+                if sup.evicted[replica] {
+                    continue; // already diagnosed (e.g. deadline beat the report)
+                }
+                if !rcfg.evict {
+                    bail!("replica {replica} failed: {message}");
+                }
+                sup.evict(replica, pending_event.unwrap_or(0), message);
+                if sup.live() == 0 {
+                    bail!("every replica was evicted; no survivors to finish the run");
+                }
             }
+        }
+        // an eviction (or a fresh contribution) may be what completes the
+        // open barrier: close it once every *remaining* member contributed.
+        // A frame from a member evicted after contributing stays in — the
+        // eviction excuses absence, it does not retract a contribution.
+        if pending_event.is_some()
+            && (0..n).all(|r| sup.evicted[r] || outcomes[r].is_some() || pending[r].is_some())
+        {
+            let contributions: Vec<SyncFrame> =
+                pending.iter_mut().filter_map(|p| p.take()).collect();
+            // fold in replica-index order into the persistent accumulator;
+            // `average` divides by the frame count, so a survivor-only
+            // barrier rescales the mean by construction. One shared
+            // broadcast frame per barrier (receivers only decode it, so an
+            // Arc avoids N deep clones on the coordinator thread).
+            let mut mean = mean_state.average(&contributions)?;
+            mean.membership = sup.evictions.len() as u64;
+            let mean = Arc::new(mean);
+            for (r, tx) in sup.reply_txs.iter().enumerate() {
+                let Some(tx) = tx else { continue };
+                // under supervision a send failure means the replica died
+                // between contributing and receiving; its death report is
+                // already in the channel and handles the eviction
+                if tx.send(Arc::clone(&mean)).is_err() && !rcfg.evict {
+                    bail!("replica {r} exited mid-averaging-barrier");
+                }
+            }
+            pending_event = None;
+            barrier_deadline = None;
         }
     }
 
@@ -522,15 +698,21 @@ fn coordinate(
         let mut batches = 0usize;
         let mut max_median_step = 0.0f64;
         for (r, shard) in acc.shards.iter().enumerate() {
-            let Some((l, c, s, b, m)) = *shard else {
-                bail!("epoch {e}: replica {r} never reported its stats");
-            };
-            loss_sum += l;
-            correct_sum += c;
-            samples += s;
-            batches += b;
-            // wall-clock is set by the slowest replica
-            max_median_step = max_median_step.max(m);
+            match *shard {
+                Some((l, c, s, b, m)) => {
+                    loss_sum += l;
+                    correct_sum += c;
+                    samples += s;
+                    batches += b;
+                    // wall-clock is set by the slowest replica
+                    max_median_step = max_median_step.max(m);
+                }
+                // an evicted replica's missing epochs fold survivor
+                // shards only — the degraded rows are still exact over
+                // the batches that actually ran
+                None if sup.evicted[r] => {}
+                None => bail!("epoch {e}: replica {r} never reported its stats"),
+            }
         }
         let rec = EpochRecord {
             epoch: e,
@@ -555,21 +737,36 @@ fn coordinate(
                 rec.train_acc,
                 rec.test_acc,
                 rec.step_secs * 1e3,
-                n
+                sup.live()
             );
         }
         record.epochs.push(rec);
     }
     let mut reports: Vec<ReplicaReport> = Vec::with_capacity(n);
     let mut state = None;
-    for outcome in outcomes.into_iter() {
-        let outcome = outcome.expect("done == n implies every slot filled");
-        if let Some(s) = outcome.state {
-            state = Some(s);
+    for (r, outcome) in outcomes.into_iter().enumerate() {
+        match outcome {
+            Some(outcome) => {
+                if let Some(s) = outcome.state {
+                    state = Some(s);
+                }
+                reports.push(outcome.report);
+            }
+            None if sup.evicted[r] => {}
+            None => bail!("replica {r} neither completed nor was evicted"),
         }
-        reports.push(outcome.report);
     }
-    let (params, momenta) = state.ok_or_else(|| anyhow!("replica 0 reported no final state"))?;
+    let (params, momenta) = match state {
+        Some(s) => s,
+        // replica 0 (the state reporter) was evicted: the coordinator's
+        // own fold state after the last closed barrier IS the survivors'
+        // resident state bit-for-bit — frozen leaves never move, and
+        // Reset-policy momenta are zeros on both sides (see
+        // [`MeanState::final_state`])
+        None if sup.evicted[0] => mean_state.final_state(),
+        None => bail!("replica 0 reported no final state"),
+    };
+    record.evictions = sup.evictions;
     Ok(ReplicaRun { record, params, momenta, reports })
 }
 
@@ -579,25 +776,30 @@ fn coordinate(
 /// otherwise the surviving replicas block forever inside the averaging
 /// barrier while the coordinator waits for a contribution that will never
 /// arrive. So the run is wrapped in `catch_unwind` and the payload turned
-/// into a [`ToCoord::Failed`] (the replica-side analogue of the
-/// [`crate::train::Prefetcher`] panic re-raise).
+/// into a [`ToCoord::Died`] before the thread exits (the replica-side
+/// analogue of the [`crate::train::Prefetcher`] panic re-raise) — the
+/// coordinator then aborts with the payload (`--no-evict`) or evicts this
+/// replica and finishes on the survivors, both in bounded time.
 fn replica_main(job: ReplicaJob) {
     let idx = job.idx;
     let to_coord = job.to_coord.clone();
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_replica(job)));
-    let message = match result {
+    let report = match result {
         Ok(Ok(outcome)) => {
             let _ = to_coord.send(ToCoord::Done { replica: idx, outcome: Box::new(outcome) });
             return;
         }
-        Ok(Err(e)) => format!("{e:#}"),
-        Err(payload) => payload
-            .downcast_ref::<&str>()
-            .map(|s| format!("panic: {s}"))
-            .or_else(|| payload.downcast_ref::<String>().map(|s| format!("panic: {s}")))
-            .unwrap_or_else(|| "replica thread panicked".into()),
+        Ok(Err(e)) => ToCoord::Failed { replica: idx, message: format!("{e:#}") },
+        Err(payload) => {
+            let message = payload
+                .downcast_ref::<&str>()
+                .map(|s| format!("panic: {s}"))
+                .or_else(|| payload.downcast_ref::<String>().map(|s| format!("panic: {s}")))
+                .unwrap_or_else(|| "replica thread panicked".into());
+            ToCoord::Died { replica: idx, message }
+        }
     };
-    let _ = to_coord.send(ToCoord::Failed { replica: idx, message });
+    let _ = to_coord.send(report);
 }
 
 /// One replica's whole run: own runtime, own executables, own resident
@@ -655,6 +857,7 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
 
     let mut engine = Engine::upload(&rt, &params, &momenta)?;
     engine.set_tracer(tracer.clone());
+    engine.set_fault_scope(format!("replica{idx}"));
     if cfg.pipelined {
         // the overlapped driver folds loss/correct on device; use the
         // manifest-lowered accumulator like the single-engine trainer
@@ -667,8 +870,10 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
     let initial_param_uploads = engine.param_uploads();
     let mut barrier = AvgBarrier {
         replica: idx,
+        scope: format!("replica{idx}"),
         policy: rcfg.momenta,
         events: 0,
+        membership: 0,
         slot_uploads: 0,
         sync: ReplicaSyncState::new(&params, &momenta, rcfg.compress),
         bytes_exchanged,
@@ -702,7 +907,18 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         // happens outside the timed step)
         let epoch_seed = cfg.seed ^ epoch as u64;
         let mut since_avg = 0usize;
+        let mut step_in_epoch = 0usize;
         let mut hook = |rt: &Runtime, state: &mut ResidentState| {
+            step_in_epoch += 1;
+            if rcfg.evict {
+                // liveness beacon: best-effort (a closed channel means the
+                // coordinator already gave up; the driver surfaces that)
+                let _ = to_coord.send(ToCoord::Heartbeat {
+                    replica: idx,
+                    epoch,
+                    step: step_in_epoch,
+                });
+            }
             since_avg += 1;
             if rcfg.avg_every > 0 && since_avg == rcfg.avg_every {
                 barrier.average(rt, state, meta, &plan)?;
@@ -771,9 +987,15 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
 /// The replica side of one averaging barrier, plus its accounting.
 struct AvgBarrier<'a> {
     replica: usize,
+    /// Fault-injection scope (`replica{idx}`) for the barrier seams.
+    scope: String,
     policy: MomentumPolicy,
     /// Barriers participated in so far (doubles as the global event tag).
     events: usize,
+    /// Last membership epoch observed in a broadcast — monotonically
+    /// non-decreasing; each bump is one fleet eviction this replica
+    /// survived.
+    membership: u64,
     /// Counted uploads performed by averaging (params + momenta).
     slot_uploads: usize,
     /// Delta baselines (`last` broadcast mean per leaf) — mutated only by
@@ -830,15 +1052,27 @@ impl AvgBarrier<'_> {
         self.tracer.end(d_t0, "train", "barrier_download");
         let sent_bytes = frame.wire_bytes();
 
+        faults::hit(Seam::BarrierSend, &self.scope)?;
         self.to_coord
             .send(ToCoord::Avg { replica: self.replica, event: self.events as u64, frame })
             .map_err(|_| anyhow!("coordinator exited during averaging"))?;
         let w_t0 = self.tracer.start();
-        let mean = self
-            .from_coord
-            .recv()
-            .map_err(|_| anyhow!("coordinator closed the averaging barrier"))?;
+        faults::hit(Seam::BarrierRecv, &self.scope)?;
+        let mean = self.from_coord.recv().map_err(|_| {
+            anyhow!(
+                "averaging barrier closed by the coordinator \
+                 (run aborted or this replica was evicted)"
+            )
+        })?;
         self.tracer.end(w_t0, "train", "barrier_wait");
+        if mean.membership < self.membership {
+            bail!(
+                "membership epoch went backwards: {} after {}",
+                mean.membership,
+                self.membership
+            );
+        }
+        self.membership = mean.membership;
 
         // decode into the baseline (it then *is* the next barrier's
         // reference) and re-upload the mean into the resident buffers

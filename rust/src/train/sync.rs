@@ -279,6 +279,12 @@ fn decode_leaf_add(delta: &LeafDelta, base: &[f32], acc: &mut [f32]) -> Result<(
 pub struct SyncFrame {
     pub params: Vec<(String, LeafDelta)>,
     pub momenta: Vec<(String, LeafDelta)>,
+    /// Membership epoch: how many replicas the coordinator had evicted
+    /// when it broadcast this frame (0 in contribution frames and for a
+    /// healthy fleet). Monotonically non-decreasing across broadcasts —
+    /// replicas assert this, because an out-of-order frame would desync
+    /// every delta baseline. Host-side bookkeeping, not wire payload.
+    pub membership: u64,
 }
 
 impl SyncFrame {
@@ -507,6 +513,16 @@ impl MeanState {
         Ok(out)
     }
 
+    /// The coordinator's own copy of the fleet state after the last
+    /// broadcast: every leaf the run ever exchanged holds the last
+    /// broadcast mean, every frozen leaf its (never-moved) initial value
+    /// — bit-identical to what any surviving replica's device holds
+    /// right after a boundary barrier. This is the run's final state
+    /// when replica 0, the designated state reporter, was evicted.
+    pub fn final_state(&self) -> (Params, Params) {
+        (self.last_params.clone(), self.last_momenta.clone())
+    }
+
     #[cfg(test)]
     fn acc_param_ptr(&self, name: &str) -> Option<*const f32> {
         self.acc_params.get(name).map(|t| t.data().as_ptr())
@@ -683,13 +699,13 @@ mod tests {
         let good = frame_of(&[("w".to_string(), tensor(&[1.0]))].into(), &rep);
         let renamed = SyncFrame {
             params: vec![("v".to_string(), good.params[0].1.clone())],
-            momenta: vec![],
+            ..Default::default()
         };
         assert!(coord.average(&[good.clone(), renamed]).is_err());
         // unknown leaf in an otherwise well-formed frame
         let unknown = SyncFrame {
             params: vec![("v".to_string(), good.params[0].1.clone())],
-            momenta: vec![],
+            ..Default::default()
         };
         assert!(coord.average(&[unknown.clone(), unknown]).is_err());
     }

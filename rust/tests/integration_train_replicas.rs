@@ -103,6 +103,7 @@ fn two_replicas_identical_shards_reproduce_single_engine_bit_for_bit() {
             momenta: MomentumPolicy::Average,
             compress: SyncCompress::Exact,
             identical_shards: true,
+            ..Default::default()
         };
         let run = run_replicas(&m, &cfg(mode, epochs), &rcfg, &params).unwrap();
 
@@ -201,6 +202,7 @@ fn disjoint_shards_average_on_cadence_and_stay_buffer_chained() {
         momenta: MomentumPolicy::Average,
         compress: SyncCompress::Exact,
         identical_shards: false,
+        ..Default::default()
     };
     let run = run_replicas(&m, &cfg(FreezeMode::Sequential, epochs), &rcfg, &params).unwrap();
 
@@ -249,6 +251,7 @@ fn momentum_reset_policy_zeroes_momenta_at_the_boundary() {
         momenta: MomentumPolicy::Reset,
         compress: SyncCompress::Exact,
         identical_shards: false,
+        ..Default::default()
     };
     let run = run_replicas(&m, &cfg(FreezeMode::None, 1), &rcfg, &params).unwrap();
 
@@ -284,6 +287,7 @@ fn frozen_leaves_contribute_zero_barrier_bytes_in_every_freeze_mode() {
             momenta: MomentumPolicy::Average,
             compress: SyncCompress::Exact,
             identical_shards: false,
+            ..Default::default()
         };
         let reg = Registry::new();
         let run = run_replicas_traced(
@@ -372,6 +376,7 @@ fn pipelined_delta_replicas_reproduce_the_serial_single_engine_run() {
         momenta: MomentumPolicy::Average,
         compress: SyncCompress::Exact,
         identical_shards: true,
+        ..Default::default()
     };
     let run = run_replicas(&m, &pcfg, &rcfg, &params).unwrap();
 
@@ -416,6 +421,7 @@ fn q8_compression_trains_to_finite_metrics_and_saves_bytes() {
         momenta: MomentumPolicy::Average,
         compress: SyncCompress::Q8,
         identical_shards: false,
+        ..Default::default()
     };
     let run = run_replicas(&m, &pcfg, &rcfg, &params).unwrap();
 

@@ -16,15 +16,18 @@
 //! Run:  `cargo run --release --example serve_infer [-- --flags]`
 //! Args: --model M --requests N --concurrency C --max-wait-ms X
 //!       --spot-check N --reupload --burst --no-pipeline --shards N
+//!       --classes SPEC --degrade SPEC --hedge-ms D  (QoS; same grammar
+//!       as `lrta serve`, see rust/src/serve/qos.rs)
 //! Env fallbacks: LRTA_MODEL, LRTA_REQUESTS, LRTA_CONCURRENCY,
-//!       LRTA_REUPLOAD, LRTA_PIPELINED, LRTA_SHARDS
+//!       LRTA_REUPLOAD, LRTA_PIPELINED, LRTA_SHARDS, LRTA_CLASSES,
+//!       LRTA_DEGRADE, LRTA_HEDGE_MS
 
 use anyhow::Result;
 use lrta::checkpoint;
 use lrta::data::Dataset;
 use lrta::faults;
 use lrta::runtime::Manifest;
-use lrta::serve::{self, Server, ServerConfig, VariantSpec};
+use lrta::serve::{self, Class, HedgeConfig, QosConfig, Server, ServerConfig, VariantSpec};
 use lrta::util::bench::{fmt_delta_pct, table, write_report};
 use lrta::util::cli::Args;
 use std::time::Duration;
@@ -36,7 +39,7 @@ fn env_or(key: &str, default: &str) -> String {
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "model", "requests", "concurrency", "max-wait-ms", "spot-check", "reupload", "burst",
-        "no-pipeline", "shards",
+        "no-pipeline", "shards", "classes", "degrade", "hedge-ms",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     let model = args.str_or("model", &env_or("LRTA_MODEL", "resnet_mini"));
@@ -54,6 +57,38 @@ fn main() -> Result<()> {
     let shards = args
         .usize_or("shards", env_or("LRTA_SHARDS", "1").parse().unwrap_or(1))
         .max(1);
+
+    // QoS: flag wins over env, empty env counts as unset; the specs reuse
+    // the `lrta serve` grammar so one string works in both drivers
+    let flag_or_env = |key: &str, env: &str| -> Option<String> {
+        args.get(key)
+            .map(str::to_string)
+            .or_else(|| std::env::var(env).ok().filter(|s| !s.is_empty()))
+    };
+    let qos = match flag_or_env("classes", "LRTA_CLASSES") {
+        Some(spec) => {
+            let mut q = QosConfig {
+                classes: QosConfig::parse_classes(&spec)?,
+                ..Default::default()
+            };
+            if let Some(d) = flag_or_env("degrade", "LRTA_DEGRADE") {
+                q.degrade = QosConfig::parse_degrade(&d)?;
+            }
+            if let Some(h) = flag_or_env("hedge-ms", "LRTA_HEDGE_MS") {
+                let ms: f64 = h.parse().ok().filter(|v| *v > 0.0).ok_or_else(|| {
+                    anyhow::anyhow!("--hedge-ms expects a positive number, got '{h}'")
+                })?;
+                // hedging needs a sibling shard; with --shards 1 the server
+                // simply never arms a board, so this stays permissive here
+                q.hedge = Some(HedgeConfig {
+                    fallback: Duration::from_secs_f64(ms / 1e3),
+                    ..Default::default()
+                });
+            }
+            Some(q)
+        }
+        None => None,
+    };
 
     // chaos harness: LRTA_FAULTS installs a deterministic fault plan (the
     // CI chaos smoke kills/stalls shards through this)
@@ -82,6 +117,7 @@ fn main() -> Result<()> {
                 "0" | "false" | "no" | "off"
             ),
         spot_check: args.usize_or("spot-check", 128),
+        qos: qos.clone(),
         ..Default::default()
     };
     let server = Server::start(&manifest, specs, &cfg)?;
@@ -102,12 +138,55 @@ fn main() -> Result<()> {
     ]];
     let mut base_fps = None;
     for variant in variants {
-        let report = if burst {
-            serve::burst_loop(&server, &model, variant, &data, requests, timeout)
+        let (report, class_reports) = if qos.is_some() {
+            let crs = serve::classed_burst_loop(
+                &server,
+                &model,
+                variant,
+                &data,
+                requests,
+                &Class::ALL,
+                timeout,
+            );
+            // fold the per-class reports into one row for the summary table
+            let mut all = serve::LoadReport::default();
+            for r in &crs {
+                all.requests += r.requests;
+                all.completed += r.completed;
+                all.errors += r.errors;
+                all.shed += r.shed;
+                all.rejected += r.rejected;
+                all.wall_secs = all.wall_secs.max(r.wall_secs);
+                all.latencies.extend_from_slice(&r.latencies);
+            }
+            all.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (all, Some(crs))
+        } else if burst {
+            (serve::burst_loop(&server, &model, variant, &data, requests, timeout), None)
         } else {
-            serve::closed_loop(&server, &model, variant, &data, requests, concurrency, timeout)
+            (
+                serve::closed_loop(
+                    &server, &model, variant, &data, requests, concurrency, timeout,
+                ),
+                None,
+            )
         };
         let snap = server.stats(&model, variant).expect("registered variant");
+        if let Some(crs) = &class_reports {
+            for (class, r) in Class::ALL.iter().zip(crs.iter()) {
+                println!(
+                    "  {variant}/{class}: {} ok / {} shed / {} errors | p99 {:.1} ms",
+                    r.completed,
+                    r.shed,
+                    r.errors,
+                    r.latency_ms(99.0)
+                );
+            }
+            println!(
+                "  {variant}: spilled={:?} hedge fired/won/cancelled {}/{}/{}",
+                snap.spilled_by_class, snap.hedge_fired, snap.hedge_wins, snap.hedge_cancelled
+            );
+        }
         let fps = report.observed_fps();
         let delta = match base_fps {
             None => {

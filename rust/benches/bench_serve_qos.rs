@@ -1,0 +1,180 @@
+//! Rank-aware QoS benchmark: the same overload burst with and without
+//! priority classes, degrade ladders and per-class SLOs.
+//!
+//! The baseline drives an open-loop burst through `orig` with QoS off —
+//! one class, no SLO, nothing sheds and the tail latency is whatever the
+//! backlog makes it. The QoS measurement replays the identical burst as a
+//! 3-class mix (`interactive:4:250, standard:2:100, batch:1:5`) with
+//! `batch` and `standard` degrading to `rankopt`: interactive keeps its
+//! p99 inside the SLO while the cheap classes spill down the ladder
+//! instead of shedding. Output: per-class p50/p99 + spill-rate curve in
+//! results/serve_qos.txt and a top-level JSON report
+//! results/BENCH_serve_qos.json (uploaded as a CI artifact).
+//!
+//! Env: LRTA_MODEL (default resnet_mini), LRTA_SERVE_BENCH_REQS
+//! (requests per measurement, default 12× compiled batch)
+
+use anyhow::Result;
+use lrta::checkpoint;
+use lrta::data::Dataset;
+use lrta::runtime::Manifest;
+use lrta::serve::{self, Class, QosConfig, Server, ServerConfig, VariantSpec};
+use lrta::util::bench::{table, write_json_section, write_report};
+use lrta::util::json::Json;
+use std::time::Duration;
+
+const CLASS_SPEC: &str = "interactive:4:250,standard:2:100,batch:1:5";
+const DEGRADE_SPEC: &str = "batch=rankopt,standard=rankopt";
+
+fn start_server(
+    manifest: &Manifest,
+    model: &str,
+    dense: &checkpoint::Params,
+    qos: Option<QosConfig>,
+) -> Result<Server> {
+    let mut specs = Vec::new();
+    for variant in ["orig", "rankopt"] {
+        specs.push(VariantSpec::from_dense(manifest, model, variant, dense)?);
+    }
+    let cfg = ServerConfig {
+        max_wait: Duration::from_millis(5),
+        // deep queues: the burst is admitted up front so SLO pressure is
+        // decided at pop time, not by admission control
+        queue_depth: 1024,
+        spot_check: 0,
+        qos,
+        ..Default::default()
+    };
+    Server::start(manifest, specs, &cfg)
+}
+
+fn main() -> Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+    let batch = manifest.artifact(&Manifest::name_of(&model, "orig", "infer", "none"))?.batch;
+    let reqs: usize = std::env::var("LRTA_SERVE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(batch * 12);
+    let timeout = Duration::from_secs(120);
+    let data = Dataset::synthetic(512, 99);
+
+    // baseline: the identical burst with QoS off — one implicit class
+    let server = start_server(&manifest, &model, &dense, None)?;
+    serve::burst_loop(&server, &model, "orig", &data, reqs / 4 + 1, timeout);
+    let base = serve::burst_loop(&server, &model, "orig", &data, reqs, timeout);
+    server.shutdown();
+    println!(
+        "baseline (qos off): {:.0} fps | p50 {:.2} ms p99 {:.2} ms | {} ok {} shed",
+        base.observed_fps(),
+        base.latency_ms(50.0),
+        base.latency_ms(99.0),
+        base.completed,
+        base.shed
+    );
+
+    // QoS: weighted classes + per-class SLOs, cheap classes ladder down
+    let classes = QosConfig::parse_classes(CLASS_SPEC)?;
+    let qos = QosConfig {
+        classes: classes.clone(),
+        degrade: QosConfig::parse_degrade(DEGRADE_SPEC)?,
+        hedge: None,
+    };
+    let server = start_server(&manifest, &model, &dense, Some(qos))?;
+    let mix = Class::ALL;
+    serve::classed_burst_loop(&server, &model, "orig", &data, reqs / 4 + 1, &mix, timeout);
+    // counter baseline after warmup: the measured burst reports deltas
+    let o0 = server.stats(&model, "orig").expect("orig registered");
+    let r0 = server.stats(&model, "rankopt").expect("rankopt registered");
+    let reports = serve::classed_burst_loop(&server, &model, "orig", &data, reqs, &mix, timeout);
+    let o1 = server.stats(&model, "orig").expect("orig registered");
+    let r1 = server.stats(&model, "rankopt").expect("rankopt registered");
+    server.shutdown();
+
+    let mut rows = vec![vec![
+        "Class".to_string(),
+        "reqs".to_string(),
+        "ok".to_string(),
+        "shed".to_string(),
+        "spilled".to_string(),
+        "spill %".to_string(),
+        "p50 ms".to_string(),
+        "p99 ms".to_string(),
+        "SLO ms".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    for class in Class::ALL {
+        let i = class.index();
+        let rep = &reports[i];
+        let spilled = o1.spilled_by_class[i] - o0.spilled_by_class[i];
+        let spill_rate =
+            if rep.requests > 0 { spilled as f64 / rep.requests as f64 } else { 0.0 };
+        let slo_ms = classes[i].slo.map(|d| d.as_secs_f64() * 1e3);
+        println!(
+            "{class}: {} ok {} shed {} spilled ({:.0}%) | p50 {:.2} ms p99 {:.2} ms",
+            rep.completed,
+            rep.shed,
+            spilled,
+            spill_rate * 100.0,
+            rep.latency_ms(50.0),
+            rep.latency_ms(99.0)
+        );
+        rows.push(vec![
+            class.to_string(),
+            rep.requests.to_string(),
+            rep.completed.to_string(),
+            rep.shed.to_string(),
+            spilled.to_string(),
+            format!("{:.0}", spill_rate * 100.0),
+            format!("{:.2}", rep.latency_ms(50.0)),
+            format!("{:.2}", rep.latency_ms(99.0)),
+            slo_ms.map(|s| format!("{s:.0}")).unwrap_or_else(|| "-".into()),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("class", Json::str(class.label())),
+            ("requests", Json::int(rep.requests as i64)),
+            ("completed", Json::int(rep.completed as i64)),
+            ("shed", Json::int(rep.shed as i64)),
+            ("spilled", Json::int(spilled as i64)),
+            ("spill_rate", Json::num(spill_rate)),
+            ("fps", Json::num(rep.observed_fps())),
+            ("p50_ms", Json::num(rep.latency_ms(50.0))),
+            ("p99_ms", Json::num(rep.latency_ms(99.0))),
+            ("slo_ms", slo_ms.map(Json::num).unwrap_or_else(|| Json::num(0.0))),
+        ]));
+    }
+
+    let ladder_served = r1.served - r0.served;
+    let ladder_shed = r1.shed - r0.shed;
+    let t = table(&rows);
+    println!(
+        "\n{model} QoS overload ({reqs} requests, 3-class mix, ladder served/shed \
+         {ladder_served}/{ladder_shed}):\n{t}"
+    );
+    write_report("results/serve_qos.txt", &t);
+    write_json_section(
+        "results/BENCH_serve_qos.json",
+        "serve_qos",
+        Json::obj(vec![
+            ("model", Json::str(model.as_str())),
+            ("requests", Json::int(reqs as i64)),
+            ("class_spec", Json::str(CLASS_SPEC)),
+            ("degrade_spec", Json::str(DEGRADE_SPEC)),
+            (
+                "baseline",
+                Json::obj(vec![
+                    ("fps", Json::num(base.observed_fps())),
+                    ("completed", Json::int(base.completed as i64)),
+                    ("shed", Json::int(base.shed as i64)),
+                    ("p50_ms", Json::num(base.latency_ms(50.0))),
+                    ("p99_ms", Json::num(base.latency_ms(99.0))),
+                ]),
+            ),
+            ("classes", Json::arr(json_rows)),
+            ("ladder_served", Json::int(ladder_served as i64)),
+            ("ladder_shed", Json::int(ladder_shed as i64)),
+        ]),
+    );
+    Ok(())
+}

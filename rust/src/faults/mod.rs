@@ -11,7 +11,7 @@
 //!   directive[,directive...]
 //!   directive := seam[@scope]:action[@stepN]
 //!   seam      := batch_upload | dispatch | fetch | prefetch
-//!              | barrier_send | barrier_recv | swap_ack
+//!              | barrier_send | barrier_recv | swap_ack | hedge
 //!   scope     := site label, e.g. replica1 (train) or shard0 (serve);
 //!                omitted = match any scope
 //!   action    := panic | error | stall(DURATION)   e.g. stall(200ms)
@@ -62,6 +62,9 @@ pub enum Seam {
     BarrierRecv,
     /// Serve worker about to acknowledge a warm swap.
     SwapAck,
+    /// Hedge governor about to re-dispatch a stalled batch's requests to a
+    /// sibling shard (`hedge@shardN` scopes to the *stalled* shard).
+    Hedge,
 }
 
 impl Seam {
@@ -75,6 +78,7 @@ impl Seam {
             "barrier_send" => Some(Seam::BarrierSend),
             "barrier_recv" => Some(Seam::BarrierRecv),
             "swap_ack" => Some(Seam::SwapAck),
+            "hedge" => Some(Seam::Hedge),
             _ => None,
         }
     }
@@ -89,6 +93,7 @@ impl Seam {
             Seam::BarrierSend => "barrier_send",
             Seam::BarrierRecv => "barrier_recv",
             Seam::SwapAck => "swap_ack",
+            Seam::Hedge => "hedge",
         }
     }
 }
@@ -177,7 +182,7 @@ impl Plan {
                 anyhow!(
                     "fault directive '{part}': unknown seam '{seam_s}' (expected one of \
                      batch_upload, dispatch, fetch, prefetch, barrier_send, barrier_recv, \
-                     swap_ack)"
+                     swap_ack, hedge)"
                 )
             })?;
             let (action_s, at_s) = match act.split_once('@') {
@@ -450,6 +455,7 @@ mod tests {
             Seam::BarrierSend,
             Seam::BarrierRecv,
             Seam::SwapAck,
+            Seam::Hedge,
         ] {
             assert_eq!(Seam::parse(seam.label()), Some(seam));
         }

@@ -28,7 +28,9 @@ use lrta::obs::{Registry, Tracer};
 use lrta::rankopt::{optimize_rank, ModelTimer, PjrtTimer, RankOptConfig};
 use lrta::runtime::{Manifest, Runtime};
 use lrta::serve as serve_load;
-use lrta::serve::{Server, ServerConfig, StatsSnapshot, VariantSpec};
+use lrta::serve::{
+    Class, HedgeConfig, QosConfig, Server, ServerConfig, StatsSnapshot, VariantSpec,
+};
 use lrta::train::{run_replicas_traced, MomentumPolicy, ReplicaConfig, SyncCompress};
 use lrta::util::bench::table;
 use lrta::util::cli::Args;
@@ -53,6 +55,7 @@ SUBCOMMANDS
             [--requests N] [--concurrency C] [--depth D]
             [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
             [--no-pipeline] [--shards N] [--slo-ms D] [--no-supervise]
+            [--classes SPEC] [--degrade SPEC] [--hedge-ms D] [--qos-check]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -74,7 +77,7 @@ COMMON
                     seam[@scope]:action[@stepN] directives, e.g.
                     \"barrier_send@replica1:panic@step7,dispatch:stall(200ms)\"
                     — seams: batch_upload dispatch fetch prefetch
-                    barrier_send barrier_recv swap_ack; actions: panic,
+                    barrier_send barrier_recv swap_ack hedge; actions: panic,
                     error, stall(DUR). Falls back to the LRTA_FAULTS env
                     var; unset means zero-cost disarmed seams
   --no-resident     train through the host-literal round-trip baseline
@@ -127,6 +130,30 @@ SERVE SCALING
   --no-supervise    disable per-shard supervision (a worker death then
                     leaves its shard down instead of draining, respawning
                     warm and rejoining the fanout)
+
+SERVE QOS (rank-aware priority serving)
+  --classes SPEC    enable QoS: per-class weighted admission queues and
+                    per-class SLOs. SPEC is a comma list of
+                    name:weight[:slo_ms] entries over interactive /
+                    standard / batch, e.g.
+                    \"interactive:4:250,standard:2:100,batch:1:5\";
+                    unlisted classes keep weight 1 and no class SLO. The
+                    load driver then cycles submissions across all three
+                    classes and reports per-class latency
+  --degrade SPEC    degrade-not-shed ladders: class=variant[+variant...]
+                    comma list, e.g. \"batch=lrd+rankopt,standard=rankopt\"
+                    — an expired request spills down its class ladder to a
+                    cheaper-rank registered variant (fresh class deadline)
+                    instead of being shed; requires --classes
+  --hedge-ms D      hedge tail requests: when a shard's in-flight batch
+                    exceeds the p99 latency budget (fallback D ms until the
+                    histogram warms up), re-dispatch its requests to the
+                    shallowest sibling shard — first answer wins, the loser
+                    is cancelled and counted. Needs --shards >= 2; requires
+                    --classes
+  --qos-check       exit non-zero unless interactive p99 stayed within its
+                    class SLO on every variant and at least one request
+                    spilled down a degrade ladder; requires --classes
 ";
 
 fn main() {
@@ -144,7 +171,7 @@ fn run() -> Result<()> {
         "depth", "max-wait-ms", "spot-check", "reupload", "burst", "no-resident",
         "no-pipeline", "replicas", "avg-every", "momenta", "sync-compress", "epoch-ckpts",
         "shards", "slo-ms", "trace-out", "metrics-out", "faults", "no-evict",
-        "barrier-timeout-ms", "no-supervise",
+        "barrier-timeout-ms", "no-supervise", "classes", "degrade", "hedge-ms", "qos-check",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -492,6 +519,39 @@ fn serve(args: &Args) -> Result<()> {
         None => 0.0,
     };
     let slo = if slo_ms > 0.0 { Some(Duration::from_secs_f64(slo_ms / 1e3)) } else { None };
+    // rank-aware QoS: --classes switches the shard queues to per-class
+    // weighted multi-queues; --degrade arms the spill ladders; --hedge-ms
+    // arms the tail-latency hedge governor
+    let qos = match args.get("classes") {
+        Some(spec) => {
+            let mut q = QosConfig {
+                classes: QosConfig::parse_classes(spec)?,
+                ..Default::default()
+            };
+            if let Some(dspec) = args.get("degrade") {
+                q.degrade = QosConfig::parse_degrade(dspec)?;
+            }
+            if let Some(h) = args.get("hedge-ms") {
+                let ms: f64 = h.parse().ok().filter(|v| *v > 0.0).ok_or_else(|| {
+                    anyhow!("--hedge-ms expects a positive number, got '{h}'")
+                })?;
+                if shards < 2 {
+                    bail!("--hedge-ms needs --shards >= 2 (hedging targets a sibling shard)");
+                }
+                q.hedge = Some(HedgeConfig {
+                    fallback: Duration::from_secs_f64(ms / 1e3),
+                    ..Default::default()
+                });
+            }
+            Some(q)
+        }
+        None => {
+            if args.has("degrade") || args.has("hedge-ms") || args.has("qos-check") {
+                bail!("--degrade / --hedge-ms / --qos-check require --classes");
+            }
+            None
+        }
+    };
 
     // checkpoint: --ckpt, or the manifest's init checkpoint (same default
     // as the benches — serving speed does not depend on training state)
@@ -522,10 +582,11 @@ fn serve(args: &Args) -> Result<()> {
         registry: obs.registry.clone(),
         tracer: obs.tracer.clone(),
         supervise: !args.bool_or("no-supervise", false),
+        qos: qos.clone(),
         ..Default::default()
     };
     println!(
-        "serving {model} [{}] params={} shards={shards} slo={} requests={requests} {} ...",
+        "serving {model} [{}] params={} shards={shards} slo={} qos={} requests={requests} {} ...",
         variants.join(", "),
         if cfg.reupload {
             "reupload-per-batch"
@@ -535,7 +596,12 @@ fn serve(args: &Args) -> Result<()> {
             "device-resident"
         },
         if slo_ms > 0.0 { format!("{slo_ms}ms") } else { "off".to_string() },
-        if burst { "burst".to_string() } else { format!("concurrency={concurrency}") },
+        if qos.is_some() { "on" } else { "off" },
+        if burst || qos.is_some() {
+            "burst".to_string()
+        } else {
+            format!("concurrency={concurrency}")
+        },
     );
     let server = Server::start(&m, specs, &cfg)?;
 
@@ -543,7 +609,45 @@ fn serve(args: &Args) -> Result<()> {
     let timeout = Duration::from_secs(120);
     let mut rows = vec![StatsSnapshot::table_header()];
     let mut reports = Vec::new();
+    let mut qos_reports: Vec<(String, [serve_load::LoadReport; 3])> = Vec::new();
     for variant in &variants {
+        if qos.is_some() {
+            // QoS driver: cycle every class through an open-loop burst so
+            // the weighted queues, SLOs and ladders all see traffic
+            let class_reports = serve_load::classed_burst_loop(
+                &server,
+                &model,
+                variant,
+                &data,
+                requests,
+                &Class::ALL,
+                timeout,
+            );
+            let snap = server.stats(&model, variant).expect("registered variant");
+            for (class, rep) in Class::ALL.iter().zip(&class_reports) {
+                println!(
+                    "{variant}/{class}: {} ok, {} shed, {} errors | p50 {:.2} ms p99 {:.2} ms",
+                    rep.completed,
+                    rep.shed,
+                    rep.errors,
+                    rep.latency_ms(50.0),
+                    rep.latency_ms(99.0)
+                );
+            }
+            println!(
+                "{variant}: served={:?} shed={:?} spilled={:?} hedge fired/won/cancelled \
+                 {}/{}/{}",
+                snap.served_by_class,
+                snap.shed_by_class,
+                snap.spilled_by_class,
+                snap.hedge_fired,
+                snap.hedge_wins,
+                snap.hedge_cancelled
+            );
+            rows.push(snap.table_row());
+            qos_reports.push((variant.clone(), class_reports));
+            continue;
+        }
         let report = if burst {
             serve_load::burst_loop(&server, &model, variant, &data, requests, timeout)
         } else {
@@ -572,6 +676,34 @@ fn serve(args: &Args) -> Result<()> {
             report.latency_ms(95.0),
             report.latency_ms(99.0)
         );
+    }
+    // --qos-check: the overload acceptance gate — interactive latency held
+    // its SLO on every variant while at least one expired request degraded
+    // down a ladder instead of shedding
+    if args.has("qos-check") {
+        let q = qos.as_ref().expect("checked above: --qos-check requires --classes");
+        let islo = q.classes[Class::Interactive.index()].slo.ok_or_else(|| {
+            anyhow!("--qos-check needs an interactive SLO in --classes (interactive:W:SLO)")
+        })?;
+        for (variant, class_reports) in &qos_reports {
+            let p99_ms = class_reports[Class::Interactive.index()].latency_ms(99.0);
+            let slo_ms = islo.as_secs_f64() * 1e3;
+            if p99_ms > slo_ms {
+                bail!(
+                    "qos-check failed: {variant} interactive p99 {p99_ms:.2} ms \
+                     exceeds SLO {slo_ms:.2} ms"
+                );
+            }
+        }
+        let spilled: u64 = variants
+            .iter()
+            .filter_map(|v| server.stats(&model, v))
+            .map(|s| s.spilled)
+            .sum();
+        if spilled == 0 {
+            bail!("qos-check failed: expected degrade-ladder spills under overload, saw none");
+        }
+        println!("qos-check passed: interactive p99 within SLO, {spilled} requests spilled");
     }
     let deaths: u64 = variants
         .iter()

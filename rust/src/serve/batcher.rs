@@ -17,8 +17,20 @@
 //! is still waiting for. Shedding at admission time would be wrong twice
 //! over: the queue wait *is* the latency being guarded, and rejecting early
 //! would shed work that might still make its deadline.
+//!
+//! **Degrade-not-shed** (QoS): before shedding, an expired request is
+//! offered to [`ShardQos::spill`] — with a [`DegradePolicy`] ladder
+//! configured, low-priority work that missed its deadline moves to a
+//! cheaper registered variant of the same model (with a fresh per-class
+//! deadline) instead of being dropped, trading decomposition rank for an
+//! answer. The spill is counted on this variant
+//! ([`SharedStats::on_spill`]) and admitted on the target; only work with
+//! no live ladder target below it is shed.
+//!
+//! [`DegradePolicy`]: super::qos::DegradePolicy
 
-use super::queue::{Bounded, Pop};
+use super::qos::{ClassQueues, ShardQos};
+use super::queue::Pop;
 use super::stats::SharedStats;
 use super::{Request, ServeError};
 use crate::obs::Tracer;
@@ -48,41 +60,53 @@ pub enum NextBatch {
     Closed,
 }
 
-/// Shed-at-pop filter: pass a live request through, or answer an expired
-/// one with `DeadlineExceeded` (counted) and return `None`.
-fn shed_if_expired(req: Request, stats: &SharedStats) -> Option<Request> {
-    if req.expired(Instant::now()) {
-        stats.on_shed();
-        req.respond(Err(ServeError::DeadlineExceeded));
-        None
-    } else {
-        Some(req)
+/// Pop-time disposition of an expired request: first offer it to the
+/// degrade ladder ([`ShardQos::spill`], counted as a spill on this
+/// variant), and only if no ladder target takes it answer
+/// `DeadlineExceeded` (counted as a per-class shed). Live requests pass
+/// through untouched.
+fn resolve_expired(req: Request, stats: &SharedStats, qos: &ShardQos) -> Option<Request> {
+    if !req.expired(Instant::now()) {
+        return Some(req);
+    }
+    let class = req.class;
+    match qos.spill(req) {
+        Ok(()) => {
+            stats.on_spill(class);
+            None
+        }
+        Err(req) => {
+            stats.on_shed(class);
+            req.respond(Err(ServeError::DeadlineExceeded));
+            None
+        }
     }
 }
 
 /// Block for the next batch: wait (bounded) for a first request, then
 /// coalesce until the batch is full or `max_wait` expires. Requests whose
-/// admission deadline has already passed are shed here — at pop time — and
-/// never occupy a batch slot.
+/// admission deadline has already passed are spilled down their class
+/// ladder or shed here — at pop time — and never occupy a batch slot.
 ///
 /// When tracing is on, each shipped batch records a `queue_wait` span (the
 /// idle wait for the batch's first live request; idle polls that time out
 /// record nothing) and a `coalesce` span (the hold-open window gathering
 /// the rest of the batch).
 pub fn next_batch(
-    queue: &Bounded<Request>,
+    queue: &ClassQueues,
     cfg: &BatcherConfig,
     stats: &SharedStats,
     tracer: &Tracer,
+    qos: &ShardQos,
 ) -> NextBatch {
     let wait_t0 = tracer.start();
     let first = loop {
         match queue.pop_timeout(cfg.idle_poll) {
-            Pop::Item(r) => match shed_if_expired(r, stats) {
+            Pop::Item(r) => match resolve_expired(r, stats, qos) {
                 Some(r) => break r,
-                // expired request shed; keep waiting for a live one (each
-                // shed restarts a bounded idle-poll window, so shutdown
-                // latency stays bounded)
+                // expired request spilled/shed; keep waiting for a live one
+                // (each one restarts a bounded idle-poll window, so
+                // shutdown latency stays bounded)
                 None => continue,
             },
             Pop::TimedOut => return NextBatch::Idle,
@@ -96,7 +120,7 @@ pub fn next_batch(
     while reqs.len() < cfg.batch {
         match queue.pop_deadline(deadline) {
             Pop::Item(r) => {
-                if let Some(r) = shed_if_expired(r, stats) {
+                if let Some(r) = resolve_expired(r, stats, qos) {
                     reqs.push(r);
                 }
             }
@@ -117,7 +141,7 @@ pub fn next_batch(
 /// holding finished results hostage until the next arrival (or the idle
 /// poll). This is the whole latency story of the overlapped engine: burst
 /// traffic pipelines, trickle traffic behaves exactly like the serial loop.
-pub fn has_backlog(queue: &Bounded<Request>) -> bool {
+pub fn has_backlog(queue: &ClassQueues) -> bool {
     !queue.is_empty()
 }
 
@@ -135,8 +159,9 @@ pub fn assemble(reqs: &[Request], batch: usize, item_elems: usize) -> (Vec<f32>,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::qos::{self, Class, QosConfig, SpillShard};
     use crate::serve::{Response, ServeError};
-    use std::sync::mpsc;
+    use std::sync::{mpsc, Arc};
 
     const ELEMS: usize = 4;
 
@@ -148,6 +173,9 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             tx,
+            class: Class::Standard,
+            hedge: None,
+            hedged_copy: false,
         };
         (r, rx)
     }
@@ -173,12 +201,12 @@ mod tests {
 
     #[test]
     fn coalesces_full_batch_without_waiting_out_deadline() {
-        let q = Bounded::new(8);
+        let q = ClassQueues::single(8);
         for i in 0..4 {
-            q.try_push(req(i as f32).0).unwrap();
+            q.try_push(Class::Standard, req(i as f32).0).unwrap();
         }
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop()) {
+        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop(), &ShardQos::disabled()) {
             NextBatch::Batch(reqs) => {
                 assert_eq!(reqs.len(), 4);
                 // FIFO order preserved
@@ -194,11 +222,11 @@ mod tests {
 
     #[test]
     fn partial_batch_ships_at_deadline() {
-        let q = Bounded::new(8);
-        q.try_push(req(1.0).0).unwrap();
-        q.try_push(req(2.0).0).unwrap();
+        let q = ClassQueues::single(8);
+        q.try_push(Class::Standard, req(1.0).0).unwrap();
+        q.try_push(Class::Standard, req(2.0).0).unwrap();
         let t0 = Instant::now();
-        match next_batch(&q, &cfg(4, 30), &stats(), &Tracer::noop()) {
+        match next_batch(&q, &cfg(4, 30), &stats(), &Tracer::noop(), &ShardQos::disabled()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
             _ => panic!("expected a partial batch"),
         }
@@ -209,35 +237,44 @@ mod tests {
 
     #[test]
     fn idle_then_closed() {
-        let q: Bounded<Request> = Bounded::new(2);
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Idle));
+        let q = ClassQueues::single(2);
+        assert!(matches!(
+            next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop(), &ShardQos::disabled()),
+            NextBatch::Idle
+        ));
         q.close();
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Closed));
+        assert!(matches!(
+            next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop(), &ShardQos::disabled()),
+            NextBatch::Closed
+        ));
     }
 
     #[test]
     fn close_ships_drained_partial_then_closed() {
-        let q = Bounded::new(4);
-        q.try_push(req(3.0).0).unwrap();
+        let q = ClassQueues::single(4);
+        q.try_push(Class::Standard, req(3.0).0).unwrap();
         q.close();
-        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop()) {
+        match next_batch(&q, &cfg(4, 5_000), &stats(), &Tracer::noop(), &ShardQos::disabled()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 1),
             _ => panic!("expected drained partial batch"),
         }
-        assert!(matches!(next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop()), NextBatch::Closed));
+        assert!(matches!(
+            next_batch(&q, &cfg(4, 1), &stats(), &Tracer::noop(), &ShardQos::disabled()),
+            NextBatch::Closed
+        ));
     }
 
     #[test]
     fn expired_requests_shed_at_pop_not_batched() {
-        let q = Bounded::new(8);
+        let q = ClassQueues::single(8);
         let s = stats();
         let (r1, rx1) = expired_req(1.0);
         let (r2, rx2) = req(2.0);
         let (r3, rx3) = expired_req(3.0);
-        q.try_push(r1).unwrap();
-        q.try_push(r2).unwrap();
-        q.try_push(r3).unwrap();
-        match next_batch(&q, &cfg(4, 20), &s, &Tracer::noop()) {
+        q.try_push(r1.class, r1).unwrap();
+        q.try_push(r2.class, r2).unwrap();
+        q.try_push(r3.class, r3).unwrap();
+        match next_batch(&q, &cfg(4, 20), &s, &Tracer::noop(), &ShardQos::disabled()) {
             NextBatch::Batch(reqs) => {
                 // only the live request rides the batch
                 assert_eq!(reqs.len(), 1);
@@ -254,17 +291,20 @@ mod tests {
 
     #[test]
     fn all_expired_queue_drains_to_idle() {
-        let q = Bounded::new(8);
+        let q = ClassQueues::single(8);
         let s = stats();
         let mut rxs = Vec::new();
         for i in 0..3 {
             let (r, rx) = expired_req(i as f32);
-            q.try_push(r).unwrap();
+            q.try_push(r.class, r).unwrap();
             rxs.push(rx);
         }
         // every queued request is expired: the batcher sheds them all and
         // reports Idle instead of shipping an empty batch
-        assert!(matches!(next_batch(&q, &cfg(4, 20), &s, &Tracer::noop()), NextBatch::Idle));
+        assert!(matches!(
+            next_batch(&q, &cfg(4, 20), &s, &Tracer::noop(), &ShardQos::disabled()),
+            NextBatch::Idle
+        ));
         for rx in &rxs {
             assert_eq!(rx.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
         }
@@ -273,11 +313,11 @@ mod tests {
 
     #[test]
     fn shipped_batches_record_queue_wait_and_coalesce_spans() {
-        let q = Bounded::new(8);
-        q.try_push(req(1.0).0).unwrap();
-        q.try_push(req(2.0).0).unwrap();
+        let q = ClassQueues::single(8);
+        q.try_push(Class::Standard, req(1.0).0).unwrap();
+        q.try_push(Class::Standard, req(2.0).0).unwrap();
         let tracer = Tracer::enabled();
-        match next_batch(&q, &cfg(2, 50), &stats(), &tracer) {
+        match next_batch(&q, &cfg(2, 50), &stats(), &tracer, &ShardQos::disabled()) {
             NextBatch::Batch(reqs) => assert_eq!(reqs.len(), 2),
             _ => panic!("expected a batch"),
         }
@@ -285,8 +325,60 @@ mod tests {
         assert_eq!(names, vec!["queue_wait", "coalesce"]);
         // an idle poll records no spans — a quiet server doesn't fill the
         // trace ring with waiting
-        assert!(matches!(next_batch(&q, &cfg(2, 1), &stats(), &tracer), NextBatch::Idle));
+        assert!(matches!(
+            next_batch(&q, &cfg(2, 1), &stats(), &tracer, &ShardQos::disabled()),
+            NextBatch::Idle
+        ));
         assert_eq!(tracer.len(), 2);
+    }
+
+    #[test]
+    fn expired_batch_work_spills_down_the_ladder_instead_of_shedding() {
+        // source shard of variant "v" with a ladder batch → cheap; the
+        // expired batch-class request must land in cheap's queue (class
+        // preserved, admission counted there) and be counted as a spill —
+        // not a shed — here, while the expired *interactive* request (no
+        // ladder) still sheds
+        let q = ClassQueues::multi(8, [1, 1, 1]);
+        let s = stats();
+        let mut qcfg = QosConfig::default();
+        qcfg.degrade.set(Class::Batch, vec!["cheap".into()]);
+        let table = qos::new_table();
+        let target = Arc::new(ClassQueues::multi(8, [1, 1, 1]));
+        let tstats = SharedStats::new("m", "cheap", 4);
+        table.lock().unwrap().insert(
+            "m/cheap".into(),
+            vec![SpillShard { queue: target.clone(), stats: tstats.clone() }],
+        );
+        let shard_qos = ShardQos::new("m", "v", Arc::new(qcfg), None, table);
+
+        let (mut rb, rxb) = expired_req(1.0);
+        rb.class = Class::Batch;
+        let (mut ri, rxi) = expired_req(2.0);
+        ri.class = Class::Interactive;
+        let (live, _rx_live) = req(3.0);
+        q.try_push(rb.class, rb).unwrap();
+        q.try_push(ri.class, ri).unwrap();
+        q.try_push(live.class, live).unwrap();
+
+        match next_batch(&q, &cfg(4, 20), &s, &Tracer::noop(), &shard_qos) {
+            NextBatch::Batch(reqs) => {
+                assert_eq!(reqs.len(), 1, "only the live request rides the batch");
+                assert_eq!(reqs[0].x[0], 3.0);
+            }
+            _ => panic!("expected a batch"),
+        }
+        // the batch-class request was spilled, not answered
+        assert!(rxb.try_recv().is_err(), "spilled request must not be answered yet");
+        assert_eq!(target.class_len(Class::Batch), 1, "spill lands in the target's batch queue");
+        assert_eq!(tstats.snapshot(0).requests_ok, 1, "target counts the admission");
+        // the interactive request had no ladder: shed as before
+        assert_eq!(rxi.try_recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        let snap = s.snapshot(0);
+        assert_eq!(snap.spilled, 1);
+        assert_eq!(snap.spilled_by_class, [0, 0, 1]);
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.shed_by_class, [1, 0, 0]);
     }
 
     #[test]
@@ -303,11 +395,11 @@ mod tests {
 
     #[test]
     fn backlog_reflects_queue_depth() {
-        let q = Bounded::new(4);
+        let q = ClassQueues::single(4);
         assert!(!has_backlog(&q));
-        q.try_push(req(1.0).0).unwrap();
+        q.try_push(Class::Standard, req(1.0).0).unwrap();
         assert!(has_backlog(&q));
-        let _ = q.try_pop();
+        let _ = q.pop_timeout(Duration::from_millis(5));
         assert!(!has_backlog(&q));
     }
 

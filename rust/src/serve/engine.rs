@@ -32,9 +32,9 @@
 //! a half-swapped parameter set ([`Server::swap_variant`](super::Server)).
 
 use super::batcher::{self, BatcherConfig, NextBatch};
-use super::queue::Bounded;
+use super::qos::{self, ClassQueues, ShardQos};
 use super::stats::SharedStats;
-use super::{Request, Response, ServeError};
+use super::{Delivery, Request, Response, ServeError};
 use crate::checkpoint::Params;
 use crate::coordinator::evaluate_with;
 use crate::data::Dataset;
@@ -86,13 +86,19 @@ pub struct SwapMsg {
 /// Everything the router wires into one shard worker: its request queue,
 /// its stats sink, its warm-swap control channel, and the startup ack.
 pub struct ShardWiring {
-    pub queue: Arc<Bounded<Request>>,
+    pub queue: Arc<ClassQueues>,
     pub stats: SharedStats,
     pub swap: mpsc::Receiver<SwapMsg>,
     pub ready: mpsc::Sender<Result<(), String>>,
     /// Span recorder for the request lifecycle (the no-op tracer when the
     /// server runs without `--trace-out`).
     pub tracer: Tracer,
+    /// Where expired work of this shard may degrade to
+    /// ([`ShardQos::disabled`] when the server runs without `--classes`).
+    pub qos: ShardQos,
+    /// In-flight batch board read by the variant's hedge governor; `None`
+    /// when hedging is off or the variant has a single shard.
+    pub hedge: Option<qos::HedgeBoard>,
 }
 
 /// Closes the queue when the worker exits for *any* reason — including a
@@ -101,7 +107,7 @@ pub struct ShardWiring {
 /// would keep getting `QueueFull` (never `Closed`) from a dead engine and
 /// retry forever; without the drain, callers already admitted would stay
 /// blocked on a `Pending` nobody will ever answer.
-struct CloseQueueOnExit(Arc<Bounded<Request>>);
+struct CloseQueueOnExit(Arc<ClassQueues>);
 
 impl Drop for CloseQueueOnExit {
     fn drop(&mut self) {
@@ -123,10 +129,12 @@ pub fn spawn(
     thread::Builder::new()
         .name(format!("lrta-serve-{}-{}-{}", cfg.model, cfg.variant, cfg.shard))
         .spawn(move || {
-            let ShardWiring { queue, stats, swap, ready, tracer } = wiring;
+            let ShardWiring { queue, stats, swap, ready, tracer, qos, hedge } = wiring;
             let _guard = CloseQueueOnExit(Arc::clone(&queue));
             match Engine::init(&manifest, meta, params, &cfg, stats, tracer) {
                 Ok(mut engine) => {
+                    engine.qos = qos;
+                    engine.hedge = hedge;
                     let _ = ready.send(Ok(()));
                     engine.run(&queue, &cfg, &swap);
                 }
@@ -146,6 +154,9 @@ struct InFlightBatch {
     padded: usize,
     pending: InFlight,
     dispatch_secs: f64,
+    /// Lead request id of this batch on the hedge board (`None` when
+    /// hedging is off) — used to retire the board batch-scoped.
+    lead: Option<u64>,
 }
 
 struct Engine {
@@ -169,6 +180,10 @@ struct Engine {
     /// Fault-seam scope label (`shard{N}`) so a `--faults` directive can
     /// target one shard of a fanout ([`crate::faults`]).
     fault_scope: String,
+    /// Degrade-ladder context for the batcher (disabled without QoS).
+    qos: ShardQos,
+    /// In-flight batch board for the hedge governor (`None` = no hedging).
+    hedge: Option<qos::HedgeBoard>,
 }
 
 impl Engine {
@@ -207,6 +222,8 @@ impl Engine {
             tracer,
             spot_check: cfg.spot_check,
             fault_scope: format!("shard{}", cfg.shard),
+            qos: ShardQos::disabled(),
+            hedge: None,
         };
         engine.run_spot_check()?;
         Ok(engine)
@@ -228,7 +245,7 @@ impl Engine {
 
     fn run(
         &mut self,
-        queue: &Bounded<Request>,
+        queue: &ClassQueues,
         cfg: &EngineConfig,
         swap_rx: &mpsc::Receiver<SwapMsg>,
     ) {
@@ -264,7 +281,7 @@ impl Engine {
                 }
                 let _ = msg.ack.send(outcome);
             }
-            match batcher::next_batch(queue, &bcfg, &self.stats, &self.tracer) {
+            match batcher::next_batch(queue, &bcfg, &self.stats, &self.tracer, &self.qos) {
                 NextBatch::Closed => {
                     if let Some(p) = inflight.take() {
                         self.finish_batch(p);
@@ -277,13 +294,16 @@ impl Engine {
                         self.finish_batch(p);
                     }
                 }
-                NextBatch::Batch(reqs) => {
+                NextBatch::Batch(mut reqs) => {
                     if !pipelined {
                         self.serve_batch(reqs);
                         continue;
                     }
                     let (xs, padded) =
                         batcher::assemble(&reqs, self.meta.batch, self.item_elems);
+                    // publish *before* dispatch: a stalled dispatch is
+                    // exactly the batch the governor must be able to hedge
+                    let lead = self.publish_hedge(&mut reqs);
                     let t0 = Instant::now();
                     match self.dispatch(&xs) {
                         Ok(pending) => {
@@ -295,6 +315,7 @@ impl Engine {
                                 padded,
                                 pending,
                                 dispatch_secs: t0.elapsed().as_secs_f64(),
+                                lead,
                             };
                             if let Some(prev) = inflight.replace(staged) {
                                 self.finish_batch(prev);
@@ -312,6 +333,7 @@ impl Engine {
                                 self.finish_batch(p);
                             }
                             self.respond_batch(reqs, padded, 0.0, 0.0, Err(e));
+                            self.retire_hedge(lead);
                         }
                     }
                 }
@@ -360,12 +382,31 @@ impl Engine {
     /// Serial (lockstep) batch service — the reupload baseline and the
     /// `pipelined: false` resident baseline. The whole run is one blocking
     /// call, so its time all counts as dispatch in the split.
-    fn serve_batch(&self, reqs: Vec<Request>) {
+    fn serve_batch(&self, mut reqs: Vec<Request>) {
         let (xs, padded) = batcher::assemble(&reqs, self.meta.batch, self.item_elems);
+        let lead = self.publish_hedge(&mut reqs);
         let t0 = Instant::now();
         let result = self.execute(&xs);
         let exec_secs = t0.elapsed().as_secs_f64();
         self.respond_batch(reqs, padded, exec_secs, 0.0, result);
+        self.retire_hedge(lead);
+    }
+
+    /// Publish a batch on the hedge board (no-op without a board — QoS-off
+    /// paths allocate no guard and clone no payload). Returns the batch's
+    /// lead request id for [`Engine::retire_hedge`].
+    fn publish_hedge(&self, reqs: &mut [Request]) -> Option<u64> {
+        let board = self.hedge.as_ref()?;
+        qos::publish(board, reqs);
+        reqs.first().map(|r| r.id)
+    }
+
+    /// Retire the hedge board entry for the batch led by `lead` (no-op
+    /// when hedging is off or a newer batch already owns the board).
+    fn retire_hedge(&self, lead: Option<u64>) {
+        if let (Some(board), Some(id)) = (self.hedge.as_ref(), lead) {
+            qos::retire(board, id);
+        }
     }
 
     /// Dispatch one assembled batch against the resident buffers without
@@ -388,7 +429,7 @@ impl Engine {
 
     /// Fetch a dispatched batch's logits and respond to its requests.
     fn finish_batch(&self, b: InFlightBatch) {
-        let InFlightBatch { reqs, padded, pending, dispatch_secs } = b;
+        let InFlightBatch { reqs, padded, pending, dispatch_secs, lead } = b;
         let t0 = Instant::now();
         let fetch_t0 = self.tracer.start();
         let fetched =
@@ -406,6 +447,7 @@ impl Engine {
         // number, not dispatch+fetch.
         let fetch_secs = t0.elapsed().as_secs_f64();
         self.respond_batch(reqs, padded, dispatch_secs, fetch_secs, result);
+        self.retire_hedge(lead);
     }
 
     /// Demux per-request rows out of a batch result (or fail every request)
@@ -427,21 +469,40 @@ impl Engine {
                 let fill = reqs.len();
                 let done = Instant::now();
                 let mut latencies = Vec::with_capacity(fill);
+                let mut sent = 0usize;
                 for (i, req) in reqs.into_iter().enumerate() {
                     let row = logits.data()[i * classes..(i + 1) * classes].to_vec();
                     let latency = done.duration_since(req.enqueued);
-                    latencies.push(latency.as_secs_f64());
-                    req.respond(Ok(Response { logits: row, latency, batch_fill: fill }));
+                    let class = req.class;
+                    let hedged_copy = req.hedged_copy;
+                    // first-answer-wins: a hedged request replies exactly
+                    // once — the loser's reply is dropped and counted, and
+                    // its latency never pollutes the histogram
+                    match req.respond(Ok(Response { logits: row, latency, batch_fill: fill })) {
+                        Delivery::Sent => {
+                            sent += 1;
+                            latencies.push(latency.as_secs_f64());
+                            self.stats.on_served_class(class);
+                            if hedged_copy {
+                                self.stats.on_hedge_win();
+                            }
+                        }
+                        Delivery::Cancelled => self.stats.on_hedge_cancelled(),
+                    }
                 }
                 self.tracer.end(reply_t0, "serve", "reply");
-                self.stats.on_batch_timed(fill, padded, dispatch_secs, fetch_secs, &latencies);
+                self.stats.on_batch_timed(sent, padded, dispatch_secs, fetch_secs, &latencies);
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                self.stats.on_error(reqs.len());
+                let mut failed = 0usize;
                 for req in reqs {
-                    req.respond(Err(ServeError::Engine(msg.clone())));
+                    match req.respond(Err(ServeError::Engine(msg.clone()))) {
+                        Delivery::Sent => failed += 1,
+                        Delivery::Cancelled => self.stats.on_hedge_cancelled(),
+                    }
                 }
+                self.stats.on_error(failed);
             }
         }
         self.stats.set_transfers(self.rt.uploads() as u64, self.rt.demux_fallbacks() as u64);

@@ -43,6 +43,20 @@
 //! [`ServeError::DeadlineExceeded`]) so a backlogged engine stops burning
 //! executable slots on answers nobody is waiting for.
 //!
+//! **Rank-aware QoS** ([`qos`]): with `ServerConfig::qos` set, requests
+//! carry a priority class (`interactive`/`standard`/`batch`, tagged via
+//! [`Server::submit_class`] or `lrta serve --classes`), each shard's queue
+//! becomes a per-class multi-queue popped on a weighted-round-robin slot
+//! schedule, and per-class SLOs replace the server-wide deadline. Under
+//! pressure low-priority work *degrades instead of sheds*: the batcher
+//! spills expired requests down a [`DegradePolicy`] ladder to a cheaper
+//! registered variant of the same model (rank ⇄ latency as a live serving
+//! policy). A hedge governor re-dispatches tail-slow in-flight batches to
+//! the shallowest sibling shard — first answer wins, the loser is
+//! cancelled, both are counted. With `qos: None` every path delegates to
+//! the original single-class code, pinned bit-identical in
+//! `integration_serve`.
+//!
 //! **Warm variant swap**: [`Server::swap_variant`] uploads a new
 //! checkpoint's buffers beside the live set on every shard and flips
 //! atomically between batches — a zero-downtime redeploy that loses no
@@ -75,16 +89,19 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod qos;
 pub mod queue;
 pub mod router;
 pub mod stats;
 
+pub use qos::{Class, ClassPolicy, ClassQueues, DegradePolicy, HedgeConfig, QosConfig};
 pub use router::{Router, Server, ServerConfig, VariantSpec};
 pub use stats::{LatencyHistogram, SharedStats, StatsSnapshot};
 
 use crate::data::{Dataset, IMAGE_ELEMS};
 use crate::util::stats::percentile_sorted;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// One enqueued inference request: a single sample (row-major `[32,32,3]`
@@ -100,12 +117,41 @@ pub struct Request {
     /// already given up on. `None` = no SLO, never shed.
     pub deadline: Option<Instant>,
     pub tx: mpsc::Sender<Result<Response, ServeError>>,
+    /// Priority class ([`qos::Class`]); `Standard` on the QoS-off path,
+    /// where it is never consulted.
+    pub class: Class,
+    /// First-answer-wins guard shared between a hedged request and its
+    /// re-dispatched copy. `None` (the QoS-off and unhedged case) means
+    /// [`Request::respond`] sends unconditionally, exactly as before.
+    pub hedge: Option<Arc<AtomicBool>>,
+    /// True on the governor's re-dispatched copy of a hedged request —
+    /// a copy that wins the race is counted as a hedge win.
+    pub hedged_copy: bool,
+}
+
+/// What [`Request::respond`] actually did: hedged requests share one
+/// response channel between two executions, and exactly one of them sends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// The result was sent (a hung-up client is still `Sent`).
+    Sent,
+    /// A sibling execution answered first; this result was dropped.
+    Cancelled,
 }
 
 impl Request {
-    /// Deliver the result; a hung-up client is not an error.
-    pub(crate) fn respond(self, r: Result<Response, ServeError>) {
+    /// Deliver the result; a hung-up client is not an error. With a hedge
+    /// guard installed, only the first of the racing executions sends —
+    /// the loser reports [`Delivery::Cancelled`] so the engine can count
+    /// it without double-replying.
+    pub fn respond(self, r: Result<Response, ServeError>) -> Delivery {
+        if let Some(guard) = &self.hedge {
+            if guard.swap(true, Ordering::AcqRel) {
+                return Delivery::Cancelled;
+            }
+        }
         let _ = self.tx.send(r);
+        Delivery::Sent
     }
 
     /// Has this request's admission deadline passed?
@@ -120,7 +166,7 @@ impl Request {
 /// through the batcher, but a worker that died mid-run (or never came up)
 /// leaves admitted requests behind — this is the backstop that unwedges
 /// their submitters.
-pub(crate) fn drain_shutdown(queue: &queue::Bounded<Request>) {
+pub(crate) fn drain_shutdown(queue: &qos::ClassQueues) {
     for req in queue.drain() {
         req.respond(Err(ServeError::Shutdown));
     }
@@ -373,6 +419,62 @@ pub fn burst_loop(
     report.finish(t0)
 }
 
+/// [`burst_loop`] with a class mix: request `i` is tagged
+/// `mix[i % mix.len()]` via [`Server::submit_class`], and the outcome is
+/// reported **per class** (indexed by [`Class::index`]) so per-class SLO
+/// attainment, spill goodput and shed counts are separable. A spilled
+/// request that a cheaper variant answers counts as completed for its
+/// class — degrade-not-shed is visible as goodput, not as loss.
+pub fn classed_burst_loop(
+    server: &Server,
+    model: &str,
+    variant: &str,
+    data: &Dataset,
+    requests: usize,
+    mix: &[Class],
+    timeout: Duration,
+) -> [LoadReport; 3] {
+    assert!(!mix.is_empty(), "class mix must be non-empty");
+    let mut reports: [LoadReport; 3] = Default::default();
+    let mut pendings: Vec<(usize, Pending)> = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let class = mix[i % mix.len()];
+        let c = class.index();
+        reports[c].requests += 1;
+        loop {
+            match server.submit_class(model, variant, image_of(data, i), class) {
+                Ok(p) => {
+                    pendings.push((c, p));
+                    break;
+                }
+                Err(ServeError::QueueFull { .. }) => {
+                    reports[c].rejected += 1;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(_) => {
+                    reports[c].errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    for (c, p) in &pendings {
+        match p.wait(timeout) {
+            Ok(resp) => reports[*c].latencies.push(resp.latency.as_secs_f64()),
+            Err(ServeError::DeadlineExceeded) => reports[*c].shed += 1,
+            Err(_) => reports[*c].errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    reports.map(|mut r| {
+        r.wall_secs = wall;
+        r.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        r.completed = r.latencies.len();
+        r
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,7 +503,16 @@ mod tests {
     fn request_expiry_is_deadline_gated() {
         let (tx, _rx) = mpsc::channel();
         let now = Instant::now();
-        let mut r = Request { id: 0, x: vec![], enqueued: now, deadline: None, tx };
+        let mut r = Request {
+            id: 0,
+            x: vec![],
+            enqueued: now,
+            deadline: None,
+            tx,
+            class: Class::Standard,
+            hedge: None,
+            hedged_copy: false,
+        };
         assert!(!r.expired(now), "no deadline: never expires");
         r.deadline = Some(now + Duration::from_secs(60));
         assert!(!r.expired(now));
@@ -410,16 +521,54 @@ mod tests {
     }
 
     #[test]
+    fn hedged_respond_sends_exactly_once() {
+        // two executions of the same request share one guard + channel;
+        // the first respond sends, the second is cancelled without sending
+        let (tx, rx) = mpsc::channel();
+        let guard = Arc::new(AtomicBool::new(false));
+        let mk = |copy: bool| Request {
+            id: 9,
+            x: vec![],
+            enqueued: Instant::now(),
+            deadline: None,
+            tx: tx.clone(),
+            class: Class::Interactive,
+            hedge: Some(guard.clone()),
+            hedged_copy: copy,
+        };
+        let resp = Response {
+            logits: vec![1.0],
+            latency: Duration::from_millis(1),
+            batch_fill: 1,
+        };
+        assert_eq!(mk(true).respond(Ok(resp.clone())), Delivery::Sent);
+        assert_eq!(mk(false).respond(Ok(resp)), Delivery::Cancelled);
+        drop(tx);
+        let p = Pending { rx };
+        assert!(p.wait(Duration::from_millis(10)).is_ok());
+        assert_eq!(p.wait(Duration::from_millis(10)), Err(ServeError::Closed), "one reply only");
+    }
+
+    #[test]
     fn drain_shutdown_answers_blocked_submitters() {
         // the shutdown-drain satellite: a worker that died leaves admitted
         // requests in its queue; drain must give each a terminal answer so
         // a caller blocked on `Pending::wait` unwedges immediately
-        let q: queue::Bounded<Request> = queue::Bounded::new(4);
+        let q = qos::ClassQueues::single(4);
         let mut rxs = Vec::new();
         for id in 0..3 {
             let (tx, rx) = mpsc::channel();
-            let req = Request { id, x: vec![], enqueued: Instant::now(), deadline: None, tx };
-            q.try_push(req).unwrap();
+            let req = Request {
+                id,
+                x: vec![],
+                enqueued: Instant::now(),
+                deadline: None,
+                tx,
+                class: Class::Standard,
+                hedge: None,
+                hedged_copy: false,
+            };
+            q.try_push(Class::Standard, req).unwrap();
             rxs.push(Pending { rx });
         }
         q.close();

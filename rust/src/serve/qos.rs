@@ -1,0 +1,880 @@
+//! Rank-aware QoS: priority classes, weighted multi-queue admission,
+//! degrade-to-cheaper-rank spilling, and hedged tail requests.
+//!
+//! The paper's central knob — decomposition rank trades accuracy for
+//! throughput — becomes a *live* serving policy here instead of a
+//! build-time choice:
+//!
+//! * Every request carries a [`Class`] (`interactive` / `standard` /
+//!   `batch`). With QoS enabled the per-shard admission queue becomes a
+//!   per-class multi-queue ([`ClassQueues`]) popped on a smooth
+//!   weighted-round-robin slot schedule, so a heavy batch tenant cannot
+//!   starve interactive traffic.
+//! * Per-class SLOs stamp per-class deadlines. When a low-priority
+//!   request expires at pop time it is **degraded instead of shed**: the
+//!   batcher spills it to a cheaper registered variant of the same model
+//!   (the [`DegradePolicy`] ladder, e.g. `batch: lrd → rankopt`), with a
+//!   fresh deadline — trading logit accuracy (rank) for an answer.
+//! * Hedged requests attack tail latency: a per-shard [`HedgeBoard`]
+//!   publishes the in-flight batch; a governor thread re-dispatches
+//!   copies to the shallowest sibling shard once the in-flight age
+//!   exceeds a percentile budget from the live latency histogram. The
+//!   first answer wins; the loser's reply is cancelled via a shared
+//!   [`AtomicBool`] guard (both outcomes counted).
+//!
+//! With QoS disabled ([`ClassQueues::single`], [`ShardQos::disabled`])
+//! every path delegates directly to the pre-QoS single-queue code, which
+//! is what lets `integration_serve` pin QoS-off bit-identical to the
+//! original serve path.
+
+use super::queue::{Bounded, Pop, PushError};
+use super::stats::SharedStats;
+use super::{Request, Response, ServeError};
+use crate::obs;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often a blocked multi-queue pop rescans the class queues. Small
+/// enough that weighted pop adds no visible latency at serve batch sizes.
+const MULTI_POLL: Duration = Duration::from_micros(200);
+
+/// A request's priority class. Order encodes priority: `Interactive`
+/// outranks `Standard` outranks `Batch` (used only for reporting — the
+/// actual scheduling weight comes from [`ClassPolicy::weight`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Class {
+    Interactive,
+    Standard,
+    Batch,
+}
+
+impl Class {
+    /// Every class, priority-descending. Indexes match [`Class::index`].
+    pub const ALL: [Class; 3] = [Class::Interactive, Class::Standard, Class::Batch];
+
+    /// Dense index into per-class arrays (`[T; 3]`).
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Standard => 1,
+            Class::Batch => 2,
+        }
+    }
+
+    /// Inverse of [`Class::index`]; panics on `i >= 3`.
+    pub fn from_index(i: usize) -> Class {
+        Class::ALL[i]
+    }
+
+    /// Stable label used in metrics (`class="interactive"`) and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Standard => "standard",
+            Class::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI/metric label back into a class.
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "standard" => Some(Class::Standard),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Class {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-class scheduling policy: WRR weight plus an optional per-class SLO
+/// that overrides `ServerConfig::slo` when QoS is enabled.
+#[derive(Clone, Debug)]
+pub struct ClassPolicy {
+    /// Weighted-round-robin share (slots per schedule cycle). Must be ≥ 1:
+    /// a zero weight would starve the class outright, which is what the
+    /// degrade ladder — not the scheduler — is for.
+    pub weight: u32,
+    /// Admission deadline for this class (`None` = inherit the server-wide
+    /// SLO, which may itself be `None` = never shed).
+    pub slo: Option<Duration>,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> Self {
+        ClassPolicy { weight: 1, slo: None }
+    }
+}
+
+/// Class → variant ladder: where expired work of a class may spill, in
+/// order of preference (cheapest-acceptable last). An empty ladder means
+/// the class sheds exactly as before.
+#[derive(Clone, Debug, Default)]
+pub struct DegradePolicy {
+    ladders: [Vec<String>; 3],
+}
+
+impl DegradePolicy {
+    pub fn new() -> DegradePolicy {
+        DegradePolicy::default()
+    }
+
+    /// Replace `class`'s ladder (variant names, most-preferred first).
+    pub fn set(&mut self, class: Class, ladder: Vec<String>) {
+        self.ladders[class.index()] = ladder;
+    }
+
+    /// `class`'s ladder (possibly empty).
+    pub fn ladder(&self, class: Class) -> &[String] {
+        &self.ladders[class.index()]
+    }
+
+    /// True when no class has a ladder — degrade disabled entirely.
+    pub fn is_empty(&self) -> bool {
+        self.ladders.iter().all(|l| l.is_empty())
+    }
+}
+
+/// Hedged-request policy for tail latency.
+#[derive(Clone, Debug)]
+pub struct HedgeConfig {
+    /// Latency-histogram percentile that sets the in-flight age budget.
+    pub percentile: f64,
+    /// Minimum histogram samples before the percentile is trusted; below
+    /// this the `fallback` budget applies.
+    pub min_samples: u64,
+    /// Budget used until the histogram has `min_samples` observations.
+    pub fallback: Duration,
+    /// Governor poll interval.
+    pub poll: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig {
+            percentile: 99.0,
+            min_samples: 64,
+            fallback: Duration::from_millis(50),
+            poll: Duration::from_millis(1),
+        }
+    }
+}
+
+/// The full QoS policy handed to `ServerConfig::qos`. Present = QoS on
+/// (per-class queues, per-class SLOs, degrade ladders, optional hedging).
+#[derive(Clone, Debug, Default)]
+pub struct QosConfig {
+    /// Indexed by [`Class::index`].
+    pub classes: [ClassPolicy; 3],
+    pub degrade: DegradePolicy,
+    /// `Some` arms the hedge governor on every variant with ≥ 2 shards.
+    pub hedge: Option<HedgeConfig>,
+}
+
+impl QosConfig {
+    pub fn weights(&self) -> [u32; 3] {
+        [self.classes[0].weight, self.classes[1].weight, self.classes[2].weight]
+    }
+
+    /// The deadline-producing SLO for `class`: the class SLO if set, else
+    /// the server-wide fallback.
+    pub fn class_slo(&self, class: Class, server_slo: Option<Duration>) -> Option<Duration> {
+        self.classes[class.index()].slo.or(server_slo)
+    }
+
+    /// Parse the CLI `--classes` spec: a comma list of
+    /// `name:weight[:slo_ms]` entries (e.g.
+    /// `interactive:4:250,standard:2:100,batch:1:5`). Unlisted classes
+    /// keep weight 1 and no class SLO; `slo_ms` of 0 means no class SLO.
+    pub fn parse_classes(spec: &str) -> Result<[ClassPolicy; 3]> {
+        let mut classes: [ClassPolicy; 3] = std::array::from_fn(|_| ClassPolicy::default());
+        let mut seen = [false; 3];
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let mut fields = part.split(':');
+            let name = fields.next().unwrap_or_default().trim();
+            let class = Class::parse(name).ok_or_else(|| {
+                anyhow!(
+                    "--classes: unknown class '{name}' in '{part}' \
+                     (expected interactive, standard or batch)"
+                )
+            })?;
+            if seen[class.index()] {
+                bail!("--classes: class '{name}' listed twice");
+            }
+            seen[class.index()] = true;
+            let weight_s = fields
+                .next()
+                .ok_or_else(|| anyhow!("--classes: '{part}' needs name:weight[:slo_ms]"))?
+                .trim();
+            let weight: u32 = weight_s.parse().ok().filter(|w| *w >= 1).ok_or_else(|| {
+                anyhow!("--classes: weight in '{part}' must be a positive integer")
+            })?;
+            let slo = match fields.next() {
+                None => None,
+                Some(s) => {
+                    let ms: f64 = s.trim().parse().ok().filter(|v| *v >= 0.0).ok_or_else(
+                        || anyhow!("--classes: slo_ms in '{part}' must be non-negative"),
+                    )?;
+                    (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1e3))
+                }
+            };
+            if let Some(extra) = fields.next() {
+                bail!("--classes: unexpected field '{extra}' in '{part}'");
+            }
+            classes[class.index()] = ClassPolicy { weight, slo };
+        }
+        Ok(classes)
+    }
+
+    /// Parse the CLI `--degrade` spec: a comma list of
+    /// `class=variant[+variant...]` ladders (most-preferred first), e.g.
+    /// `batch=lrd+rankopt,standard=rankopt`.
+    pub fn parse_degrade(spec: &str) -> Result<DegradePolicy> {
+        let mut policy = DegradePolicy::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, ladder_s) = part.split_once('=').ok_or_else(|| {
+                anyhow!("--degrade: '{part}' needs class=variant[+variant...]")
+            })?;
+            let name = name.trim();
+            let class = Class::parse(name)
+                .ok_or_else(|| anyhow!("--degrade: unknown class '{name}' in '{part}'"))?;
+            if !policy.ladder(class).is_empty() {
+                bail!("--degrade: class '{name}' listed twice");
+            }
+            let ladder: Vec<String> = ladder_s
+                .split('+')
+                .map(str::trim)
+                .filter(|v| !v.is_empty())
+                .map(str::to_string)
+                .collect();
+            if ladder.is_empty() {
+                bail!("--degrade: empty ladder in '{part}'");
+            }
+            policy.set(class, ladder);
+        }
+        Ok(policy)
+    }
+}
+
+/// Smooth weighted-round-robin slot schedule: one cycle of
+/// `sum(weights)` slots where class `c` owns exactly `weights[c]` slots,
+/// spread as evenly as the largest-deficit rule allows (weights
+/// `[4,2,1]` → `I S I B I S I`, not `I I I I S S B`).
+fn build_schedule(weights: [u32; 3]) -> Vec<usize> {
+    let total: u32 = weights.iter().sum();
+    assert!(weights.iter().all(|&w| w > 0), "class weights must be >= 1, got {weights:?}");
+    let mut given = [0u64; 3];
+    let mut out = Vec::with_capacity(total as usize);
+    for slot in 1..=u64::from(total) {
+        // serve the class furthest behind its ideal cumulative share
+        // w_c * slot / total (compared at the common scale `total`)
+        let mut best = 0usize;
+        let mut best_deficit = i128::MIN;
+        for c in 0..3 {
+            let deficit = i128::from(u64::from(weights[c]) * slot)
+                - i128::from(given[c] * u64::from(total));
+            if deficit > best_deficit {
+                best_deficit = deficit;
+                best = c;
+            }
+        }
+        given[best] += 1;
+        out.push(best);
+    }
+    out
+}
+
+enum QueuesInner {
+    /// QoS off: exactly the pre-QoS single bounded queue; every call
+    /// delegates so behavior (blocking, wakeups, ordering) is identical.
+    Single(Bounded<Request>),
+    /// QoS on: one bounded queue per class.
+    Multi(Box<[Bounded<Request>; 3]>),
+}
+
+/// Per-shard admission queue(s). With QoS off this *is* the old
+/// [`Bounded`] queue; with QoS on it is three of them popped on the WRR
+/// slot schedule.
+///
+/// Starvation bound (property-tested in `prop_serve_qos`): over any `P`
+/// consecutive successful pops during which class `c` stays non-empty,
+/// `c` is served at least `floor(P / S) * w_c` times, where `S` is the
+/// schedule cycle length (sum of weights). This holds because a pop scans
+/// the cyclic schedule from the cursor and stops at the *first* slot
+/// whose class is non-empty — the cursor can never cross a slot owned by
+/// a non-empty class without serving it.
+pub struct ClassQueues {
+    inner: QueuesInner,
+    schedule: Vec<usize>,
+    cursor: AtomicUsize,
+}
+
+impl ClassQueues {
+    /// QoS-off queue: single class-blind FIFO of `capacity` slots.
+    pub fn single(capacity: usize) -> ClassQueues {
+        ClassQueues {
+            inner: QueuesInner::Single(Bounded::new(capacity)),
+            schedule: vec![1], // Class::Standard — unused, but index-valid
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// QoS-on queues: `capacity` slots *per class*, popped on the
+    /// `weights` WRR schedule.
+    pub fn multi(capacity: usize, weights: [u32; 3]) -> ClassQueues {
+        ClassQueues {
+            inner: QueuesInner::Multi(Box::new([
+                Bounded::new(capacity),
+                Bounded::new(capacity),
+                Bounded::new(capacity),
+            ])),
+            schedule: build_schedule(weights),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn is_multi(&self) -> bool {
+        matches!(self.inner, QueuesInner::Multi(_))
+    }
+
+    /// Admit `req` under `class` (class is ignored in single mode).
+    pub fn try_push(&self, class: Class, req: Request) -> Result<usize, PushError<Request>> {
+        match &self.inner {
+            QueuesInner::Single(q) => q.try_push(req),
+            QueuesInner::Multi(qs) => qs[class.index()].try_push(req),
+        }
+    }
+
+    /// Blocking weighted pop with an absolute deadline. Single mode
+    /// delegates to [`Bounded::pop_deadline`] unchanged; multi mode scans
+    /// the slot schedule for the first non-empty class.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<Request> {
+        let qs = match &self.inner {
+            QueuesInner::Single(q) => return q.pop_deadline(deadline),
+            QueuesInner::Multi(qs) => qs,
+        };
+        loop {
+            let start = self.cursor.load(Ordering::Relaxed);
+            let n = self.schedule.len();
+            for off in 0..n {
+                let slot = (start + off) % n;
+                if let Some(req) = qs[self.schedule[slot]].try_pop() {
+                    self.cursor.store((slot + 1) % n, Ordering::Relaxed);
+                    return Pop::Item(req);
+                }
+            }
+            if qs.iter().all(|q| q.is_closed()) {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            std::thread::sleep(deadline.saturating_duration_since(now).min(MULTI_POLL));
+        }
+    }
+
+    /// [`ClassQueues::pop_deadline`] with a relative timeout.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<Request> {
+        match &self.inner {
+            QueuesInner::Single(q) => q.pop_timeout(timeout),
+            QueuesInner::Multi(_) => self.pop_deadline(Instant::now() + timeout),
+        }
+    }
+
+    /// Total queued requests across classes.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            QueuesInner::Single(q) => q.len(),
+            QueuesInner::Multi(qs) => qs.iter().map(|q| q.len()).sum(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Queued requests of one class (single mode: the whole queue).
+    pub fn class_len(&self, class: Class) -> usize {
+        match &self.inner {
+            QueuesInner::Single(q) => q.len(),
+            QueuesInner::Multi(qs) => qs[class.index()].len(),
+        }
+    }
+
+    /// Capacity per class (single mode: the queue's capacity).
+    pub fn capacity(&self) -> usize {
+        match &self.inner {
+            QueuesInner::Single(q) => q.capacity(),
+            QueuesInner::Multi(qs) => qs[0].capacity(),
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        match &self.inner {
+            QueuesInner::Single(q) => q.is_closed(),
+            QueuesInner::Multi(qs) => qs.iter().all(|q| q.is_closed()),
+        }
+    }
+
+    pub fn close(&self) {
+        match &self.inner {
+            QueuesInner::Single(q) => q.close(),
+            QueuesInner::Multi(qs) => qs.iter().for_each(|q| q.close()),
+        }
+    }
+
+    pub fn close_final(&self) {
+        match &self.inner {
+            QueuesInner::Single(q) => q.close_final(),
+            QueuesInner::Multi(qs) => qs.iter().for_each(|q| q.close_final()),
+        }
+    }
+
+    /// Reopen after a supervised respawn; `false` once finally closed.
+    pub fn reopen(&self) -> bool {
+        match &self.inner {
+            QueuesInner::Single(q) => q.reopen(),
+            QueuesInner::Multi(qs) => {
+                let mut ok = true;
+                for q in qs.iter() {
+                    ok &= q.reopen();
+                }
+                ok
+            }
+        }
+    }
+
+    /// Remove and return everything still queued (all classes).
+    pub fn drain(&self) -> Vec<Request> {
+        match &self.inner {
+            QueuesInner::Single(q) => q.drain(),
+            QueuesInner::Multi(qs) => qs.iter().flat_map(|q| q.drain()).collect(),
+        }
+    }
+
+    /// The (single-mode) depth gauge — the same gauge the pre-QoS queue
+    /// exported. Multi mode returns the interactive queue's gauge; use
+    /// [`ClassQueues::class_gauge`] for the per-class set.
+    pub fn depth_gauge(&self) -> &obs::Gauge {
+        match &self.inner {
+            QueuesInner::Single(q) => q.depth_gauge(),
+            QueuesInner::Multi(qs) => qs[0].depth_gauge(),
+        }
+    }
+
+    /// Per-class depth gauge (single mode: the one shared gauge).
+    pub fn class_gauge(&self, class: Class) -> &obs::Gauge {
+        match &self.inner {
+            QueuesInner::Single(q) => q.depth_gauge(),
+            QueuesInner::Multi(qs) => qs[class.index()].depth_gauge(),
+        }
+    }
+}
+
+/// One spill destination shard: its admission queue and stats sink (the
+/// sink counts the spilled request as a normal admission on the target).
+#[derive(Clone)]
+pub struct SpillShard {
+    pub queue: Arc<ClassQueues>,
+    pub stats: SharedStats,
+}
+
+/// `"model/variant"` → that variant's shards, shared by every shard's
+/// batcher and populated by `Server::start` once all variants are up.
+pub type SpillTable = Arc<Mutex<BTreeMap<String, Vec<SpillShard>>>>;
+
+pub fn new_table() -> SpillTable {
+    Arc::new(Mutex::new(BTreeMap::new()))
+}
+
+/// Per-shard QoS context handed to the batcher: answers "where may an
+/// expired request of class `c` spill from *this* variant?".
+#[derive(Clone)]
+pub struct ShardQos {
+    enabled: bool,
+    model: String,
+    variant: String,
+    config: Arc<QosConfig>,
+    server_slo: Option<Duration>,
+    table: SpillTable,
+}
+
+impl ShardQos {
+    pub fn new(
+        model: &str,
+        variant: &str,
+        config: Arc<QosConfig>,
+        server_slo: Option<Duration>,
+        table: SpillTable,
+    ) -> ShardQos {
+        ShardQos {
+            enabled: true,
+            model: model.to_string(),
+            variant: variant.to_string(),
+            config,
+            server_slo,
+            table,
+        }
+    }
+
+    /// QoS off: spills never happen, expired work sheds exactly as before.
+    pub fn disabled() -> ShardQos {
+        ShardQos {
+            enabled: false,
+            model: String::new(),
+            variant: String::new(),
+            config: Arc::new(QosConfig::default()),
+            server_slo: None,
+            table: new_table(),
+        }
+    }
+
+    /// Try to degrade an expired request down its class ladder instead of
+    /// shedding it. On success the request sits in a cheaper variant's
+    /// queue with a fresh per-class deadline and the *target* shard has
+    /// counted the admission; the caller must count the spill on the
+    /// source stats. On failure the request comes back for shedding.
+    ///
+    /// The ladder walk starts *after* this variant's own position (or at
+    /// the top if this variant is not on the ladder), always skipping
+    /// this variant itself — so repeated spills strictly descend and
+    /// terminate.
+    pub fn spill(&self, req: Request) -> Result<(), Request> {
+        if !self.enabled {
+            return Err(req);
+        }
+        let ladder = self.config.degrade.ladder(req.class);
+        if ladder.is_empty() {
+            return Err(req);
+        }
+        let start =
+            ladder.iter().position(|v| *v == self.variant).map(|p| p + 1).unwrap_or(0);
+        let slo = self.config.class_slo(req.class, self.server_slo);
+        let table = self.table.lock().expect("spill table lock");
+        let mut req = req;
+        for cand in ladder[start..].iter().filter(|v| **v != self.variant) {
+            let key = format!("{}/{}", self.model, cand);
+            let Some(shards) = table.get(&key) else { continue };
+            let mut open: Vec<&SpillShard> =
+                shards.iter().filter(|s| !s.queue.is_closed()).collect();
+            open.sort_by_key(|s| s.queue.len());
+            for shard in open {
+                req.deadline = slo.map(|d| Instant::now() + d);
+                match shard.queue.try_push(req.class, req) {
+                    Ok(depth) => {
+                        shard.stats.on_enqueue(depth);
+                        return Ok(());
+                    }
+                    Err(PushError::Full(r)) | Err(PushError::Closed(r)) => req = r,
+                }
+            }
+        }
+        Err(req)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hedged requests
+// ---------------------------------------------------------------------------
+
+/// Everything the hedge governor needs to re-dispatch one in-flight
+/// request on a sibling shard: the payload, the *same* response channel,
+/// and the first-answer-wins guard shared with the original.
+#[derive(Clone)]
+pub struct HedgeTicket {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub class: Class,
+    pub tx: mpsc::Sender<Result<Response, ServeError>>,
+    pub guard: Arc<AtomicBool>,
+}
+
+/// A shard's published in-flight batch. `started` is the dispatch
+/// instant; `taken` latches once the governor has hedged this batch so a
+/// slow batch is hedged at most once.
+#[derive(Default)]
+pub struct BoardState {
+    pub started: Option<Instant>,
+    pub tickets: Vec<HedgeTicket>,
+    pub taken: bool,
+}
+
+/// Shared between one engine worker (publisher) and the variant's hedge
+/// governor (consumer).
+pub type HedgeBoard = Arc<Mutex<BoardState>>;
+
+pub fn new_board() -> HedgeBoard {
+    Arc::new(Mutex::new(BoardState::default()))
+}
+
+/// Publish a batch about to be dispatched: install a first-answer-wins
+/// guard into every request (reusing the guard on requests that are
+/// themselves hedge copies) and expose clone-able tickets. Called by the
+/// engine only when hedging is configured — with QoS off no guard is
+/// ever allocated and no payload cloned.
+pub fn publish(board: &HedgeBoard, reqs: &mut [Request]) {
+    let mut b = board.lock().expect("hedge board lock");
+    b.tickets.clear();
+    b.taken = false;
+    for req in reqs.iter_mut() {
+        let guard =
+            req.hedge.get_or_insert_with(|| Arc::new(AtomicBool::new(false))).clone();
+        b.tickets.push(HedgeTicket {
+            id: req.id,
+            x: req.x.clone(),
+            class: req.class,
+            tx: req.tx.clone(),
+            guard,
+        });
+    }
+    b.started = Some(Instant::now());
+}
+
+/// Retire the board once the batch has been answered.
+pub fn clear(board: &HedgeBoard) {
+    let mut b = board.lock().expect("hedge board lock");
+    b.tickets.clear();
+    b.started = None;
+    b.taken = false;
+}
+
+/// Retire the board *iff* it still describes the batch led by `lead_id`.
+/// In the pipelined engine, batch N+1 is published before batch N is
+/// fetched, so N's retirement must not wipe N+1's freshly published
+/// tickets — the id check makes retirement batch-scoped.
+pub fn retire(board: &HedgeBoard, lead_id: u64) {
+    let mut b = board.lock().expect("hedge board lock");
+    if b.tickets.first().map(|t| t.id) == Some(lead_id) {
+        b.tickets.clear();
+        b.started = None;
+        b.taken = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, class: Class) -> (Request, super::super::Pending) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request {
+            id,
+            x: vec![id as f32],
+            enqueued: Instant::now(),
+            deadline: None,
+            tx,
+            class,
+            hedge: None,
+            hedged_copy: false,
+        };
+        (r, super::super::Pending { rx })
+    }
+
+    #[test]
+    fn schedule_has_exact_weight_counts_and_interleaves() {
+        let s = build_schedule([4, 2, 1]);
+        assert_eq!(s.len(), 7);
+        for c in 0..3 {
+            assert_eq!(s.iter().filter(|&&x| x == c).count(), [4, 2, 1][c]);
+        }
+        // smooth: the heavy class never waits more than ceil(S/w) slots
+        // between its own slots — for w=4, S=7 that is 2
+        let heavy: Vec<usize> =
+            s.iter().enumerate().filter(|(_, &c)| c == 0).map(|(i, _)| i).collect();
+        for w in heavy.windows(2) {
+            assert!(w[1] - w[0] <= 2, "bursty schedule: {s:?}");
+        }
+        assert_eq!(build_schedule([1, 1, 1]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "class weights must be >= 1")]
+    fn zero_weight_is_rejected() {
+        build_schedule([1, 0, 1]);
+    }
+
+    #[test]
+    fn single_mode_is_plain_fifo() {
+        let q = ClassQueues::single(4);
+        assert!(!q.is_multi());
+        for id in 0..3 {
+            let (r, _p) = req(id, Class::from_index(id as usize % 3));
+            q.try_push(r.class, r).unwrap();
+        }
+        for want in 0..3 {
+            match q.pop_timeout(Duration::from_millis(10)) {
+                Pop::Item(r) => assert_eq!(r.id, want, "single mode must stay FIFO"),
+                other => panic!("expected item, got {:?}", std::mem::discriminant(&other)),
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn weighted_pop_follows_the_schedule_when_all_classes_backlogged() {
+        let q = ClassQueues::multi(16, [4, 2, 1]);
+        assert!(q.is_multi());
+        for id in 0..7u64 {
+            for class in Class::ALL {
+                let (r, _p) = req(id, class);
+                q.try_push(class, r).unwrap();
+            }
+        }
+        // with every class non-empty, the pop order is exactly the schedule
+        let mut popped = Vec::new();
+        for _ in 0..7 {
+            match q.pop_timeout(Duration::from_millis(10)) {
+                Pop::Item(r) => popped.push(r.class.index()),
+                _ => panic!("expected item"),
+            }
+        }
+        assert_eq!(popped, build_schedule([4, 2, 1]));
+    }
+
+    #[test]
+    fn weighted_pop_skips_empty_classes_and_drains_after_close() {
+        let q = ClassQueues::multi(8, [4, 2, 1]);
+        let (r, _p) = req(7, Class::Batch);
+        q.try_push(Class::Batch, r).unwrap();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            Pop::Item(r) => assert_eq!((r.id, r.class), (7, Class::Batch)),
+            _ => panic!("expected the only queued item"),
+        }
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::TimedOut));
+        let (r, _p2) = req(8, Class::Interactive);
+        q.try_push(Class::Interactive, r).unwrap();
+        q.close();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Item(_)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Closed));
+    }
+
+    #[test]
+    fn spill_walks_the_ladder_from_below_own_variant() {
+        let mut cfg = QosConfig::default();
+        cfg.degrade.set(Class::Batch, vec!["lrd".into(), "rankopt".into()]);
+        cfg.classes[Class::Batch.index()].slo = Some(Duration::from_millis(5));
+        let cfg = Arc::new(cfg);
+        let table = new_table();
+        let target = Arc::new(ClassQueues::multi(4, [1, 1, 1]));
+        let tstats = SharedStats::new("m", "rankopt", 4);
+        table.lock().unwrap().insert(
+            "m/rankopt".into(),
+            vec![SpillShard { queue: target.clone(), stats: tstats.clone() }],
+        );
+
+        // from "lrd" (on the ladder), batch work spills to rankopt …
+        let qos = ShardQos::new("m", "lrd", cfg.clone(), None, table.clone());
+        let (r, _p) = req(1, Class::Batch);
+        qos.spill(r).expect("ladder has a live target below lrd");
+        assert_eq!(target.class_len(Class::Batch), 1, "class preserved on spill");
+        assert_eq!(tstats.snapshot(0).requests_ok, 1, "target counts the admission");
+        match target.pop_timeout(Duration::from_millis(10)) {
+            Pop::Item(r) => {
+                assert!(r.deadline.is_some(), "spill re-stamps the class deadline")
+            }
+            _ => panic!("expected spilled item"),
+        }
+
+        // … but from "rankopt" (ladder bottom) there is nowhere left to go
+        let qos = ShardQos::new("m", "rankopt", cfg.clone(), None, table.clone());
+        let (r, _p) = req(2, Class::Batch);
+        assert!(qos.spill(r).is_err(), "bottom of the ladder must shed");
+
+        // … and classes without a ladder always shed
+        let qos = ShardQos::new("m", "lrd", cfg, None, table);
+        let (r, _p) = req(3, Class::Interactive);
+        assert!(qos.spill(r).is_err());
+    }
+
+    #[test]
+    fn parse_classes_spec_round_trips_and_rejects_garbage() {
+        let c = QosConfig::parse_classes("interactive:4:250,standard:2:100,batch:1:5").unwrap();
+        assert_eq!([c[0].weight, c[1].weight, c[2].weight], [4, 2, 1]);
+        assert_eq!(c[0].slo, Some(Duration::from_millis(250)));
+        assert_eq!(c[2].slo, Some(Duration::from_millis(5)));
+        // partial spec: unlisted classes keep defaults; slo 0 = none
+        let c = QosConfig::parse_classes("interactive:3:0").unwrap();
+        assert_eq!(c[0].weight, 3);
+        assert!(c[0].slo.is_none());
+        assert_eq!((c[1].weight, c[2].weight), (1, 1));
+        for bad in [
+            "vip:2",                   // unknown class
+            "interactive",             // missing weight
+            "interactive:0",           // zero weight
+            "interactive:x",           // non-numeric weight
+            "interactive:1:-5",        // negative slo
+            "interactive:1:2:3",       // trailing field
+            "interactive:1,interactive:2", // duplicate
+        ] {
+            assert!(QosConfig::parse_classes(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_degrade_spec_builds_ladders() {
+        let d = QosConfig::parse_degrade("batch=lrd+rankopt,standard=rankopt").unwrap();
+        assert_eq!(d.ladder(Class::Batch), ["lrd", "rankopt"]);
+        assert_eq!(d.ladder(Class::Standard), ["rankopt"]);
+        assert!(d.ladder(Class::Interactive).is_empty());
+        for bad in ["batch", "vip=lrd", "batch=", "batch=lrd,batch=rankopt"] {
+            assert!(QosConfig::parse_degrade(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn disabled_qos_never_spills() {
+        let qos = ShardQos::disabled();
+        let (r, _p) = req(1, Class::Batch);
+        assert!(qos.spill(r).is_err());
+    }
+
+    #[test]
+    fn publish_installs_shared_guards_and_clear_retires_them() {
+        let board = new_board();
+        let (r, _p) = req(1, Class::Standard);
+        let mut reqs = vec![r];
+        publish(&board, &mut reqs);
+        {
+            let b = board.lock().unwrap();
+            assert_eq!(b.tickets.len(), 1);
+            assert!(b.started.is_some());
+            assert!(!b.taken);
+            // the ticket's guard IS the request's guard
+            let g = reqs[0].hedge.as_ref().unwrap();
+            assert!(Arc::ptr_eq(g, &b.tickets[0].guard));
+        }
+        // first respond wins, the copy is cancelled
+        let guard = reqs[0].hedge.clone().unwrap();
+        assert!(!guard.swap(true, Ordering::AcqRel), "first claim succeeds");
+        assert!(guard.swap(true, Ordering::AcqRel), "second claim is cancelled");
+        clear(&board);
+        let b = board.lock().unwrap();
+        assert!(b.tickets.is_empty() && b.started.is_none() && !b.taken);
+    }
+
+    #[test]
+    fn retire_is_batch_scoped() {
+        let board = new_board();
+        let (r1, _p1) = req(1, Class::Standard);
+        let mut batch_n = vec![r1];
+        publish(&board, &mut batch_n);
+        // pipelined engine publishes batch N+1 before fetching batch N …
+        let (r2, _p2) = req(2, Class::Standard);
+        let mut batch_n1 = vec![r2];
+        publish(&board, &mut batch_n1);
+        // … so retiring N must leave N+1's tickets on the board
+        retire(&board, 1);
+        assert_eq!(board.lock().unwrap().tickets.len(), 1);
+        retire(&board, 2);
+        assert!(board.lock().unwrap().tickets.is_empty());
+    }
+}

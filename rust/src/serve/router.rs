@@ -22,10 +22,12 @@
 //! to surviving shards.
 
 use super::engine::{self, EngineConfig, ShardWiring, SwapMsg};
-use super::queue::{Bounded, PushError};
+use super::qos::{self, Class, ClassQueues, HedgeConfig, QosConfig, ShardQos, SpillShard};
+use super::queue::PushError;
 use super::stats::{SharedStats, StatsSnapshot};
 use super::{drain_shutdown, Pending, Request, ServeError};
 use crate::checkpoint::Params;
+use crate::faults::{self, Seam};
 use crate::obs::{Registry, Tracer};
 use crate::runtime::{ArtifactMeta, Manifest};
 use anyhow::{anyhow, bail, Result};
@@ -78,6 +80,12 @@ pub struct ServerConfig {
     /// death (the respawn usually lands within this window) before
     /// answering [`ServeError::ShardDown`].
     pub shard_down_retry: Duration,
+    /// Rank-aware QoS policy. `Some` turns every shard queue into a
+    /// per-class weighted multi-queue, stamps per-class SLO deadlines,
+    /// arms the degrade ladders ([`qos::DegradePolicy`]) and — when its
+    /// `hedge` field is set — the per-variant hedge governors. `None`
+    /// (default) keeps the pre-QoS single-queue path bit-identical.
+    pub qos: Option<QosConfig>,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +104,7 @@ impl Default for ServerConfig {
             max_respawns: 2,
             swap_timeout: Duration::from_secs(10),
             shard_down_retry: Duration::from_millis(500),
+            qos: None,
         }
     }
 }
@@ -144,7 +153,7 @@ impl VariantSpec {
 
 /// One live shard worker of a variant.
 struct ShardHandle {
-    queue: Arc<Bounded<Request>>,
+    queue: Arc<ClassQueues>,
     stats: SharedStats,
     /// Warm-swap control channel into the worker. Shared with the shard's
     /// supervisor, which installs a fresh sender on respawn (the Mutex also
@@ -254,7 +263,7 @@ impl Router {
     /// Close every queue, join every worker (or its supervisor), then
     /// answer any requests a dead worker left queued with
     /// [`ServeError::Shutdown`] (idempotent). The close is terminal
-    /// ([`Bounded::close_final`]) so a supervised respawn racing this
+    /// ([`ClassQueues::close_final`]) so a supervised respawn racing this
     /// shutdown cannot reopen a queue nobody will consume again.
     fn close_and_join(&mut self) {
         for h in self.engines.values() {
@@ -284,13 +293,17 @@ struct SupervisorCtx {
     manifest: Manifest,
     meta: ArtifactMeta,
     ecfg: EngineConfig,
-    queue: Arc<Bounded<Request>>,
+    queue: Arc<ClassQueues>,
     stats: SharedStats,
     swap: Arc<Mutex<mpsc::Sender<SwapMsg>>>,
     checkpoint: Arc<Mutex<Params>>,
     tracer: Tracer,
     closing: Arc<AtomicBool>,
     max_respawns: usize,
+    /// QoS context re-wired into every respawned worker generation.
+    qos: ShardQos,
+    /// Hedge board re-wired into every respawned worker generation.
+    hedge: Option<qos::HedgeBoard>,
 }
 
 /// Shard supervisor loop: join the worker; if it died (rather than shut
@@ -340,6 +353,8 @@ fn supervise_shard(ctx: SupervisorCtx, mut worker: JoinHandle<()>) {
                 swap: swap_rx,
                 ready: ready_tx,
                 tracer: ctx.tracer.clone(),
+                qos: ctx.qos.clone(),
+                hedge: ctx.hedge.clone(),
             },
         );
         match ready_rx.recv() {
@@ -363,6 +378,89 @@ fn supervise_shard(ctx: SupervisorCtx, mut worker: JoinHandle<()>) {
     }
 }
 
+/// Everything one variant's hedge governor watches: the per-shard boards
+/// its engines publish in-flight batches on, the sibling queues it may
+/// re-dispatch to, and the shard stats that feed the percentile budget.
+struct HedgeCtx {
+    cfg: HedgeConfig,
+    boards: Vec<qos::HedgeBoard>,
+    queues: Vec<Arc<ClassQueues>>,
+    stats: Vec<SharedStats>,
+    closing: Arc<AtomicBool>,
+}
+
+/// Hedge governor loop (one thread per variant with ≥ 2 shards when
+/// `QosConfig::hedge` is set): every poll it derives the in-flight age
+/// budget from the variant's merged latency histogram (`percentile`,
+/// falling back to `fallback` until `min_samples` observations exist) and
+/// scans the shard boards. A batch whose dispatch has been in flight past
+/// the budget is hedged **once**: clones of its still-unanswered requests
+/// are re-dispatched to the shallowest open sibling shard, carrying the
+/// *same* response channel and first-answer-wins guard — whichever shard
+/// answers first wins, the loser's reply is cancelled and counted.
+fn hedge_governor(ctx: HedgeCtx) {
+    loop {
+        if ctx.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        std::thread::sleep(ctx.cfg.poll);
+        let parts: Vec<&SharedStats> = ctx.stats.iter().collect();
+        let budget =
+            SharedStats::merged_latency_budget(&parts, ctx.cfg.percentile, ctx.cfg.min_samples)
+                .unwrap_or(ctx.cfg.fallback);
+        for (i, board) in ctx.boards.iter().enumerate() {
+            let tickets = {
+                let mut b = board.lock().expect("hedge board lock");
+                let stalled = !b.taken
+                    && !b.tickets.is_empty()
+                    && b.started.is_some_and(|t| t.elapsed() >= budget);
+                if !stalled {
+                    continue;
+                }
+                // latch before dispatching: a slow batch is hedged at most
+                // once even if the copies themselves crawl
+                b.taken = true;
+                b.tickets.clone()
+            };
+            // fault seam: `hedge@shardN:fail` suppresses (and `:stall`
+            // delays) the governor's reaction to shard N's stalled batch
+            if faults::hit(Seam::Hedge, &format!("shard{i}")).is_err() {
+                continue;
+            }
+            // shallowest open sibling takes every copy of this batch
+            let mut sib: Option<usize> = None;
+            let mut best = usize::MAX;
+            for (j, q) in ctx.queues.iter().enumerate() {
+                if j != i && !q.is_closed() && q.len() < best {
+                    best = q.len();
+                    sib = Some(j);
+                }
+            }
+            let Some(sib) = sib else { continue };
+            for t in tickets {
+                // skip requests the stalled shard already answered
+                if t.guard.load(Ordering::Acquire) {
+                    continue;
+                }
+                let copy = Request {
+                    id: t.id,
+                    x: t.x.clone(),
+                    enqueued: Instant::now(),
+                    deadline: None,
+                    tx: t.tx.clone(),
+                    class: t.class,
+                    hedge: Some(Arc::clone(&t.guard)),
+                    hedged_copy: true,
+                };
+                if let Ok(depth) = ctx.queues[sib].try_push(t.class, copy) {
+                    ctx.stats[sib].on_enqueue(depth);
+                    ctx.stats[i].on_hedge_fired();
+                }
+            }
+        }
+    }
+}
+
 /// The serving subsystem's front door: a router over per-variant shard sets
 /// plus lifecycle management. `Sync` — share it by reference across client
 /// threads.
@@ -378,6 +476,10 @@ pub struct Server {
     /// and `submit` answers [`ServeError::Closed`] instead of retrying.
     closing: Arc<AtomicBool>,
     tracer: Tracer,
+    /// QoS policy (`None` = pre-QoS behavior, bit-identical).
+    qos: Option<Arc<QosConfig>>,
+    /// Per-variant hedge governor threads, joined on shutdown.
+    governors: Vec<JoinHandle<()>>,
 }
 
 impl Server {
@@ -397,6 +499,13 @@ impl Server {
         // after every shard reports ready (startup failures keep the
         // simple fail-fast teardown of the unsupervised path)
         let mut supervisors: Vec<(String, usize, SupervisorCtx)> = Vec::new();
+        // QoS plumbing: the spill table maps every registered variant to
+        // its shard queues so any shard's batcher can degrade expired work
+        // down a ladder; hedge contexts stage one governor per variant
+        let qos_cfg: Option<Arc<QosConfig>> = cfg.qos.clone().map(Arc::new);
+        let spill_table = qos::new_table();
+        let mut hedge_ctxs: Vec<(String, HedgeCtx)> = Vec::new();
+        let mut model_elems: BTreeMap<String, usize> = BTreeMap::new();
         for spec in specs {
             if spec.shards == 0 {
                 router.close_and_join();
@@ -421,10 +530,38 @@ impl Server {
                 router.close_and_join();
                 bail!("variant '{key}' registered twice");
             }
+            model_elems.entry(spec.model.clone()).or_insert(item_elems);
+            let shard_qos = match &qos_cfg {
+                Some(q) => ShardQos::new(
+                    &spec.model,
+                    &spec.variant,
+                    Arc::clone(q),
+                    cfg.slo,
+                    Arc::clone(&spill_table),
+                ),
+                None => ShardQos::disabled(),
+            };
+            // per-shard hedge boards only when there is a sibling to hedge to
+            let boards: Option<Vec<qos::HedgeBoard>> = qos_cfg
+                .as_ref()
+                .and_then(|q| q.hedge.as_ref())
+                .filter(|_| spec.shards >= 2)
+                .map(|_| (0..spec.shards).map(|_| qos::new_board()).collect());
             let mut shards = Vec::with_capacity(spec.shards);
             for shard in 0..spec.shards {
-                let queue = Arc::new(Bounded::new(depth));
+                let queue = Arc::new(match &qos_cfg {
+                    Some(q) => ClassQueues::multi(depth, q.weights()),
+                    None => ClassQueues::single(depth),
+                });
                 let stats = SharedStats::new(&spec.model, &spec.variant, batch);
+                if qos_cfg.is_some() {
+                    spill_table
+                        .lock()
+                        .expect("spill table lock")
+                        .entry(key.clone())
+                        .or_default()
+                        .push(SpillShard { queue: Arc::clone(&queue), stats: stats.clone() });
+                }
                 if let Some(reg) = &cfg.registry {
                     let shard_label = shard.to_string();
                     let labels = [
@@ -435,9 +572,24 @@ impl Server {
                     // the registry gets the very atomics the stats/queue
                     // mutate — a registration failure (duplicate labels)
                     // is a config error, so fail startup loudly
-                    let registered = stats.register(reg, &labels).and_then(|()| {
+                    let mut registered = stats.register(reg, &labels).and_then(|()| {
                         reg.register_gauge("serve", "queue_depth", &labels, queue.depth_gauge())
                     });
+                    if registered.is_ok() && queue.is_multi() {
+                        for class in Class::ALL {
+                            let mut cl: Vec<(&str, &str)> = labels.to_vec();
+                            cl.push(("class", class.label()));
+                            registered = reg.register_gauge(
+                                "serve",
+                                "class_queue_depth",
+                                &cl,
+                                queue.class_gauge(class),
+                            );
+                            if registered.is_err() {
+                                break;
+                            }
+                        }
+                    }
                     if let Err(e) = registered {
                         router.close_and_join();
                         return Err(e);
@@ -457,6 +609,7 @@ impl Server {
                 };
                 let (ready_tx, ready_rx) = mpsc::channel();
                 let (swap_tx, swap_rx) = mpsc::channel();
+                let board = boards.as_ref().map(|b| Arc::clone(&b[shard]));
                 let join = engine::spawn(
                     manifest.clone(),
                     meta.clone(),
@@ -468,6 +621,8 @@ impl Server {
                         swap: swap_rx,
                         ready: ready_tx,
                         tracer: cfg.tracer.clone(),
+                        qos: shard_qos.clone(),
+                        hedge: board.clone(),
                     },
                 );
                 let swap = Arc::new(Mutex::new(swap_tx));
@@ -489,11 +644,30 @@ impl Server {
                             tracer: cfg.tracer.clone(),
                             closing: Arc::clone(&closing),
                             max_respawns: cfg.max_respawns,
+                            qos: shard_qos.clone(),
+                            hedge: board,
                         },
                     ));
                 }
                 shards.push(ShardHandle { queue, stats, swap, checkpoint, join: Some(join) });
                 pending.push((format!("{key}#{shard}"), ready_rx));
+            }
+            if let Some(boards) = boards {
+                let hcfg = qos_cfg
+                    .as_ref()
+                    .and_then(|q| q.hedge.clone())
+                    .expect("boards exist only with a hedge config");
+                let name = format!("lrta-serve-hedge-{}-{}", spec.model, spec.variant);
+                hedge_ctxs.push((
+                    name,
+                    HedgeCtx {
+                        cfg: hcfg,
+                        boards,
+                        queues: shards.iter().map(|s| Arc::clone(&s.queue)).collect(),
+                        stats: shards.iter().map(|s| s.stats.clone()).collect(),
+                        closing: Arc::clone(&closing),
+                    },
+                ));
             }
             let handle = EngineHandle {
                 shards,
@@ -522,6 +696,33 @@ impl Server {
                 return Err(e);
             }
         }
+        // degrade ladders must point at live, shape-compatible spill
+        // targets — a typo'd variant name should fail startup, not
+        // silently shed everything the ladder was meant to save
+        if let Some(q) = &qos_cfg {
+            for class in Class::ALL {
+                for cand in q.degrade.ladder(class) {
+                    for (model, elems) in &model_elems {
+                        let lkey = Router::key(model, cand);
+                        let Some(h) = router.engines.get(&lkey) else {
+                            router.close_and_join();
+                            bail!(
+                                "degrade ladder for class '{class}' names \
+                                 unregistered variant '{lkey}'"
+                            );
+                        };
+                        if h.item_elems != *elems {
+                            router.close_and_join();
+                            bail!(
+                                "degrade ladder target '{lkey}' expects {} input elems, \
+                                 model '{model}' serves {elems}",
+                                h.item_elems
+                            );
+                        }
+                    }
+                }
+            }
+        }
         // every shard is compiled-and-resident: hand each worker handle to
         // its supervisor (the shard's `join` becomes the supervisor's, so
         // `close_and_join` waits for the whole supervision loop to stand
@@ -536,6 +737,16 @@ impl Server {
                 .expect("failed to spawn shard supervisor thread");
             h.shards[shard].join = Some(sup);
         }
+        // hedge governors spawn last: every queue they may re-dispatch to
+        // is live, and a startup failure above never leaks one
+        let mut governors = Vec::with_capacity(hedge_ctxs.len());
+        for (name, ctx) in hedge_ctxs {
+            let gov = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || hedge_governor(ctx))
+                .expect("failed to spawn hedge governor thread");
+            governors.push(gov);
+        }
         Ok(Server {
             router,
             next_id: AtomicU64::new(0),
@@ -544,6 +755,8 @@ impl Server {
             shard_down_retry: cfg.shard_down_retry,
             closing,
             tracer: cfg.tracer.clone(),
+            qos: qos_cfg,
+            governors,
         })
     }
 
@@ -556,6 +769,20 @@ impl Server {
     /// `shard_down_retry` — the supervised respawn usually lands inside the
     /// window — before answering [`ServeError::ShardDown`].
     pub fn submit(&self, model: &str, variant: &str, x: Vec<f32>) -> Result<Pending, ServeError> {
+        self.submit_class(model, variant, x, Class::Standard)
+    }
+
+    /// [`Server::submit`] with an explicit priority class. With QoS off
+    /// the class is carried but ignored (single queue, server-wide SLO) —
+    /// the path is bit-identical to `submit`. With QoS on the request
+    /// lands in its class queue and carries that class's SLO deadline.
+    pub fn submit_class(
+        &self,
+        model: &str,
+        variant: &str,
+        x: Vec<f32>,
+        class: Class,
+    ) -> Result<Pending, ServeError> {
         let span_t0 = self.tracer.start();
         let h = self
             .router
@@ -567,16 +794,23 @@ impl Server {
         let (tx, rx) = mpsc::channel();
         let enqueued = Instant::now();
         let retry_until = enqueued + self.shard_down_retry;
+        let slo = match &self.qos {
+            Some(q) => q.class_slo(class, self.slo),
+            None => self.slo,
+        };
         let mut req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             x,
             enqueued,
-            deadline: self.slo.map(|slo| enqueued + slo),
+            deadline: slo.map(|slo| enqueued + slo),
             tx,
+            class,
+            hedge: None,
+            hedged_copy: false,
         };
         let outcome = loop {
             let shard = &h.shards[h.pick_shard()];
-            match shard.queue.try_push(req) {
+            match shard.queue.try_push(req.class, req) {
                 Ok(depth) => {
                     shard.stats.on_enqueue(depth);
                     break Ok(Pending { rx });
@@ -727,6 +961,10 @@ impl Server {
         // terminal close lands
         self.closing.store(true, Ordering::SeqCst);
         self.router.close_and_join();
+        // governors poll `closing`, so they stand down within one interval
+        for gov in self.governors.drain(..) {
+            let _ = gov.join();
+        }
     }
 }
 
@@ -766,6 +1004,7 @@ mod tests {
         assert_eq!(c.max_respawns, 2);
         assert!(c.swap_timeout >= Duration::from_secs(1), "swap ack wait is generous but finite");
         assert!(c.shard_down_retry >= Duration::from_millis(100));
+        assert!(c.qos.is_none(), "QoS off by default: pre-QoS serve path");
     }
 
     #[test]
@@ -782,7 +1021,7 @@ mod tests {
             .map(|_| {
                 let (swap_tx, _swap_rx) = mpsc::channel();
                 ShardHandle {
-                    queue: Arc::new(Bounded::new(depth)),
+                    queue: Arc::new(ClassQueues::single(depth)),
                     stats: SharedStats::new("m", "v", 4),
                     swap: Arc::new(Mutex::new(swap_tx)),
                     checkpoint: Arc::new(Mutex::new(Params::new())),
@@ -801,8 +1040,17 @@ mod tests {
 
     fn push_dummy(h: &EngineHandle, shard: usize) {
         let (tx, _rx) = mpsc::channel();
-        let req = Request { id: 0, x: vec![], enqueued: Instant::now(), deadline: None, tx };
-        h.shards[shard].queue.try_push(req).unwrap();
+        let req = Request {
+            id: 0,
+            x: vec![],
+            enqueued: Instant::now(),
+            deadline: None,
+            tx,
+            class: Class::Standard,
+            hedge: None,
+            hedged_copy: false,
+        };
+        h.shards[shard].queue.try_push(req.class, req).unwrap();
         // _rx dropped: the engine side treats a hung-up client as non-fatal
     }
 

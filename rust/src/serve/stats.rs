@@ -13,11 +13,13 @@
 //! the lock but sort them *outside* it, so percentile cost never serializes
 //! the submit path.
 
+use super::qos::Class;
 use crate::metrics::ThroughputMeter;
 use crate::obs;
 use crate::util::stats::percentile_sorted;
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Number of doubling latency buckets, first edge at 0.25 ms — covers
 /// 0.25 ms .. ~8 s.
@@ -150,7 +152,26 @@ pub struct SharedStats {
     requests_ok: obs::Counter,
     rejected: obs::Counter,
     /// Requests shed at pop time for missing their admission deadline.
+    /// Always the exact sum of `shed_by_class` — [`SharedStats::on_shed`]
+    /// bumps both, so class-level SLO misses are never invisible.
     shed: obs::Counter,
+    /// Per-class shed split (indexed by [`Class::index`]). On the QoS-off
+    /// path everything lands in `Standard`.
+    shed_by_class: [obs::Counter; 3],
+    /// Per-class served split; like `shed`, `served == sum(served_by_class)`.
+    served_by_class: [obs::Counter; 3],
+    /// Expired requests degraded *out of* this variant down their class
+    /// ladder instead of shed (the target variant counts the admission).
+    spilled: obs::Counter,
+    spilled_by_class: [obs::Counter; 3],
+    /// Hedge copies re-dispatched to a sibling shard on this shard's
+    /// behalf (counted on the shard whose batch ran slow).
+    hedge_fired: obs::Counter,
+    /// Hedge copies that answered first (counted where the copy ran).
+    hedge_wins: obs::Counter,
+    /// Request executions whose reply lost the first-answer-wins race and
+    /// was dropped (original or copy; never double-replied).
+    hedge_cancelled: obs::Counter,
     /// Warm variant swaps applied by this engine worker.
     swaps: obs::Counter,
     /// Unexpected worker-thread exits (panic or death) the shard
@@ -184,6 +205,13 @@ impl SharedStats {
             requests_ok: obs::Counter::new(),
             rejected: obs::Counter::new(),
             shed: obs::Counter::new(),
+            shed_by_class: std::array::from_fn(|_| obs::Counter::new()),
+            served_by_class: std::array::from_fn(|_| obs::Counter::new()),
+            spilled: obs::Counter::new(),
+            spilled_by_class: std::array::from_fn(|_| obs::Counter::new()),
+            hedge_fired: obs::Counter::new(),
+            hedge_wins: obs::Counter::new(),
+            hedge_cancelled: obs::Counter::new(),
             swaps: obs::Counter::new(),
             worker_deaths: obs::Counter::new(),
             respawns: obs::Counter::new(),
@@ -222,9 +250,23 @@ impl SharedStats {
         registry.register_counter("serve", "batches", labels, &self.batches)?;
         registry.register_counter("serve", "served", labels, &self.served)?;
         registry.register_counter("serve", "padded_slots", labels, &self.padded_slots)?;
+        registry.register_counter("serve", "spilled", labels, &self.spilled)?;
+        registry.register_counter("serve", "hedge_fired", labels, &self.hedge_fired)?;
+        registry.register_counter("serve", "hedge_wins", labels, &self.hedge_wins)?;
+        registry.register_counter("serve", "hedge_cancelled", labels, &self.hedge_cancelled)?;
         registry.register_gauge("serve", "uploads", labels, &self.uploads)?;
         registry.register_gauge("serve", "demux_fallbacks", labels, &self.demux_fallbacks)?;
         registry.register_histogram("serve", "latency_us", labels, &self.latency_us)?;
+        // per-class splits under {…, class} — distinct family names so the
+        // aggregate families keep their exact pre-QoS label sets
+        for class in Class::ALL {
+            let mut cl: Vec<(&str, &str)> = labels.to_vec();
+            cl.push(("class", class.label()));
+            let i = class.index();
+            registry.register_counter("serve", "class_shed", &cl, &self.shed_by_class[i])?;
+            registry.register_counter("serve", "class_served", &cl, &self.served_by_class[i])?;
+            registry.register_counter("serve", "class_spilled", &cl, &self.spilled_by_class[i])?;
+        }
         Ok(())
     }
 
@@ -239,9 +281,41 @@ impl SharedStats {
         self.rejected.inc();
     }
 
-    /// One request shed at pop time (admission deadline exceeded).
-    pub fn on_shed(&self) {
+    /// One request of `class` shed at pop time (admission deadline
+    /// exceeded, no ladder target took it). Bumps the aggregate *and* the
+    /// per-class counter, so `shed == sum(shed_by_class)` by construction.
+    pub fn on_shed(&self, class: Class) {
         self.shed.inc();
+        self.shed_by_class[class.index()].inc();
+    }
+
+    /// One expired request of `class` degraded out of this variant down
+    /// its ladder (the target shard counts the admission separately).
+    pub fn on_spill(&self, class: Class) {
+        self.spilled.inc();
+        self.spilled_by_class[class.index()].inc();
+    }
+
+    /// One served (reply actually sent) request of `class` — the
+    /// per-class half of the `served` accounting in
+    /// [`SharedStats::on_batch_timed`].
+    pub fn on_served_class(&self, class: Class) {
+        self.served_by_class[class.index()].inc();
+    }
+
+    /// One hedge copy re-dispatched on this shard's behalf.
+    pub fn on_hedge_fired(&self) {
+        self.hedge_fired.inc();
+    }
+
+    /// One hedge copy that answered before the original.
+    pub fn on_hedge_win(&self) {
+        self.hedge_wins.inc();
+    }
+
+    /// One execution whose reply lost the first-answer race.
+    pub fn on_hedge_cancelled(&self) {
+        self.hedge_cancelled.inc();
     }
 
     /// One warm variant swap applied between batches.
@@ -363,6 +437,13 @@ impl SharedStats {
             requests_ok: self.requests_ok.get(),
             rejected: self.rejected.get(),
             shed: self.shed.get(),
+            shed_by_class: std::array::from_fn(|i| self.shed_by_class[i].get()),
+            served_by_class: std::array::from_fn(|i| self.served_by_class[i].get()),
+            spilled: self.spilled.get(),
+            spilled_by_class: std::array::from_fn(|i| self.spilled_by_class[i].get()),
+            hedge_fired: self.hedge_fired.get(),
+            hedge_wins: self.hedge_wins.get(),
+            hedge_cancelled: self.hedge_cancelled.get(),
             swaps: self.swaps.get(),
             worker_deaths: self.worker_deaths.get(),
             respawns: self.respawns.get(),
@@ -391,6 +472,45 @@ impl SharedStats {
         self.inner.lock().unwrap().hist.render(width)
     }
 
+    /// Upper-bound estimate of the `p`-th end-to-end latency percentile
+    /// over a shard set, read lock-free from the log₂ µs registry
+    /// histograms (65 atomic loads per shard — cheap enough for the hedge
+    /// governor's millisecond poll; the exact sample-sorting percentiles
+    /// stay on the snapshot path). `None` until the combined histograms
+    /// hold at least `min_samples` observations.
+    pub fn merged_latency_budget(
+        parts: &[&SharedStats],
+        p: f64,
+        min_samples: u64,
+    ) -> Option<Duration> {
+        let mut total = 0u64;
+        let mut buckets: Vec<u64> = Vec::new();
+        for s in parts {
+            total += s.latency_us.count();
+            for (i, b) in s.latency_us.buckets().iter().enumerate() {
+                if buckets.len() <= i {
+                    buckets.resize(i + 1, 0);
+                }
+                buckets[i] += b;
+            }
+        }
+        if total < min_samples.max(1) {
+            return None;
+        }
+        let target = (((p / 100.0).clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                // log₂ bucket i holds v < 2^i µs (i = 0 → v == 0); clamp the
+                // shift so the +Inf bucket maps to a finite, huge budget
+                let upper_us = if i == 0 { 1 } else { 1u64 << i.min(40) };
+                return Some(Duration::from_micros(upper_us));
+            }
+        }
+        None
+    }
+
     /// Variant-level snapshot over a shard set: counters sum, queue depth
     /// sums, max depth takes the max, throughputs add (shards run
     /// concurrently on independent clients), and percentiles are exact over
@@ -411,6 +531,13 @@ impl SharedStats {
             requests_ok: 0,
             rejected: 0,
             shed: 0,
+            shed_by_class: [0; 3],
+            served_by_class: [0; 3],
+            spilled: 0,
+            spilled_by_class: [0; 3],
+            hedge_fired: 0,
+            hedge_wins: 0,
+            hedge_cancelled: 0,
             swaps: 0,
             worker_deaths: 0,
             respawns: 0,
@@ -437,6 +564,15 @@ impl SharedStats {
             snap.requests_ok += s.requests_ok.get();
             snap.rejected += s.rejected.get();
             snap.shed += s.shed.get();
+            for i in 0..3 {
+                snap.shed_by_class[i] += s.shed_by_class[i].get();
+                snap.served_by_class[i] += s.served_by_class[i].get();
+                snap.spilled_by_class[i] += s.spilled_by_class[i].get();
+            }
+            snap.spilled += s.spilled.get();
+            snap.hedge_fired += s.hedge_fired.get();
+            snap.hedge_wins += s.hedge_wins.get();
+            snap.hedge_cancelled += s.hedge_cancelled.get();
             snap.swaps += s.swaps.get();
             snap.worker_deaths += s.worker_deaths.get();
             snap.respawns += s.respawns.get();
@@ -485,8 +621,25 @@ pub struct StatsSnapshot {
     pub requests_ok: u64,
     pub rejected: u64,
     /// Requests shed at pop time for missing their admission deadline
-    /// (`--slo-ms`); exactly the count answered `DeadlineExceeded`.
+    /// (`--slo-ms`); exactly the count answered `DeadlineExceeded`, and
+    /// exactly `shed_by_class.iter().sum()`.
     pub shed: u64,
+    /// Shed split by priority class (indexed by [`Class::index`]); the
+    /// QoS-off path sheds everything as `Standard`.
+    pub shed_by_class: [u64; 3],
+    /// Served (reply sent) split by class; sums to `served`.
+    pub served_by_class: [u64; 3],
+    /// Expired requests degraded *out of* this variant down their class
+    /// ladder instead of shed; `spilled == spilled_by_class.iter().sum()`.
+    pub spilled: u64,
+    pub spilled_by_class: [u64; 3],
+    /// Hedge copies re-dispatched on this shard's behalf.
+    pub hedge_fired: u64,
+    /// Hedge copies that answered first (`hedge_wins <= hedge_fired`).
+    pub hedge_wins: u64,
+    /// Executions whose reply lost the first-answer race (dropped, never
+    /// double-replied).
+    pub hedge_cancelled: u64,
     /// Warm variant swaps applied (summed over shards when merged).
     pub swaps: u64,
     /// Worker-thread deaths the shard supervisor observed (summed over
@@ -676,7 +829,11 @@ mod tests {
         s.register(&reg, &[("variant", "lrd"), ("shard", "0")]).unwrap();
         s.on_enqueue(2);
         s.on_reject();
-        s.on_shed();
+        s.on_shed(Class::Batch);
+        s.on_spill(Class::Batch);
+        s.on_hedge_fired();
+        s.on_hedge_win();
+        s.on_hedge_cancelled();
         s.on_swap();
         s.on_error(3);
         s.on_batch(6, 2, 0.010, &[0.001, 0.002, 0.003, 0.004, 0.005, 0.006]);
@@ -693,8 +850,19 @@ mod tests {
         assert_eq!(rs.scalar("serve", "batches", &labels), Some(snap.batches));
         assert_eq!(rs.scalar("serve", "served", &labels), Some(snap.served));
         assert_eq!(rs.scalar("serve", "padded_slots", &labels), Some(snap.padded_slots));
+        assert_eq!(rs.scalar("serve", "spilled", &labels), Some(snap.spilled));
+        assert_eq!(rs.scalar("serve", "hedge_fired", &labels), Some(snap.hedge_fired));
+        assert_eq!(rs.scalar("serve", "hedge_wins", &labels), Some(snap.hedge_wins));
+        assert_eq!(rs.scalar("serve", "hedge_cancelled", &labels), Some(snap.hedge_cancelled));
         assert_eq!(rs.scalar("serve", "uploads", &labels), Some(snap.uploads));
         assert_eq!(rs.scalar("serve", "demux_fallbacks", &labels), Some(snap.demux_fallbacks));
+        // per-class splits live under {…, class=…} with their own families
+        let batch_labels = [("variant", "lrd"), ("shard", "0"), ("class", "batch")];
+        let inter_labels = [("variant", "lrd"), ("shard", "0"), ("class", "interactive")];
+        assert_eq!(rs.scalar("serve", "class_shed", &batch_labels), Some(1));
+        assert_eq!(rs.scalar("serve", "class_spilled", &batch_labels), Some(1));
+        assert_eq!(rs.scalar("serve", "class_shed", &inter_labels), Some(0));
+        assert_eq!(rs.scalar_sum("serve", "class_shed"), snap.shed);
         // the registry-side latency histogram saw every served request
         let hist_count = rs
             .entries
@@ -710,13 +878,70 @@ mod tests {
     #[test]
     fn shed_and_swap_counters() {
         let s = SharedStats::new("m", "rankopt", 8);
-        s.on_shed();
-        s.on_shed();
+        s.on_shed(Class::Standard);
+        s.on_shed(Class::Batch);
         s.on_swap();
         let snap = s.snapshot(0);
         assert_eq!(snap.shed, 2);
+        assert_eq!(snap.shed_by_class, [0, 1, 1]);
+        assert_eq!(snap.shed, snap.shed_by_class.iter().sum::<u64>());
         assert_eq!(snap.swaps, 1);
         assert_eq!(snap.errors, 0, "shed work is SLO pressure, not an engine error");
+    }
+
+    #[test]
+    fn per_class_counters_partition_their_aggregates() {
+        let s = SharedStats::new("m", "lrd", 4);
+        s.on_shed(Class::Interactive);
+        s.on_shed(Class::Batch);
+        s.on_shed(Class::Batch);
+        s.on_spill(Class::Batch);
+        s.on_spill(Class::Standard);
+        s.on_batch_timed(3, 1, 0.001, 0.001, &[0.001, 0.002, 0.003]);
+        s.on_served_class(Class::Interactive);
+        s.on_served_class(Class::Interactive);
+        s.on_served_class(Class::Batch);
+        let snap = s.snapshot(0);
+        assert_eq!(snap.shed, 3);
+        assert_eq!(snap.shed_by_class, [1, 0, 2]);
+        assert_eq!(snap.spilled, 2);
+        assert_eq!(snap.spilled_by_class, [0, 1, 1]);
+        assert_eq!(snap.served, 3);
+        assert_eq!(snap.served_by_class, [2, 0, 1]);
+        assert_eq!(snap.served, snap.served_by_class.iter().sum::<u64>());
+        assert_eq!(snap.spilled, snap.spilled_by_class.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn hedge_counters_count_and_merge() {
+        let a = SharedStats::new("m", "lrd", 4);
+        let b = SharedStats::new("m", "lrd", 4);
+        a.on_hedge_fired();
+        a.on_hedge_fired();
+        a.on_hedge_cancelled();
+        b.on_hedge_win();
+        let merged = SharedStats::merged(&[(&a, 0), (&b, 0)]);
+        assert_eq!(merged.hedge_fired, 2);
+        assert_eq!(merged.hedge_wins, 1);
+        assert_eq!(merged.hedge_cancelled, 1);
+        assert!(merged.hedge_wins <= merged.hedge_fired);
+    }
+
+    #[test]
+    fn merged_latency_budget_reads_the_log2_histogram() {
+        let a = SharedStats::new("m", "lrd", 4);
+        let b = SharedStats::new("m", "lrd", 4);
+        // below min_samples: no budget yet
+        assert_eq!(SharedStats::merged_latency_budget(&[&a, &b], 99.0, 4), None);
+        // 3 fast samples on one shard, 1 slow on the other (1ms vs ~16ms)
+        a.on_batch_timed(3, 0, 0.001, 0.0, &[0.001, 0.001, 0.001]);
+        b.on_batch_timed(1, 0, 0.001, 0.0, &[0.016]);
+        let p50 = SharedStats::merged_latency_budget(&[&a, &b], 50.0, 4).unwrap();
+        let p99 = SharedStats::merged_latency_budget(&[&a, &b], 99.0, 4).unwrap();
+        // log₂ upper bounds: 1000µs → <1024µs, 16000µs → <16384µs
+        assert_eq!(p50, Duration::from_micros(1024));
+        assert_eq!(p99, Duration::from_micros(16384));
+        assert!(p50 <= p99);
     }
 
     #[test]
@@ -748,7 +973,7 @@ mod tests {
         let b = SharedStats::new("m", "lrd", 4);
         a.on_enqueue(2);
         a.on_batch(4, 0, 0.010, &[0.001, 0.002, 0.003, 0.004]);
-        a.on_shed();
+        a.on_shed(Class::Interactive);
         a.set_transfers(10, 0);
         b.on_enqueue(5);
         b.on_reject();
@@ -760,6 +985,7 @@ mod tests {
         assert_eq!(merged.requests_ok, 2);
         assert_eq!(merged.rejected, 1);
         assert_eq!(merged.shed, 1);
+        assert_eq!(merged.shed_by_class, [1, 0, 0]);
         assert_eq!(merged.swaps, 1);
         assert_eq!(merged.served, 6);
         assert_eq!(merged.batches, 2);

@@ -24,6 +24,10 @@
 //! 5. **Bounded swap ack** — a stalled swap acknowledgement surfaces as a
 //!    timeout error instead of wedging `swap_variant`, and the shard keeps
 //!    serving.
+//! 6. **Hedged tails** — a dispatch stalled past the hedge budget is
+//!    re-dispatched on the sibling shard; the first answer wins
+//!    bit-identically to a direct run, the loser is cancelled, and no
+//!    request is lost or double-replied.
 //!
 //! The fault plan is process-global, so every test serializes on a local
 //! mutex and installs/clears its plan under an RAII guard.
@@ -33,8 +37,8 @@ use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
 use lrta::data::{Dataset, IMAGE_ELEMS};
 use lrta::faults;
 use lrta::freeze::FreezeMode;
-use lrta::runtime::{Manifest, Runtime};
-use lrta::serve::{Server, ServerConfig, ServeError, VariantSpec};
+use lrta::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Runtime};
+use lrta::serve::{HedgeConfig, QosConfig, Server, ServerConfig, ServeError, VariantSpec};
 use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig, SyncCompress};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -397,6 +401,124 @@ fn worker_panic_drains_stranded_requests_and_respawned_shard_is_bit_identical() 
         (batch + served_in_burst + retried + batch) as u64,
         "served must count every Ok answer and nothing else"
     );
+    server.shutdown();
+}
+
+/// Direct reference (same shape as integration_serve's): one executable
+/// run on `xs`, already padded to the compiled batch.
+fn direct_logits(
+    m: &Manifest,
+    variant: &str,
+    params: &checkpoint::Params,
+    xs: &[f32],
+) -> lrta::tensor::Tensor {
+    let rt = Runtime::cpu().unwrap();
+    let meta = m.artifact(&format!("resnet_mini_{variant}_infer")).unwrap();
+    let exe = rt.load_hlo(m.hlo_path(meta)).unwrap();
+    let mut inputs = Vec::new();
+    for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+        inputs.push(tensor_to_literal(&params[&slot.name]).unwrap());
+    }
+    let dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    inputs.push(xla::Literal::vec1(xs).reshape(&dims).unwrap());
+    let out = exe.run(&inputs).unwrap();
+    literal_to_tensor(&out[0]).unwrap()
+}
+
+/// Hedge chaos pin: a 400ms dispatch stall on shard 0 trips the hedge
+/// governor — the stalled batch is re-dispatched on the sibling shard,
+/// the first answer wins and is bit-identical to a direct executable run,
+/// the loser is cancelled, and zero requests are lost or double-replied.
+#[test]
+fn stalled_dispatch_hedges_to_sibling_bit_identically() {
+    let _g = lock();
+    let Some(m) = manifest() else { return };
+    let params = {
+        let dense = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+        VariantSpec::from_dense(&m, "resnet_mini", "lrd", &dense).unwrap().params
+    };
+    // shard 0's first dispatch naps 400ms with its batch on the hedge
+    // board; the governor's 30ms fallback budget fires long before that
+    let _plan = arm("dispatch@shard0:stall(400ms)@step1");
+    let qos = QosConfig {
+        hedge: Some(HedgeConfig {
+            fallback: Duration::from_millis(30),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let cfg = ServerConfig {
+        max_wait: Duration::from_millis(20),
+        spot_check: 0,
+        qos: Some(qos),
+        ..Default::default()
+    };
+    let server = Server::start(
+        &m,
+        vec![VariantSpec::new("resnet_mini", "lrd", params.clone()).with_shards(2)],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of("resnet_mini", "lrd").unwrap();
+    let n = batch * 2;
+    let data = Dataset::synthetic(n, 61);
+    let image = |i: usize| data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+
+    let pendings: Vec<_> = (0..n)
+        .map(|i| server.submit("resnet_mini", "lrd", image(i)).expect("admitted"))
+        .collect();
+    let answers: Vec<Vec<f32>> = pendings
+        .iter()
+        .map(|p| p.wait(Duration::from_secs(120)).expect("served").logits)
+        .collect();
+    assert_eq!(faults::fired(), 1, "the stall directive fired exactly once");
+
+    // the stalled originals resolve once the nap ends: every hedged pair
+    // settles to exactly one winner and one cancelled loser
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let snap = loop {
+        let s = server.stats("resnet_mini", "lrd").unwrap();
+        if s.hedge_fired >= 1 && s.hedge_cancelled == s.hedge_fired {
+            break s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "hedged pairs never settled: fired={} wins={} cancelled={}",
+            s.hedge_fired,
+            s.hedge_wins,
+            s.hedge_cancelled
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(snap.hedge_wins >= 1, "the sibling's answer must beat the 400ms stall");
+    assert_eq!(snap.served, n as u64, "exactly one Sent per admitted request");
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.shed, 0, "hedging must not shed anything");
+
+    // no double replies: every response channel is spent after one answer
+    for (i, p) in pendings.iter().enumerate() {
+        assert!(
+            p.wait(Duration::from_millis(100)).is_err(),
+            "request {i} was answered twice"
+        );
+    }
+
+    // bit-identity: whichever shard won each race, every answer matches
+    // the direct executable run on the same image (rows are independent of
+    // batch-mates, so the reference chunking is immaterial)
+    for (bi, chunk) in answers.chunks(batch).enumerate() {
+        let (xs, _) = data.batch(bi * batch, batch);
+        let reference = direct_logits(&m, "lrd", &params, &xs);
+        let classes = reference.shape()[1];
+        for (i, row) in chunk.iter().enumerate() {
+            assert_eq!(
+                row,
+                &reference.data()[i * classes..(i + 1) * classes].to_vec(),
+                "request {}: hedged answer diverged from the direct run",
+                bi * batch + i
+            );
+        }
+    }
     server.shutdown();
 }
 

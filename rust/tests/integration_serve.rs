@@ -13,7 +13,7 @@
 use lrta::checkpoint;
 use lrta::data::{Dataset, IMAGE_ELEMS};
 use lrta::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Runtime};
-use lrta::serve::{Server, ServerConfig, ServeError, VariantSpec};
+use lrta::serve::{Class, QosConfig, Server, ServerConfig, ServeError, VariantSpec};
 use lrta::tensor::Tensor;
 use std::time::Duration;
 
@@ -552,6 +552,198 @@ fn registry_and_trace_match_serving_stats_exactly() {
     }
     assert!(tracer.events().iter().all(|e| e.cat == "serve"));
     server.shutdown();
+}
+
+/// Per-image reference rows: the same images as direct executable runs,
+/// chunked into compiled batches (rows are independent of batch-mates, so
+/// the chunking is immaterial to any single row).
+fn direct_rows(
+    m: &Manifest,
+    variant: &str,
+    params: &checkpoint::Params,
+    data: &Dataset,
+    n: usize,
+    batch: usize,
+) -> Vec<Vec<f32>> {
+    // one executable load for all chunks (direct_logits reloads per call)
+    let rt = Runtime::cpu().unwrap();
+    let meta = m.artifact(&format!("{MODEL}_{variant}_infer")).unwrap();
+    let exe = rt.load_hlo(m.hlo_path(meta)).unwrap();
+    let mut inputs = Vec::new();
+    for slot in meta.trainable.iter().chain(meta.frozen.iter()) {
+        inputs.push(tensor_to_literal(&params[&slot.name]).unwrap());
+    }
+    let dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+    let mut rows = Vec::with_capacity(n);
+    for b0 in (0..n).step_by(batch) {
+        let (xs, _) = data.batch(b0, batch);
+        inputs.push(xla::Literal::vec1(&xs).reshape(&dims).unwrap());
+        let out = exe.run(&inputs).unwrap();
+        inputs.pop();
+        let t = literal_to_tensor(&out[0]).unwrap();
+        let classes = t.shape()[1];
+        for i in 0..batch.min(n - b0) {
+            rows.push(t.data()[i * classes..(i + 1) * classes].to_vec());
+        }
+    }
+    rows
+}
+
+/// Degrade pin #1: under SLO pressure, batch-class work spills down its
+/// ladder instead of shedding — and a spilled request's answer is
+/// bit-identical to a direct run of the *target* variant. Every admission
+/// resolves as exactly one of: served by `orig`, served by `rankopt`
+/// (spilled), or shed with `DeadlineExceeded` — counted exactly.
+#[test]
+fn spilled_requests_serve_the_ladder_variant_bit_identically() {
+    let Some(m) = manifest() else { return };
+    let mut qos = QosConfig::default();
+    qos.classes[Class::Batch.index()].slo = Some(Duration::from_millis(1));
+    qos.degrade.set(Class::Batch, vec!["rankopt".to_string()]);
+    let cfg = ServerConfig {
+        max_wait: Duration::from_millis(10),
+        spot_check: 0,
+        // deep queues: the whole burst is admitted up front, so the tail
+        // of the backlog is guaranteed to outwait the 1ms SLO at pop time
+        queue_depth: 1024,
+        qos: Some(qos),
+        ..Default::default()
+    };
+    let orig_params = variant_params(&m, "orig");
+    let rank_params = variant_params(&m, "rankopt");
+    let server = Server::start(
+        &m,
+        vec![
+            VariantSpec::new(MODEL, "orig", orig_params.clone()),
+            VariantSpec::new(MODEL, "rankopt", rank_params.clone()),
+        ],
+        &cfg,
+    )
+    .expect("server starts");
+    let batch = server.batch_of(MODEL, "orig").unwrap();
+    let n = batch * 16;
+    let data = Dataset::synthetic(n, 71);
+
+    // a batch-class burst aimed at orig only: the 1ms SLO expires queued
+    // work at pop time, which must degrade to rankopt (fresh deadline),
+    // not shed — rankopt sees *only* this spill flow
+    let pendings: Vec<_> = (0..n)
+        .map(|i| {
+            let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+            loop {
+                match server.submit_class(MODEL, "orig", x.clone(), Class::Batch) {
+                    Ok(p) => break p,
+                    Err(ServeError::QueueFull { .. }) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) => panic!("request {i}: unexpected submit error {e:?}"),
+                }
+            }
+        })
+        .collect();
+    let ref_orig = direct_rows(&m, "orig", &orig_params, &data, n, batch);
+    let ref_rank = direct_rows(&m, "rankopt", &rank_params, &data, n, batch);
+
+    let mut served_rank = 0u64;
+    let mut served_orig = 0u64;
+    let mut shed_seen = 0u64;
+    for (i, p) in pendings.iter().enumerate() {
+        match p.wait(Duration::from_secs(120)) {
+            Ok(resp) => {
+                if resp.logits == ref_orig[i] {
+                    served_orig += 1;
+                } else if resp.logits == ref_rank[i] {
+                    served_rank += 1;
+                } else {
+                    panic!("request {i}: logits match neither variant's direct run");
+                }
+            }
+            Err(ServeError::DeadlineExceeded) => shed_seen += 1,
+            Err(e) => panic!("request {i}: unexpected terminal answer {e:?}"),
+        }
+    }
+
+    let o = server.stats(MODEL, "orig").unwrap();
+    let r = server.stats(MODEL, "rankopt").unwrap();
+    assert!(o.spilled >= 1, "overload must actually exercise the ladder");
+    assert!(served_rank >= 1, "a spilled request must be served by the target");
+    // exact accounting: spills are batch-class only, every counter splits
+    // by class, and the three outcomes partition the admissions
+    assert_eq!(o.spilled, o.spilled_by_class[Class::Batch.index()]);
+    assert_eq!(o.shed, o.shed_by_class[Class::Batch.index()]);
+    assert_eq!(o.served + o.spilled + o.shed, n as u64);
+    assert_eq!(r.served + r.shed, o.spilled, "rankopt traffic is exactly the spills");
+    assert_eq!(r.spilled, 0, "the ladder bottoms out at rankopt — no further descent");
+    assert_eq!(served_orig, o.served, "orig-served answers must match orig's math");
+    assert_eq!(served_rank, r.served, "spilled answers must match rankopt's math");
+    assert_eq!(shed_seen, o.shed + r.shed, "every shed request saw DeadlineExceeded");
+    assert_eq!(o.errors + r.errors, 0);
+    server.shutdown();
+}
+
+/// Degrade pin #2: QoS enabled with an empty ladder must be inert — a
+/// 3-class run is bit-identical to the single-class path, nothing spills
+/// or hedges, and the per-class served split is exact.
+#[test]
+fn ladderless_qos_is_bit_identical_to_single_class_path() {
+    let Some(m) = manifest() else { return };
+    let variant = "lrd";
+    let params = variant_params(&m, variant);
+    let mut outputs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for classed in [false, true] {
+        let cfg = ServerConfig {
+            max_wait: Duration::from_millis(50),
+            spot_check: 0,
+            qos: classed.then(QosConfig::default),
+            ..Default::default()
+        };
+        let server = Server::start(
+            &m,
+            vec![VariantSpec::new(MODEL, variant, params.clone())],
+            &cfg,
+        )
+        .expect("server starts");
+        let batch = server.batch_of(MODEL, variant).unwrap();
+        let n = batch * 3;
+        let data = Dataset::synthetic(n, 83);
+        let pendings: Vec<_> = (0..n)
+            .map(|i| {
+                let x = data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].to_vec();
+                if classed {
+                    server
+                        .submit_class(MODEL, variant, x, Class::ALL[i % 3])
+                        .expect("admitted")
+                } else {
+                    server.submit(MODEL, variant, x).expect("admitted")
+                }
+            })
+            .collect();
+        let logits: Vec<Vec<f32>> = pendings
+            .iter()
+            .map(|p| p.wait(Duration::from_secs(120)).expect("served").logits)
+            .collect();
+        let snap = server.stats(MODEL, variant).unwrap();
+        assert_eq!(snap.served, n as u64);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.spilled, 0, "no ladder, no spills");
+        assert_eq!(snap.hedge_fired, 0, "no hedge config, no hedges");
+        assert_eq!(snap.errors, 0);
+        assert_eq!(
+            snap.served_by_class.iter().sum::<u64>(),
+            snap.served,
+            "per-class served must sum to the aggregate"
+        );
+        if classed {
+            // the 3-way cycling mix lands exactly n/3 in every class
+            assert_eq!(snap.served_by_class, [(n / 3) as u64; 3]);
+        }
+        server.shutdown();
+        outputs.push(logits);
+    }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "ladderless QoS changed per-request math vs the single-class path"
+    );
 }
 
 /// Registration satellite pin: a duplicate `(model, variant)` spec fails

@@ -1,0 +1,372 @@
+//! Property suite: QoS serving invariants. Three families, matching the
+//! rank-aware serving design (rust/src/serve/qos.rs):
+//!
+//! 1. **No starvation** — the weighted class pop never starves a class
+//!    that stays backlogged: over `P` pops it gets at least
+//!    `floor(P / Σw) · w_c` slots, whatever the other classes do.
+//! 2. **Exact partition** — shed + spill + served counts partition the
+//!    admitted requests exactly (per class and in aggregate), driven
+//!    through the real batcher pop path.
+//! 3. **Ladder isolation + hedge race** — a spilled request lands on a
+//!    variant of *its own class's* ladder with its class preserved (never
+//!    in another class's slot), and a hedged request/copy pair answers
+//!    its client exactly once, whichever side wins.
+
+use lrta::obs::Tracer;
+use lrta::serve::batcher::{self, BatcherConfig, NextBatch};
+use lrta::serve::qos::{self, ClassQueues, ShardQos, SpillShard};
+use lrta::serve::queue::Pop;
+use lrta::serve::{
+    Class, Delivery, QosConfig, Request, Response, ServeError, SharedStats,
+};
+use lrta::util::check::{forall, Config};
+use lrta::util::rng::Rng;
+use std::collections::BTreeSet;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+type Rx = mpsc::Receiver<Result<Response, ServeError>>;
+
+/// A request plus the client's receiving end. `expired = true` stamps a
+/// deadline already in the past, so the batcher resolves it at pop time.
+fn request(id: u64, class: Class, expired: bool) -> (Request, Rx) {
+    let (tx, rx) = mpsc::channel();
+    let now = Instant::now();
+    let deadline = if expired { Some(now) } else { Some(now + Duration::from_secs(300)) };
+    let req = Request {
+        id,
+        x: vec![id as f32],
+        enqueued: now,
+        deadline,
+        tx,
+        class,
+        hedge: None,
+        hedged_copy: false,
+    };
+    (req, rx)
+}
+
+// ---------------------------------------------------------------------------
+// 1. weighted pop never starves a backlogged class
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_weighted_pop_never_starves_a_backlogged_class() {
+    forall(
+        Config { cases: 64, seed: 0x9051 },
+        |r: &mut Rng| {
+            let weights =
+                [1 + r.below(5) as u32, 1 + r.below(5) as u32, 1 + r.below(5) as u32];
+            let pops = 1 + r.below(40);
+            // each class is either backlogged (enough prefill to stay
+            // non-empty for every pop) or arbitrarily light
+            let fills: Vec<usize> = (0..3)
+                .map(|_| if r.below(2) == 0 { pops } else { r.below(pops) })
+                .collect();
+            (weights, pops, fills)
+        },
+        |(weights, pops, fills)| {
+            let q = ClassQueues::multi(pops + 1, *weights);
+            let mut id = 0u64;
+            for class in Class::ALL {
+                for _ in 0..fills[class.index()] {
+                    // client end dropped on purpose; only pop order matters
+                    let (req, _rx) = request(id, class, false);
+                    id += 1;
+                    if q.try_push(class, req).is_err() {
+                        return false;
+                    }
+                }
+            }
+            let total: usize = fills.iter().sum();
+            let to_pop = (*pops).min(total);
+            let mut served = [0usize; 3];
+            for _ in 0..to_pop {
+                match q.pop_timeout(Duration::from_millis(100)) {
+                    Pop::Item(req) => served[req.class.index()] += 1,
+                    _ => return false, // queue must not run dry or close
+                }
+            }
+            // fairness floor: any class that stayed backlogged the whole
+            // run gets its weight's share of every full schedule cycle
+            let cycle: usize = weights.iter().sum::<u32>() as usize;
+            Class::ALL.iter().all(|c| {
+                let i = c.index();
+                fills[i] < to_pop || served[i] >= (to_pop / cycle) * weights[i] as usize
+            })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. shed / spill / served exactly partition admissions
+// ---------------------------------------------------------------------------
+
+/// Drain `queue` through the real batcher pop path, returning the ids it
+/// shipped in batches (everything else was resolved as spill or shed).
+fn drain_through_batcher(queue: &ClassQueues, stats: &SharedStats, sq: &ShardQos) -> Vec<u64> {
+    let cfg = BatcherConfig {
+        batch: 4,
+        item_elems: 1,
+        max_wait: Duration::from_millis(1),
+        idle_poll: Duration::from_millis(1),
+    };
+    let tracer = Tracer::noop();
+    let mut shipped = Vec::new();
+    while !queue.is_empty() {
+        match batcher::next_batch(queue, &cfg, stats, &tracer, sq) {
+            NextBatch::Batch(reqs) => shipped.extend(reqs.into_iter().map(|r| r.id)),
+            NextBatch::Idle => continue,
+            NextBatch::Closed => break,
+        }
+    }
+    shipped
+}
+
+#[test]
+fn prop_batcher_outcomes_partition_admissions_exactly() {
+    forall(
+        Config { cases: 48, seed: 0xA22B },
+        |r: &mut Rng| {
+            let n = 1 + r.below(24);
+            let reqs: Vec<(usize, bool)> =
+                (0..n).map(|_| (r.below(3), r.below(2) == 0)).collect();
+            let laddered: Vec<bool> = (0..3).map(|_| r.below(2) == 0).collect();
+            (reqs, laddered)
+        },
+        |(reqs, laddered)| {
+            let n = reqs.len();
+            // degrade config: laddered classes spill to variant "cheap"
+            let mut qcfg = QosConfig::default();
+            for class in Class::ALL {
+                if laddered[class.index()] {
+                    qcfg.degrade.set(class, vec!["cheap".to_string()]);
+                }
+            }
+            let table = qos::new_table();
+            let target_q = Arc::new(ClassQueues::multi(n + 1, [1, 1, 1]));
+            let target_stats = SharedStats::new("m", "cheap", 4);
+            table.lock().unwrap().insert(
+                "m/cheap".to_string(),
+                vec![SpillShard { queue: target_q.clone(), stats: target_stats.clone() }],
+            );
+            let sq = ShardQos::new("m", "v", Arc::new(qcfg), None, table);
+
+            let source = ClassQueues::multi(n + 1, [1, 1, 1]);
+            let stats = SharedStats::new("m", "v", 4);
+            let mut clients = Vec::new();
+            let mut expired_by_class = [0u64; 3];
+            let mut live = 0usize;
+            let mut spill_ids: BTreeSet<u64> = BTreeSet::new();
+            for (id, (ci, expired)) in reqs.iter().enumerate() {
+                let class = Class::from_index(*ci);
+                let (req, rx) = request(id as u64, class, *expired);
+                if source.try_push(class, req).is_err() {
+                    return false;
+                }
+                if *expired {
+                    expired_by_class[*ci] += 1;
+                    if laddered[*ci] {
+                        spill_ids.insert(id as u64);
+                    }
+                } else {
+                    live += 1;
+                }
+                clients.push((id as u64, class, *expired, rx));
+            }
+
+            let shipped = drain_through_batcher(&source, &stats, &sq);
+            let snap = stats.snapshot(0);
+
+            // the partition identity: every admission is exactly one of
+            // shipped-to-a-batch, spilled, or shed — no loss, no double
+            if shipped.len() + (snap.spilled + snap.shed) as usize != n {
+                return false;
+            }
+            if shipped.len() != live {
+                return false;
+            }
+            // aggregates equal their per-class splits
+            if snap.shed != snap.shed_by_class.iter().sum::<u64>()
+                || snap.spilled != snap.spilled_by_class.iter().sum::<u64>()
+            {
+                return false;
+            }
+            for class in Class::ALL {
+                let i = class.index();
+                let (want_spill, want_shed) = if laddered[i] {
+                    (expired_by_class[i], 0)
+                } else {
+                    (0, expired_by_class[i])
+                };
+                if snap.spilled_by_class[i] != want_spill
+                    || snap.shed_by_class[i] != want_shed
+                {
+                    return false;
+                }
+            }
+            // spill target counted each landing as a normal admission
+            if target_stats.snapshot(0).requests_ok != snap.spilled {
+                return false;
+            }
+            // client-visible outcomes: shed answered DeadlineExceeded;
+            // spilled work waits in the target (sender alive → Empty);
+            // shipped work was handed to the "engine" (here: dropped →
+            // Disconnected) without the batcher answering it
+            for (_, class, expired, rx) in &clients {
+                let got = rx.try_recv();
+                let ok = if *expired && laddered[class.index()] {
+                    matches!(got, Err(mpsc::TryRecvError::Empty))
+                } else if *expired {
+                    matches!(got, Ok(Err(ServeError::DeadlineExceeded)))
+                } else {
+                    matches!(got, Err(mpsc::TryRecvError::Disconnected))
+                };
+                if !ok {
+                    return false;
+                }
+            }
+            // every spilled request sits in the target under its own class
+            // slot with a ladder class, never borrowing another class's
+            let landed = target_q.drain();
+            if landed.len() != spill_ids.len() {
+                return false;
+            }
+            landed.iter().all(|req| {
+                laddered[req.class.index()] && spill_ids.contains(&req.id)
+            })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. spill stays on the class's own ladder; hedge answers exactly once
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_spill_walks_only_the_own_class_ladder() {
+    forall(
+        Config { cases: 64, seed: 0x51AD },
+        |r: &mut Rng| {
+            // random per-class ladders over three candidate variants; the
+            // source variant "v" may itself appear anywhere on a ladder
+            let ladders: Vec<Vec<usize>> =
+                (0..3).map(|_| (0..r.below(4)).map(|_| r.below(3)).collect()).collect();
+            let class = r.below(3);
+            (ladders, class)
+        },
+        |(ladders, ci)| {
+            let variants = ["v", "cheap0", "cheap1"];
+            let mut qcfg = QosConfig::default();
+            for class in Class::ALL {
+                let ladder: Vec<String> = ladders[class.index()]
+                    .iter()
+                    .map(|&k| variants[k].to_string())
+                    .collect();
+                qcfg.degrade.set(class, ladder);
+            }
+            let table = qos::new_table();
+            let mut queues = Vec::new();
+            for v in &variants[1..] {
+                let q = Arc::new(ClassQueues::multi(4, [1, 1, 1]));
+                table.lock().unwrap().insert(
+                    format!("m/{v}"),
+                    vec![SpillShard {
+                        queue: q.clone(),
+                        stats: SharedStats::new("m", v, 4),
+                    }],
+                );
+                queues.push((v.to_string(), q));
+            }
+            let qcfg = Arc::new(qcfg);
+            let sq = ShardQos::new("m", "v", qcfg.clone(), None, table);
+
+            let class = Class::from_index(*ci);
+            let (req, rx) = request(7, class, true);
+            // the walk starts *after* the source's own ladder position (or
+            // at the top when absent) and always skips the source itself
+            let ladder = qcfg.degrade.ladder(class).to_vec();
+            let start =
+                ladder.iter().position(|v| v == "v").map(|p| p + 1).unwrap_or(0);
+            let eligible: Vec<&String> =
+                ladder[start..].iter().filter(|v| *v != "v").collect();
+            match sq.spill(req) {
+                Ok(()) => {
+                    // landed exactly once, on the first eligible rung of
+                    // *this class's* ladder, filed under its own class slot
+                    let Some(first) = eligible.first() else { return false };
+                    let mut hits = 0;
+                    for (v, q) in &queues {
+                        let in_q = q.len();
+                        if in_q > 0 {
+                            hits += in_q;
+                            if v != *first || q.class_len(class) != in_q {
+                                return false;
+                            }
+                        }
+                    }
+                    hits == 1 && rx.try_recv().is_err()
+                }
+                Err(req) => {
+                    // no eligible rung below the source — request comes
+                    // back intact for shedding
+                    req.id == 7 && eligible.is_empty()
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_hedged_pair_answers_client_exactly_once() {
+    forall(
+        Config { cases: 64, seed: 0x4ED6 },
+        |r: &mut Rng| (r.below(2) == 0, r.below(3)),
+        |(copy_first, ci)| {
+            let class = Class::from_index(*ci);
+            let (orig, rx) = request(11, class, false);
+            // publish installs the first-answer-wins guard and exposes the
+            // governor-facing ticket — exactly the engine's dispatch path
+            let board = qos::new_board();
+            let mut batch = vec![orig];
+            qos::publish(&board, &mut batch);
+            let orig = batch.pop().expect("published request");
+            let ticket = board.lock().unwrap().tickets[0].clone();
+            if ticket.id != 11 {
+                return false;
+            }
+            let copy = Request {
+                id: ticket.id,
+                x: ticket.x.clone(),
+                enqueued: Instant::now(),
+                deadline: None,
+                tx: ticket.tx.clone(),
+                class: ticket.class,
+                hedge: Some(ticket.guard.clone()),
+                hedged_copy: true,
+            };
+            let answer = |req: Request, tag: f32| {
+                req.respond(Ok(Response {
+                    logits: vec![tag],
+                    latency: Duration::ZERO,
+                    batch_fill: 1,
+                }))
+            };
+            let (first, second, first_tag) = if *copy_first {
+                (answer(copy, 2.0), answer(orig, 1.0), 2.0)
+            } else {
+                (answer(orig, 1.0), answer(copy, 2.0), 1.0)
+            };
+            // whichever side raced ahead wins; the loser is cancelled and
+            // must not double-reply
+            if first != Delivery::Sent || second != Delivery::Cancelled {
+                return false;
+            }
+            let got = match rx.try_recv() {
+                Ok(Ok(resp)) => resp.logits == vec![first_tag],
+                _ => false,
+            };
+            got && rx.try_recv().is_err()
+        },
+    );
+}

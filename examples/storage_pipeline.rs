@@ -1,0 +1,135 @@
+//! End-to-end storage smoke: the whole train→checkpoint→serve pipeline
+//! through one in-process object store — what `lrta train --data-store
+//! mem: --store mem:` followed by `lrta serve --swap-store mem:` does,
+//! driven as a library so CI can assert the invariants, not just the exit
+//! code.
+//!
+//! The pipeline:
+//!
+//!   1. publish the synthetic corpus as content-addressed chunks into a
+//!      shared `mem:` store (and republish it to show dedupe: the second
+//!      publish uploads zero bytes);
+//!   2. fine-tune the low-rank model for 2 epochs **streaming batches
+//!      from the store**, uploading each epoch's checkpoint back into it
+//!      from the async writer;
+//!   3. run the identical fine-tune from RAM and assert the streamed
+//!      trajectory is bit-identical (the refactor's central pin);
+//!   4. start a serve router and warm-swap the final uploaded checkpoint
+//!      out of the same store, then answer a request with it.
+//!
+//! Run:  `cargo run --release --example storage_pipeline`
+//! Env:  LRTA_MODEL (default resnet_mini), LRTA_SMOKE_TRAIN (corpus size,
+//!       default 256), LRTA_SMOKE_EPOCHS (default 2)
+
+use anyhow::{ensure, Result};
+use lrta::checkpoint;
+use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
+use lrta::data::{publish, DataSource, Dataset, StreamingProvider, IMAGE_ELEMS};
+use lrta::freeze::FreezeMode;
+use lrta::runtime::{Manifest, Runtime};
+use lrta::serve::{Server, ServerConfig, VariantSpec};
+use lrta::storage;
+use lrta::train::Prefetcher;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let model = std::env::var("LRTA_MODEL").unwrap_or_else(|_| "resnet_mini".into());
+    let train_size = env_usize("LRTA_SMOKE_TRAIN", 256);
+    let epochs = env_usize("LRTA_SMOKE_EPOCHS", 2);
+
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let rt = Runtime::cpu()?;
+    let dense = checkpoint::load(manifest.init_checkpoint(&model)?)?;
+    let params = decompose_checkpoint(&dense, manifest.config(&model, "lrd")?)?.params;
+
+    // --- 1. publish the corpus through the storage boundary ---------------
+    let store = storage::open("mem:smoke")?;
+    let cfg = TrainConfig {
+        model: model.clone(),
+        variant: "lrd".into(),
+        freeze: FreezeMode::Sequential,
+        epochs,
+        lr: LrSchedule::Fixed(5e-3),
+        train_size,
+        test_size: 128,
+        seed: 0,
+        verbose: false,
+        resident: true,
+        pipelined: true,
+    };
+    let corpus = Dataset::synthetic(cfg.train_size, cfg.seed);
+    let stats = publish(&store, "data", &corpus, lrta::data::stream::DEFAULT_SAMPLES_PER_CHUNK)?;
+    println!(
+        "published: {} samples, {} chunks, {} B uploaded",
+        stats.samples, stats.chunks_total, stats.bytes_written
+    );
+    let again = publish(&store, "data", &corpus, lrta::data::stream::DEFAULT_SAMPLES_PER_CHUNK)?;
+    ensure!(again.chunks_written == 0, "republish must dedupe every chunk");
+    println!("republished: {} B uploaded, {} B deduped", again.bytes_written, again.bytes_deduped);
+
+    // --- 2. streamed fine-tune, checkpoints uploaded to the store ---------
+    let provider = Arc::new(StreamingProvider::open(Arc::clone(&store), "data")?);
+    let mut streamed = Trainer::new(&rt, &manifest, cfg.clone(), params.clone())?;
+    streamed.train_from(DataSource::streamed(Arc::clone(&provider)));
+    streamed.checkpoint_epochs_to_store(Arc::clone(&store), "ckpts");
+    let stream_rec = streamed.run()?;
+
+    // --- 3. the in-memory twin must match bit for bit ----------------------
+    let mut inmem = Trainer::new(&rt, &manifest, cfg, params.clone())?;
+    let mem_rec = inmem.run()?;
+    ensure!(mem_rec.epochs.len() == stream_rec.epochs.len());
+    for (m, s) in mem_rec.epochs.iter().zip(&stream_rec.epochs) {
+        ensure!(
+            m.loss.to_bits() == s.loss.to_bits()
+                && m.test_acc.to_bits() == s.test_acc.to_bits(),
+            "epoch {}: streamed trajectory diverged (loss {} vs {})",
+            m.epoch,
+            m.loss,
+            s.loss
+        );
+    }
+    println!("streamed == in-memory: {} epochs bit-identical", mem_rec.epochs.len());
+
+    // --- 4. serve: warm-swap the uploaded checkpoint out of the store ------
+    let uploads = store.list("ckpts/")?;
+    ensure!(uploads.len() == epochs, "expected {epochs} uploaded checkpoints: {uploads:?}");
+    let final_key = uploads.last().unwrap().clone();
+
+    let scfg = ServerConfig { max_wait: Duration::from_millis(20), ..Default::default() };
+    let server =
+        Server::start(&manifest, vec![VariantSpec::new(&model, "lrd", params)], &scfg)?;
+    server
+        .swap_variant_from_store(&model, "lrd", store.as_ref(), &final_key)
+        .map_err(|e| anyhow::anyhow!("swap from store: {e}"))?;
+
+    // one request through the swapped weights proves the router serves them
+    let probe = {
+        let mut pf = Prefetcher::start_streaming(provider, 1, 1, lrta::data::Shard::full());
+        pf.next_batch().expect("one probe batch").0
+    };
+    ensure!(probe.len() == IMAGE_ELEMS);
+    let resp = server
+        .submit(&model, "lrd", probe)
+        .map_err(|e| anyhow::anyhow!("submit: {e}"))?
+        .wait(Duration::from_secs(120))
+        .map_err(|e| anyhow::anyhow!("infer: {e}"))?;
+    ensure!(!resp.logits.is_empty() && resp.logits.iter().all(|v| v.is_finite()));
+    server.shutdown();
+
+    let m = store.metrics();
+    println!(
+        "store traffic: {} gets / {} B down, {} puts / {} B up ({} objects resident)",
+        m.get_ops.get(),
+        m.get_bytes.get(),
+        m.put_ops.get(),
+        m.put_bytes.get(),
+        store.list("")?.len()
+    );
+    println!("swapped {final_key} from the store and served with it — storage pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Storage-boundary benchmark: what the pluggable object store and the
+//! streamed corpus path actually cost, and what fetch-ahead buys back.
+//!
+//! Four measurements, all artifact-free (pure library, so this target
+//! runs in CI without the AOT bundle):
+//!
+//!   - **put paths** — MB/s of `put` vs `put_streaming` for a multi-MB
+//!     object on both backends (the in-process [`MemObject`] and a
+//!     [`LocalFs`] under a temp dir): the streaming path must not tax the
+//!     async checkpoint writer;
+//!   - **chunk dedupe** — first `put_blob` of a blob vs re-publishing the
+//!     identical bytes: content addressing should make the second publish
+//!     pay hash + HEAD probes only, no uploads;
+//!   - **batch assembly** — samples/s of the in-memory prefetcher vs the
+//!     streamed prefetcher over the same published corpus — the price of
+//!     the chunk/decode/cache machinery when the store itself is free;
+//!   - **fetch-ahead absorption** — the streamed walk against a
+//!     [`MemObject`] with injected per-op latency, fetch-ahead 0 vs the
+//!     default window: overlap should hide most of the per-chunk stalls.
+//!
+//! Output: results/storage_stream.txt and a `storage_stream` section in
+//! results/BENCH_storage.json (uploaded as a CI artifact).
+//!
+//! Env: LRTA_STORE_SAMPLES (corpus size, default 512), LRTA_STORE_BATCH
+//! (default 32), LRTA_STORE_MB (put-path object size, default 4).
+
+use lrta::data::{publish, Dataset, Shard, StreamingProvider};
+use lrta::storage::{ChunkStore, LocalFs, MemObject, Storage};
+use lrta::train::Prefetcher;
+use lrta::util::bench::{
+    bench_throughput, table, write_json_section, write_report, BenchConfig, BenchResult,
+};
+use lrta::util::json::Json;
+use lrta::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn blob(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+/// Drain one full streamed epoch; returns the sample count consumed.
+fn drain_epoch(provider: &Arc<StreamingProvider>, batch: usize) -> usize {
+    let mut pf = Prefetcher::start_streaming(Arc::clone(provider), batch, 7, Shard::full());
+    let mut n = 0;
+    while let Some((_, ys)) = pf.next_batch() {
+        n += ys.len();
+    }
+    n
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("LRTA_STORE_SAMPLES", 512);
+    let batch = env_usize("LRTA_STORE_BATCH", 32);
+    let mb = env_usize("LRTA_STORE_MB", 4);
+    let cfg = BenchConfig::default();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // --- 1. put paths ------------------------------------------------------
+    let payload = blob(1, mb * 1024 * 1024);
+    let tmp = std::env::temp_dir()
+        .join("lrta_bench_storage")
+        .join(std::process::id().to_string());
+    let _ = std::fs::remove_dir_all(&tmp);
+    let backends: Vec<Arc<dyn Storage>> = vec![
+        Arc::new(MemObject::new()),
+        Arc::new(LocalFs::open(tmp.clone())?),
+    ];
+    for store in &backends {
+        let b = store.backend();
+        let s = Arc::clone(store);
+        let p = payload.clone();
+        results.push(bench_throughput(&format!("put/{b}"), &cfg, mb as f64, move || {
+            s.put("bench/obj", &p).unwrap();
+        }));
+        let s = Arc::clone(store);
+        let p = payload.clone();
+        results.push(bench_throughput(
+            &format!("put_streaming/{b}"),
+            &cfg,
+            mb as f64,
+            move || {
+                s.put_streaming("bench/obj_s", &mut &p[..]).unwrap();
+            },
+        ));
+    }
+
+    // --- 2. chunk dedupe ---------------------------------------------------
+    let store: Arc<dyn Storage> = Arc::new(MemObject::new());
+    let chunks = ChunkStore::new(Arc::clone(&store));
+    {
+        // a fresh store per iteration keeps every publish cold
+        let p = payload.clone();
+        results.push(bench_throughput("put_blob/first", &cfg, mb as f64, move || {
+            let fresh: Arc<dyn Storage> = Arc::new(MemObject::new());
+            ChunkStore::new(fresh).put_blob("bench/blob", &p).unwrap();
+        }));
+    }
+    let stats = chunks.put_blob("bench/blob", &payload)?;
+    let dedup = {
+        let chunks = chunks.clone();
+        let p = payload.clone();
+        bench_throughput("put_blob/dedup", &cfg, mb as f64, move || {
+            let s = chunks.put_blob("bench/blob", &p).unwrap();
+            assert_eq!(s.chunks_written, 0, "re-publish must fully dedupe");
+        })
+    };
+    results.push(dedup);
+
+    // --- 3. batch assembly: memory vs streamed -----------------------------
+    let corpus = Dataset::synthetic(samples, 42);
+    let data = Arc::new(corpus.clone());
+    let epoch_samples = (samples / batch) * batch;
+    results.push(bench_throughput("batches/memory", &cfg, epoch_samples as f64, move || {
+        let mut pf = Prefetcher::start(Arc::clone(&data), batch, 7);
+        let mut n = 0;
+        while let Some((_, ys)) = pf.next_batch() {
+            n += ys.len();
+        }
+        assert_eq!(n, epoch_samples);
+    }));
+
+    let store: Arc<dyn Storage> = Arc::new(MemObject::new());
+    let pstats = publish(&store, "data", &corpus, 64)?;
+    let provider = Arc::new(StreamingProvider::open(Arc::clone(&store), "data")?);
+    {
+        let provider = Arc::clone(&provider);
+        results.push(bench_throughput(
+            "batches/streamed",
+            &cfg,
+            epoch_samples as f64,
+            move || {
+                assert_eq!(drain_epoch(&provider, batch), epoch_samples);
+            },
+        ));
+    }
+
+    // --- 4. fetch-ahead absorption under injected store latency ------------
+    let slow = Arc::new(MemObject::with_latency(Duration::from_millis(2)));
+    {
+        // copy the published corpus into the slow store, latency-free
+        slow.set_latency(Duration::ZERO);
+        let dst: Arc<dyn Storage> = Arc::clone(&slow) as Arc<dyn Storage>;
+        for key in store.list("")? {
+            dst.put(&key, &store.get(&key)?)?;
+        }
+        slow.set_latency(Duration::from_millis(2));
+    }
+    let slow_store: Arc<dyn Storage> = slow as Arc<dyn Storage>;
+    for (name, window) in [("latency/no_fetch_ahead", 0usize), ("latency/fetch_ahead", 2)] {
+        // cache of 1 chunk: every chunk transition is a real (slow) fetch
+        let p = Arc::new(
+            StreamingProvider::open(Arc::clone(&slow_store), "data")?
+                .with_fetch_ahead(window)
+                .with_cache_chunks(1),
+        );
+        results.push(bench_throughput(name, &cfg, epoch_samples as f64, move || {
+            assert_eq!(drain_epoch(&p, batch), epoch_samples);
+        }));
+    }
+
+    // --- report ------------------------------------------------------------
+    let mut rows = vec![vec![
+        "case".to_string(),
+        "median".to_string(),
+        "throughput".to_string(),
+    ]];
+    for r in &results {
+        let thr = match (r.name.starts_with("put") || r.name.contains("blob"), r.throughput()) {
+            (true, Some(t)) => format!("{t:.1} MB/s"),
+            (false, Some(t)) => format!("{t:.0} samples/s"),
+            (_, None) => "-".to_string(),
+        };
+        rows.push(vec![r.name.clone(), format!("{:.3} ms", r.median_ms()), thr]);
+    }
+    let t = table(&rows);
+    println!(
+        "storage boundary ({samples} samples, batch {batch}, {mb} MB objects; \
+         {} chunks, {} B written on first publish):\n{t}",
+        stats.chunks_total, pstats.bytes_written
+    );
+    write_report("results/storage_stream.txt", &t);
+
+    let mut section = vec![
+        ("samples", Json::int(samples as i64)),
+        ("batch", Json::int(batch as i64)),
+        ("object_mb", Json::int(mb as i64)),
+        ("blob_chunks", Json::int(stats.chunks_total as i64)),
+        ("corpus_chunks", Json::int(pstats.chunks_total as i64)),
+        ("corpus_bytes_written", Json::int(pstats.bytes_written as i64)),
+    ];
+    let keys: Vec<String> =
+        results.iter().map(|r| format!("{}_median_secs", r.name.replace('/', "_"))).collect();
+    for (k, r) in keys.iter().zip(&results) {
+        section.push((k.as_str(), Json::num(r.secs.median)));
+    }
+    write_json_section("results/BENCH_storage.json", "storage_stream", Json::obj(section));
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!("storage bench OK");
+    Ok(())
+}

@@ -7,7 +7,16 @@
 //! ```
 //!
 //! Tensors are written in sorted-name order for deterministic files.
+//!
+//! The codec is split from the I/O: [`encode`]/[`decode`] map `Params`
+//! to/from the byte format, and everything else is a thin shim over a
+//! byte sink — [`save`]/[`load`] for bare filesystem paths (the legacy
+//! layout, byte-identical to what this module always wrote) and
+//! [`save_to`]/[`load_from`] for any [`crate::storage::Storage`] backend.
+//! A checkpoint written through either route is the same bytes, so
+//! producers and consumers can mix paths and storage URIs freely.
 
+use crate::storage::Storage;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -20,31 +29,51 @@ const VERSION: u32 = 1;
 /// Named parameter set (sorted by name).
 pub type Params = BTreeMap<String, Tensor>;
 
+/// Serialize `params` into the checkpoint byte format (sorted-name
+/// order — deterministic: equal params always encode to equal bytes).
+pub fn encode(params: &Params) -> Vec<u8> {
+    // magic + version + count + per-tensor headers and f32 payloads
+    let payload: usize =
+        params.values().map(|t| 8 + 4 * t.ndim() + 4 * t.data().len()).sum::<usize>()
+            + params.keys().map(|n| n.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(12 + payload);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for (name, t) in params {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        out.extend_from_slice(nb);
+        out.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        // f32 LE; on all supported platforms this is a straight copy
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Parse checkpoint bytes (inverse of [`encode`]).
+pub fn decode(bytes: &[u8]) -> Result<Params> {
+    let mut f = bytes;
+    read(&mut f, "checkpoint bytes")
+}
+
 /// Save params to `path`.
 pub fn save(path: impl AsRef<Path>, params: &Params) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
     }
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
     );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(params.len() as u32).to_le_bytes())?;
-    for (name, t) in params {
-        let nb = name.as_bytes();
-        f.write_all(&(nb.len() as u32).to_le_bytes())?;
-        f.write_all(nb)?;
-        f.write_all(&(t.ndim() as u32).to_le_bytes())?;
-        for &d in t.shape() {
-            f.write_all(&(d as u32).to_le_bytes())?;
-        }
-        // f32 LE; on all supported platforms this is a straight copy
-        for &v in t.data() {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
+    f.write_all(&encode(params))?;
+    f.flush()?;
     Ok(())
 }
 
@@ -54,26 +83,51 @@ pub fn load(path: impl AsRef<Path>) -> Result<Params> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
     );
+    read(&mut f, &path.display().to_string())
+}
+
+/// Save params under `key` on a storage backend. Byte-identical to
+/// [`save`]'s file (same [`encode`] output), streamed through
+/// [`Storage::put_streaming`] so large checkpoints never double-buffer in
+/// backends that spool to disk.
+pub fn save_to(store: &dyn Storage, key: &str, params: &Params) -> Result<()> {
+    let bytes = encode(params);
+    store
+        .put_streaming(key, &mut &bytes[..])
+        .with_context(|| format!("save checkpoint to storage key '{key}'"))?;
+    Ok(())
+}
+
+/// Load params from `key` on a storage backend (inverse of [`save_to`]).
+pub fn load_from(store: &dyn Storage, key: &str) -> Result<Params> {
+    let bytes = store
+        .get(key)
+        .with_context(|| format!("load checkpoint from storage key '{key}'"))?;
+    decode(&bytes).with_context(|| format!("decode checkpoint '{key}'"))
+}
+
+/// Decode the stream format from any reader; `what` labels errors.
+fn read(f: &mut impl Read, what: &str) -> Result<Params> {
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
+        bail!("{what}: bad magic {magic:?}");
     }
-    let version = read_u32(&mut f)?;
+    let version = read_u32(f)?;
     if version != VERSION {
-        bail!("{}: unsupported version {version}", path.display());
+        bail!("{what}: unsupported version {version}");
     }
-    let count = read_u32(&mut f)? as usize;
+    let count = read_u32(f)? as usize;
     let mut params = Params::new();
     for _ in 0..count {
-        let nlen = read_u32(&mut f)? as usize;
+        let nlen = read_u32(f)? as usize;
         let mut nb = vec![0u8; nlen];
         f.read_exact(&mut nb)?;
         let name = String::from_utf8(nb).context("tensor name utf-8")?;
-        let ndim = read_u32(&mut f)? as usize;
+        let ndim = read_u32(f)? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            shape.push(read_u32(&mut f)? as usize);
+            shape.push(read_u32(f)? as usize);
         }
         let numel: usize = shape.iter().product::<usize>().max(1);
         let mut bytes = vec![0u8; 4 * numel];
@@ -97,6 +151,7 @@ fn read_u32(f: &mut impl Read) -> Result<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::{LocalFs, MemObject, Storage};
     use crate::util::rng::Rng;
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -105,13 +160,18 @@ mod tests {
         dir.join(name)
     }
 
-    #[test]
-    fn roundtrip() {
+    fn some_params() -> Params {
         let mut rng = Rng::new(30);
         let mut p = Params::new();
         p.insert("w".into(), Tensor::randn(&[3, 4], 1.0, &mut rng));
         p.insert("a.b.c".into(), Tensor::randn(&[2, 2, 2, 2], 0.1, &mut rng));
         p.insert("bias".into(), Tensor::randn(&[7], 1.0, &mut rng));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = some_params();
         let path = tmp("roundtrip.bin");
         save(&path, &p).unwrap();
         let q = load(&path).unwrap();
@@ -122,15 +182,74 @@ mod tests {
     }
 
     #[test]
+    fn encode_decode_roundtrip_without_io() {
+        let p = some_params();
+        let q = decode(&encode(&p)).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn file_save_equals_encode() {
+        // `save` is a pure shim over `encode`: the file IS the codec bytes
+        let p = some_params();
+        let path = tmp("save_equals_encode.bin");
+        save(&path, &p).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), encode(&p));
+    }
+
+    #[test]
+    fn storage_backends_write_byte_identical_checkpoints() {
+        let p = some_params();
+        let path = tmp("via_path.bin");
+        save(&path, &p).unwrap();
+        let file_bytes = std::fs::read(&path).unwrap();
+
+        let mem = MemObject::new();
+        save_to(&mem, "ckpts/x.bin", &p).unwrap();
+        assert_eq!(mem.get("ckpts/x.bin").unwrap(), file_bytes);
+        assert_eq!(load_from(&mem, "ckpts/x.bin").unwrap(), p);
+
+        let root = std::env::temp_dir().join("lrta_ckpt_tests_localfs");
+        let _ = std::fs::remove_dir_all(&root);
+        let fs = LocalFs::open(root.clone()).unwrap();
+        save_to(&fs, "ckpts/x.bin", &p).unwrap();
+        assert_eq!(std::fs::read(root.join("ckpts/x.bin")).unwrap(), file_bytes);
+        assert_eq!(load_from(&fs, "ckpts/x.bin").unwrap(), p);
+    }
+
+    #[test]
+    fn save_into_file_parent_reports_mkdir_error() {
+        // regression: the parent "directory" is a regular file, so the
+        // mkdir itself must fail with context — not a confusing
+        // `File::create` error further down
+        let blocker = tmp("parent_blocker");
+        let _ = std::fs::remove_file(&blocker);
+        std::fs::write(&blocker, "file").unwrap();
+        let err = save(blocker.join("sub/ckpt.bin"), &Params::new()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("create checkpoint dir"),
+            "error must surface the mkdir failure: {err:#}"
+        );
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let path = tmp("bad_magic.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(load(&path).is_err());
+        assert!(decode(b"NOPE....").is_err());
     }
 
     #[test]
     fn rejects_missing_file() {
         assert!(load(tmp("missing.bin")).is_err());
+    }
+
+    #[test]
+    fn missing_storage_key_is_typed_not_found() {
+        let mem = MemObject::new();
+        let err = load_from(&mem, "nope.bin").unwrap_err();
+        assert!(crate::storage::is_not_found(&err), "{err:#}");
     }
 
     #[test]
@@ -159,5 +278,7 @@ mod tests {
         let p = load(&path).unwrap();
         assert_eq!(p["t"].shape(), &[1, 2]);
         assert_eq!(p["t"].data(), &[1.5, -2.0]);
+        // and the codec reproduces the fixture exactly
+        assert_eq!(encode(&p), bytes);
     }
 }

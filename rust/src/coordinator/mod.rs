@@ -31,7 +31,8 @@
 pub mod decompose;
 
 use crate::checkpoint::Params;
-use crate::data::{BatchIter, Dataset};
+use crate::data::{DataSource, Dataset, Shard};
+use crate::storage::Storage;
 use crate::freeze::{FreezeMode, FreezeScheduler, Pattern};
 use crate::metrics::{EpochRecord, RunRecord, ThroughputMeter};
 use crate::obs::Tracer;
@@ -172,11 +173,22 @@ pub struct Trainer<'rt> {
     /// [`Trainer::residency_report`] may honestly attribute to that run.
     last_run_fallbacks: usize,
     /// When set, each epoch's parameter snapshot also persists as
-    /// `<dir>/epoch_NNN.bin` on a side thread
-    /// ([`train::CheckpointWriter`]) while the next epoch trains.
-    ckpt_dir: Option<PathBuf>,
+    /// `epoch_NNN.bin` on a side thread ([`train::CheckpointWriter`])
+    /// while the next epoch trains — into a directory or any storage
+    /// backend, per the sink.
+    ckpt_sink: Option<CkptSink>,
+    /// Where training batches come from: `None` synthesizes the corpus in
+    /// memory (the classic path); see [`Trainer::train_from`].
+    train_source: Option<DataSource>,
     /// Lifecycle span recorder (off by default); see [`Trainer::set_tracer`].
     tracer: Tracer,
+}
+
+/// Where epoch checkpoints land: the legacy directory layout, or a
+/// key prefix on any [`Storage`] backend.
+enum CkptSink {
+    Dir(PathBuf),
+    Store(Arc<dyn Storage>, String),
 }
 
 impl<'rt> Trainer<'rt> {
@@ -218,7 +230,8 @@ impl<'rt> Trainer<'rt> {
             scheduler,
             engine,
             last_run_fallbacks: 0,
-            ckpt_dir: None,
+            ckpt_sink: None,
+            train_source: None,
             tracer: Tracer::default(),
         })
     }
@@ -243,7 +256,25 @@ impl<'rt> Trainer<'rt> {
     /// join. Written files are byte-identical to an inline
     /// [`crate::checkpoint::save`] of the same epoch's state.
     pub fn checkpoint_epochs_to(&mut self, dir: impl Into<PathBuf>) {
-        self.ckpt_dir = Some(dir.into());
+        self.ckpt_sink = Some(CkptSink::Dir(dir.into()));
+    }
+
+    /// Like [`Trainer::checkpoint_epochs_to`], but uploading each epoch's
+    /// checkpoint as `<prefix>/epoch_NNN.bin` through a storage backend
+    /// (`lrta train --store URI`) — same side-thread overlap, same
+    /// byte-identical [`crate::checkpoint::encode`] output, any backend
+    /// [`crate::storage::open`] can name.
+    pub fn checkpoint_epochs_to_store(&mut self, store: Arc<dyn Storage>, prefix: impl Into<String>) {
+        self.ckpt_sink = Some(CkptSink::Store(store, prefix.into()));
+    }
+
+    /// Stream training batches from `source` instead of synthesizing the
+    /// corpus in memory. Bit-identical batches by construction
+    /// ([`crate::train::Prefetcher::start_source`]), so a streamed run's
+    /// trajectory equals the in-memory run's — pinned in
+    /// `rust/tests/integration_train.rs`.
+    pub fn train_from(&mut self, source: DataSource) {
+        self.train_source = Some(source);
     }
 
     /// Run the configured number of epochs; returns the full record.
@@ -254,7 +285,13 @@ impl<'rt> Trainer<'rt> {
     /// `rust/tests/integration_train_resident.rs`).
     pub fn run(&mut self) -> Result<RunRecord> {
         let fallbacks_before = self.rt.demux_fallbacks();
-        let train_data = Arc::new(Dataset::synthetic(self.cfg.train_size, self.cfg.seed));
+        let train_source = match &self.train_source {
+            Some(source) => source.clone(),
+            None => DataSource::memory(Arc::new(Dataset::synthetic(
+                self.cfg.train_size,
+                self.cfg.seed,
+            ))),
+        };
         let test = Arc::new(Dataset::synthetic(self.cfg.test_size, self.cfg.seed ^ 0xDEAD_BEEF));
         let mut record = RunRecord::new(format!(
             "{}_{}_{:?}",
@@ -274,8 +311,12 @@ impl<'rt> Trainer<'rt> {
             None
         };
         // async checkpointing rides the same per-epoch snapshot
-        let mut ckpt_writer =
-            self.ckpt_dir.as_ref().map(|dir| train::CheckpointWriter::spawn(dir.clone()));
+        let mut ckpt_writer = self.ckpt_sink.as_ref().map(|sink| match sink {
+            CkptSink::Dir(dir) => train::CheckpointWriter::spawn(dir.clone()),
+            CkptSink::Store(store, prefix) => {
+                train::CheckpointWriter::spawn_to(Arc::clone(store), prefix.clone())
+            }
+        });
 
         for epoch in 0..self.cfg.epochs {
             let lr = self.cfg.lr.lr_at(epoch);
@@ -299,18 +340,39 @@ impl<'rt> Trainer<'rt> {
                 engine.state().rebind_for(meta)?;
                 self.tracer.end(swap_span, "train", "freeze_swap");
                 let stats = if pipelined {
-                    engine.run_epoch_pipelined(exe, meta, &train_data, epoch_seed, lr)?
+                    engine.run_epoch_pipelined_sharded(
+                        exe,
+                        meta,
+                        &train_source,
+                        epoch_seed,
+                        lr,
+                        Shard::full(),
+                        &mut |_, _| Ok(()),
+                    )?
                 } else {
-                    engine.run_epoch(exe, meta, &train_data, epoch_seed, lr)?
+                    engine.run_epoch_sharded(
+                        exe,
+                        meta,
+                        &train_source,
+                        epoch_seed,
+                        lr,
+                        Shard::full(),
+                        &mut |_, _| Ok(()),
+                    )?
                 };
                 (stats.meter, stats.loss, stats.train_acc)
             } else {
+                // the literal baseline consumes the same prefetcher the
+                // engines do (identical batches, identical order), so it
+                // too can train from a streamed source
                 let mut meter = ThroughputMeter::new(batch);
                 let mut loss_sum = 0.0f64;
                 let mut correct_sum = 0.0f64;
                 let mut samples = 0usize;
                 let mut n_batches = 0usize;
-                for (xs, ys) in BatchIter::new(&train_data, batch, epoch_seed) {
+                let mut pf =
+                    train::Prefetcher::start_source(&train_source, batch, epoch_seed, Shard::full());
+                while let Some((xs, ys)) = pf.next_batch() {
                     let t0 = std::time::Instant::now();
                     let (loss, correct) = run_train_step(
                         exe,
@@ -418,9 +480,9 @@ impl<'rt> Trainer<'rt> {
         // end-of-run join for the async checkpoints: every submitted epoch
         // must be durably on disk (or fail the run) before we return
         if let Some(writer) = &mut ckpt_writer {
-            for (e, path) in writer.drain()? {
+            for (e, loc) in writer.drain()? {
                 if self.cfg.verbose {
-                    println!("[{}] epoch {e:>3} checkpoint {}", record.name, path.display());
+                    println!("[{}] epoch {e:>3} checkpoint {loc}", record.name);
                 }
             }
         }

@@ -13,6 +13,11 @@
 //! bit-for-bit.
 
 use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub mod stream;
+
+pub use stream::{publish, PublishStats, StreamingProvider};
 
 pub const IMAGE_H: usize = 32;
 pub const IMAGE_W: usize = 32;
@@ -102,6 +107,58 @@ fn gen_image(class: i32, rng: &mut Rng, out: &mut Vec<f32>) {
     }
 }
 
+/// Where an epoch's samples come from: resident in memory, or streamed
+/// from an object store through a bounded chunk cache.
+///
+/// The training drivers ([`crate::train::Engine`],
+/// [`crate::train::Prefetcher`]) consume this instead of a concrete
+/// [`Dataset`], which is what makes the storage boundary pluggable under
+/// the prefetcher. Both variants yield **bit-identical batches** for the
+/// same `(epoch_seed, batch, shard)` — the streamed corpus round-trips
+/// f32 values exactly ([`stream`]) and both paths index one global
+/// permutation — so switching a run to streaming cannot change its
+/// trajectory (pinned in `rust/tests/integration_train.rs`).
+#[derive(Clone)]
+pub enum DataSource {
+    /// The whole corpus resident in host memory.
+    Memory(Arc<Dataset>),
+    /// Samples fetched on demand from a published corpus
+    /// ([`stream::publish`]) with bounded resident memory.
+    Streamed(Arc<StreamingProvider>),
+}
+
+impl DataSource {
+    pub fn memory(data: Arc<Dataset>) -> DataSource {
+        DataSource::Memory(data)
+    }
+
+    pub fn streamed(provider: Arc<StreamingProvider>) -> DataSource {
+        DataSource::Streamed(provider)
+    }
+
+    /// Total samples.
+    pub fn len(&self) -> usize {
+        match self {
+            DataSource::Memory(d) => d.len(),
+            DataSource::Streamed(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One-line description for logs (`memory(2048)` / `streamed(2048, 32 chunks)`).
+    pub fn describe(&self) -> String {
+        match self {
+            DataSource::Memory(d) => format!("memory({})", d.len()),
+            DataSource::Streamed(p) => {
+                format!("streamed({}, {} chunks)", p.len(), p.num_chunks())
+            }
+        }
+    }
+}
+
 /// One replica's slice of an epoch's batch stream — the data-parallel
 /// sharding contract of `train::replica`.
 ///
@@ -144,6 +201,18 @@ impl Shard {
     }
 }
 
+/// The epoch's global sample permutation — the *single* source of truth
+/// for batch order, shared by [`BatchIter`] (in-memory assembly) and
+/// [`crate::train::Prefetcher::start_streaming`] (storage-backed
+/// assembly). Global batch `b` is `order[b*batch..(b+1)*batch]`; any
+/// consumer that indexes this permutation the same way yields
+/// bit-identical batches.
+pub fn epoch_order(n: usize, epoch_seed: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(epoch_seed ^ 0x5EED_BA7C).shuffle(&mut order);
+    order
+}
+
 /// Epoch iterator: shuffled batch starts over a dataset (optionally one
 /// shard of the epoch's batch stream — see [`Shard`]).
 pub struct BatchIter<'a> {
@@ -166,9 +235,7 @@ impl<'a> BatchIter<'a> {
     /// slice of the epoch's batches. The shuffle depends on `epoch_seed`
     /// alone, so shards of the same epoch partition one batch sequence.
     pub fn new_sharded(data: &'a Dataset, batch: usize, epoch_seed: u64, shard: Shard) -> Self {
-        let mut order: Vec<usize> = (0..data.len()).collect();
-        Rng::new(epoch_seed ^ 0x5EED_BA7C).shuffle(&mut order);
-        BatchIter { data, order, batch, cursor: 0, shard }
+        BatchIter { data, order: epoch_order(data.len(), epoch_seed), batch, cursor: 0, shard }
     }
 
     /// Batches this iterator will yield (the shard's equal-length slice).

@@ -1,0 +1,455 @@
+//! Streaming corpus: the dataset lives in an object store as
+//! content-addressed chunks; training fetches a bounded window of it.
+//!
+//! Layout on the store (all through [`crate::storage::ChunkStore`], so
+//! identical chunks dedupe across rank variants and re-publishes):
+//!
+//! ```text
+//!   chunks/<hash>            contiguous sample ranges, each sample
+//!                            encoded as label i32 LE + 32×32×3 f32 LE
+//!   <prefix>/manifest.json   {"format":1, "n":N, "samples_per_chunk":S,
+//!                             "image_elems":3072,
+//!                             "chunks":[{"key":…, "samples":k, "len":L},…]}
+//! ```
+//!
+//! [`publish`] writes a [`Dataset`] into that layout; a
+//! [`StreamingProvider`] opens the manifest and serves samples through a
+//! bounded LRU cache of decoded chunks, so resident memory is
+//! `cache_chunks × chunk size` regardless of corpus size. The f32 pixels
+//! round-trip through `to_le_bytes`/`from_le_bytes`, i.e. bit-exactly:
+//! a batch assembled from the stream equals the in-memory batch
+//! bit-for-bit — which is what lets
+//! [`crate::train::Prefetcher::start_streaming`] pin streamed training
+//! runs against in-memory runs.
+//!
+//! The epoch permutation shuffles *samples* globally (the exact
+//! [`crate::data::BatchIter`] order), so consecutive samples of a batch
+//! land in arbitrary chunks. The cache therefore wants to be sized near
+//! the chunk count of the working set; a locality-preserving shuffle
+//! (shuffle chunks, then within) trades bit-identity for cache hits and
+//! is left as the ROADMAP's cache-eviction follow-on.
+
+use super::{Dataset, IMAGE_ELEMS};
+use crate::storage::{ChunkStore, Storage};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Manifest schema version.
+const FORMAT: i64 = 1;
+
+/// Default samples per chunk (≈ 768 KiB of f32 pixels each).
+pub const DEFAULT_SAMPLES_PER_CHUNK: usize = 64;
+
+/// Default decoded-chunk cache capacity (chunks).
+pub const DEFAULT_CACHE_CHUNKS: usize = 32;
+
+/// Default fetch-ahead window (batches) for the streaming prefetcher.
+pub const DEFAULT_FETCH_AHEAD: usize = 2;
+
+/// Bytes of one encoded sample: i32 label + f32 pixels.
+const SAMPLE_BYTES: usize = 4 + 4 * IMAGE_ELEMS;
+
+/// Exact accounting of one [`publish`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PublishStats {
+    pub samples: usize,
+    pub chunks_total: usize,
+    /// Chunks actually uploaded (the rest were content-dedupe hits).
+    pub chunks_written: usize,
+    pub bytes_written: u64,
+    pub bytes_deduped: u64,
+}
+
+/// Write `data` to `store` under `prefix` as content-addressed chunks of
+/// `samples_per_chunk` samples plus a manifest at `<prefix>/manifest.json`.
+/// Re-publishing an identical corpus writes only the manifest (every
+/// chunk dedupes); overlapping corpora share their common chunks.
+pub fn publish(
+    store: &Arc<dyn Storage>,
+    prefix: &str,
+    data: &Dataset,
+    samples_per_chunk: usize,
+) -> Result<PublishStats> {
+    if samples_per_chunk == 0 {
+        bail!("samples_per_chunk must be positive");
+    }
+    let cs = ChunkStore::new(Arc::clone(store));
+    let n = data.len();
+    let mut stats = PublishStats { samples: n, ..PublishStats::default() };
+    let mut entries = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let count = samples_per_chunk.min(n - start);
+        let mut bytes = Vec::with_capacity(count * SAMPLE_BYTES);
+        for i in start..start + count {
+            bytes.extend_from_slice(&data.labels[i].to_le_bytes());
+            for &v in &data.images[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let (key, written) = cs.put_chunk(&bytes)?;
+        stats.chunks_total += 1;
+        if written {
+            stats.chunks_written += 1;
+            stats.bytes_written += bytes.len() as u64;
+        } else {
+            stats.bytes_deduped += bytes.len() as u64;
+        }
+        entries.push(Json::obj(vec![
+            ("key", Json::str(key)),
+            ("samples", Json::int(count as i64)),
+            ("len", Json::int(bytes.len() as i64)),
+        ]));
+        start += count;
+    }
+    let manifest = Json::obj(vec![
+        ("format", Json::int(FORMAT)),
+        ("n", Json::int(n as i64)),
+        ("samples_per_chunk", Json::int(samples_per_chunk as i64)),
+        ("image_elems", Json::int(IMAGE_ELEMS as i64)),
+        ("chunks", Json::arr(entries)),
+    ]);
+    store
+        .put(&manifest_key(prefix), manifest.emit().as_bytes())
+        .with_context(|| format!("write dataset manifest under '{prefix}'"))?;
+    Ok(stats)
+}
+
+/// `<prefix>/manifest.json` (bare `manifest.json` for an empty prefix).
+pub fn manifest_key(prefix: &str) -> String {
+    if prefix.is_empty() {
+        "manifest.json".to_string()
+    } else {
+        format!("{prefix}/manifest.json")
+    }
+}
+
+/// One chunk's manifest entry.
+#[derive(Clone, Debug)]
+struct ChunkRef {
+    key: String,
+    /// First sample index this chunk holds.
+    start: usize,
+    samples: usize,
+    len: usize,
+}
+
+/// A decoded chunk resident in the cache.
+struct DecodedChunk {
+    labels: Vec<i32>,
+    images: Vec<f32>,
+}
+
+/// Bounded LRU of decoded chunks (by chunk index).
+struct ChunkCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<usize, (u64, Arc<DecodedChunk>)>,
+}
+
+impl ChunkCache {
+    fn get(&mut self, ci: usize) -> Option<Arc<DecodedChunk>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&ci).map(|slot| {
+            slot.0 = tick;
+            Arc::clone(&slot.1)
+        })
+    }
+
+    fn insert(&mut self, ci: usize, chunk: Arc<DecodedChunk>) {
+        while self.map.len() >= self.cap.max(1) {
+            // evict the least-recently-used entry
+            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| *k);
+            match oldest {
+                Some(k) => self.map.remove(&k),
+                None => break,
+            };
+        }
+        self.tick += 1;
+        self.map.insert(ci, (self.tick, chunk));
+    }
+}
+
+/// Read-side of a published corpus: samples on demand through a bounded
+/// decoded-chunk cache. Shareable across threads (`Arc<StreamingProvider>`
+/// — replicas pulling disjoint shards share one provider and its cache).
+pub struct StreamingProvider {
+    chunks: ChunkStore,
+    refs: Vec<ChunkRef>,
+    n: usize,
+    samples_per_chunk: usize,
+    cache: Mutex<ChunkCache>,
+    fetch_ahead: usize,
+}
+
+impl StreamingProvider {
+    /// Open the corpus published under `prefix`.
+    pub fn open(store: Arc<dyn Storage>, prefix: &str) -> Result<StreamingProvider> {
+        let key = manifest_key(prefix);
+        let bytes = store
+            .get(&key)
+            .with_context(|| format!("open dataset manifest '{key}'"))?;
+        let text = std::str::from_utf8(&bytes)
+            .with_context(|| format!("dataset manifest '{key}': not utf-8"))?;
+        let manifest =
+            Json::parse(text).map_err(|e| anyhow::anyhow!("dataset manifest '{key}': {e}"))?;
+        if manifest.get("format").as_i64() != Some(FORMAT) {
+            bail!("dataset manifest '{key}': unsupported format {:?}", manifest.get("format"));
+        }
+        if manifest.get("image_elems").as_usize() != Some(IMAGE_ELEMS) {
+            bail!(
+                "dataset manifest '{key}': image_elems {:?} does not match this build's {}",
+                manifest.get("image_elems"),
+                IMAGE_ELEMS
+            );
+        }
+        let n = manifest
+            .get("n")
+            .as_usize()
+            .with_context(|| format!("dataset manifest '{key}': missing n"))?;
+        let samples_per_chunk = manifest
+            .get("samples_per_chunk")
+            .as_usize()
+            .filter(|&s| s > 0)
+            .with_context(|| format!("dataset manifest '{key}': missing samples_per_chunk"))?;
+        let entries = manifest
+            .get("chunks")
+            .as_arr()
+            .with_context(|| format!("dataset manifest '{key}': missing chunks"))?;
+        let mut refs = Vec::with_capacity(entries.len());
+        let mut start = 0usize;
+        for (i, e) in entries.iter().enumerate() {
+            let ckey = e
+                .get("key")
+                .as_str()
+                .with_context(|| format!("dataset manifest '{key}': chunk {i} missing key"))?;
+            let samples = e
+                .get("samples")
+                .as_usize()
+                .with_context(|| format!("dataset manifest '{key}': chunk {i} missing samples"))?;
+            let len = e
+                .get("len")
+                .as_usize()
+                .with_context(|| format!("dataset manifest '{key}': chunk {i} missing len"))?;
+            if samples == 0 || len != samples * SAMPLE_BYTES {
+                bail!(
+                    "dataset manifest '{key}': chunk {i} declares {samples} samples / {len} bytes \
+                     (expected {} bytes per sample)",
+                    SAMPLE_BYTES
+                );
+            }
+            refs.push(ChunkRef { key: ckey.to_string(), start, samples, len });
+            start += samples;
+        }
+        if start != n {
+            bail!("dataset manifest '{key}': chunks cover {start} samples, manifest says {n}");
+        }
+        Ok(StreamingProvider {
+            chunks: ChunkStore::new(store),
+            refs,
+            n,
+            samples_per_chunk,
+            cache: Mutex::new(ChunkCache {
+                cap: DEFAULT_CACHE_CHUNKS,
+                tick: 0,
+                map: HashMap::new(),
+            }),
+            fetch_ahead: DEFAULT_FETCH_AHEAD,
+        })
+    }
+
+    /// Cap the decoded-chunk cache (chunks). Resident memory is bounded by
+    /// `cap × samples_per_chunk × sample size` regardless of corpus size.
+    pub fn with_cache_chunks(self, cap: usize) -> StreamingProvider {
+        self.cache.lock().expect("chunk cache lock").cap = cap.max(1);
+        self
+    }
+
+    /// Batches of fetch-ahead the streaming prefetcher applies
+    /// ([`crate::train::Prefetcher::start_streaming`]).
+    pub fn with_fetch_ahead(mut self, batches: usize) -> StreamingProvider {
+        self.fetch_ahead = batches;
+        self
+    }
+
+    /// Total samples in the corpus.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Chunks the corpus splits into.
+    pub fn num_chunks(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn fetch_ahead(&self) -> usize {
+        self.fetch_ahead
+    }
+
+    /// Which chunk holds sample `idx`.
+    pub fn chunk_of(&self, idx: usize) -> usize {
+        idx / self.samples_per_chunk
+    }
+
+    /// Ensure the chunk holding sample ranges around `ci` is resident —
+    /// the fetch-ahead entry point (errors on a failed fetch; a warm
+    /// chunk is a no-op).
+    pub fn prefetch_chunk(&self, ci: usize) -> Result<()> {
+        self.chunk(ci).map(|_| ())
+    }
+
+    /// Append sample `idx` (pixels, label) to a batch under assembly —
+    /// bit-exactly the values [`Dataset`] holds in memory.
+    pub fn append_sample(&self, idx: usize, xs: &mut Vec<f32>, ys: &mut Vec<i32>) -> Result<()> {
+        if idx >= self.n {
+            bail!("sample {idx} out of range 0..{}", self.n);
+        }
+        let ci = self.chunk_of(idx);
+        let chunk = self.chunk(ci)?;
+        let local = idx - self.refs[ci].start;
+        xs.extend_from_slice(&chunk.images[local * IMAGE_ELEMS..(local + 1) * IMAGE_ELEMS]);
+        ys.push(chunk.labels[local]);
+        Ok(())
+    }
+
+    /// Materialize the whole corpus as an in-memory [`Dataset`] (test
+    /// helper / small-corpus escape hatch — defeats the bounded-RAM point
+    /// for large ones).
+    pub fn to_dataset(&self) -> Result<Dataset> {
+        let mut xs = Vec::with_capacity(self.n * IMAGE_ELEMS);
+        let mut ys = Vec::with_capacity(self.n);
+        for idx in 0..self.n {
+            self.append_sample(idx, &mut xs, &mut ys)?;
+        }
+        Ok(Dataset { images: xs, labels: ys })
+    }
+
+    /// The decoded chunk `ci`, from cache or fetched + verified + decoded.
+    fn chunk(&self, ci: usize) -> Result<Arc<DecodedChunk>> {
+        if ci >= self.refs.len() {
+            bail!("chunk {ci} out of range 0..{}", self.refs.len());
+        }
+        if let Some(hit) = self.cache.lock().expect("chunk cache lock").get(ci) {
+            return Ok(hit);
+        }
+        // fetch outside the cache lock: a slow (or stalled) object fetch
+        // must not block readers hitting warm chunks
+        let r = &self.refs[ci];
+        let bytes = self.chunks.get_chunk(&r.key)?;
+        if bytes.len() != r.len {
+            bail!("chunk {ci} ({}) is {} bytes, manifest says {}", r.key, bytes.len(), r.len);
+        }
+        let decoded = Arc::new(decode_chunk(&bytes, r.samples));
+        self.cache.lock().expect("chunk cache lock").insert(ci, Arc::clone(&decoded));
+        Ok(decoded)
+    }
+}
+
+/// Decode `samples` encoded samples (length already validated).
+fn decode_chunk(bytes: &[u8], samples: usize) -> DecodedChunk {
+    let mut labels = Vec::with_capacity(samples);
+    let mut images = Vec::with_capacity(samples * IMAGE_ELEMS);
+    for s in 0..samples {
+        let base = s * SAMPLE_BYTES;
+        labels.push(i32::from_le_bytes(bytes[base..base + 4].try_into().expect("4 bytes")));
+        let px = &bytes[base + 4..base + SAMPLE_BYTES];
+        images.extend(
+            px.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+    }
+    DecodedChunk { labels, images }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemObject;
+
+    fn mem() -> Arc<dyn Storage> {
+        Arc::new(MemObject::new())
+    }
+
+    #[test]
+    fn publish_then_stream_roundtrips_bit_exactly() {
+        let store = mem();
+        let data = Dataset::synthetic(100, 7);
+        let stats = publish(&store, "corpus", &data, 16).unwrap();
+        assert_eq!(stats.samples, 100);
+        assert_eq!(stats.chunks_total, 7); // 6×16 + one 4-sample tail
+        assert_eq!(stats.chunks_written, 7);
+        let p = StreamingProvider::open(Arc::clone(&store), "corpus").unwrap();
+        assert_eq!(p.len(), 100);
+        assert_eq!(p.num_chunks(), 7);
+        let back = p.to_dataset().unwrap();
+        assert_eq!(back.images, data.images);
+        assert_eq!(back.labels, data.labels);
+    }
+
+    #[test]
+    fn republish_dedupes_every_chunk() {
+        let store = mem();
+        let data = Dataset::synthetic(64, 3);
+        publish(&store, "a", &data, 16).unwrap();
+        let again = publish(&store, "b", &data, 16).unwrap();
+        assert_eq!(again.chunks_written, 0);
+        assert_eq!(again.bytes_written, 0);
+        assert!(again.bytes_deduped > 0);
+    }
+
+    #[test]
+    fn tiny_cache_still_serves_random_access() {
+        let store = mem();
+        let data = Dataset::synthetic(80, 9);
+        publish(&store, "c", &data, 8).unwrap();
+        let p = StreamingProvider::open(Arc::clone(&store), "c")
+            .unwrap()
+            .with_cache_chunks(2);
+        // stride across chunks so the 2-chunk cache must evict constantly
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for idx in (0..80).rev() {
+            xs.clear();
+            ys.clear();
+            p.append_sample(idx, &mut xs, &mut ys).unwrap();
+            assert_eq!(ys[0], data.labels[idx], "sample {idx}");
+            assert_eq!(xs[..], data.images[idx * IMAGE_ELEMS..(idx + 1) * IMAGE_ELEMS]);
+        }
+    }
+
+    #[test]
+    fn cache_bounds_refetches_not_correctness() {
+        let store = mem();
+        let data = Dataset::synthetic(32, 1);
+        publish(&store, "d", &data, 8).unwrap();
+        let p = StreamingProvider::open(Arc::clone(&store), "d").unwrap();
+        let gets_cold = p.chunks.store().metrics().get_ops.get();
+        let _ = p.to_dataset().unwrap();
+        let gets_after_one_pass = p.chunks.store().metrics().get_ops.get();
+        // 4 chunks, default cache holds them all: exactly one fetch each
+        assert_eq!(gets_after_one_pass - gets_cold, 4);
+        let _ = p.to_dataset().unwrap();
+        assert_eq!(p.chunks.store().metrics().get_ops.get(), gets_after_one_pass);
+    }
+
+    #[test]
+    fn corrupt_manifest_is_rejected() {
+        let store = mem();
+        let data = Dataset::synthetic(16, 2);
+        publish(&store, "e", &data, 8).unwrap();
+        store.put("e/manifest.json", b"{\"format\": 99}").unwrap();
+        assert!(StreamingProvider::open(Arc::clone(&store), "e").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_typed_not_found() {
+        let err = StreamingProvider::open(mem(), "nope").unwrap_err();
+        assert!(crate::storage::is_not_found(&err), "{err:#}");
+    }
+}

@@ -12,6 +12,7 @@
 //!   directive := seam[@scope]:action[@stepN]
 //!   seam      := batch_upload | dispatch | fetch | prefetch
 //!              | barrier_send | barrier_recv | swap_ack | hedge
+//!              | storage_get | storage_put
 //!   scope     := site label, e.g. replica1 (train) or shard0 (serve);
 //!                omitted = match any scope
 //!   action    := panic | error | stall(DURATION)   e.g. stall(200ms)
@@ -65,6 +66,12 @@ pub enum Seam {
     /// Hedge governor about to re-dispatch a stalled batch's requests to a
     /// sibling shard (`hedge@shardN` scopes to the *stalled* shard).
     Hedge,
+    /// Storage backend about to serve a read (`get`/`exists`); scoped by
+    /// the backend label (`storage_get@mem:stall(…)`).
+    StorageGet,
+    /// Storage backend about to commit a write (`put`/`put_streaming`);
+    /// scoped by the backend label.
+    StoragePut,
 }
 
 impl Seam {
@@ -79,6 +86,8 @@ impl Seam {
             "barrier_recv" => Some(Seam::BarrierRecv),
             "swap_ack" => Some(Seam::SwapAck),
             "hedge" => Some(Seam::Hedge),
+            "storage_get" => Some(Seam::StorageGet),
+            "storage_put" => Some(Seam::StoragePut),
             _ => None,
         }
     }
@@ -94,6 +103,8 @@ impl Seam {
             Seam::BarrierRecv => "barrier_recv",
             Seam::SwapAck => "swap_ack",
             Seam::Hedge => "hedge",
+            Seam::StorageGet => "storage_get",
+            Seam::StoragePut => "storage_put",
         }
     }
 }
@@ -182,7 +193,7 @@ impl Plan {
                 anyhow!(
                     "fault directive '{part}': unknown seam '{seam_s}' (expected one of \
                      batch_upload, dispatch, fetch, prefetch, barrier_send, barrier_recv, \
-                     swap_ack, hedge)"
+                     swap_ack, hedge, storage_get, storage_put)"
                 )
             })?;
             let (action_s, at_s) = match act.split_once('@') {
@@ -456,6 +467,8 @@ mod tests {
             Seam::BarrierRecv,
             Seam::SwapAck,
             Seam::Hedge,
+            Seam::StorageGet,
+            Seam::StoragePut,
         ] {
             assert_eq!(Seam::parse(seam.label()), Some(seam));
         }

@@ -86,6 +86,7 @@ pub mod obs;
 pub mod rankopt;
 pub mod runtime;
 pub mod serve;
+pub mod storage;
 pub mod tensor;
 pub mod train;
 pub mod util;

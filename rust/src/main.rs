@@ -31,9 +31,12 @@ use lrta::serve as serve_load;
 use lrta::serve::{
     Class, HedgeConfig, QosConfig, Server, ServerConfig, StatsSnapshot, VariantSpec,
 };
-use lrta::train::{run_replicas_traced, MomentumPolicy, ReplicaConfig, SyncCompress};
+use lrta::data::{DataSource, StreamingProvider};
+use lrta::storage::{self, Storage};
+use lrta::train::{run_replicas_sourced, MomentumPolicy, ReplicaConfig, SyncCompress};
 use lrta::util::bench::table;
 use lrta::util::cli::Args;
+use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -49,13 +52,15 @@ SUBCOMMANDS
             --epochs N --ckpt F [--lr X] [--cosine] [--out F] [--no-resident]
             [--no-pipeline] [--replicas N] [--avg-every K]
             [--momenta {avg|reset}] [--sync-compress {exact|q8}]
-            [--epoch-ckpts DIR] [--no-evict] [--barrier-timeout-ms D]
+            [--epoch-ckpts DIR] [--store URI] [--data-store URI]
+            [--no-evict] [--barrier-timeout-ms D]
   infer     --model M --variant V --ckpt F [--reps N]
   serve     --model M [--variants orig,lrd,rankopt] [--ckpt F]
             [--requests N] [--concurrency C] [--depth D]
             [--max-wait-ms X] [--spot-check N] [--reupload] [--burst]
             [--no-pipeline] [--shards N] [--slo-ms D] [--no-supervise]
             [--classes SPEC] [--degrade SPEC] [--hedge-ms D] [--qos-check]
+            [--swap-store URI] [--swap-key K] [--swap-variant V]
   rank-opt  --c C --s S --k K [--m M] [--alpha A]
             [--backend {v100|ascend910|tpuv4|pjrt}]
   pipeline  --model M --variant V --freeze MODE [--pretrain-epochs N]
@@ -77,9 +82,10 @@ COMMON
                     seam[@scope]:action[@stepN] directives, e.g.
                     \"barrier_send@replica1:panic@step7,dispatch:stall(200ms)\"
                     — seams: batch_upload dispatch fetch prefetch
-                    barrier_send barrier_recv swap_ack hedge; actions: panic,
-                    error, stall(DUR). Falls back to the LRTA_FAULTS env
-                    var; unset means zero-cost disarmed seams
+                    barrier_send barrier_recv swap_ack hedge storage_get
+                    storage_put; actions: panic, error, stall(DUR). Falls
+                    back to the LRTA_FAULTS env var; unset means zero-cost
+                    disarmed seams
   --no-resident     train through the host-literal round-trip baseline
                     instead of the device-resident buffer-chained engine
   --no-pipeline     disable overlapped execution (double-buffered batch
@@ -105,6 +111,29 @@ TRAIN SCALING
   --epoch-ckpts DIR persist every epoch's parameters as DIR/epoch_NNN.bin
                     on a side thread while the next epoch trains
                     (single-replica trainer only)
+
+STORAGE (pluggable object-store boundary)
+  URIs name a backend: a directory path opens a local filesystem store;
+  \"mem:\" or \"mem:NAME\" opens a named in-process object store with
+  remote-object semantics (atomic puts, no partial reads) shared by every
+  opener of the same name — a training run and a serve swap in one
+  process see the same objects, like two jobs sharing a bucket.
+  --store URI       (train) upload each epoch's checkpoint as
+                    ckpts/epoch_NNN.bin through the storage backend on a
+                    side thread — byte-identical to --epoch-ckpts files;
+                    single-replica trainer only, exclusive with
+                    --epoch-ckpts
+  --data-store URI  (train) stream training batches from the store: the
+                    synthetic corpus is published once as content-addressed
+                    chunks under data/ (re-publishing dedupes), then
+                    batches assemble from a bounded chunk cache with
+                    fetch-ahead — bit-identical trajectory to in-memory
+                    runs; works with --replicas (shards share one cache)
+  --swap-store URI  (serve) after startup, hot-swap a variant's checkpoint
+                    from the store (zero dropped requests)
+  --swap-key K      (serve) object key to swap from
+                    (default ckpts/epoch_000.bin — what --store wrote)
+  --swap-variant V  (serve) variant to swap (default: first of --variants)
   --barrier-timeout-ms D  averaging-barrier deadline per event (default
                     30000): a replica that misses it is evicted and the
                     barrier closes over the survivors with a rescaled mean
@@ -172,6 +201,7 @@ fn run() -> Result<()> {
         "no-pipeline", "replicas", "avg-every", "momenta", "sync-compress", "epoch-ckpts",
         "shards", "slo-ms", "trace-out", "metrics-out", "faults", "no-evict",
         "barrier-timeout-ms", "no-supervise", "classes", "degrade", "hedge-ms", "qos-check",
+        "store", "data-store", "swap-store", "swap-key", "swap-variant",
     ])
     .map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
@@ -240,6 +270,50 @@ impl ObsOutputs {
         }
         Ok(())
     }
+}
+
+/// Open a storage URI and wire it into the run's telemetry: spans record
+/// into the tracer, counters register under `storage/*{backend=ROLE}` so
+/// the Prometheus snapshot separates checkpoint traffic from data traffic.
+/// `seen` dedupes by store identity — one store serving two roles (same
+/// URI for `--store` and `--data-store`) wires up once.
+fn open_store_for(
+    uri: &str,
+    role: &str,
+    obs: &ObsOutputs,
+    seen: &mut Vec<Arc<dyn Storage>>,
+) -> Result<Arc<dyn Storage>> {
+    let store = storage::open(uri)?;
+    if !seen.iter().any(|s| Arc::ptr_eq(s, &store)) {
+        store.set_tracer(obs.tracer.clone());
+        if let Some(reg) = &obs.registry {
+            store.metrics().register(reg, role)?;
+        }
+        seen.push(Arc::clone(&store));
+    }
+    Ok(store)
+}
+
+/// Resolve `--data-store`: publish the run's deterministic synthetic
+/// corpus under `data/` (idempotent — content-addressed chunks dedupe, so
+/// a second run uploads nothing) and open a streaming provider over it.
+fn open_data_source(store: Arc<dyn Storage>, cfg: &TrainConfig) -> Result<DataSource> {
+    let data = Dataset::synthetic(cfg.train_size, cfg.seed);
+    let stats = lrta::data::publish(
+        &store,
+        "data",
+        &data,
+        lrta::data::stream::DEFAULT_SAMPLES_PER_CHUNK,
+    )?;
+    println!(
+        "data store: {} samples in {} chunks ({} uploaded, {} deduped)",
+        stats.samples,
+        stats.chunks_total,
+        stats.chunks_written,
+        stats.chunks_total - stats.chunks_written
+    );
+    let provider = StreamingProvider::open(store, "data")?;
+    Ok(DataSource::streamed(Arc::new(provider)))
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -329,6 +403,20 @@ fn train(args: &Args) -> Result<()> {
         faults::register_metrics(reg)?;
     }
 
+    // the storage boundary: --store routes epoch checkpoints through a
+    // backend, --data-store streams batches from a published corpus
+    if args.has("epoch-ckpts") && args.has("store") {
+        bail!("--epoch-ckpts and --store both name a checkpoint sink; pick one");
+    }
+    let mut stores_seen: Vec<Arc<dyn Storage>> = Vec::new();
+    let data_source = match args.get("data-store") {
+        Some(uri) => {
+            let store = open_store_for(uri, "data", &obs, &mut stores_seen)?;
+            Some(open_data_source(store, &cfg)?)
+        }
+        None => None,
+    };
+
     // data-parallel path: each replica owns its PJRT client on its own
     // thread, so no main-thread runtime is created here. Parse strictly —
     // a typo'd or zero count must not silently fall back to single-engine
@@ -349,6 +437,9 @@ fn train(args: &Args) -> Result<()> {
         // the same epoch driver as single-engine runs.
         if args.has("epoch-ckpts") {
             bail!("--epoch-ckpts is not supported with --replicas > 1 (single-engine trainer only)");
+        }
+        if args.has("store") {
+            bail!("--store is not supported with --replicas > 1 (single-engine trainer only)");
         }
         if args.bool_or("no-resident", false) {
             bail!(
@@ -371,13 +462,14 @@ fn train(args: &Args) -> Result<()> {
                 args.f64_or("barrier-timeout-ms", 30_000.0) / 1e3,
             ),
         };
-        let run = run_replicas_traced(
+        let run = run_replicas_sourced(
             &m,
             &cfg,
             &rcfg,
             &params,
             obs.tracer.clone(),
             obs.registry.clone(),
+            data_source,
         )?;
         println!(
             "final test acc {:.3}; median step {:.1} ms ({replicas} replicas, avg-every={}, \
@@ -446,6 +538,13 @@ fn train(args: &Args) -> Result<()> {
     trainer.set_tracer(obs.tracer.clone());
     if let Some(dir) = args.get("epoch-ckpts") {
         trainer.checkpoint_epochs_to(dir);
+    }
+    if let Some(uri) = args.get("store") {
+        let store = open_store_for(uri, "ckpt", &obs, &mut stores_seen)?;
+        trainer.checkpoint_epochs_to_store(store, "ckpts");
+    }
+    if let Some(source) = data_source {
+        trainer.train_from(source);
     }
     let record = trainer.run()?;
     println!(
@@ -604,6 +703,25 @@ fn serve(args: &Args) -> Result<()> {
         },
     );
     let server = Server::start(&m, specs, &cfg)?;
+
+    // storage-sourced warm swap: pick up a checkpoint a training run
+    // published (e.g. `lrta train --store URI`) before driving load —
+    // zero-downtime, every shard flips between batches
+    if args.has("swap-key") || args.has("swap-variant") {
+        if !args.has("swap-store") {
+            bail!("--swap-key / --swap-variant require --swap-store");
+        }
+    }
+    if let Some(uri) = args.get("swap-store") {
+        let key = args.str_or("swap-key", "ckpts/epoch_000.bin");
+        let target = args.str_or("swap-variant", &variants[0]);
+        let mut stores_seen = Vec::new();
+        let store = open_store_for(uri, "swap", &obs, &mut stores_seen)?;
+        server
+            .swap_variant_from_store(&model, &target, store.as_ref(), &key)
+            .map_err(|e| anyhow!("swap {model}/{target} from {uri} key '{key}': {e}"))?;
+        println!("swapped {model}/{target} from storage {uri} key {key}");
+    }
 
     let data = Dataset::synthetic(512, seed ^ 0x5E12E);
     let timeout = Duration::from_secs(120);

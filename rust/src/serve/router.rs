@@ -892,6 +892,25 @@ impl Server {
         Ok(())
     }
 
+    /// [`Server::swap_variant`] with the checkpoint fetched from a storage
+    /// backend: load + decode the object at `key`, then run the normal
+    /// zero-downtime fanout. This is how a serve process picks up what a
+    /// training run published (`lrta serve --swap-store URI --swap-key K`,
+    /// or a `mem:` store shared in-process with the trainer — the CI
+    /// smoke); a missing or corrupt checkpoint surfaces as
+    /// [`ServeError::Engine`] before any shard is touched.
+    pub fn swap_variant_from_store(
+        &self,
+        model: &str,
+        variant: &str,
+        store: &dyn crate::storage::Storage,
+        key: &str,
+    ) -> Result<(), ServeError> {
+        let params = crate::checkpoint::load_from(store, key)
+            .map_err(|e| ServeError::Engine(format!("{e:#}")))?;
+        self.swap_variant(model, variant, &params)
+    }
+
     /// A shard's control channel went away: [`ServeError::Closed`] when the
     /// server is shutting down, [`ServeError::ShardDown`] when its worker
     /// died.

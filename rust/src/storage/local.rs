@@ -1,0 +1,204 @@
+//! [`LocalFs`] — keys are files under a root directory.
+//!
+//! The filesystem backend keeps today's on-disk layout: key `a/b/c` is the
+//! file `<root>/a/b/c`, so a checkpoint written through [`LocalFs`] is the
+//! same file `checkpoint::save` used to write (byte-identical — pinned in
+//! the conformance and checkpoint suites). What it adds over raw
+//! `std::fs` calls is the object-store contract:
+//!
+//! - **atomic put-by-rename** — every put writes `<root>/.tmp/<unique>`
+//!   and renames it over the destination, so a concurrent reader sees the
+//!   old object or the new one, never a torn write;
+//! - **typed missing-key errors** — `ENOENT` maps to
+//!   [`super::NotFound`];
+//! - **namespaced listing** — [`Storage::list`] walks the tree and
+//!   returns `/`-joined keys (internal `.tmp` staging excluded).
+
+use super::{NotFound, Storage, StoreCore};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Name of the staging directory for atomic puts (excluded from listings;
+/// `.`-prefixed, which [`super::validate_key`] keeps out of key space).
+const TMP_DIR: &str = ".tmp";
+
+/// Filesystem-rooted object store. See the module docs for the contract.
+pub struct LocalFs {
+    root: PathBuf,
+    core: StoreCore,
+    /// Per-store monotonic suffix keeping concurrent staged writes apart.
+    tmp_seq: AtomicU64,
+}
+
+impl LocalFs {
+    /// Open (creating if needed) an object store rooted at `root`.
+    pub fn open(root: PathBuf) -> Result<LocalFs> {
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("create storage root {}", root.display()))?;
+        Ok(LocalFs { root, core: StoreCore::new(), tmp_seq: AtomicU64::new(0) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The file behind `key` (already validated by the trait wrappers).
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    /// Stage into `.tmp/` then rename over the destination.
+    fn commit_tmp(&self, key: &str, tmp: &Path) -> Result<()> {
+        let dst = self.path_of(key);
+        if let Some(dir) = dst.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create storage dir {}", dir.display()))?;
+        }
+        std::fs::rename(tmp, &dst)
+            .with_context(|| format!("commit {} -> {}", tmp.display(), dst.display()))
+    }
+
+    fn tmp_path(&self) -> Result<PathBuf> {
+        let dir = self.root.join(TMP_DIR);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create staging dir {}", dir.display()))?;
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        Ok(dir.join(format!("put-{}-{}", std::process::id(), seq)))
+    }
+
+    fn walk(&self, dir: &Path, rel: &mut Vec<String>, out: &mut Vec<String>) -> Result<()> {
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("list storage dir {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if rel.is_empty() && name == TMP_DIR {
+                continue;
+            }
+            let ty = entry.file_type()?;
+            if ty.is_dir() {
+                rel.push(name);
+                self.walk(&entry.path(), rel, out)?;
+                rel.pop();
+            } else if ty.is_file() {
+                let mut key = rel.join("/");
+                if !key.is_empty() {
+                    key.push('/');
+                }
+                key.push_str(&name);
+                out.push(key);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Storage for LocalFs {
+    fn backend(&self) -> &'static str {
+        "localfs"
+    }
+
+    fn core(&self) -> &StoreCore {
+        &self.core
+    }
+
+    fn get_raw(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.path_of(key);
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(bytes),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(NotFound { key: key.to_string() }.into())
+            }
+            Err(e) => Err(e).with_context(|| format!("read {}", path.display())),
+        }
+    }
+
+    fn put_raw(&self, key: &str, data: &[u8]) -> Result<()> {
+        let tmp = self.tmp_path()?;
+        std::fs::write(&tmp, data).with_context(|| format!("stage {}", tmp.display()))?;
+        self.commit_tmp(key, &tmp)
+    }
+
+    fn put_streaming_raw(&self, key: &str, reader: &mut dyn Read) -> Result<u64> {
+        let tmp = self.tmp_path()?;
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("stage {}", tmp.display()))?,
+        );
+        let n = std::io::copy(reader, &mut f)
+            .with_context(|| format!("stream into {}", tmp.display()))?;
+        f.flush().with_context(|| format!("flush {}", tmp.display()))?;
+        drop(f);
+        self.commit_tmp(key, &tmp)?;
+        Ok(n)
+    }
+
+    fn list_raw(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let mut rel = Vec::new();
+        self.walk(&self.root, &mut rel, &mut out)?;
+        out.retain(|k| k.starts_with(prefix));
+        out.sort();
+        Ok(out)
+    }
+
+    fn delete_raw(&self, key: &str) -> Result<()> {
+        let path = self.path_of(key);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()), // idempotent
+            Err(e) => Err(e).with_context(|| format!("delete {}", path.display())),
+        }
+    }
+
+    fn exists_raw(&self, key: &str) -> Result<bool> {
+        Ok(self.path_of(key).is_file())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> LocalFs {
+        let dir = std::env::temp_dir().join("lrta_storage_local_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        LocalFs::open(dir).unwrap()
+    }
+
+    #[test]
+    fn keys_map_to_files_under_root() {
+        let s = tmp_store("layout");
+        s.put("ckpts/epoch_000.bin", b"abc").unwrap();
+        assert_eq!(std::fs::read(s.root().join("ckpts/epoch_000.bin")).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn listing_skips_staging_dir() {
+        let s = tmp_store("staging");
+        s.put("a", b"1").unwrap();
+        // leave a stale staged file behind (simulated crash mid-put)
+        std::fs::write(s.root().join(TMP_DIR).join("stale"), b"x").unwrap();
+        assert_eq!(s.list("").unwrap(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn streaming_put_roundtrips() {
+        let s = tmp_store("stream");
+        let data = vec![7u8; 100_000];
+        let n = s.put_streaming("big", &mut &data[..]).unwrap();
+        assert_eq!(n, data.len() as u64);
+        assert_eq!(s.get("big").unwrap(), data);
+    }
+
+    #[test]
+    fn unwritable_root_surfaces_on_open() {
+        let blocker = std::env::temp_dir().join("lrta_storage_local_blocker");
+        let _ = std::fs::remove_dir_all(&blocker);
+        let _ = std::fs::remove_file(&blocker);
+        std::fs::write(&blocker, "file").unwrap();
+        assert!(LocalFs::open(blocker.join("sub")).is_err());
+        let _ = std::fs::remove_file(&blocker);
+    }
+}

@@ -1,0 +1,187 @@
+//! [`MemObject`] — an in-process object store with remote-object
+//! semantics.
+//!
+//! The point of this backend is not speed (it is a `BTreeMap` behind a
+//! mutex) but *discipline*: it behaves like a remote bucket so every
+//! streaming path exercises the semantics an S3/GCS backend would impose,
+//! without the network:
+//!
+//! - **whole-object operations** — a put buffers the entire object before
+//!   a single insert under the lock (streaming included), so readers never
+//!   observe a partially-written object; a get returns a complete
+//!   committed object or [`super::NotFound`];
+//! - **latency injection** — [`MemObject::set_latency`] adds a fixed
+//!   per-get/put sleep, turning any unit test into a slow-object-store
+//!   test (the streamed-prefetch window sizing is tuned against this and
+//!   the `storage_get:stall` fault seam);
+//! - **shared by name** — [`super::open`] hands out process-global named
+//!   instances (`mem:NAME`), emulating one bucket shared by a trainer and
+//!   a server in the same process.
+
+use super::{NotFound, Storage, StoreCore};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// In-memory object store. See the module docs for the emulated contract.
+#[derive(Default)]
+pub struct MemObject {
+    objects: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    /// Injected per-get/put latency (zero by default).
+    latency: Mutex<Duration>,
+    core: StoreCore,
+}
+
+impl MemObject {
+    pub fn new() -> MemObject {
+        MemObject::default()
+    }
+
+    /// Builder form of [`MemObject::set_latency`].
+    pub fn with_latency(latency: Duration) -> MemObject {
+        let s = MemObject::new();
+        s.set_latency(latency);
+        s
+    }
+
+    /// Every subsequent get/put sleeps `latency` first — the knob that
+    /// makes "remote" object-store slowness reproducible in-process.
+    pub fn set_latency(&self, latency: Duration) {
+        *self.latency.lock().expect("mem latency lock") = latency;
+    }
+
+    /// Number of stored objects.
+    pub fn len(&self) -> usize {
+        self.objects.lock().expect("mem objects lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total stored bytes across all objects.
+    pub fn stored_bytes(&self) -> u64 {
+        self.objects
+            .lock()
+            .expect("mem objects lock")
+            .values()
+            .map(|v| v.len() as u64)
+            .sum()
+    }
+
+    /// Drop every object (latency/metrics state untouched) — lets tests
+    /// reuse a process-global named store with a clean namespace.
+    pub fn clear(&self) {
+        self.objects.lock().expect("mem objects lock").clear();
+    }
+
+    fn simulate_latency(&self) {
+        let d = *self.latency.lock().expect("mem latency lock");
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+impl Storage for MemObject {
+    fn backend(&self) -> &'static str {
+        "mem"
+    }
+
+    fn core(&self) -> &StoreCore {
+        &self.core
+    }
+
+    fn get_raw(&self, key: &str) -> Result<Vec<u8>> {
+        self.simulate_latency();
+        let objects = self.objects.lock().expect("mem objects lock");
+        match objects.get(key) {
+            Some(obj) => Ok(obj.as_ref().clone()),
+            None => Err(NotFound { key: key.to_string() }.into()),
+        }
+    }
+
+    fn put_raw(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.simulate_latency();
+        // buffer fully *before* taking the lock: the insert is the single
+        // atomic commit point, like a remote PUT completing
+        let obj = Arc::new(data.to_vec());
+        self.objects.lock().expect("mem objects lock").insert(key.to_string(), obj);
+        Ok(())
+    }
+
+    fn put_streaming_raw(&self, key: &str, reader: &mut dyn Read) -> Result<u64> {
+        self.simulate_latency();
+        let mut buf = Vec::new();
+        reader
+            .read_to_end(&mut buf)
+            .with_context(|| format!("buffer streaming put of '{key}'"))?;
+        let n = buf.len() as u64;
+        self.objects.lock().expect("mem objects lock").insert(key.to_string(), Arc::new(buf));
+        Ok(n)
+    }
+
+    fn list_raw(&self, prefix: &str) -> Result<Vec<String>> {
+        let objects = self.objects.lock().expect("mem objects lock");
+        Ok(objects.keys().filter(|k| k.starts_with(prefix)).cloned().collect())
+    }
+
+    fn delete_raw(&self, key: &str) -> Result<()> {
+        self.objects.lock().expect("mem objects lock").remove(key);
+        Ok(())
+    }
+
+    fn exists_raw(&self, key: &str) -> Result<bool> {
+        Ok(self.objects.lock().expect("mem objects lock").contains_key(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn listing_is_sorted_by_key() {
+        let s = MemObject::new();
+        for k in ["b/2", "a/1", "b/1", "c"] {
+            s.put(k, b"x").unwrap();
+        }
+        assert_eq!(s.list("b/").unwrap(), vec!["b/1".to_string(), "b/2".to_string()]);
+        assert_eq!(s.list("").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn latency_injection_slows_gets() {
+        let s = MemObject::with_latency(Duration::from_millis(25));
+        s.set_latency(Duration::ZERO);
+        s.put("k", b"v").unwrap();
+        s.set_latency(Duration::from_millis(25));
+        let t0 = Instant::now();
+        let _ = s.get("k").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn overwrite_replaces_whole_object() {
+        let s = MemObject::new();
+        s.put("k", b"first version, long").unwrap();
+        s.put("k", b"v2").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"v2");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn stored_bytes_tracks_contents() {
+        let s = MemObject::new();
+        s.put("a", &[0u8; 10]).unwrap();
+        s.put("b", &[0u8; 32]).unwrap();
+        assert_eq!(s.stored_bytes(), 42);
+        s.delete("a").unwrap();
+        assert_eq!(s.stored_bytes(), 32);
+        s.clear();
+        assert!(s.is_empty());
+    }
+}

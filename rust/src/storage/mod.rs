@@ -1,0 +1,391 @@
+//! `lrta::storage` — the pluggable object-store boundary every byte of
+//! model state and training data crosses.
+//!
+//! The rest of the system used to assume a local, synchronous filesystem:
+//! `checkpoint::{save,load}` wrote files in place, `data::Dataset` lived
+//! fully in RAM, and `serve`'s warm swap could only read checkpoints the
+//! process could already `open(2)`. This module traits that boundary:
+//!
+//! - [`Storage`] — get/put/put_streaming/list/delete/exists over
+//!   namespaced `a/b/c` keys. Backends implement only the raw I/O
+//!   (`*_raw` methods); the provided trait methods layer the repo's
+//!   cross-cutting invariants on *every* backend uniformly:
+//!   - **exact accounting** — op and byte counters ([`StorageMetrics`])
+//!     registered under the `storage` subsystem with a `{backend}` label,
+//!     plus `storage/storage_get|storage_put` lifecycle spans;
+//!   - **fault seams** — [`crate::faults::Seam::StorageGet`] /
+//!     [`crate::faults::Seam::StoragePut`] fire inside every read/write,
+//!     scoped by the backend label (`storage_put@mem:error`), closing the
+//!     checkpoint-side-thread seam follow-on from the fault-injection PR;
+//!   - **key hygiene** — keys are validated once, centrally
+//!     ([`validate_key`]).
+//! - [`LocalFs`] — keys are files under a root directory; puts are
+//!   atomic (temp file + rename), reads map `ENOENT` to the typed
+//!   [`NotFound`] error shape.
+//! - [`MemObject`] — an in-process object store emulating remote-object
+//!   semantics (whole-object atomic puts, no partial reads, an injectable
+//!   per-op latency) so streaming paths are testable today and an S3/GCS
+//!   backend is a third impl later, not a redesign.
+//! - [`chunk::ChunkStore`] — content-addressed chunks + manifests on top
+//!   of any backend, so large params/data dedupe across epochs and rank
+//!   variants.
+//!
+//! [`open`] maps a CLI URI to a backend: `mem:` / `mem:NAME` return a
+//! process-global *named* [`MemObject`] (so `lrta train --store mem:` and
+//! a later in-process `serve` swap read the same store), anything else is
+//! a [`LocalFs`] root directory.
+//!
+//! Consumers: `checkpoint::{save_to,load_from}` (codec over bytes),
+//! `train::CheckpointWriter` (async epoch uploads via `put_streaming`),
+//! `data::stream::StreamingProvider` (chunked corpus → prefetcher), and
+//! `serve::Server::swap_variant_from_store`.
+
+pub mod chunk;
+pub mod local;
+pub mod mem;
+
+pub use chunk::{ChunkStore, PutStats};
+pub use local::LocalFs;
+pub use mem::MemObject;
+
+use crate::faults::{self, Seam};
+use crate::obs::{Counter, Registry, Tracer};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+/// Typed "no such key" error, preserved through `anyhow` chains so callers
+/// (and the backend conformance suite) can distinguish a missing object
+/// from an I/O failure: `storage::is_not_found(&err)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NotFound {
+    pub key: String,
+}
+
+impl std::fmt::Display for NotFound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "storage key not found: {}", self.key)
+    }
+}
+
+impl std::error::Error for NotFound {}
+
+/// Whether `err`'s chain bottoms out in a [`NotFound`] — the one storage
+/// error callers branch on (e.g. chunk dedupe probes, cache misses).
+pub fn is_not_found(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<NotFound>().is_some())
+}
+
+/// Exact per-backend op/byte accounting. The handles are shared atomics
+/// ([`Counter`]): hot paths increment them lock-free and
+/// [`StorageMetrics::register`] indexes the *same* atomics into an obs
+/// [`Registry`], so exports match the live values bit-for-bit.
+#[derive(Clone, Debug, Default)]
+pub struct StorageMetrics {
+    pub get_ops: Counter,
+    pub get_bytes: Counter,
+    pub put_ops: Counter,
+    pub put_bytes: Counter,
+    pub list_ops: Counter,
+    pub delete_ops: Counter,
+}
+
+impl StorageMetrics {
+    /// Register every counter under `storage/<name>{backend=…}`.
+    pub fn register(&self, registry: &Registry, backend: &str) -> Result<()> {
+        let labels = [("backend", backend)];
+        registry.register_counter("storage", "get_ops", &labels, &self.get_ops)?;
+        registry.register_counter("storage", "get_bytes", &labels, &self.get_bytes)?;
+        registry.register_counter("storage", "put_ops", &labels, &self.put_ops)?;
+        registry.register_counter("storage", "put_bytes", &labels, &self.put_bytes)?;
+        registry.register_counter("storage", "list_ops", &labels, &self.list_ops)?;
+        registry.register_counter("storage", "delete_ops", &labels, &self.delete_ops)?;
+        Ok(())
+    }
+}
+
+/// The instrumentation state every backend embeds: shared metric handles
+/// plus a swappable span recorder. Backends expose it via
+/// [`Storage::core`]; the provided trait methods do the rest.
+#[derive(Debug, Default)]
+pub struct StoreCore {
+    metrics: StorageMetrics,
+    tracer: RwLock<Tracer>,
+}
+
+impl StoreCore {
+    pub fn new() -> StoreCore {
+        StoreCore::default()
+    }
+
+    fn tracer(&self) -> Tracer {
+        self.tracer.read().expect("storage tracer lock").clone()
+    }
+}
+
+/// Reject keys that could escape the namespace or collide with backend
+/// internals: empty keys, empty / `.` / `..` segments, leading `/`.
+pub fn validate_key(key: &str) -> Result<()> {
+    if key.is_empty() {
+        bail!("storage key must be non-empty");
+    }
+    for seg in key.split('/') {
+        if seg.is_empty() {
+            bail!("storage key '{key}': empty path segment");
+        }
+        if seg == "." || seg == ".." {
+            bail!("storage key '{key}': '.'/'..' segments are not allowed");
+        }
+    }
+    Ok(())
+}
+
+/// The object-store boundary. Implementations provide the `*_raw` I/O;
+/// callers use the provided (instrumented) methods — [`Storage::get`],
+/// [`Storage::put`], [`Storage::put_streaming`], [`Storage::list`],
+/// [`Storage::delete`], [`Storage::exists`] — which add key validation,
+/// fault seams, op/byte counters, and `storage_get`/`storage_put` spans
+/// identically over every backend.
+pub trait Storage: Send + Sync {
+    /// Backend label: metric `{backend=…}` value and fault-seam scope.
+    fn backend(&self) -> &'static str;
+
+    /// The shared instrumentation state (metrics + tracer).
+    fn core(&self) -> &StoreCore;
+
+    /// Fetch the whole object at `key` ([`NotFound`] if absent). No
+    /// partial reads: the returned bytes are a complete, committed object.
+    fn get_raw(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// Store `data` at `key`, atomically replacing any existing object —
+    /// concurrent readers see the old bytes or the new, never a mix.
+    fn put_raw(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Stream `reader` to `key` with the same atomic-commit contract;
+    /// returns the byte count written.
+    fn put_streaming_raw(&self, key: &str, reader: &mut dyn Read) -> Result<u64>;
+
+    /// Keys starting with `prefix` (plain string prefix over the `a/b/c`
+    /// namespace), sorted.
+    fn list_raw(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Remove `key`. Idempotent: deleting an absent key succeeds.
+    fn delete_raw(&self, key: &str) -> Result<()>;
+
+    /// Whether `key` holds an object (cheaper than a full `get`).
+    fn exists_raw(&self, key: &str) -> Result<bool>;
+
+    // ---- instrumented entry points (what callers use) -------------------
+
+    /// [`Storage::get_raw`] + seam/span/accounting.
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        validate_key(key)?;
+        let core = self.core();
+        let span = core.tracer().start();
+        faults::hit(Seam::StorageGet, self.backend())?;
+        let out = self.get_raw(key);
+        if let Ok(bytes) = &out {
+            core.metrics.get_ops.inc();
+            core.metrics.get_bytes.add(bytes.len() as u64);
+        }
+        core.tracer().end(span, "storage", "storage_get");
+        out
+    }
+
+    /// [`Storage::put_raw`] + seam/span/accounting.
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        validate_key(key)?;
+        let core = self.core();
+        let span = core.tracer().start();
+        faults::hit(Seam::StoragePut, self.backend())?;
+        let out = self.put_raw(key, data);
+        if out.is_ok() {
+            core.metrics.put_ops.inc();
+            core.metrics.put_bytes.add(data.len() as u64);
+        }
+        core.tracer().end(span, "storage", "storage_put");
+        out
+    }
+
+    /// [`Storage::put_streaming_raw`] + seam/span/accounting.
+    fn put_streaming(&self, key: &str, reader: &mut dyn Read) -> Result<u64> {
+        validate_key(key)?;
+        let core = self.core();
+        let span = core.tracer().start();
+        faults::hit(Seam::StoragePut, self.backend())?;
+        let out = self.put_streaming_raw(key, reader);
+        if let Ok(n) = &out {
+            core.metrics.put_ops.inc();
+            core.metrics.put_bytes.add(*n);
+        }
+        core.tracer().end(span, "storage", "storage_put");
+        out
+    }
+
+    /// [`Storage::list_raw`] + accounting. An empty prefix lists all keys.
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let out = self.list_raw(prefix);
+        if out.is_ok() {
+            self.core().metrics.list_ops.inc();
+        }
+        out
+    }
+
+    /// [`Storage::delete_raw`] + accounting.
+    fn delete(&self, key: &str) -> Result<()> {
+        validate_key(key)?;
+        let out = self.delete_raw(key);
+        if out.is_ok() {
+            self.core().metrics.delete_ops.inc();
+        }
+        out
+    }
+
+    /// [`Storage::exists_raw`] + the `storage_get` seam (a dedupe probe is
+    /// a read, and a stalled remote HEAD stalls it like a GET).
+    fn exists(&self, key: &str) -> Result<bool> {
+        validate_key(key)?;
+        faults::hit(Seam::StorageGet, self.backend())?;
+        self.exists_raw(key)
+    }
+
+    /// Live op/byte counters (shared atomics).
+    fn metrics(&self) -> &StorageMetrics {
+        &self.core().metrics
+    }
+
+    /// Index this backend's counters into `registry` under
+    /// `storage/*{backend=…}`.
+    fn register_metrics(&self, registry: &Registry) -> Result<()> {
+        self.core().metrics.register(registry, self.backend())
+    }
+
+    /// Install a span recorder: every get/put records a
+    /// `storage/storage_get|storage_put` lifecycle span.
+    fn set_tracer(&self, tracer: Tracer) {
+        *self.core().tracer.write().expect("storage tracer lock") = tracer;
+    }
+}
+
+/// Process-global registry of named [`MemObject`] stores, so every
+/// `open("mem:NAME")` in one process shares the same objects — what lets a
+/// `--store mem:` training run hand its checkpoints to an in-process
+/// serve swap (the CI smoke), mirroring how independent processes would
+/// share one remote bucket.
+fn mem_registry() -> &'static Mutex<HashMap<String, Arc<MemObject>>> {
+    static MEMS: OnceLock<Mutex<HashMap<String, Arc<MemObject>>>> = OnceLock::new();
+    MEMS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Resolve a CLI storage URI to a backend:
+///
+/// - `mem:` / `mem:NAME` — the process-global shared [`MemObject`] named
+///   `NAME` (default name for bare `mem:`), created on first open;
+/// - anything else — a [`LocalFs`] rooted at that directory (created if
+///   missing).
+pub fn open(uri: &str) -> Result<Arc<dyn Storage>> {
+    let uri = uri.trim();
+    if uri.is_empty() {
+        bail!("storage URI must be non-empty (DIR or mem:[NAME])");
+    }
+    if let Some(name) = uri.strip_prefix("mem:") {
+        let name = if name.is_empty() { "default" } else { name };
+        let mut mems = mem_registry().lock().expect("mem store registry lock");
+        let store = mems
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(MemObject::new()))
+            .clone();
+        return Ok(store);
+    }
+    Ok(Arc::new(LocalFs::open(std::path::PathBuf::from(uri))?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_validation() {
+        for ok in ["a", "a/b", "ckpts/epoch_000.bin", "chunks/00ff"] {
+            assert!(validate_key(ok).is_ok(), "{ok}");
+        }
+        for bad in ["", "/a", "a//b", "a/", "../x", "a/./b", "a/.."] {
+            assert!(validate_key(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn not_found_survives_anyhow_context() {
+        use anyhow::Context;
+        let base: anyhow::Error = NotFound { key: "k".into() }.into();
+        let wrapped = base.context("load checkpoint ckpts/epoch_000.bin");
+        assert!(is_not_found(&wrapped));
+        assert!(!is_not_found(&anyhow::anyhow!("disk on fire")));
+    }
+
+    #[test]
+    fn open_mem_uris_share_by_name() {
+        let a = open("mem:open_test_a").unwrap();
+        let b = open("mem:open_test_a").unwrap();
+        let c = open("mem:open_test_c").unwrap();
+        a.put("k", b"v").unwrap();
+        assert_eq!(b.get("k").unwrap(), b"v");
+        assert!(is_not_found(&c.get("k").unwrap_err()));
+    }
+
+    #[test]
+    fn open_bare_mem_is_the_default_name() {
+        let a = open("mem:").unwrap();
+        let b = open("mem:default").unwrap();
+        a.put("bare", b"x").unwrap();
+        assert_eq!(b.get("bare").unwrap(), b"x");
+    }
+
+    #[test]
+    fn open_path_is_localfs() {
+        let dir = std::env::temp_dir().join("lrta_storage_open_localfs");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = open(dir.to_str().unwrap()).unwrap();
+        assert_eq!(s.backend(), "localfs");
+        s.put("a/b", b"bytes").unwrap();
+        assert!(dir.join("a/b").is_file());
+    }
+
+    #[test]
+    fn accounting_is_exact_and_registered() {
+        let s = MemObject::new();
+        s.put("a", &[0u8; 10]).unwrap();
+        s.put("b/c", &[0u8; 5]).unwrap();
+        let _ = s.get("a").unwrap();
+        let _ = s.get("a").unwrap();
+        let _ = s.list("").unwrap();
+        s.delete("a").unwrap();
+        assert_eq!(s.metrics().put_ops.get(), 2);
+        assert_eq!(s.metrics().put_bytes.get(), 15);
+        assert_eq!(s.metrics().get_ops.get(), 2);
+        assert_eq!(s.metrics().get_bytes.get(), 20);
+        assert_eq!(s.metrics().list_ops.get(), 1);
+        assert_eq!(s.metrics().delete_ops.get(), 1);
+        // failed ops do not count
+        assert!(s.get("missing").is_err());
+        assert_eq!(s.metrics().get_ops.get(), 2);
+        // the registry reads the same atomics
+        let reg = Registry::new();
+        s.register_metrics(&reg).unwrap();
+        assert_eq!(reg.scalar("storage", "put_bytes", &[("backend", "mem")]), Some(15));
+        assert_eq!(reg.scalar("storage", "get_ops", &[("backend", "mem")]), Some(2));
+    }
+
+    #[test]
+    fn get_put_record_spans() {
+        let s = MemObject::new();
+        let tracer = Tracer::enabled();
+        s.set_tracer(tracer.clone());
+        s.put("k", b"v").unwrap();
+        let _ = s.get("k").unwrap();
+        let names: Vec<&str> = tracer.events().iter().map(|e| e.name).collect();
+        assert!(names.contains(&"storage_put"), "{names:?}");
+        assert!(names.contains(&"storage_get"), "{names:?}");
+    }
+}

@@ -5,25 +5,34 @@
 //! epoch for the side-thread evaluator ([`crate::train::EvalWorker`]) —
 //! that download is the single synchronous cost on the engine thread, and
 //! this module makes it pay twice: [`crate::coordinator::Trainer`] hands
-//! the *same* snapshot to a [`CheckpointWriter`], whose worker serializes
-//! it with [`crate::checkpoint::save`] off the hot path (the ROADMAP's
+//! the *same* snapshot to a [`CheckpointWriter`], whose worker uploads it
+//! through the storage boundary off the hot path (the ROADMAP's
 //! "checkpoint snapshot offload" item). `Params` is plain `Send` host
 //! data, so unlike PJRT handles it can cross threads freely.
 //!
-//! Files land as `<dir>/epoch_NNN.bin` in the shared binary checkpoint
-//! format. Determinism: `save` writes tensors in sorted-name order, so a
-//! checkpoint written asynchronously here is byte-identical to one written
-//! inline from the same state — pinned against the serial path in
-//! `rust/tests/integration_train_resident.rs`.
+//! The worker writes through [`crate::storage::Storage`]:
+//! [`CheckpointWriter::spawn_to`] streams `<prefix>/epoch_NNN.bin` objects
+//! into any backend via `put_streaming` (so `--store mem:` uploads ride
+//! the side thread exactly like local files do), and
+//! [`CheckpointWriter::spawn`] keeps the legacy directory layout by
+//! opening a [`crate::storage::LocalFs`] at the directory. Determinism:
+//! the codec ([`crate::checkpoint::encode`]) writes tensors in
+//! sorted-name order, so a checkpoint written asynchronously here is
+//! byte-identical to one written inline from the same state — pinned
+//! against the serial path in `rust/tests/integration_train_resident.rs`.
 //!
 //! Join points mirror [`crate::train::EvalWorker`]: submission never
 //! blocks; [`CheckpointWriter::drain`] (the end-of-run join) surfaces
-//! every outcome, so a failed write fails the run instead of vanishing.
+//! every outcome — a failed write fails the run instead of vanishing, and
+//! a *dead* worker surfaces its panic payload, not just the fact of
+//! death.
 
 use crate::checkpoint::{self, Params};
+use crate::storage::{LocalFs, Storage};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 /// One write request: the epoch index plus the snapshot to persist.
@@ -32,8 +41,9 @@ struct Job {
     params: Params,
 }
 
-/// A finished (or failed) checkpoint write.
-type Outcome = (usize, Result<PathBuf, String>);
+/// A finished (or failed) checkpoint write; `Ok` carries where it landed
+/// (a filesystem path or a storage key, per the spawn mode).
+type Outcome = (usize, Result<String, String>);
 
 /// Side-thread checkpoint persister over per-epoch parameter snapshots.
 pub struct CheckpointWriter {
@@ -45,18 +55,43 @@ pub struct CheckpointWriter {
 }
 
 impl CheckpointWriter {
-    /// Spawn the writer; checkpoints land as `dir/epoch_NNN.bin`.
+    /// Spawn the writer over a directory; checkpoints land as
+    /// `dir/epoch_NNN.bin` (a [`LocalFs`] opened on the worker thread, so
+    /// an unusable directory surfaces at [`CheckpointWriter::drain`] —
+    /// same failure path as any other write error).
     pub fn spawn(dir: PathBuf) -> CheckpointWriter {
+        Self::spawn_with(move |epoch, params| {
+            let store = LocalFs::open(dir.clone())?;
+            let key = epoch_key("", epoch);
+            checkpoint::save_to(&store, &key, params)?;
+            Ok(dir.join(&key).display().to_string())
+        })
+    }
+
+    /// Spawn the writer over any storage backend; checkpoints upload as
+    /// `<prefix>/epoch_NNN.bin` objects through
+    /// [`Storage::put_streaming`] while the next epoch trains.
+    pub fn spawn_to(store: Arc<dyn Storage>, prefix: impl Into<String>) -> CheckpointWriter {
+        let prefix = prefix.into();
+        Self::spawn_with(move |epoch, params| {
+            let key = epoch_key(&prefix, epoch);
+            checkpoint::save_to(store.as_ref(), &key, params)?;
+            Ok(key)
+        })
+    }
+
+    /// The worker loop shared by both spawn modes: `write` persists one
+    /// snapshot and reports where it landed.
+    fn spawn_with(
+        write: impl Fn(usize, &Params) -> Result<String> + Send + 'static,
+    ) -> CheckpointWriter {
         let (job_tx, job_rx) = mpsc::channel::<Job>();
         let (out_tx, out_rx) = mpsc::channel::<Outcome>();
         let join = thread::Builder::new()
             .name("lrta-train-ckpt".into())
             .spawn(move || {
                 while let Ok(job) = job_rx.recv() {
-                    let path = dir.join(format!("epoch_{:03}.bin", job.epoch));
-                    let outcome = checkpoint::save(&path, &job.params)
-                        .map(|()| path)
-                        .map_err(|e| format!("{e:#}"));
+                    let outcome = write(job.epoch, &job.params).map_err(|e| format!("{e:#}"));
                     if out_tx.send((job.epoch, outcome)).is_err() {
                         break; // trainer gone — nothing left to report to
                     }
@@ -76,25 +111,61 @@ impl CheckpointWriter {
     }
 
     /// Block until every submitted epoch has been written — the end-of-run
-    /// join point. Returns `(epoch, path)` pairs; any failed write fails
-    /// the drain (and with it the run that submitted it).
-    pub fn drain(&mut self) -> Result<Vec<(usize, PathBuf)>> {
+    /// join point. Returns `(epoch, location)` pairs; any failed write
+    /// fails the drain (and with it the run that submitted it).
+    pub fn drain(&mut self) -> Result<Vec<(usize, String)>> {
         let mut out = Vec::new();
         while self.pending > 0 {
             match self.rx.recv() {
                 Ok((epoch, outcome)) => {
                     self.pending -= 1;
-                    let path = outcome
+                    let loc = outcome
                         .map_err(|e| anyhow!("epoch {epoch} checkpoint failed: {e}"))?;
-                    out.push((epoch, path));
+                    out.push((epoch, loc));
                 }
                 Err(_) => {
-                    bail!("checkpoint writer died with {} writes pending", self.pending)
+                    // the worker died without reporting: join it and
+                    // surface *why* (its panic payload), not just that it
+                    // happened
+                    match self.worker_panic_payload() {
+                        Some(cause) => bail!(
+                            "checkpoint writer died with {} writes pending: {cause}",
+                            self.pending
+                        ),
+                        None => bail!(
+                            "checkpoint writer died with {} writes pending",
+                            self.pending
+                        ),
+                    }
                 }
             }
         }
         out.sort_by_key(|(e, _)| *e);
         Ok(out)
+    }
+
+    /// Join the (already-dead) worker and render its panic payload.
+    fn worker_panic_payload(&mut self) -> Option<String> {
+        let join = self.join.take()?;
+        match join.join() {
+            Ok(()) => None,
+            Err(payload) => Some(
+                payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "worker panicked with a non-string payload".into()),
+            ),
+        }
+    }
+}
+
+/// `<prefix>/epoch_NNN.bin` (bare `epoch_NNN.bin` for an empty prefix).
+fn epoch_key(prefix: &str, epoch: usize) -> String {
+    if prefix.is_empty() {
+        format!("epoch_{epoch:03}.bin")
+    } else {
+        format!("{prefix}/epoch_{epoch:03}.bin")
     }
 }
 
@@ -112,6 +183,7 @@ impl Drop for CheckpointWriter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::MemObject;
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
 
@@ -140,16 +212,27 @@ mod tests {
         }
         let written = w.drain().unwrap();
         assert_eq!(written.len(), 2);
-        for (e, path) in &written {
-            assert_eq!(*path, dir.join(format!("epoch_{e:03}.bin")));
+        for (e, loc) in &written {
+            assert_eq!(*loc, dir.join(format!("epoch_{e:03}.bin")).display().to_string());
             let inline = dir.join(format!("inline_{e}.bin"));
             checkpoint::save(&inline, &snapshots[*e]).unwrap();
             assert_eq!(
-                std::fs::read(path).unwrap(),
+                std::fs::read(loc).unwrap(),
                 std::fs::read(&inline).unwrap(),
                 "epoch {e}: async checkpoint must be byte-identical to an inline save"
             );
         }
+    }
+
+    #[test]
+    fn storage_uploads_match_file_saves_byte_for_byte() {
+        let store = Arc::new(MemObject::new());
+        let mut w = CheckpointWriter::spawn_to(Arc::clone(&store) as Arc<dyn Storage>, "ckpts");
+        let p = some_params(5);
+        w.submit(0, p.clone()).unwrap();
+        let written = w.drain().unwrap();
+        assert_eq!(written, vec![(0, "ckpts/epoch_000.bin".to_string())]);
+        assert_eq!(store.get("ckpts/epoch_000.bin").unwrap(), checkpoint::encode(&p));
     }
 
     #[test]
@@ -167,5 +250,16 @@ mod tests {
         let mut w = CheckpointWriter::spawn(blocker.join("sub"));
         w.submit(0, some_params(3)).unwrap();
         assert!(w.drain().is_err());
+    }
+
+    #[test]
+    fn dead_worker_surfaces_its_panic_payload() {
+        // regression: drain used to report only "writer died with N writes
+        // pending" — the cause (the worker's panic payload) was dropped
+        let mut w = CheckpointWriter::spawn_with(|_, _| panic!("disk controller exploded"));
+        w.submit(0, some_params(4)).unwrap();
+        let err = w.drain().unwrap_err().to_string();
+        assert!(err.contains("1 writes pending"), "{err}");
+        assert!(err.contains("disk controller exploded"), "{err}");
     }
 }

@@ -69,13 +69,14 @@ pub use ckpt::CheckpointWriter;
 pub use eval::EvalWorker;
 pub use prefetch::Prefetcher;
 pub use replica::{
-    run_replicas, run_replicas_traced, MomentumPolicy, ReplicaConfig, ReplicaReport, ReplicaRun,
+    run_replicas, run_replicas_sourced, run_replicas_traced, MomentumPolicy, ReplicaConfig,
+    ReplicaReport, ReplicaRun,
 };
 pub use resident::{MetricsAccumulator, ResidentParams, ResidentState};
 pub use sync::{SyncCompress, SyncFrame, SyncPlan};
 
 use crate::checkpoint::Params;
-use crate::data::{Dataset, Shard};
+use crate::data::{DataSource, Dataset, Shard};
 use crate::faults::{self, Seam};
 use crate::metrics::ThroughputMeter;
 use crate::obs::Tracer;
@@ -244,7 +245,15 @@ impl<'rt> Engine<'rt> {
         epoch_seed: u64,
         lr: f32,
     ) -> Result<EpochStats> {
-        self.run_epoch_sharded(exe, meta, data, epoch_seed, lr, Shard::full(), &mut |_, _| Ok(()))
+        self.run_epoch_sharded(
+            exe,
+            meta,
+            &DataSource::memory(Arc::clone(data)),
+            epoch_seed,
+            lr,
+            Shard::full(),
+            &mut |_, _| Ok(()),
+        )
     }
 
     /// [`Engine::run_epoch`] over one shard of the epoch's batch stream,
@@ -254,19 +263,24 @@ impl<'rt> Engine<'rt> {
     /// *is* this loop — the f32 metric sums, batch order and early-exit
     /// behavior pinned by the bit-for-bit parity tests cannot drift
     /// between the single-engine and replica paths.
+    ///
+    /// Data arrives through a [`DataSource`] — resident in memory or
+    /// streamed from an object store; the two yield bit-identical batches
+    /// (see [`Prefetcher::start_source`]), so the choice never shows up in
+    /// the trajectory.
     #[allow(clippy::too_many_arguments)]
     pub fn run_epoch_sharded(
         &mut self,
         exe: &Executable,
         meta: &ArtifactMeta,
-        data: &Arc<Dataset>,
+        data: &DataSource,
         epoch_seed: u64,
         lr: f32,
         shard: Shard,
         on_step: &mut dyn FnMut(&Runtime, &mut ResidentState) -> Result<()>,
     ) -> Result<EpochStats> {
         let expected_batches = shard.num_batches(data.len() / meta.batch);
-        let mut pf = Prefetcher::start_sharded(Arc::clone(data), meta.batch, epoch_seed, shard);
+        let mut pf = Prefetcher::start_source(data, meta.batch, epoch_seed, shard);
         let mut meter = ThroughputMeter::new(meta.batch);
         // f32 accumulation, in step order — the exact arithmetic the
         // pipelined path's on-device accumulator performs, so the two
@@ -325,7 +339,7 @@ impl<'rt> Engine<'rt> {
         self.run_epoch_pipelined_sharded(
             exe,
             meta,
-            data,
+            &DataSource::memory(Arc::clone(data)),
             epoch_seed,
             lr,
             Shard::full(),
@@ -356,7 +370,7 @@ impl<'rt> Engine<'rt> {
         &mut self,
         exe: &Executable,
         meta: &ArtifactMeta,
-        data: &Arc<Dataset>,
+        data: &DataSource,
         epoch_seed: u64,
         lr: f32,
         shard: Shard,
@@ -371,7 +385,7 @@ impl<'rt> Engine<'rt> {
             let metrics = self.metrics.as_mut().expect("just created");
             metrics.reset(self.rt)?;
         }
-        let mut pf = Prefetcher::start_sharded(Arc::clone(data), meta.batch, epoch_seed, shard);
+        let mut pf = Prefetcher::start_source(data, meta.batch, epoch_seed, shard);
         let mut meter = ThroughputMeter::new(meta.batch);
         let mut staged: DoubleBuffered<(xla::PjRtBuffer, xla::PjRtBuffer, usize)> =
             DoubleBuffered::new();

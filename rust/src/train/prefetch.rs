@@ -9,7 +9,9 @@
 //! same epoch seed: the channel is FIFO, so prefetched runs stay
 //! bit-identical to the literal baseline.
 
-use crate::data::{BatchIter, Dataset, Shard};
+use crate::data::{
+    epoch_order, BatchIter, DataSource, Dataset, Shard, StreamingProvider, IMAGE_ELEMS,
+};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -55,6 +57,79 @@ impl Prefetcher {
                 // a dropped receiver (engine error mid-epoch) just ends
                 // the producer early
                 if tx.send(b).is_err() {
+                    break;
+                }
+            }
+        })
+    }
+
+    /// Start the producer for whichever side of a [`DataSource`] is live:
+    /// in-memory sources run the classic [`BatchIter`] walk, streamed
+    /// sources fetch chunks from storage with a fetch-ahead window. Batch
+    /// order and contents are bit-identical either way — both paths index
+    /// the one [`epoch_order`] permutation and streamed samples round-trip
+    /// f32 values exactly.
+    pub fn start_source(
+        source: &DataSource,
+        batch: usize,
+        epoch_seed: u64,
+        shard: Shard,
+    ) -> Prefetcher {
+        match source {
+            DataSource::Memory(data) => {
+                Self::start_sharded(Arc::clone(data), batch, epoch_seed, shard)
+            }
+            DataSource::Streamed(provider) => {
+                Self::start_streaming(Arc::clone(provider), batch, epoch_seed, shard)
+            }
+        }
+    }
+
+    /// Like [`Prefetcher::start_sharded`], but assembling batches from a
+    /// storage-backed corpus. Before assembling batch `b`, the worker
+    /// pre-touches the chunks of batches `b..=b+fetch_ahead` (the
+    /// provider's [`StreamingProvider::fetch_ahead`] window), so a chunk
+    /// fetch that stalls — a slow object store, or a `storage_get:stall`
+    /// fault — overlaps with the engine consuming already-queued batches
+    /// instead of serializing behind it. Storage errors have no channel of
+    /// their own: they escalate to a worker panic that
+    /// [`Prefetcher::next_batch`] re-raises on the engine thread, exactly
+    /// like the `prefetch` fault seam.
+    pub fn start_streaming(
+        provider: Arc<StreamingProvider>,
+        batch: usize,
+        epoch_seed: u64,
+        shard: Shard,
+    ) -> Prefetcher {
+        Self::spawn_producer(move |tx| {
+            let order = epoch_order(provider.len(), epoch_seed);
+            let num_batches = shard.num_batches(provider.len() / batch);
+            let window = provider.fetch_ahead();
+            // next shard-local batch whose chunks have been pre-touched
+            let mut touched = 0usize;
+            for cursor in 0..num_batches {
+                if let Err(e) = crate::faults::hit(crate::faults::Seam::Prefetch, "") {
+                    panic!("{e}");
+                }
+                let ahead = (cursor + window).min(num_batches - 1);
+                while touched <= ahead {
+                    let g = touched * shard.count + shard.index;
+                    for &idx in &order[g * batch..(g + 1) * batch] {
+                        if let Err(e) = provider.prefetch_chunk(provider.chunk_of(idx)) {
+                            panic!("streaming prefetch: {e:#}");
+                        }
+                    }
+                    touched += 1;
+                }
+                let global = cursor * shard.count + shard.index;
+                let mut xs = Vec::with_capacity(batch * IMAGE_ELEMS);
+                let mut ys = Vec::with_capacity(batch);
+                for &idx in &order[global * batch..(global + 1) * batch] {
+                    if let Err(e) = provider.append_sample(idx, &mut xs, &mut ys) {
+                        panic!("streaming batch assembly: {e:#}");
+                    }
+                }
+                if tx.send((xs, ys)).is_err() {
                     break;
                 }
             }
@@ -159,6 +234,68 @@ mod tests {
                 assert_eq!(got, direct, "shard {index}");
             }
         }
+    }
+
+    /// The bit-identity pin behind [`DataSource`]: an epoch streamed from
+    /// an object store yields the *same* batches, in the same order, as
+    /// the in-memory iterator — for every shard.
+    #[test]
+    fn streamed_batches_match_batch_iter_bit_for_bit() {
+        let data = Dataset::synthetic(96, 23);
+        let store: Arc<dyn crate::storage::Storage> =
+            Arc::new(crate::storage::MemObject::new());
+        crate::data::stream::publish(&store, "corpus", &data, 10).unwrap();
+        let provider =
+            Arc::new(crate::data::StreamingProvider::open(Arc::clone(&store), "corpus").unwrap());
+        for (index, count) in [(0, 1), (0, 3), (1, 3), (2, 3)] {
+            let shard = Shard::of(index, count);
+            let direct: Vec<(Vec<f32>, Vec<i32>)> =
+                BatchIter::new_sharded(&data, 16, 5, shard).collect();
+            let source = DataSource::streamed(Arc::clone(&provider));
+            let mut pf = Prefetcher::start_source(&source, 16, 5, shard);
+            let mut got = Vec::new();
+            while let Some(b) = pf.next_batch() {
+                got.push(b);
+            }
+            assert_eq!(got, direct, "shard {index}/{count}");
+        }
+    }
+
+    #[test]
+    fn start_source_memory_matches_start_sharded() {
+        let data = Arc::new(Dataset::synthetic(64, 31));
+        let source = DataSource::memory(Arc::clone(&data));
+        let direct: Vec<(Vec<f32>, Vec<i32>)> = BatchIter::new(&data, 16, 2).collect();
+        let mut pf = Prefetcher::start_source(&source, 16, 2, Shard::full());
+        let mut got = Vec::new();
+        while let Some(b) = pf.next_batch() {
+            got.push(b);
+        }
+        assert_eq!(got, direct);
+    }
+
+    #[test]
+    fn streaming_fetch_error_propagates_as_panic() {
+        let data = Dataset::synthetic(32, 41);
+        let store: Arc<dyn crate::storage::Storage> =
+            Arc::new(crate::storage::MemObject::new());
+        crate::data::stream::publish(&store, "corpus", &data, 8).unwrap();
+        let provider =
+            Arc::new(crate::data::StreamingProvider::open(Arc::clone(&store), "corpus").unwrap());
+        // delete every chunk out from under the provider
+        for key in store.list("chunks/").unwrap() {
+            store.delete(&key).unwrap();
+        }
+        let mut pf = Prefetcher::start_streaming(provider, 16, 0, Shard::full());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            while pf.next_batch().is_some() {}
+        }))
+        .expect_err("missing chunks must fail the epoch, not shorten it");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("streaming prefetch"), "unexpected payload: {msg}");
     }
 
     #[test]

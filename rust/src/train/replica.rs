@@ -90,7 +90,7 @@ use crate::checkpoint::Params;
 use crate::coordinator::{
     effective_pattern_suffix, load_schedule_executables, zero_momenta, TrainConfig,
 };
-use crate::data::{Dataset, Shard};
+use crate::data::{DataSource, Dataset, Shard};
 use crate::faults::{self, Seam};
 use crate::freeze::FreezeScheduler;
 use crate::metrics::{EpochRecord, EvictionRecord, RunRecord};
@@ -305,9 +305,11 @@ struct ReplicaJob {
     rcfg: ReplicaConfig,
     params: Params,
     momenta: Params,
-    /// Shared read-only corpus — generated once by the coordinator, not
-    /// once per replica.
-    train_data: Arc<Dataset>,
+    /// Shared read-only corpus — generated (or opened from storage) once
+    /// by the coordinator, not once per replica. Streamed sources share
+    /// one provider, so the replicas' disjoint shards also share its
+    /// chunk cache.
+    train_source: DataSource,
     test_data: Arc<Dataset>,
     to_coord: mpsc::Sender<ToCoord>,
     from_coord: mpsc::Receiver<Arc<SyncFrame>>,
@@ -353,9 +355,34 @@ pub fn run_replicas_traced(
     tracer: Tracer,
     registry: Option<Registry>,
 ) -> Result<ReplicaRun> {
+    run_replicas_sourced(manifest, cfg, rcfg, params, tracer, registry, None)
+}
+
+/// [`run_replicas_traced`] with an explicit training [`DataSource`]:
+/// `None` keeps the classic behavior (synthesize `cfg.train_size` samples
+/// in memory), `Some` lets the fleet stream its shards from a published
+/// object-store corpus (`lrta train --replicas N --data-store URI`) —
+/// batches are bit-identical either way, so the source never changes the
+/// averaged trajectory.
+#[allow(clippy::too_many_arguments)]
+pub fn run_replicas_sourced(
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+    rcfg: &ReplicaConfig,
+    params: &Params,
+    tracer: Tracer,
+    registry: Option<Registry>,
+    source: Option<DataSource>,
+) -> Result<ReplicaRun> {
     if rcfg.replicas == 0 {
         bail!("replica count must be positive");
     }
+    // the synthetic corpus is deterministic in the seed and read-only —
+    // generate (or accept) it once and share it across every replica thread
+    let train_source = match source {
+        Some(s) => s,
+        None => DataSource::memory(Arc::new(Dataset::synthetic(cfg.train_size, cfg.seed))),
+    };
     // every shard must receive at least one batch per epoch — otherwise
     // the run would "succeed" with zero training and report the initial
     // parameters' accuracy as if it had fine-tuned
@@ -364,7 +391,7 @@ pub fn run_replicas_traced(
         let suffix0 = effective_pattern_suffix(&cfg.variant, scheduler.pattern(0));
         let name = Manifest::name_of(&cfg.model, &cfg.variant, "train", suffix0);
         let batch = manifest.artifact(&name)?.batch.max(1);
-        let total_batches = cfg.train_size / batch;
+        let total_batches = train_source.len() / batch;
         let shard_view = if rcfg.identical_shards {
             Shard::full()
         } else {
@@ -380,9 +407,6 @@ pub fn run_replicas_traced(
         }
     }
     let momenta = zero_momenta(params);
-    // the synthetic corpus is deterministic in the seed and read-only —
-    // generate it once and share it across every replica thread
-    let train_data = Arc::new(Dataset::synthetic(cfg.train_size, cfg.seed));
     let test_data = Arc::new(Dataset::synthetic(cfg.test_size, cfg.seed ^ 0xDEAD_BEEF));
     let (to_coord, from_replicas) = mpsc::channel::<ToCoord>();
     let mut reply_txs = Vec::with_capacity(rcfg.replicas);
@@ -397,7 +421,7 @@ pub fn run_replicas_traced(
             rcfg: *rcfg,
             params: params.clone(),
             momenta: momenta.clone(),
-            train_data: Arc::clone(&train_data),
+            train_source: train_source.clone(),
             test_data: Arc::clone(&test_data),
             to_coord: to_coord.clone(),
             from_coord: reply_rx,
@@ -812,7 +836,7 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
         rcfg,
         params,
         momenta,
-        train_data,
+        train_source,
         test_data,
         to_coord,
         from_coord,
@@ -930,14 +954,22 @@ fn run_replica(job: ReplicaJob) -> Result<ReplicaOutcome> {
             engine.run_epoch_pipelined_sharded(
                 exe,
                 meta,
-                &train_data,
+                &train_source,
                 epoch_seed,
                 lr,
                 shard,
                 &mut hook,
             )?
         } else {
-            engine.run_epoch_sharded(exe, meta, &train_data, epoch_seed, lr, shard, &mut hook)?
+            engine.run_epoch_sharded(
+                exe,
+                meta,
+                &train_source,
+                epoch_seed,
+                lr,
+                shard,
+                &mut hook,
+            )?
         };
         // mandatory boundary average (unless the cadence just did it):
         // after this, frozen↔trainable role swaps are safe because every

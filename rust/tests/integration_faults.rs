@@ -28,19 +28,29 @@
 //!    re-dispatched on the sibling shard; the first answer wins
 //!    bit-identically to a direct run, the loser is cancelled, and no
 //!    request is lost or double-replied.
+//! 7. **Storage put failure** — an injected `storage_put` error under the
+//!    async checkpoint writer fails the drain with the fault's own
+//!    message, in bounded time: no wedged worker, no silently-dropped
+//!    checkpoint.
+//! 8. **Storage get stall** — an injected `storage_get` stall under a
+//!    streamed corpus is absorbed by the prefetcher's fetch-ahead window:
+//!    every batch arrives, bit-identical to the unstalled run.
 //!
 //! The fault plan is process-global, so every test serializes on a local
 //! mutex and installs/clears its plan under an RAII guard.
 
 use lrta::checkpoint;
 use lrta::coordinator::{decompose_checkpoint, LrSchedule, TrainConfig, Trainer};
-use lrta::data::{Dataset, IMAGE_ELEMS};
+use lrta::data::{publish, Dataset, Shard, StreamingProvider, IMAGE_ELEMS};
 use lrta::faults;
 use lrta::freeze::FreezeMode;
 use lrta::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Runtime};
 use lrta::serve::{HedgeConfig, QosConfig, Server, ServerConfig, ServeError, VariantSpec};
-use lrta::train::{run_replicas, MomentumPolicy, ReplicaConfig, SyncCompress};
-use std::sync::Mutex;
+use lrta::storage::{MemObject, Storage};
+use lrta::train::{
+    run_replicas, CheckpointWriter, MomentumPolicy, Prefetcher, ReplicaConfig, SyncCompress,
+};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serializes the tests: the installed fault plan is process-global.
@@ -569,4 +579,85 @@ fn swap_ack_stall_times_out_without_wedging_the_router() {
     let snap = server.stats("resnet_mini", "lrd").unwrap();
     assert_eq!(snap.worker_deaths, 0, "a stall is not a death");
     server.shutdown();
+}
+
+/// Claim 7: a `storage_put` error under the async checkpoint writer
+/// fails the drain with the injected fault's own message — the run that
+/// submitted the write fails cleanly and quickly, nothing wedges, and the
+/// epochs written before the fault are intact in the store.
+#[test]
+fn storage_put_error_fails_checkpoint_drain_cleanly() {
+    let _g = lock();
+    let mut rng = lrta::util::rng::Rng::new(9);
+    let mut params = checkpoint::Params::new();
+    params.insert("w".into(), lrta::tensor::Tensor::randn(&[4, 4], 1.0, &mut rng));
+
+    let store: Arc<dyn Storage> = Arc::new(MemObject::new());
+    // the second put (epoch 1's upload) errors; epoch 0's must land
+    let _plan = arm("storage_put@mem:error@step2");
+    let mut w = CheckpointWriter::spawn_to(Arc::clone(&store), "ckpts");
+    w.submit(0, params.clone()).unwrap();
+    w.submit(1, params.clone()).unwrap();
+
+    let t0 = Instant::now();
+    let err = w.drain().expect_err("an injected put error must fail the drain");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("epoch 1 checkpoint failed"), "drain must name the epoch: {msg}");
+    assert!(msg.contains("injected fault"), "drain must carry the fault's cause: {msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "a failed upload must fail the drain, not wedge it"
+    );
+    assert_eq!(faults::fired(), 1);
+
+    // the pre-fault epoch committed; the faulted one left no object behind
+    assert!(store.exists("ckpts/epoch_000.bin").unwrap());
+    assert!(!store.exists("ckpts/epoch_001.bin").unwrap(), "a failed put must not commit");
+}
+
+/// Claim 8: a `storage_get` stall on a streamed corpus is absorbed by the
+/// prefetcher — every batch still arrives, bit-identical to the unstalled
+/// run, because fetch-ahead decouples chunk fetches from batch delivery.
+#[test]
+fn storage_get_stall_leaves_streamed_batches_bit_identical() {
+    let _g = lock();
+    faults::clear();
+    let data = Dataset::synthetic(64, 3);
+    let store: Arc<dyn Storage> = Arc::new(MemObject::new());
+    publish(&store, "data", &data, 8).unwrap();
+
+    // fresh provider per run: an empty chunk cache forces real gets
+    let collect = || {
+        let provider =
+            Arc::new(StreamingProvider::open(Arc::clone(&store), "data").unwrap());
+        let mut pf = Prefetcher::start_streaming(provider, 16, 42, Shard::full());
+        let mut batches = Vec::new();
+        while let Some(b) = pf.next_batch() {
+            batches.push(b);
+        }
+        batches
+    };
+
+    let clean = collect();
+    assert_eq!(clean.len(), 4, "64 samples / batch 16");
+
+    // hit 1 is the provider's manifest read; hit 2 is the first chunk
+    // fetch on the prefetch worker — the interesting one to stall
+    let _plan = arm("storage_get@mem:stall(150ms)@step2");
+    let t0 = Instant::now();
+    let stalled = collect();
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "a stalled chunk fetch must delay the stream, not wedge it"
+    );
+    assert_eq!(faults::fired(), 1, "exactly one injected stall");
+
+    assert_eq!(clean.len(), stalled.len(), "the stall must not drop batches");
+    for (i, ((cx, cy), (sx, sy))) in clean.iter().zip(&stalled).enumerate() {
+        assert_eq!(cy, sy, "batch {i}: labels");
+        assert_eq!(cx.len(), sx.len(), "batch {i}: pixel count");
+        for (a, b) in cx.iter().zip(sx) {
+            assert_eq!(a.to_bits(), b.to_bits(), "batch {i}: pixels must be bit-identical");
+        }
+    }
 }

@@ -134,3 +134,63 @@ fn cosine_schedule_decays_lr() {
     let s = LrSchedule::Cosine { base: 0.1, total_epochs: 30 };
     assert!(s.lr_at(29) < s.lr_at(0) * 0.02);
 }
+
+/// The storage-refactor pin: training from a streamed corpus (chunked
+/// through a [`lrta::storage::MemObject`]) is *bit-identical* to training
+/// from the same corpus in RAM — same per-epoch losses and accuracies,
+/// same final parameters — and the epoch checkpoints the streamed run
+/// uploads through the storage boundary are byte-identical to the files
+/// the in-memory run writes to disk.
+#[test]
+fn streamed_corpus_trains_bit_identically_to_in_memory() {
+    use lrta::data::{publish, DataSource, Dataset, StreamingProvider};
+    use lrta::storage::{MemObject, Storage};
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let dense = checkpoint::load(m.init_checkpoint("resnet_mini").unwrap()).unwrap();
+    let params = decompose_checkpoint(&dense, m.config("resnet_mini", "lrd").unwrap())
+        .unwrap()
+        .params;
+    let cfg = tiny_cfg("resnet_mini", "lrd", FreezeMode::Sequential, 2);
+
+    // reference: the default in-memory corpus, checkpoints to local files
+    let ckpt_dir = std::env::temp_dir()
+        .join("lrta_streamed_pin")
+        .join(std::process::id().to_string());
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let mut base = Trainer::new(&rt, &m, cfg.clone(), params.clone()).unwrap();
+    base.checkpoint_epochs_to(&ckpt_dir);
+    let base_rec = base.run().unwrap();
+
+    // streamed twin: the *same* synthetic corpus published as chunks into
+    // an in-process object store, checkpoints uploaded to the same store
+    let store: Arc<dyn Storage> = Arc::new(MemObject::new());
+    let corpus = Dataset::synthetic(cfg.train_size, cfg.seed);
+    publish(&store, "data", &corpus, 32).unwrap();
+    let provider = StreamingProvider::open(Arc::clone(&store), "data").unwrap();
+
+    let mut streamed = Trainer::new(&rt, &m, cfg, params).unwrap();
+    streamed.train_from(DataSource::streamed(Arc::new(provider)));
+    streamed.checkpoint_epochs_to_store(Arc::clone(&store), "ckpts");
+    let stream_rec = streamed.run().unwrap();
+
+    assert_eq!(base_rec.epochs.len(), stream_rec.epochs.len());
+    for (b, s) in base_rec.epochs.iter().zip(&stream_rec.epochs) {
+        assert_eq!(b.loss.to_bits(), s.loss.to_bits(), "epoch {}: loss", b.epoch);
+        assert_eq!(b.train_acc.to_bits(), s.train_acc.to_bits(), "epoch {}", b.epoch);
+        assert_eq!(b.test_acc.to_bits(), s.test_acc.to_bits(), "epoch {}", b.epoch);
+    }
+    for (name, t) in &base.params {
+        assert_eq!(t, &streamed.params[name], "final param {name} diverged");
+    }
+
+    // and the uploaded checkpoints are the pre-refactor file bytes
+    for e in 0..base_rec.epochs.len() {
+        let file = std::fs::read(ckpt_dir.join(format!("epoch_{e:03}.bin"))).unwrap();
+        let object = store.get(&format!("ckpts/epoch_{e:03}.bin")).unwrap();
+        assert_eq!(file, object, "epoch {e}: store upload differs from file checkpoint");
+    }
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}

@@ -1,0 +1,201 @@
+//! Backend-generic conformance suite for the `lrta::storage` boundary.
+//!
+//! Every test runs the *same* assertions against every backend —
+//! [`MemObject`] and [`LocalFs`] today, a real S3/GCS backend tomorrow —
+//! so the trait contract (atomic whole-object puts, typed `NotFound`,
+//! sorted prefix listing, idempotent delete, exact op/byte accounting) is
+//! pinned once, centrally, instead of re-derived per backend. Needs no
+//! artifacts: everything here is pure library.
+//!
+//! Claims pinned:
+//! 1. put/get round-trips arbitrary binary payloads (including empty)
+//!    bit-for-bit, with exact op and byte accounting.
+//! 2. `put_streaming` commits the same bytes as `put` and reports the
+//!    exact count written.
+//! 3. Overwrite replaces the whole object — no stale tail from a longer
+//!    predecessor.
+//! 4. `list(prefix)` is a plain string-prefix filter, sorted, and sees
+//!    every committed key.
+//! 5. A missing key is the typed [`NotFound`] shape (`is_not_found`),
+//!    distinguishable from I/O failure, and names the key.
+//! 6. `delete` is idempotent; `exists` agrees with `get` before and after.
+//! 7. Invalid keys are rejected centrally before any backend I/O.
+//! 8. Content-addressed blobs reassemble bit-for-bit through the manifest
+//!    across pseudo-random sizes and contents, and re-publishing the same
+//!    bytes writes zero new chunks (dedupe property).
+
+use lrta::storage::{self, ChunkStore, LocalFs, MemObject, Storage};
+use lrta::util::rng::Rng;
+use std::sync::Arc;
+
+/// Fresh instances of every backend, isolated per test (`tag`).
+fn backends(tag: &str) -> Vec<Arc<dyn Storage>> {
+    let dir = std::env::temp_dir()
+        .join("lrta_storage_conformance")
+        .join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    vec![
+        Arc::new(MemObject::new()) as Arc<dyn Storage>,
+        Arc::new(LocalFs::open(dir).expect("temp LocalFs root")) as Arc<dyn Storage>,
+    ]
+}
+
+/// A deterministic binary payload covering all byte values.
+fn blob(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+#[test]
+fn round_trip_with_exact_accounting() {
+    for store in backends("round_trip") {
+        let b = store.backend();
+        let payload = blob(7, 4097);
+        store.put("ns/deep/obj.bin", &payload).unwrap();
+        assert_eq!(store.get("ns/deep/obj.bin").unwrap(), payload, "{b}: bytes differ");
+
+        // empty objects are legal and distinct from missing ones
+        store.put("ns/empty", &[]).unwrap();
+        assert_eq!(store.get("ns/empty").unwrap(), Vec::<u8>::new(), "{b}");
+        assert!(store.exists("ns/empty").unwrap(), "{b}: empty object must exist");
+
+        let m = store.metrics();
+        assert_eq!(m.put_ops.get(), 2, "{b}: put ops");
+        assert_eq!(m.put_bytes.get(), payload.len() as u64, "{b}: put bytes");
+        assert_eq!(m.get_ops.get(), 2, "{b}: get ops");
+        assert_eq!(m.get_bytes.get(), payload.len() as u64, "{b}: get bytes");
+    }
+}
+
+#[test]
+fn put_streaming_commits_identically_to_put() {
+    for store in backends("streaming") {
+        let b = store.backend();
+        let payload = blob(11, 3 * 8192 + 5);
+        let n = store
+            .put_streaming("s/streamed", &mut std::io::Cursor::new(payload.clone()))
+            .unwrap();
+        assert_eq!(n, payload.len() as u64, "{b}: reported byte count");
+        store.put("s/direct", &payload).unwrap();
+        assert_eq!(
+            store.get("s/streamed").unwrap(),
+            store.get("s/direct").unwrap(),
+            "{b}: streamed and direct puts must commit the same bytes"
+        );
+        assert_eq!(store.metrics().put_bytes.get(), 2 * n, "{b}: both paths counted");
+    }
+}
+
+#[test]
+fn overwrite_replaces_the_whole_object() {
+    for store in backends("overwrite") {
+        let b = store.backend();
+        store.put("k", &blob(1, 1000)).unwrap();
+        let short = blob(2, 10);
+        store.put("k", &short).unwrap();
+        assert_eq!(store.get("k").unwrap(), short, "{b}: stale tail survived overwrite");
+    }
+}
+
+#[test]
+fn list_is_sorted_prefix_filter() {
+    for store in backends("list") {
+        let b = store.backend();
+        for key in ["b/2", "a/sub/x", "a/1", "b/1", "a/2", "top"] {
+            store.put(key, key.as_bytes()).unwrap();
+        }
+        assert_eq!(store.list("a/").unwrap(), ["a/1", "a/2", "a/sub/x"], "{b}");
+        assert_eq!(store.list("b/").unwrap(), ["b/1", "b/2"], "{b}");
+        assert_eq!(store.list("nope/").unwrap(), Vec::<String>::new(), "{b}");
+        assert_eq!(
+            store.list("").unwrap(),
+            ["a/1", "a/2", "a/sub/x", "b/1", "b/2", "top"],
+            "{b}: empty prefix must list everything, sorted"
+        );
+    }
+}
+
+#[test]
+fn missing_key_is_typed_not_found() {
+    for store in backends("not_found") {
+        let b = store.backend();
+        let err = store.get("absent/key").unwrap_err();
+        assert!(storage::is_not_found(&err), "{b}: want NotFound, got: {err:#}");
+        assert!(format!("{err:#}").contains("absent/key"), "{b}: error must name the key");
+        assert!(!store.exists("absent/key").unwrap(), "{b}");
+
+        // I/O-shaped failures must NOT look like a missing key
+        let bad = store.put("", &[]).unwrap_err();
+        assert!(!storage::is_not_found(&bad), "{b}: validation error mistyped as NotFound");
+    }
+}
+
+#[test]
+fn delete_is_idempotent_and_exists_agrees() {
+    for store in backends("delete") {
+        let b = store.backend();
+        store.put("d/obj", b"x").unwrap();
+        assert!(store.exists("d/obj").unwrap(), "{b}");
+        store.delete("d/obj").unwrap();
+        assert!(!store.exists("d/obj").unwrap(), "{b}");
+        assert!(storage::is_not_found(&store.get("d/obj").unwrap_err()), "{b}");
+        store.delete("d/obj").expect("deleting an absent key must succeed");
+        assert_eq!(store.metrics().delete_ops.get(), 2, "{b}: both deletes counted");
+    }
+}
+
+#[test]
+fn invalid_keys_rejected_before_backend_io() {
+    for store in backends("bad_keys") {
+        let b = store.backend();
+        for bad in ["", "/abs", "a//b", "trail/", "../up", "a/./b"] {
+            assert!(store.put(bad, b"x").is_err(), "{b}: put '{bad}'");
+            assert!(store.get(bad).is_err(), "{b}: get '{bad}'");
+            assert!(store.delete(bad).is_err(), "{b}: delete '{bad}'");
+        }
+        let m = store.metrics();
+        assert_eq!(
+            (m.put_ops.get(), m.get_ops.get(), m.delete_ops.get()),
+            (0, 0, 0),
+            "{b}: rejected keys must not reach backend accounting"
+        );
+    }
+}
+
+#[test]
+fn chunked_blobs_reassemble_and_dedupe() {
+    // sizes straddling every chunk boundary of a 64-byte chunk store,
+    // plus empty and multi-chunk blobs
+    let sizes = [0usize, 1, 63, 64, 65, 128, 1000, 4096 + 17];
+    for store in backends("chunks") {
+        let b = store.backend();
+        let chunks = ChunkStore::with_chunk_size(Arc::clone(&store), 64);
+        for (i, &len) in sizes.iter().enumerate() {
+            let data = blob(100 + i as u64, len);
+            let key = format!("blobs/{i}");
+            let stats = chunks.put_blob(&key, &data).unwrap();
+            assert_eq!(stats.bytes_total, len as u64, "{b}: blob {i}");
+            assert_eq!(stats.chunks_total, len.div_ceil(64), "{b}: blob {i}");
+            assert_eq!(chunks.get_blob(&key).unwrap(), data, "{b}: blob {i} reassembly");
+
+            // property: re-publishing identical bytes uploads nothing
+            let again = chunks.put_blob(&key, &data).unwrap();
+            assert_eq!(again.chunks_written, 0, "{b}: blob {i} must fully dedupe");
+            assert_eq!(again.bytes_deduped, len as u64, "{b}: blob {i}");
+            assert_eq!(chunks.get_blob(&key).unwrap(), data, "{b}: blob {i} after dedupe");
+        }
+
+        // property: a blob sharing a prefix dedupes exactly the shared
+        // whole chunks and uploads only the changed tail
+        let base = blob(999, 64 * 8);
+        chunks.put_blob("blobs/base", &base).unwrap();
+        let mut variant = base.clone();
+        let last = variant.len() - 1;
+        variant[last] ^= 0xff;
+        let stats = chunks.put_blob("blobs/variant", &variant).unwrap();
+        assert_eq!(stats.chunks_written, 1, "{b}: only the changed tail chunk");
+        assert_eq!(stats.bytes_deduped, 64 * 7, "{b}");
+        assert_eq!(chunks.get_blob("blobs/variant").unwrap(), variant, "{b}");
+        assert_eq!(chunks.get_blob("blobs/base").unwrap(), base, "{b}: base untouched");
+    }
+}
